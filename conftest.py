@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `python/` importable so the suites run both
+as `cd python && pytest tests/` (Makefile) and `pytest python/tests/`
+(repo root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,70 @@
+//! Scenario (paper §6.2): node classification needs PD_0 of *every
+//! vertex's* 1-hop ego network in a large citation graph. The batch
+//! coordinator fans the jobs across workers with bounded-queue
+//! backpressure; PrunIT shrinks each ego net first.
+//!
+//! ```bash
+//! cargo run --release --example ego_pipeline
+//! ```
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::config::CoordinatorConfig;
+use coral_prunit::coordinator::{Coordinator, Job, JobSpec};
+use coral_prunit::datasets;
+use coral_prunit::reduce::Reduction;
+use coral_prunit::util::Timer;
+
+const EGO_COUNT: usize = 2_000;
+
+fn main() {
+    let recipe = datasets::find("OGB-ARXIV").unwrap();
+    let g = recipe.make(42, 0);
+    println!(
+        "OGB-ARXIV stand-in: n={} m={} ({}x scale-down; paper: 169,343 vertices)",
+        g.n(),
+        g.m(),
+        recipe.scale_down
+    );
+
+    let cfg = CoordinatorConfig {
+        workers: std::thread::available_parallelism().map(|c| c.get()).unwrap_or(2),
+        queue_depth: 128,
+        max_k: 0,
+        reduction: "prunit".into(),
+        seed: 42,
+    };
+    let coordinator = Coordinator::new(cfg.clone());
+
+    // Stream ego-network jobs straight off the big graph — the bounded
+    // queue means we never materialise all 2000 subgraphs at once.
+    let spec = JobSpec { max_k: 0, reduction: Reduction::Prunit };
+    let graph = &g;
+    let jobs = (0..EGO_COUNT as u64).map(move |i| {
+        let center = (i as usize * 7919) % graph.n(); // deterministic spread
+        let verts = graph.ego_vertices(center as u32, 1);
+        let (ego, _) = graph.induced_on(&verts);
+        let f = Filtration::degree_superlevel(&ego);
+        Job::new(i, ego, f, spec.clone())
+    });
+
+    let t = Timer::start();
+    let mut betti0_hist = std::collections::BTreeMap::<usize, usize>::new();
+    let n_done = coordinator
+        .run_streaming(jobs, |res| {
+            *betti0_hist.entry(res.diagrams[0].betti()).or_default() += 1;
+        })
+        .unwrap();
+    let secs = t.elapsed().as_secs_f64();
+
+    println!(
+        "computed PD_0 for {n_done} ego networks in {secs:.2}s \
+         ({:.0} jobs/s on {} workers)",
+        n_done as f64 / secs,
+        cfg.workers
+    );
+    println!("coordinator metrics: {}", coordinator.metrics().summary());
+    println!("β0 histogram (feature used for node classification):");
+    for (betti, count) in betti0_hist.iter().take(8) {
+        println!("  β0={betti}: {count} vertices");
+    }
+}

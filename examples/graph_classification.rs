@@ -1,0 +1,108 @@
+//! Scenario (the paper's §1 motivation): graph classification with
+//! topological features. Two structurally distinct classes are embedded,
+//! per-graph features are PD vectorizations (stats + Betti curves)
+//! computed on **reduced** graphs — exactness (Thms 2+7) guarantees the
+//! features are identical to the unreduced ones, so accuracy is free of
+//! reduction artifacts while the feature-extraction pass runs faster.
+//!
+//! ```bash
+//! cargo run --release --example graph_classification
+//! ```
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::vectorize::feature_vector;
+use coral_prunit::homology::persistence_diagrams;
+use coral_prunit::reduce::{combined_with, Reduction};
+use coral_prunit::util::{Rng, Timer};
+
+const PER_CLASS: usize = 40;
+
+/// Class 0: molecule-like (tree + few rings). Class 1: clustered social.
+fn make_dataset(seed: u64) -> Vec<(Graph, usize)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for _ in 0..PER_CLASS {
+        let n = rng.range(30, 60);
+        out.push((
+            coral_prunit::datasets::recipes::molecule(n, 4, rng.next_u64()),
+            0,
+        ));
+        out.push((gen::powerlaw_cluster(n, 3, 0.8, rng.next_u64()), 1));
+    }
+    out
+}
+
+fn features(g: &Graph, reduction: Reduction) -> Vec<f64> {
+    let f = Filtration::degree_superlevel(g);
+    let r = combined_with(g, &f, 1, reduction);
+    let pds = persistence_diagrams(&r.graph, &r.filtration, 1);
+    // PD_1 features only: exactness holds for k ≥ 1 under Combined.
+    feature_vector(&pds[1..], -30.0, 0.0, 24)
+}
+
+/// Nearest-centroid classifier with leave-one-out evaluation.
+fn loo_accuracy(feats: &[Vec<f64>], labels: &[usize]) -> f64 {
+    let dim = feats[0].len();
+    let mut correct = 0usize;
+    for hold in 0..feats.len() {
+        let mut centroids = vec![vec![0.0; dim]; 2];
+        let mut counts = [0usize; 2];
+        for i in 0..feats.len() {
+            if i == hold {
+                continue;
+            }
+            counts[labels[i]] += 1;
+            for (c, x) in centroids[labels[i]].iter_mut().zip(&feats[i]) {
+                *c += x;
+            }
+        }
+        for (cls, centroid) in centroids.iter_mut().enumerate() {
+            for c in centroid.iter_mut() {
+                *c /= counts[cls].max(1) as f64;
+            }
+        }
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let pred = if dist(&feats[hold], &centroids[0]) <= dist(&feats[hold], &centroids[1]) {
+            0
+        } else {
+            1
+        };
+        correct += (pred == labels[hold]) as usize;
+    }
+    correct as f64 / feats.len() as f64
+}
+
+fn main() {
+    let data = make_dataset(42);
+    let labels: Vec<usize> = data.iter().map(|(_, l)| *l).collect();
+    println!("dataset: {} graphs, 2 classes", data.len());
+
+    for reduction in [Reduction::None, Reduction::Combined] {
+        let (feats, secs) = Timer::time(|| {
+            data.iter()
+                .map(|(g, _)| features(g, reduction))
+                .collect::<Vec<_>>()
+        });
+        let acc = loo_accuracy(&feats, &labels);
+        println!(
+            "{:>13}: feature extraction {:.3}s, LOO nearest-centroid accuracy {:.1}%",
+            reduction.name(),
+            secs,
+            100.0 * acc
+        );
+    }
+    println!("exactness ⇒ identical features ⇒ identical accuracy; only time differs.");
+
+    // Prove the claim: feature vectors must match elementwise.
+    for (g, _) in data.iter().take(10) {
+        let a = features(g, Reduction::None);
+        let b = features(g, Reduction::Combined);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-9, "feature drift — theorem violation");
+        }
+    }
+    println!("feature equality verified on 10 spot-checked graphs ✓");
+}

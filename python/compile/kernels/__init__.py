@@ -1,0 +1,5 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .domination import dominated_pairs_kernel
+from .ref import dominated_any_ref, dominated_pairs_ref
+
+__all__ = ["dominated_pairs_kernel", "dominated_pairs_ref", "dominated_any_ref"]

@@ -1,0 +1,96 @@
+"""L1 — Pallas kernel for the dense domination operator (paper Remark 9).
+
+A vertex ``u`` is dominated by ``v`` iff ``N[u] ⊆ N[v]`` where ``N[·]`` is
+the *closed* neighbourhood. With ``B = A + I`` over {0,1}:
+
+    viol[u, v] = Σ_w  B[u, w] · (1 − B[v, w])
+
+``u`` is dominated by ``v`` ⟺ ``viol[u, v] == 0 ∧ u ≠ v`` (closed
+neighbourhoods make adjacency implied: ``w = u`` contributes ``1`` unless
+``B[v, u] = 1``). The PrunIT sublevel condition ``f(u) ≥ f(v)`` (Thm 7) is
+fused into the epilogue; superlevel (Rmk 8) is obtained by negating ``f``
+on the caller side. The diagonal needs no explicit mask: the fused
+``adj > 0`` test kills it because adjacency matrices carry a zero diagonal.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the violation count is a
+single ``B · (1 − B)ᵀ`` matmul → MXU systolic array. The grid tiles the
+*output* into (T, T) blocks; each program streams the two (T, K) operand
+panels through VMEM, runs one ``dot_general`` MXU pass, and fuses the
+masking epilogue so no N×N intermediate ever round-trips through HBM.
+
+NOTE on the contraction axis: a production TPU kernel would add a third
+grid axis over K with a VMEM scratch accumulator (`pl.when(k == 0)` zero +
+`pl.when(k == nk-1)` epilogue). This environment's jax (0.8.2) cannot
+lower `program_id` through the *CPU HLO interpreter* used for AOT export,
+so the exported artifact keeps K whole-panel — which is also the correct
+choice for every exported bucket: at N = 512, one f32 operand panel is
+128·512·4 B = 256 KiB, far under the ~16 MiB VMEM budget, so K-splitting
+would only add loop overhead. ``interpret=True`` everywhere — the CPU PJRT
+plugin cannot execute Mosaic custom-calls.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dom_kernel(b_u_ref, b_v_ref, adj_ref, f_u_ref, f_v_ref, out_ref):
+    """One (T, T) output tile of the dominated-pair mask.
+
+    Grid axes: 0 → output row tile (u), 1 → output col tile (v).
+    Operand panels are (T, K) row slabs of ``B = A + I``.
+    """
+    b_u = b_u_ref[...]          # (T, K) rows of B for the u tile
+    b_v = b_v_ref[...]          # (T, K) rows of B for the v tile
+    # (T, K) @ (K, T) MXU pass: |N[u] \ N[v]| violation counts.
+    viol = jax.lax.dot_general(
+        b_u,
+        (1.0 - b_v).T,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Fused epilogue: domination ∧ adjacency (kills the diagonal) ∧ the
+    # Theorem 7 filtration admissibility f(u) ≥ f(v).
+    adjacent = adj_ref[...] > 0.0
+    f_ok = f_u_ref[...] >= f_v_ref[...]
+    dominated = (viol == 0.0) & adjacent & f_ok
+    out_ref[...] = dominated.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def dominated_pairs_kernel(adj, f, block=None):
+    """Dense dominated-pair mask via the Pallas kernel.
+
+    Args:
+      adj: (N, N) symmetric 0/1 float32 adjacency matrix, zero diagonal.
+      f:   (N,) float32 filtering values (sublevel; negate for superlevel).
+      block: output tile edge; must divide N. Defaults to min(N, 128).
+
+    Returns:
+      (N, N) float32 mask; ``mask[u, v] = 1`` iff v dominates u and
+      ``f(u) ≥ f(v)``.
+    """
+    n = adj.shape[0]
+    if block is None:
+        block = min(n, 128)
+    assert n % block == 0, f"N={n} must be a multiple of block={block}"
+    b = adj + jnp.eye(n, dtype=adj.dtype)
+    f_col = f.reshape(n, 1)
+    f_row = f.reshape(1, n)
+    grid = (n // block, n // block)
+    return pl.pallas_call(
+        _dom_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, n), lambda i, j: (i, 0)),  # B panel (u rows)
+            pl.BlockSpec((block, n), lambda i, j: (j, 0)),  # B panel (v rows)
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),  # adj tile
+            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),      # f(u)
+            pl.BlockSpec((1, block), lambda i, j: (0, j)),      # f(v)
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(b, b, adj, f_col, f_row)

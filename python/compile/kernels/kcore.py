@@ -1,0 +1,72 @@
+"""L1 — Pallas kernel for bulk-synchronous dense k-core peeling.
+
+CoralTDA (paper Thm 2) needs the (k+1)-core. The sparse CPU path uses
+Batagelj–Zaveršnik; this kernel is the dense/TPU formulation: one peeling
+round is a masked degree count
+
+    deg[u] = Σ_v A[u, v] · alive[v]        (an (N,N)·(N,1) MXU matvec)
+
+followed by `alive' = alive ∧ (deg ≥ k)`. The L2 graph iterates rounds to
+a fixed point with `lax.while_loop` — the whole loop lowers into a single
+HLO `while`, so the Rust runtime executes the full decomposition in one
+artifact call.
+
+TPU mapping: grid over row tiles; each program streams a (T, N) adjacency
+panel and the (N, 1) alive column through VMEM for one matvec, fusing the
+mask-and-threshold epilogue. `interpret=True` as everywhere (CPU PJRT
+cannot run Mosaic custom-calls).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _peel_kernel(adj_ref, alive_col_ref, alive_tile_ref, k_ref, out_ref):
+    """One peeling round for a (T,) tile of vertices."""
+    adj = adj_ref[...]              # (T, N) rows of A
+    alive_col = alive_col_ref[...]  # (N, 1) current alive column
+    deg = jax.lax.dot_general(
+        adj,
+        alive_col,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (T, 1) masked degrees
+    k = k_ref[...]                  # (1, 1)
+    my_alive = alive_tile_ref[...]  # (T, 1) — this tile's current state
+    out_ref[...] = my_alive * (deg >= k).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def peel_round_kernel(adj, alive, k, block=None):
+    """One bulk-synchronous peeling round.
+
+    Args:
+      adj:   (N, N) 0/1 f32 adjacency.
+      alive: (N, 1) 0/1 f32 alive column.
+      k:     (1, 1) f32 threshold.
+      block: row-tile edge; must divide N.
+
+    Returns:
+      (N, 1) f32 new alive column.
+    """
+    n = adj.shape[0]
+    if block is None:
+        block = min(n, 128)
+    assert n % block == 0
+    grid = (n // block,)
+    return pl.pallas_call(
+        _peel_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, n), lambda i: (i, 0)),   # adjacency panel
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),       # alive column
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),   # this tile's alive
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # k scalar
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(adj, alive, alive, k)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the domination kernel (the L1 correctness signal).
+
+Implements paper Definition 4 + the Theorem 7 filtration condition with no
+Pallas machinery: the pytest/hypothesis suites assert the kernel matches
+this reference bit-for-bit (the computation is exact integer counting in
+f32, so ``==`` comparisons are legitimate).
+"""
+
+import jax.numpy as jnp
+
+
+def dominated_pairs_ref(adj, f):
+    """(N, N) mask; mask[u, v] = 1 iff v dominates u and f(u) ≥ f(v).
+
+    Closed-neighbourhood domination: ``N[u] ⊆ N[v]`` with
+    ``N[x] = {x} ∪ neighbours(x)``.
+    """
+    n = adj.shape[0]
+    b = adj + jnp.eye(n, dtype=adj.dtype)
+    # viol[u, v] = |N[u] \ N[v]| — number of witnesses against domination.
+    viol = b @ (1.0 - b).T
+    not_diag = ~jnp.eye(n, dtype=bool)
+    adjacent = adj > 0.0
+    f_ok = f[:, None] >= f[None, :]
+    return ((viol == 0.0) & not_diag & adjacent & f_ok).astype(jnp.float32)
+
+
+def dominated_any_ref(adj, f):
+    """(N,) flag: vertex u is dominated by at least one admissible v."""
+    return jnp.max(dominated_pairs_ref(adj, f), axis=1)
+
+
+def kcore_mask_ref(adj, k):
+    """(N,) 0/1 k-core membership by iterative peeling (pure jnp)."""
+    import numpy as np
+
+    a = np.asarray(adj)
+    n = a.shape[0]
+    alive = np.ones(n, dtype=np.float32)
+    while True:
+        deg = a @ alive * alive
+        new_alive = alive * (deg >= k).astype(np.float32)
+        # vertices with alive=0 have deg 0 < k (for k >= 1), handled above
+        if np.array_equal(new_alive, alive):
+            return jnp.asarray(alive)
+        alive = new_alive

@@ -1,0 +1,113 @@
+"""L2 — the JAX compute graph exported to the Rust runtime.
+
+The paper's contribution is a pre-processing reduction, so the dense
+hot-spot we accelerate is one **PrunIT domination sweep** (Remark 9 + the
+Theorem 7 admissibility condition): given a padded adjacency matrix and
+filtering values, emit the dominated-pair mask and per-vertex dominated
+flags. The Rust coordinator (L3) performs the sequential greedy selection
+(removing both members of a mutually-dominating twin pair is unsound) and
+re-invokes the artifact until a fixed point.
+
+Padding contract (mirrored by ``rust/src/runtime/pad.rs``): graphs are
+padded to a size bucket with **isolated** vertices carrying
+``f = PAD_SENTINEL``. An isolated pad vertex is adjacent to nothing, so it
+can neither dominate nor be dominated (adjacency is required); the real
+block of the output is therefore unchanged and the pad block is all-zero.
+``python/tests/test_model.py`` proves this inertness property.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.domination import dominated_pairs_kernel
+from .kernels.kcore import peel_round_kernel
+
+#: f-value assigned to padding vertices; any finite f compares against it
+#: safely. Kept finite so the HLO stays NaN/Inf-free end to end.
+PAD_SENTINEL = 3.0e38
+
+#: Size buckets exported by aot.py; rust/src/runtime/pad.rs must agree.
+BUCKETS = (32, 64, 128, 256, 512)
+
+
+def domination_sweep(adj, f):
+    """One PrunIT sweep over a (bucket-padded) dense graph.
+
+    Args:
+      adj: (N, N) symmetric 0/1 f32 adjacency, zero diagonal.
+      f:   (N,) f32 sublevel filtering values (negate for superlevel).
+
+    Returns:
+      tuple of
+        mask:      (N, N) f32; mask[u, v] = 1 iff v dominates u, f(u) ≥ f(v).
+        dominated: (N,) f32; 1 iff u has at least one admissible dominator.
+    """
+    mask = dominated_pairs_kernel(adj, f)
+    dominated = jnp.max(mask, axis=1)
+    return (mask, dominated)
+
+
+def kcore_mask(adj, k):
+    """Dense k-core membership mask via bulk-synchronous peeling.
+
+    The paper's CoralTDA substrate (Thm 2 needs the (k+1)-core). The
+    peeling loop runs to a fixed point inside a single `lax.while_loop`,
+    so the exported HLO contains the full decomposition — one artifact
+    call per core query on the Rust side.
+
+    Args:
+      adj: (N, N) symmetric 0/1 f32 adjacency, zero diagonal (padding
+           vertices are isolated: degree 0 < k, peeled in round one —
+           inert for any k ≥ 1).
+      k:   (1, 1) f32 core order.
+
+    Returns:
+      (N,) f32 0/1 membership mask of the k-core.
+    """
+    n = adj.shape[0]
+    alive0 = jnp.ones((n, 1), jnp.float32)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        alive, _ = state
+        new_alive = peel_round_kernel(adj, alive, k)
+        changed = jnp.any(new_alive != alive)
+        return (new_alive, changed)
+
+    alive, _ = jax.lax.while_loop(cond, body, (alive0, jnp.bool_(True)))
+    return (alive.reshape(n),)
+
+
+def lower_kcore(bucket):
+    """AOT-lower ``kcore_mask`` for one size bucket."""
+    spec_adj = jax.ShapeDtypeStruct((bucket, bucket), jnp.float32)
+    spec_k = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+    return jax.jit(kcore_mask).lower(spec_adj, spec_k)
+
+
+def pad_inputs(adj, f, bucket):
+    """Pad (adj, f) up to ``bucket`` with inert isolated vertices."""
+    n = adj.shape[0]
+    assert n <= bucket, f"graph order {n} exceeds bucket {bucket}"
+    pad = bucket - n
+    adj_p = jnp.pad(adj, ((0, pad), (0, pad)))
+    f_p = jnp.pad(f, (0, pad), constant_values=PAD_SENTINEL)
+    return adj_p, f_p
+
+
+def pick_bucket(n):
+    """Smallest exported bucket holding an order-n graph (None if too big)."""
+    for b in BUCKETS:
+        if n <= b:
+            return b
+    return None
+
+
+def lower_domination(bucket):
+    """AOT-lower ``domination_sweep`` for one size bucket."""
+    spec_adj = jax.ShapeDtypeStruct((bucket, bucket), jnp.float32)
+    spec_f = jax.ShapeDtypeStruct((bucket,), jnp.float32)
+    return jax.jit(domination_sweep).lower(spec_adj, spec_f)

@@ -1,0 +1,90 @@
+"""L1/L2 correctness for the dense k-core peeling kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.kcore import peel_round_kernel
+from compile.kernels.ref import kcore_mask_ref
+from compile.model import kcore_mask
+
+from .test_kernel import random_graph
+
+
+def full_peel_via_kernel(adj, k, block=None):
+    """Iterate the Pallas peel round to a fixed point (test-side loop)."""
+    n = adj.shape[0]
+    alive = jnp.ones((n, 1), jnp.float32)
+    k_arr = jnp.full((1, 1), float(k), jnp.float32)
+    while True:
+        new_alive = peel_round_kernel(adj, alive, k_arr, block=block)
+        if bool(jnp.all(new_alive == alive)):
+            return np.asarray(alive).reshape(n)
+        alive = new_alive
+
+
+class TestPeelRound:
+    def test_star_peels_leaves_at_k2(self):
+        n = 8
+        adj = np.zeros((n, n), np.float32)
+        for leaf in range(1, n):
+            adj[0, leaf] = adj[leaf, 0] = 1.0
+        alive = full_peel_via_kernel(jnp.asarray(adj), 2)
+        assert alive.sum() == 0.0, "star has empty 2-core"
+
+    def test_cycle_survives_k2_dies_k3(self):
+        n = 8
+        adj = np.zeros((n, n), np.float32)
+        for i in range(n):
+            adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = 1.0
+        assert full_peel_via_kernel(jnp.asarray(adj), 2).sum() == n
+        assert full_peel_via_kernel(jnp.asarray(adj), 3).sum() == 0.0
+
+    def test_cascade_needs_multiple_rounds(self):
+        # path graph: peeling cascades from the ends inward
+        n = 16
+        adj = np.zeros((n, n), np.float32)
+        for i in range(n - 1):
+            adj[i, i + 1] = adj[i + 1, i] = 1.0
+        alive = full_peel_via_kernel(jnp.asarray(adj), 2)
+        assert alive.sum() == 0.0, "paths have empty 2-core (via cascade)"
+
+    @pytest.mark.parametrize("k", [0, 1, 2, 3, 5])
+    def test_matches_ref_random(self, k):
+        adj, _ = random_graph(32, 0.15, seed=k * 7 + 1)
+        got = full_peel_via_kernel(adj, k)
+        want = np.asarray(kcore_mask_ref(adj, k))
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.sampled_from([8, 16, 24, 32]),
+        p=st.floats(min_value=0.0, max_value=0.5),
+        k=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=10**6),
+    )
+    def test_hypothesis_vs_ref(self, n, p, k, seed):
+        adj, _ = random_graph(n, p, seed)
+        got = full_peel_via_kernel(adj, k, block=8)
+        want = np.asarray(kcore_mask_ref(adj, k))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestWhileLoopModel:
+    def test_model_matches_ref(self):
+        adj, _ = random_graph(32, 0.2, seed=3)
+        for k in [1, 2, 3, 4]:
+            (mask,) = kcore_mask(adj, jnp.full((1, 1), float(k), jnp.float32))
+            want = np.asarray(kcore_mask_ref(adj, k))
+            np.testing.assert_array_equal(np.asarray(mask), want)
+
+    def test_padding_inert_for_kcore(self):
+        adj, _ = random_graph(20, 0.3, seed=9)
+        pad = jnp.zeros((32, 32), jnp.float32)
+        pad = pad.at[:20, :20].set(adj)
+        (mask_p,) = kcore_mask(pad, jnp.full((1, 1), 2.0, jnp.float32))
+        (mask,) = kcore_mask(adj, jnp.full((1, 1), 2.0, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(mask_p)[:20], np.asarray(mask))
+        assert np.asarray(mask_p)[20:].sum() == 0.0, "isolated pads peel at k>=1"

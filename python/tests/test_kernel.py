@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas domination kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer — exact equality
+(the computation is integer counting in f32), plus hypothesis sweeps over
+graph order, density, block size and filtering values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.domination import dominated_pairs_kernel
+from compile.kernels.ref import dominated_any_ref, dominated_pairs_ref
+
+
+def random_graph(n, p, seed, weights="uniform"):
+    """Symmetric 0/1 adjacency + filtering values, deterministic in seed."""
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < p
+    adj = np.triu(upper, 1)
+    adj = (adj | adj.T).astype(np.float32)
+    if weights == "degree":
+        f = adj.sum(axis=1).astype(np.float32)
+    elif weights == "ties":
+        f = rng.integers(0, 3, size=n).astype(np.float32)
+    else:
+        f = rng.random(n).astype(np.float32)
+    return jnp.asarray(adj), jnp.asarray(f)
+
+
+def pad_to(adj, f, n_target, sentinel=3.0e38):
+    n = adj.shape[0]
+    adj_p = jnp.pad(adj, ((0, n_target - n), (0, n_target - n)))
+    f_p = jnp.pad(f, (0, n_target - n), constant_values=sentinel)
+    return adj_p, f_p
+
+
+class TestKnownCases:
+    def test_figure3_star_of_triangles(self):
+        """Paper Figure 3: vertex 3 dominates vertices 1 and 2 (0-indexed:
+        vertex 2 dominates 0 and 1). Graph: edges 1-3, 2-3, 1-2? — Fig 3 has
+        vertices 1,2 adjacent to 3 and 4 adjacent to 3; N(1)={1,3}⊂N(3)."""
+        # 0-indexed: v0-v2, v1-v2, v2-v3  (v2 is paper's vertex 3)
+        n = 4
+        adj = np.zeros((n, n), np.float32)
+        for a, b in [(0, 2), (1, 2), (2, 3)]:
+            adj[a, b] = adj[b, a] = 1.0
+        f = jnp.zeros(n, jnp.float32)  # equal f: every domination admissible
+        mask = np.asarray(dominated_pairs_kernel(jnp.asarray(adj), f))
+        # v2 dominates v0, v1, v3 (all closed nbhds ⊆ N[2])
+        assert mask[0, 2] == 1.0
+        assert mask[1, 2] == 1.0
+        assert mask[3, 2] == 1.0
+        # v2 itself is dominated by nobody (its nbhd is strictly largest)
+        assert mask[2].sum() == 0.0
+
+    def test_triangle_mutual_domination(self):
+        """In K3 every vertex dominates every other (twin symmetry)."""
+        adj = jnp.asarray(
+            np.array([[0, 1, 1], [1, 0, 1], [1, 1, 0]], np.float32)
+        )
+        f = jnp.zeros(3, jnp.float32)
+        mask = np.asarray(dominated_pairs_kernel(adj, f))
+        assert mask.sum() == 6.0  # all off-diagonal pairs
+
+    def test_path_endpoints_dominated(self):
+        """Path a-b-c: endpoints dominated by the middle, middle by nobody."""
+        adj = jnp.asarray(
+            np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], np.float32)
+        )
+        f = jnp.zeros(3, jnp.float32)
+        mask = np.asarray(dominated_pairs_kernel(adj, f))
+        assert mask[0, 1] == 1.0 and mask[2, 1] == 1.0
+        assert mask[1].sum() == 0.0
+        assert mask[0, 2] == 0.0  # non-adjacent: closed nbhd not contained
+
+    def test_filtration_condition_blocks_removal(self):
+        """f(u) < f(v) must veto the (u dominated-by v) pair (Thm 7)."""
+        adj = jnp.asarray(
+            np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], np.float32)
+        )
+        f = jnp.asarray(np.array([0.0, 1.0, 2.0], np.float32))
+        mask = np.asarray(dominated_pairs_kernel(adj, f))
+        assert mask[0, 1] == 0.0  # f(0)=0 < f(1)=1 → not admissible
+        assert mask[2, 1] == 1.0  # f(2)=2 ≥ f(1)=1 → admissible
+
+    def test_isolated_vertex_inert(self):
+        adj = jnp.zeros((4, 4), jnp.float32)
+        f = jnp.zeros(4, jnp.float32)
+        mask = np.asarray(dominated_pairs_kernel(adj, f))
+        assert mask.sum() == 0.0
+
+    def test_empty_f_ties_superlevel_negation(self):
+        """Superlevel admissibility f(u) ≤ f(v) == sublevel on -f."""
+        adj, f = random_graph(16, 0.3, 7)
+        sub_on_neg = np.asarray(dominated_pairs_kernel(adj, -f))
+        ref = np.asarray(dominated_pairs_ref(adj, -f))
+        np.testing.assert_array_equal(sub_on_neg, ref)
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n", [4, 8, 16, 32, 64])
+    @pytest.mark.parametrize("p", [0.0, 0.1, 0.4, 0.9, 1.0])
+    def test_grid(self, n, p):
+        adj, f = random_graph(n, p, seed=n * 100 + int(p * 10))
+        got = np.asarray(dominated_pairs_kernel(adj, f, block=min(n, 32)))
+        want = np.asarray(dominated_pairs_ref(adj, f))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("block", [8, 16, 32, 64])
+    def test_block_invariance(self, block):
+        """Tiling must not change the result."""
+        adj, f = random_graph(64, 0.25, seed=3)
+        got = np.asarray(dominated_pairs_kernel(adj, f, block=block))
+        want = np.asarray(dominated_pairs_ref(adj, f))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("weights", ["uniform", "degree", "ties"])
+    def test_weight_families(self, weights):
+        adj, f = random_graph(32, 0.3, seed=11, weights=weights)
+        got = np.asarray(dominated_pairs_kernel(adj, f))
+        want = np.asarray(dominated_pairs_ref(adj, f))
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=32),
+        p=st.floats(min_value=0.0, max_value=1.0),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        ties=st.booleans(),
+    )
+    def test_hypothesis_sweep(self, n, p, seed, ties):
+        adj, f = random_graph(n, p, seed, weights="ties" if ties else "uniform")
+        # pad to the smallest block-aligned size
+        n_pad = ((n + 7) // 8) * 8
+        adj_p, f_p = pad_to(adj, f, n_pad)
+        got = np.asarray(dominated_pairs_kernel(adj_p, f_p, block=8))
+        want = np.asarray(dominated_pairs_ref(adj_p, f_p))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestDominationSemantics:
+    """Sanity properties of the *reference* semantics (shared contract)."""
+
+    def test_domination_implies_adjacency(self):
+        adj, f = random_graph(32, 0.3, seed=5)
+        mask = np.asarray(dominated_pairs_ref(adj, jnp.zeros_like(f)))
+        a = np.asarray(adj)
+        assert np.all(mask <= a), "closed-nbhd domination must imply adjacency"
+
+    def test_domination_implies_degree_order(self):
+        adj, f = random_graph(32, 0.3, seed=6)
+        mask = np.asarray(dominated_pairs_ref(adj, jnp.zeros_like(f)))
+        deg = np.asarray(adj).sum(1)
+        us, vs = np.nonzero(mask)
+        assert np.all(deg[us] <= deg[vs])
+
+    def test_any_flag_matches_pairs(self):
+        adj, f = random_graph(24, 0.4, seed=8)
+        pairs = np.asarray(dominated_pairs_ref(adj, f))
+        anyf = np.asarray(dominated_any_ref(adj, f))
+        np.testing.assert_array_equal(anyf, pairs.max(axis=1))

@@ -1,0 +1,93 @@
+"""L2 contract tests: padding inertness, bucket selection, sweep outputs."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.model import (
+    BUCKETS,
+    PAD_SENTINEL,
+    domination_sweep,
+    pad_inputs,
+    pick_bucket,
+)
+from compile.kernels.ref import dominated_pairs_ref
+
+from .test_kernel import random_graph
+
+
+class TestBuckets:
+    def test_bucket_selection(self):
+        assert pick_bucket(1) == 32
+        assert pick_bucket(32) == 32
+        assert pick_bucket(33) == 64
+        assert pick_bucket(512) == 512
+        assert pick_bucket(513) is None
+
+    def test_buckets_sorted_and_block_aligned(self):
+        assert list(BUCKETS) == sorted(BUCKETS)
+        for b in BUCKETS:
+            assert b % 32 == 0
+
+
+class TestPaddingInertness:
+    """The runtime padding contract: pad vertices cannot perturb the mask."""
+
+    @pytest.mark.parametrize("n", [3, 17, 30])
+    def test_padded_equals_unpadded(self, n):
+        adj, f = random_graph(n, 0.35, seed=n)
+        adj_p, f_p = pad_inputs(adj, f, 32)
+        mask_p, dom_p = domination_sweep(adj_p, f_p)
+        mask_p = np.asarray(mask_p)
+        want = np.asarray(dominated_pairs_ref(adj, f))
+        np.testing.assert_array_equal(mask_p[:n, :n], want)
+        assert mask_p[n:, :].sum() == 0.0, "pad rows must be inert"
+        assert mask_p[:, n:].sum() == 0.0, "pad cols must be inert"
+        np.testing.assert_array_equal(
+            np.asarray(dom_p)[:n], want.max(axis=1)
+        )
+        assert np.asarray(dom_p)[n:].sum() == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=31),
+        seed=st.integers(min_value=0, max_value=10**6),
+    )
+    def test_padding_inert_hypothesis(self, n, seed):
+        adj, f = random_graph(n, 0.4, seed)
+        adj_p, f_p = pad_inputs(adj, f, 32)
+        mask_p, _ = domination_sweep(adj_p, f_p)
+        want = np.asarray(dominated_pairs_ref(adj, f))
+        np.testing.assert_array_equal(np.asarray(mask_p)[:n, :n], want)
+
+    def test_sentinel_is_finite_and_dominant(self):
+        assert np.isfinite(PAD_SENTINEL)
+        assert PAD_SENTINEL > 1e30
+
+    def test_pad_rejects_oversize(self):
+        adj, f = random_graph(40, 0.2, seed=1)
+        with pytest.raises(AssertionError):
+            pad_inputs(adj, f, 32)
+
+
+class TestSweepOutputs:
+    def test_outputs_are_tuple_of_two(self):
+        adj, f = random_graph(32, 0.3, seed=2)
+        out = domination_sweep(adj, f)
+        assert len(out) == 2
+        assert out[0].shape == (32, 32)
+        assert out[1].shape == (32,)
+
+    def test_sweep_matches_ref(self):
+        adj, f = random_graph(64, 0.25, seed=9)
+        mask, dom = domination_sweep(adj, f)
+        want = np.asarray(dominated_pairs_ref(adj, f))
+        np.testing.assert_array_equal(np.asarray(mask), want)
+        np.testing.assert_array_equal(np.asarray(dom), want.max(axis=1))
+
+    def test_dtype_is_f32(self):
+        adj, f = random_graph(32, 0.3, seed=4)
+        mask, dom = domination_sweep(adj, f)
+        assert mask.dtype == jnp.float32 and dom.dtype == jnp.float32

@@ -1,0 +1,85 @@
+//! **E3 — Figure 5b**: PrunIT time reduction for 0-dimensional
+//! persistence on OGB-like ego networks (§6.2). For each sampled ego
+//! vertex: extract the 1-hop neighbourhood, then compare
+//!   t_raw   = PD_0 on the ego net
+//!   t_pruned = [find+remove dominated vertices + induced graph + PD_0]
+//! (all PrunIT steps included, as in the paper). Batch execution goes
+//! through the coordinator — this is also the coordinator's workload
+//! benchmark. Paper shape: >25% time reduction on most ego nets,
+//! ARXIV ≈ 37% avg, MAG ≈ 23% avg, tails reaching 75%.
+
+use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::datasets;
+use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
+use coral_prunit::prune::prunit;
+use coral_prunit::util::{Rng, Table, Timer};
+
+const SEED: u64 = 42;
+const EGO_SAMPLES: usize = 400;
+
+/// PD_0 via the generic boundary-matrix pipeline — the cost model of the
+/// paper's off-the-shelf PH tooling (cubic in simplices). Our union-find
+/// fast path makes PD_0 so cheap that pruning cannot pay off at ego-net
+/// scale; that engine-level result is recorded in EXPERIMENTS.md.
+fn pd0_generic(g: &coral_prunit::graph::Graph, f: &Filtration) -> usize {
+    let c = CliqueComplex::build(g, f, 1);
+    diagrams_of_complex(&c, 0, Algorithm::Standard)[0].len()
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Figure 5b — PrunIT time reduction for PD_0 on 1-hop ego networks",
+        &[
+            "dataset", "egos", "avg_ego_n", "t_raw_ms", "t_prunit_ms", "time_red_%", "p25", "p75",
+        ],
+    );
+    for recipe in datasets::ogb_like() {
+        let g = recipe.make(SEED, 0);
+        let mut rng = Rng::new(SEED ^ 0xE60);
+        let mut reds: Vec<f64> = Vec::new();
+        let (mut t_raw_tot, mut t_pru_tot, mut ego_n_tot) = (0.0f64, 0.0f64, 0usize);
+        // Center sampling: half uniform (the long tail of small egos),
+        // half edge-endpoint-biased (hubs, which dominate total cost in
+        // the paper's all-vertices workload).
+        let edges: Vec<(u32, u32)> = g.edges().collect();
+        for i in 0..EGO_SAMPLES {
+            let center = if i % 2 == 0 {
+                rng.below(g.n()) as u32
+            } else {
+                let (a, b) = edges[rng.below(edges.len())];
+                if rng.chance(0.5) { a } else { b }
+            };
+            let verts = g.ego_vertices(center, 1);
+            let (ego, _) = g.induced_on(&verts);
+            ego_n_tot += ego.n();
+            let f = Filtration::degree_superlevel(&ego);
+            // raw: generic PH pipeline on the ego net
+            let (_, t_raw) = Timer::time(|| pd0_generic(&ego, &f));
+            // pruned: ALL PrunIT steps counted (find+remove dominated,
+            // induced graph, then PD_0), as in the paper
+            let (_, t_pru) = Timer::time(|| {
+                let r = prunit(&ego, &f);
+                pd0_generic(&r.graph, &r.filtration)
+            });
+            t_raw_tot += t_raw;
+            t_pru_tot += t_pru;
+            reds.push(100.0 * (t_raw - t_pru) / t_raw.max(1e-12));
+        }
+        reds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = |q: f64| reds[((reds.len() - 1) as f64 * q) as usize];
+        t.row(&[
+            recipe.name.to_string(),
+            EGO_SAMPLES.to_string(),
+            format!("{:.0}", ego_n_tot as f64 / EGO_SAMPLES as f64),
+            format!("{:.3}", 1e3 * t_raw_tot / EGO_SAMPLES as f64),
+            format!("{:.3}", 1e3 * t_pru_tot / EGO_SAMPLES as f64),
+            format!("{:.1}", 100.0 * (t_raw_tot - t_pru_tot) / t_raw_tot.max(1e-12)),
+            format!("{:.1}", p(0.25)),
+            format!("{:.1}", p(0.75)),
+        ]);
+    }
+    t.emit(Some("bench_results.tsv"));
+    println!("paper reference: OGB-ARXIV avg ≈ 37%, OGB-MAG avg ≈ 23%, tail to 75%.");
+    println!("note: at ego sizes of tens of vertices the PD_0 union-find is so fast");
+    println!("that gains hinge on the dominated fraction — shape, not magnitude.");
+}

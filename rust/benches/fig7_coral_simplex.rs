@@ -1,0 +1,43 @@
+//! **E9 — Figure 7**: CoralTDA clique/simplex-count reduction. For the
+//! target dimension k the PH computation consumes cliques up to size
+//! k + 2 ((k+1)-simplices kill k-classes); we report the reduction in that
+//! total clique count between `G` and `G^{k+1}`.
+
+use coral_prunit::complex::clique::count_cliques;
+use coral_prunit::complex::Filtration;
+use coral_prunit::datasets;
+use coral_prunit::reduce::coral_reduce;
+use coral_prunit::util::table::reduction_pct;
+use coral_prunit::util::Table;
+
+const SEED: u64 = 42;
+
+fn main() {
+    let mut t = Table::new(
+        "Figure 7 — CoralTDA clique-count reduction % (avg over instances)",
+        &["dataset", "k=1", "k=2", "k=3"],
+    );
+    let recipes: Vec<_> = datasets::kernel_datasets()
+        .into_iter()
+        .chain(datasets::node_datasets())
+        .collect();
+    for recipe in recipes {
+        let graphs = recipe.make_all(SEED);
+        let mut row = vec![recipe.name.to_string()];
+        for k in 1..=3usize {
+            let mut acc = 0.0;
+            for g in &graphs {
+                let f = Filtration::degree(g);
+                let before: usize = count_cliques(g, k + 2).iter().sum();
+                let r = coral_reduce(g, &f, k);
+                let after: usize = count_cliques(&r.graph, k + 2).iter().sum();
+                acc += reduction_pct(before, after);
+            }
+            row.push(format!("{:.1}", acc / graphs.len() as f64));
+        }
+        t.row(&row);
+    }
+    t.emit(Some("bench_results.tsv"));
+    println!("paper shape check: simplex reduction resembles Figure 4 but amplified,");
+    println!("since peeling low-core vertices removes super-linearly many cliques.");
+}

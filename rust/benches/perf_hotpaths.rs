@@ -1,0 +1,82 @@
+//! **§Perf — hot-path microbenches** (EXPERIMENTS.md §Perf): the
+//! measurement harness for the optimization pass. One row per hot path;
+//! re-run after each change and record deltas.
+
+use coral_prunit::bench::{bench_auto, sink};
+use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::graph::gen;
+use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm, BoundaryMatrix};
+use coral_prunit::homology::{pd0, persistence_diagrams};
+use coral_prunit::kcore::coreness;
+use coral_prunit::prune::prunit;
+use coral_prunit::util::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "§Perf — hot paths (median ± MAD)",
+        &["path", "workload", "time"],
+    );
+
+    // 1. k-core decomposition (Batagelj–Zaveršnik)
+    let big = gen::barabasi_albert(100_000, 4, 1);
+    let m = bench_auto(|| sink(coreness(&big)));
+    t.row(&["kcore/bz".into(), format!("BA n=100k m={}", big.m()), m.fmt_ms()]);
+
+    // 2. PrunIT sparse fixed point
+    let social = coral_prunit::datasets::recipes::social(50_000, 2, 0.45, 2);
+    let f_social = Filtration::degree_superlevel(&social);
+    let m = bench_auto(|| sink(prunit(&social, &f_social).removed));
+    t.row(&["prunit/sparse".into(), format!("social n=50k m={}", social.m()), m.fmt_ms()]);
+
+    // 3. clique enumeration (complex build) on a clustered graph
+    let plc = gen::powerlaw_cluster(2_000, 6, 0.7, 3);
+    let f_plc = Filtration::degree(&plc);
+    let m = bench_auto(|| sink(CliqueComplex::build(&plc, &f_plc, 3).len()));
+    t.row(&["complex/build(dim≤3)".into(), format!("PLC n=2k m={}", plc.m()), m.fmt_ms()]);
+
+    // 4. boundary-matrix reduction: standard vs twist
+    let er = gen::erdos_renyi(300, 0.1, 4);
+    let f_er = Filtration::degree(&er);
+    let complex = CliqueComplex::build(&er, &f_er, 3);
+    println!("reduction workload: {} simplices", complex.len());
+    let m_std = bench_auto(|| sink(diagrams_of_complex(&complex, 2, Algorithm::Standard).len()));
+    t.row(&["homology/standard".into(), format!("{} simplices", complex.len()), m_std.fmt_ms()]);
+    let m_tw = bench_auto(|| sink(diagrams_of_complex(&complex, 2, Algorithm::Twist).len()));
+    t.row(&["homology/twist".into(), format!("{} simplices", complex.len()), m_tw.fmt_ms()]);
+
+    // 5. boundary matrix construction alone
+    let m = bench_auto(|| sink(BoundaryMatrix::build(&complex).columns.len()));
+    t.row(&["homology/matrix-build".into(), format!("{} simplices", complex.len()), m.fmt_ms()]);
+
+    // 6. PD_0 union-find on a large sparse graph
+    let cite = coral_prunit::datasets::recipes::citation(200_000, 600_000, 5);
+    let f_cite = Filtration::degree_superlevel(&cite);
+    let m = bench_auto(|| sink(pd0(&cite, &f_cite).len()));
+    t.row(&["homology/pd0-uf".into(), format!("citation n=200k m={}", cite.m()), m.fmt_ms()]);
+
+    // 7. end-to-end PD_1 with combined reduction (the product workload)
+    let reddit = coral_prunit::datasets::find("REDDIT-BINARY").unwrap().make(7, 0);
+    let f_r = Filtration::degree_superlevel(&reddit);
+    let m_none = bench_auto(|| sink(persistence_diagrams(&reddit, &f_r, 1).len()));
+    t.row(&["e2e/pd1 no-reduction".into(), format!("REDDIT n={}", reddit.n()), m_none.fmt_ms()]);
+    let m_red = bench_auto(|| {
+        let r = coral_prunit::reduce::combined(&reddit, &f_r, 1);
+        sink(persistence_diagrams(&r.graph, &r.filtration, 1).len())
+    });
+    t.row(&["e2e/pd1 prunit+coral".into(), format!("REDDIT n={}", reddit.n()), m_red.fmt_ms()]);
+
+    // 8. XLA dense domination sweep per bucket (runtime layer)
+    match coral_prunit::runtime::XlaRuntime::from_default() {
+        Ok(rt) => {
+            for n in [32usize, 128, 512] {
+                let g = gen::powerlaw_cluster(n, 4, 0.6, 9);
+                let f = Filtration::degree_superlevel(&g);
+                let m = bench_auto(|| sink(rt.domination_sweep(&g, &f).unwrap().bucket));
+                t.row(&["runtime/xla-sweep".into(), format!("bucket {n}"), m.fmt_ms()]);
+            }
+        }
+        Err(e) => println!("xla runtime unavailable ({e}); skipping sweep rows"),
+    }
+
+    t.emit(Some("bench_results.tsv"));
+}

@@ -1,0 +1,63 @@
+//! **E4 — Table 1**: PrunIT vertex and edge reductions on the 11 large
+//! networks (synthetic stand-ins, scaled ~5–20×; see DESIGN.md §4). The
+//! paper's columns are printed alongside for direct shape comparison:
+//! who reduces most (emailEuAll ≈ 95%), who least (soc-Epinions1 /
+//! p2pGnutella edges ≈ 14–20%), average vertex reduction ≈ 62%.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::datasets;
+use coral_prunit::prune::prunit;
+use coral_prunit::util::table::reduction_pct;
+use coral_prunit::util::{Table, Timer};
+
+const SEED: u64 = 42;
+
+/// Paper Table 1 reference values: (dataset, |V|, V-red %, |E|, E-red %).
+const PAPER: [(&str, usize, f64, usize, f64); 11] = [
+    ("com-youtube", 1_134_890, 59.0, 2_987_624, 25.0),
+    ("com-amazon", 334_863, 37.0, 925_872, 40.0),
+    ("com-dblp", 317_080, 72.0, 1_049_866, 65.0),
+    ("web-Stanford", 281_903, 67.0, 1_992_636, 76.0),
+    ("emailEuAll", 265_214, 95.0, 364_481, 94.0),
+    ("soc-Epinions1", 75_879, 57.0, 405_740, 14.0),
+    ("p2pGnutella31", 62_586, 46.0, 147_892, 20.0),
+    ("Brightkite_edges", 58_228, 48.0, 214_078, 21.0),
+    ("Email-Enron", 36_692, 76.0, 183_831, 38.0),
+    ("CA-CondMat", 23_133, 69.0, 93_439, 65.0),
+    ("oregon1_010526", 11_174, 62.0, 23_409, 48.0),
+];
+
+fn main() {
+    let mut t = Table::new(
+        "Table 1 — PrunIT reductions on large networks (ours vs paper)",
+        &[
+            "dataset", "|V|", "V_red_%", "paper_V%", "|E|", "E_red_%", "paper_E%", "secs",
+        ],
+    );
+    let mut v_red_sum = 0.0;
+    for recipe in datasets::large_networks() {
+        let g = recipe.make(SEED, 0);
+        let f = Filtration::degree_superlevel(&g);
+        let (r, secs) = Timer::time(|| prunit(&g, &f));
+        let v_red = reduction_pct(g.n(), r.graph.n());
+        let e_red = reduction_pct(g.m(), r.graph.m());
+        v_red_sum += v_red;
+        let paper = PAPER.iter().find(|p| p.0 == recipe.name).unwrap();
+        t.row(&[
+            recipe.name.to_string(),
+            g.n().to_string(),
+            format!("{v_red:.1}"),
+            format!("{:.0}", paper.2),
+            g.m().to_string(),
+            format!("{e_red:.1}"),
+            format!("{:.0}", paper.4),
+            format!("{secs:.3}"),
+        ]);
+    }
+    t.emit(Some("bench_results.tsv"));
+    println!(
+        "average vertex reduction: {:.1}% (paper: ≈62%)",
+        v_red_sum / PAPER.len() as f64
+    );
+    println!("shape check: emailEuAll highest; p2p/Epinions lowest edge reduction.");
+}

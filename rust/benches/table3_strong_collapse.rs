@@ -1,0 +1,57 @@
+//! **E6 — Table 3 (Remark 13)**: PrunIT vs Strong Collapse on the
+//! Email-Enron stand-in with degree filtering, threshold step sizes
+//! δ ∈ {4, 12}. PrunIT detects dominated vertices ONCE on the graph;
+//! Strong Collapse must collapse every flag complex in the filtration
+//! sequence. Reported: dominated-vertex-elimination time and total
+//! simplex count feeding PH (paper: PrunIT ≈5× faster, ≈40% fewer
+//! simplices).
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::datasets;
+use coral_prunit::prune::strong_collapse::{prunit_sweep, strong_collapse_sweep};
+use coral_prunit::util::Table;
+
+const SEED: u64 = 42;
+const MAX_CLIQUE: usize = 3; // simplices up to triangles, as for PD_1
+
+/// Paper Table 3: (step, prunit secs, SC secs, prunit Msimp, SC Msimp).
+const PAPER: [(f64, f64, f64, f64, f64); 2] =
+    [(4.0, 1412.0, 7014.0, 270.2, 465.2), (12.0, 513.0, 2520.0, 90.7, 155.8)];
+
+fn main() {
+    let recipe = datasets::find("Email-Enron").unwrap();
+    let g = recipe.make(SEED, 0);
+    let f = Filtration::degree_superlevel(&g);
+    println!(
+        "Email-Enron stand-in: n={} m={} (paper: 36,692 / 183,831; {}x scale)",
+        g.n(),
+        g.m(),
+        recipe.scale_down
+    );
+    let mut t = Table::new(
+        "Table 3 — PrunIT vs Strong Collapse (Email-Enron stand-in)",
+        &[
+            "step", "prunit_s", "sc_s", "speedup", "paper_speedup", "prunit_simplices",
+            "sc_simplices", "simp_ratio", "paper_ratio",
+        ],
+    );
+    for (step, p_s, sc_s, p_m, sc_m) in PAPER {
+        let pi = prunit_sweep(&g, &f, step, MAX_CLIQUE);
+        let sc = strong_collapse_sweep(&g, &f, step, MAX_CLIQUE);
+        t.row(&[
+            format!("{step}"),
+            format!("{:.3}", pi.collapse_secs),
+            format!("{:.3}", sc.collapse_secs),
+            format!("{:.1}x", sc.collapse_secs / pi.collapse_secs.max(1e-9)),
+            format!("{:.1}x", sc_s / p_s),
+            pi.simplex_count.to_string(),
+            sc.simplex_count.to_string(),
+            format!("{:.2}", sc.simplex_count as f64 / pi.simplex_count.max(1) as f64),
+            format!("{:.2}", sc_m / p_m),
+        ]);
+    }
+    t.emit(Some("bench_results.tsv"));
+    println!("paper shape check: PrunIT ≈5x faster dominated-vertex elimination at");
+    println!("both step sizes, and the PH input carries ≈1.7x fewer simplices than");
+    println!("under Strong Collapse (paper Table 3 ratios printed alongside).");
+}

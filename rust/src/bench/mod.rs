@@ -1,0 +1,101 @@
+//! Custom micro-bench harness (S15; criterion is not in the offline
+//! registry). Warmup + repeated timed runs, reporting median and MAD so
+//! bench drivers can print stable paper-style rows.
+
+use crate::util::Timer;
+
+/// Result of a timed measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median_secs: f64,
+    pub mad_secs: f64,
+    pub min_secs: f64,
+    pub runs: usize,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median_secs * 1e3
+    }
+
+    pub fn fmt_ms(&self) -> String {
+        format!("{:.3}±{:.3}ms", self.median_secs * 1e3, self.mad_secs * 1e3)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `runs` measured runs.
+/// A black-box sink defeats dead-code elimination on the closure result.
+pub fn bench<T>(warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Measurement {
+    assert!(runs >= 1);
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut samples: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t = Timer::start();
+            sink(f());
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        median_secs: median,
+        mad_secs: devs[devs.len() / 2],
+        min_secs: samples[0],
+        runs,
+    }
+}
+
+/// Adaptive run count: quick functions get more repetitions.
+pub fn bench_auto<T>(mut f: impl FnMut() -> T) -> Measurement {
+    let (_, probe) = Timer::time(|| sink(f()));
+    let runs = if probe < 1e-4 {
+        50
+    } else if probe < 1e-2 {
+        15
+    } else if probe < 0.5 {
+        5
+    } else {
+        3
+    };
+    bench(1, runs, f)
+}
+
+/// Opaque value sink (std::hint::black_box).
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = bench(1, 5, || (0..1000u64).sum::<u64>());
+        assert!(m.median_secs >= 0.0);
+        assert_eq!(m.runs, 5);
+        assert!(m.min_secs <= m.median_secs);
+    }
+
+    #[test]
+    fn auto_picks_more_runs_for_fast_fns() {
+        let m = bench_auto(|| 1 + 1);
+        assert!(m.runs >= 15);
+    }
+
+    #[test]
+    fn fmt_renders() {
+        let m = Measurement {
+            median_secs: 0.001,
+            mad_secs: 0.0001,
+            min_secs: 0.0009,
+            runs: 5,
+        };
+        assert!(m.fmt_ms().contains("1.000"));
+    }
+}

@@ -1,0 +1,346 @@
+//! Hand-rolled CLI (clap is not in the offline registry): the `repro`
+//! binary's subcommands, each a thin driver over the library.
+
+use std::collections::BTreeMap;
+
+use crate::complex::Filtration;
+use crate::config::{Config, CoordinatorConfig};
+use crate::coordinator::{Coordinator, Job, JobSpec};
+use crate::datasets;
+use crate::error::{Error, Result};
+use crate::homology::persistence_diagrams;
+use crate::reduce::{combined_with, Reduction};
+use crate::runtime::XlaRuntime;
+use crate::util::Table;
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.command = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let val = if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    it.next().cloned().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                args.flags.insert(key.to_string(), val);
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn flag_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{key}: expected integer, got {v:?}"))),
+        }
+    }
+}
+
+/// Parse a `--reduction` flag value.
+pub fn parse_reduction(s: &str) -> Result<Reduction> {
+    match s {
+        "none" => Ok(Reduction::None),
+        "coral" => Ok(Reduction::Coral),
+        "prunit" => Ok(Reduction::Prunit),
+        "combined" | "prunit+coral" => Ok(Reduction::Combined),
+        other => Err(Error::Parse(format!(
+            "--reduction must be none|coral|prunit|combined, got {other:?}"
+        ))),
+    }
+}
+
+pub const USAGE: &str = "\
+repro — CoralTDA + PrunIT reduction framework (NeurIPS 2022 reproduction)
+
+USAGE:
+  repro <command> [flags]
+
+COMMANDS:
+  info                         registry, artifact buckets, PJRT platform
+  reduce   --dataset NAME      reduction stats for a dataset
+           [--k K] [--reduction none|coral|prunit|combined] [--seed S]
+  pd       --dataset NAME      persistence diagrams of instance 0
+           [--k K] [--seed S] [--instance I]
+  batch    --dataset NAME      run the batch coordinator over all instances
+           [--config FILE] [--workers W] [--k K] [--seed S]
+  dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
+           [--seed S]
+  help                         this text
+
+Datasets: see `repro info`. Experiments (paper tables/figures) live in
+`cargo bench` targets; see DESIGN.md §5 for the index.
+";
+
+/// Entry: dispatch a parsed command, returning the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "info" => cmd_info(),
+        "reduce" => cmd_reduce(&args),
+        "pd" => cmd_pd(&args),
+        "batch" => cmd_batch(&args),
+        "dense-check" => cmd_dense_check(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn dataset_flag(args: &Args) -> Result<datasets::Recipe> {
+    let name = args
+        .flag("dataset")
+        .ok_or_else(|| Error::Parse("--dataset is required".into()))?;
+    datasets::find(name)
+}
+
+fn cmd_info() -> Result<i32> {
+    let mut t = Table::new(
+        "dataset registry (synthetic stand-ins; DESIGN.md §4)",
+        &["name", "kind", "n", "instances", "scale_down", "family"],
+    );
+    let groups: [(&str, Vec<datasets::Recipe>); 4] = [
+        ("kernel", datasets::kernel_datasets()),
+        ("node", datasets::node_datasets()),
+        ("ogb", datasets::ogb_like()),
+        ("large", datasets::large_networks()),
+    ];
+    for (kind, recipes) in groups {
+        for r in recipes {
+            t.row(&[
+                r.name.to_string(),
+                kind.to_string(),
+                r.n.to_string(),
+                r.instances.to_string(),
+                format!("{}x", r.scale_down),
+                format!("{:?}", r.family),
+            ]);
+        }
+    }
+    t.emit(None);
+    match XlaRuntime::from_default() {
+        Ok(rt) => println!(
+            "xla runtime: platform={} buckets={:?}",
+            rt.platform(),
+            rt.buckets()
+        ),
+        Err(e) => println!("xla runtime unavailable: {e}"),
+    }
+    Ok(0)
+}
+
+fn cmd_reduce(args: &Args) -> Result<i32> {
+    let recipe = dataset_flag(args)?;
+    let k = args.flag_usize("k", 1)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let which = parse_reduction(args.flag("reduction").unwrap_or("combined"))?;
+    let mut t = Table::new(
+        &format!("{} reduction on {} (k={k})", which.name(), recipe.name),
+        &["instance", "|V|", "|V'|", "V-red", "|E|", "|E'|", "E-red", "secs"],
+    );
+    for i in 0..recipe.instances {
+        let g = recipe.make(seed, i);
+        let f = Filtration::degree_superlevel(&g);
+        let r = combined_with(&g, &f, k, which);
+        t.row(&[
+            i.to_string(),
+            r.vertices_before.to_string(),
+            r.graph.n().to_string(),
+            format!("{:.1}%", r.vertex_reduction_pct()),
+            r.edges_before.to_string(),
+            r.graph.m().to_string(),
+            format!("{:.1}%", r.edge_reduction_pct()),
+            format!("{:.4}", r.reduce_secs),
+        ]);
+    }
+    t.emit(None);
+    Ok(0)
+}
+
+fn cmd_pd(args: &Args) -> Result<i32> {
+    let recipe = dataset_flag(args)?;
+    let k = args.flag_usize("k", 1)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let idx = args.flag_usize("instance", 0)?;
+    let g = recipe.make(seed, idx);
+    let f = Filtration::degree_superlevel(&g);
+    let pds = persistence_diagrams(&g, &f, k);
+    println!(
+        "{} instance {idx}: n={} m={}",
+        recipe.name,
+        g.n(),
+        g.m()
+    );
+    for d in &pds {
+        println!("  {d}");
+    }
+    Ok(0)
+}
+
+fn cmd_batch(args: &Args) -> Result<i32> {
+    let recipe = dataset_flag(args)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let mut cfg = match args.flag("config") {
+        Some(path) => CoordinatorConfig::from_config(&Config::load(path)?)?,
+        None => CoordinatorConfig::default(),
+    };
+    if let Some(w) = args.flag("workers") {
+        cfg.workers = w
+            .parse()
+            .map_err(|_| Error::Parse(format!("--workers: {w:?}")))?;
+    }
+    cfg.max_k = args.flag_usize("k", cfg.max_k)?;
+    let reduction = parse_reduction(&cfg.reduction.clone())?;
+    let coordinator = Coordinator::new(cfg.clone());
+    let jobs: Vec<Job> = (0..recipe.instances)
+        .map(|i| {
+            Job::degree_superlevel(
+                i as u64,
+                recipe.make(seed, i),
+                JobSpec {
+                    max_k: cfg.max_k,
+                    reduction,
+                },
+            )
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = coordinator.run(jobs)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{}: {} jobs in {:.3}s ({:.1} jobs/s, {} workers)",
+        recipe.name,
+        results.len(),
+        secs,
+        results.len() as f64 / secs.max(1e-12),
+        cfg.workers
+    );
+    println!("{}", coordinator.metrics().summary());
+    Ok(0)
+}
+
+fn cmd_dense_check(args: &Args) -> Result<i32> {
+    let recipe = dataset_flag(args)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let rt = XlaRuntime::from_default()?;
+    let mut checked = 0usize;
+    for i in 0..recipe.instances {
+        let g = recipe.make(seed, i);
+        if g.n() > rt.max_order() {
+            println!("instance {i}: n={} exceeds dense buckets, skipped", g.n());
+            continue;
+        }
+        let f = Filtration::degree_superlevel(&g);
+        let dense = crate::runtime::prunit_dense(&rt, &g, &f)?;
+        let sparse = crate::prune::prunit(&g, &f);
+        let pd_dense = persistence_diagrams(&dense.graph, &dense.filtration, 1);
+        let pd_sparse = persistence_diagrams(&sparse.graph, &sparse.filtration, 1);
+        for k in 0..=1 {
+            if !pd_dense[k].same_as(&pd_sparse[k], 1e-9) {
+                return Err(Error::Xla(format!(
+                    "instance {i}: dense/sparse PD_{k} disagree"
+                )));
+            }
+        }
+        println!(
+            "instance {i}: n={} dense→{} sparse→{} PDs agree ✓",
+            g.n(),
+            dense.graph.n(),
+            sparse.graph.n()
+        );
+        checked += 1;
+    }
+    println!("dense-check: {checked} instances verified");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv("reduce --dataset TWITTER --k 2 pos")).unwrap();
+        assert_eq!(a.command, "reduce");
+        assert_eq!(a.flag("dataset"), Some("TWITTER"));
+        assert_eq!(a.flag_usize("k", 0).unwrap(), 2);
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn boolean_flags_default_true() {
+        let a = Args::parse(&argv("cmd --verbose --k 3")).unwrap();
+        assert_eq!(a.flag("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn reduction_parse() {
+        assert_eq!(parse_reduction("coral").unwrap(), Reduction::Coral);
+        assert_eq!(
+            parse_reduction("prunit+coral").unwrap(),
+            Reduction::Combined
+        );
+        assert!(parse_reduction("bogus").is_err());
+    }
+
+    #[test]
+    fn unknown_command_is_exit_2() {
+        assert_eq!(run(&argv("frobnicate")).unwrap(), 2);
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(&argv("help")).unwrap(), 0);
+    }
+
+    #[test]
+    fn missing_dataset_flag_errors() {
+        assert!(run(&argv("reduce")).is_err());
+    }
+
+    #[test]
+    fn bad_flag_value_errors() {
+        let a = Args::parse(&argv("reduce --k abc")).unwrap();
+        assert!(a.flag_usize("k", 0).is_err());
+    }
+}

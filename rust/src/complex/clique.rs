@@ -1,0 +1,274 @@
+//! Filtered clique (flag) complexes (§3): enumerate all cliques of the
+//! graph up to a dimension cap and order them by sublevel filtration value
+//! (max vertex key, then dimension, then lexicographic tuple — which
+//! guarantees every face precedes its cofaces).
+
+use super::filtration::Filtration;
+use super::simplex::Simplex;
+use crate::graph::core::sorted_intersection_into;
+use crate::graph::Graph;
+
+/// One simplex in a filtered complex.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FilteredSimplex {
+    pub simplex: Simplex,
+    /// Ascending sort key (sublevel-normalised; see [`Filtration::key`]).
+    pub key: f64,
+}
+
+/// A filtered flag complex, simplices in filtration order.
+#[derive(Clone, Debug, Default)]
+pub struct CliqueComplex {
+    /// Simplices sorted by (key, dim, lexicographic vertices).
+    pub simplices: Vec<FilteredSimplex>,
+}
+
+impl CliqueComplex {
+    /// Build the clique complex of `g` up to `max_dim`-simplices, filtered
+    /// by the vertex function. To compute `PD_k` you need `max_dim = k+1`.
+    pub fn build(g: &Graph, f: &Filtration, max_dim: usize) -> CliqueComplex {
+        f.check(g).expect("filtration must match graph");
+        let mut simplices: Vec<FilteredSimplex> = Vec::new();
+
+        // dim 0
+        for v in 0..g.n() as u32 {
+            simplices.push(FilteredSimplex {
+                simplex: Simplex::from_sorted(vec![v]),
+                key: f.key(v),
+            });
+        }
+
+        // dims >= 1 by ordered expansion: a clique is discovered exactly
+        // once as its ascending vertex tuple. §Perf: candidate buffers are
+        // pooled per recursion depth — no allocation in the inner loop.
+        let mut stack_clique: Vec<u32> = Vec::new();
+        let mut pool: Vec<Vec<u32>> = vec![Vec::new(); max_dim + 2];
+        let mut cand: Vec<u32> = Vec::new();
+        for v in 0..(if max_dim == 0 { 0 } else { g.n() }) as u32 {
+            stack_clique.clear();
+            stack_clique.push(v);
+            cand.clear();
+            cand.extend(g.neighbors(v).iter().copied().filter(|&w| w > v));
+            expand(
+                g,
+                f,
+                max_dim,
+                &mut stack_clique,
+                &cand,
+                f.key(v),
+                &mut simplices,
+                &mut pool,
+            );
+        }
+
+        // §Perf: integer key transform avoids partial_cmp in the hot sort.
+        simplices.sort_unstable_by(|a, b| {
+            crate::util::sortable_f64(a.key)
+                .cmp(&crate::util::sortable_f64(b.key))
+                .then(a.simplex.dim().cmp(&b.simplex.dim()))
+                .then(a.simplex.vertices().cmp(b.simplex.vertices()))
+        });
+        CliqueComplex { simplices }
+    }
+
+    /// Number of simplices per dimension.
+    pub fn counts_by_dim(&self) -> Vec<usize> {
+        let mut counts = Vec::new();
+        for s in &self.simplices {
+            let d = s.simplex.dim();
+            if counts.len() <= d {
+                counts.resize(d + 1, 0);
+            }
+            counts[d] += 1;
+        }
+        counts
+    }
+
+    pub fn len(&self) -> usize {
+        self.simplices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.simplices.is_empty()
+    }
+
+    /// Max dimension present.
+    pub fn dim(&self) -> usize {
+        self.simplices
+            .iter()
+            .map(|s| s.simplex.dim())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Recursive ordered clique expansion. `clique` is the current ascending
+/// tuple, `cand` the common later neighbours, `key` the running max,
+/// `pool` the per-depth candidate buffers (allocation-free inner loop).
+#[allow(clippy::too_many_arguments)]
+fn expand(
+    g: &Graph,
+    f: &Filtration,
+    max_dim: usize,
+    clique: &mut Vec<u32>,
+    cand: &[u32],
+    key: f64,
+    out: &mut Vec<FilteredSimplex>,
+    pool: &mut Vec<Vec<u32>>,
+) {
+    let depth = clique.len();
+    for (i, &w) in cand.iter().enumerate() {
+        clique.push(w);
+        let k = key.max(f.key(w));
+        out.push(FilteredSimplex {
+            simplex: Simplex::from_sorted(clique.clone()),
+            key: k,
+        });
+        if clique.len() <= max_dim {
+            // candidates after w that stay adjacent to the whole clique
+            let mut next = std::mem::take(&mut pool[depth]);
+            sorted_intersection_into(&cand[i + 1..], g.neighbors(w), &mut next);
+            if !next.is_empty() {
+                expand(g, f, max_dim, clique, &next, k, out, pool);
+            }
+            pool[depth] = next;
+        }
+        clique.pop();
+    }
+}
+
+/// Count cliques of each size 1..=max_size without materialising them
+/// (Fig 7's simplex-count reduction metric).
+pub fn count_cliques(g: &Graph, max_size: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; max_size.max(1)];
+    if max_size == 0 {
+        return counts;
+    }
+    counts[0] = g.n();
+    fn rec(g: &Graph, depth: usize, cand: &[u32], max_size: usize, counts: &mut [usize]) {
+        let mut next: Vec<u32> = Vec::new();
+        for (i, &w) in cand.iter().enumerate() {
+            counts[depth] += 1;
+            if depth + 1 < max_size {
+                sorted_intersection_into(&cand[i + 1..], g.neighbors(w), &mut next);
+                if !next.is_empty() {
+                    rec(g, depth + 1, &next, max_size, counts);
+                }
+            }
+        }
+    }
+    for v in 0..g.n() as u32 {
+        let cand: Vec<u32> = g.neighbors(v).iter().copied().filter(|&w| w > v).collect();
+        if !cand.is_empty() && max_size >= 2 {
+            rec(g, 1, &cand, max_size, &mut counts);
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn keys_valid(c: &CliqueComplex) {
+        // faces precede cofaces in the sorted order
+        let pos: std::collections::HashMap<&[u32], usize> = c
+            .simplices
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.simplex.vertices(), i))
+            .collect();
+        for (i, s) in c.simplices.iter().enumerate() {
+            if s.simplex.dim() == 0 {
+                continue;
+            }
+            for face in s.simplex.faces() {
+                let j = pos[face.vertices()];
+                assert!(j < i, "face {face} must precede {}", s.simplex);
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_complex() {
+        let g = gen::complete(3);
+        let f = Filtration::constant(3);
+        let c = CliqueComplex::build(&g, &f, 2);
+        assert_eq!(c.counts_by_dim(), vec![3, 3, 1]);
+        keys_valid(&c);
+    }
+
+    #[test]
+    fn k4_counts() {
+        let g = gen::complete(4);
+        let c = CliqueComplex::build(&g, &Filtration::constant(4), 3);
+        assert_eq!(c.counts_by_dim(), vec![4, 6, 4, 1]);
+        keys_valid(&c);
+    }
+
+    #[test]
+    fn dim_cap_respected() {
+        let g = gen::complete(6);
+        let c = CliqueComplex::build(&g, &Filtration::constant(6), 2);
+        assert_eq!(c.dim(), 2);
+        // C(6,1), C(6,2), C(6,3)
+        assert_eq!(c.counts_by_dim(), vec![6, 15, 20]);
+    }
+
+    #[test]
+    fn octahedron_has_no_tetrahedra() {
+        let g = gen::octahedron();
+        let c = CliqueComplex::build(&g, &Filtration::constant(6), 3);
+        assert_eq!(c.counts_by_dim(), vec![6, 12, 8]); // S² triangulation
+    }
+
+    #[test]
+    fn simplex_key_is_max_vertex_key() {
+        let g = gen::complete(3);
+        let f = Filtration::sublevel(vec![1.0, 5.0, 3.0]);
+        let c = CliqueComplex::build(&g, &f, 2);
+        let tri = c
+            .simplices
+            .iter()
+            .find(|s| s.simplex.dim() == 2)
+            .unwrap();
+        assert_eq!(tri.key, 5.0);
+        keys_valid(&c);
+    }
+
+    #[test]
+    fn superlevel_ordering_reverses() {
+        let g = gen::path(3); // 0-1-2, degrees 1,2,1
+        let f = Filtration::degree_superlevel(&g);
+        let c = CliqueComplex::build(&g, &f, 1);
+        // vertex 1 (degree 2) must enter first under superlevel
+        assert_eq!(c.simplices[0].simplex.vertices(), &[1]);
+        keys_valid(&c);
+    }
+
+    #[test]
+    fn count_cliques_matches_materialised() {
+        for seed in 0..5 {
+            let g = gen::erdos_renyi(30, 0.3, seed);
+            let c = CliqueComplex::build(&g, &Filtration::constant(30), 3);
+            let counted = count_cliques(&g, 4);
+            let built = c.counts_by_dim();
+            for d in 0..4 {
+                assert_eq!(
+                    counted.get(d).copied().unwrap_or(0),
+                    built.get(d).copied().unwrap_or(0),
+                    "dim {d} mismatch (seed {seed})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph_complex() {
+        let g = crate::graph::Graph::empty(0);
+        let c = CliqueComplex::build(&g, &Filtration::constant(0), 2);
+        assert!(c.is_empty());
+        assert_eq!(count_cliques(&g, 3), vec![0, 0, 0]);
+    }
+}

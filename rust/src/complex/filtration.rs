@@ -1,0 +1,201 @@
+//! Vertex filtering functions and sublevel/superlevel directions (§3).
+//!
+//! A filtration is a function `f : V → ℝ` plus a direction. Sublevel
+//! filtrations include vertex `v` once the threshold passes `f(v)` from
+//! below; superlevel from above. Internally everything is normalised to
+//! "ascending order of a sort key": the key is `f` for sublevel and `−f`
+//! for superlevel, so the PH engine only ever sees sublevel semantics —
+//! exactly the trick Remark 8 uses (`f(u) ≤ f(v)` superlevel admissibility
+//! equals sublevel admissibility on `−f`).
+
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+
+/// Filtration direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Include vertices with `f(v) ≤ α` as α grows (paper default).
+    Sublevel,
+    /// Include vertices with `f(v) ≥ α` as α decreases.
+    Superlevel,
+}
+
+/// A filtering function on the vertices of a graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Filtration {
+    values: Vec<f64>,
+    direction: Direction,
+}
+
+impl Filtration {
+    /// From explicit values (sublevel).
+    pub fn sublevel(values: Vec<f64>) -> Filtration {
+        Filtration {
+            values,
+            direction: Direction::Sublevel,
+        }
+    }
+
+    /// From explicit values (superlevel).
+    pub fn superlevel(values: Vec<f64>) -> Filtration {
+        Filtration {
+            values,
+            direction: Direction::Superlevel,
+        }
+    }
+
+    /// The paper's most common choice: vertex degree, sublevel.
+    pub fn degree(g: &Graph) -> Filtration {
+        Filtration::sublevel(g.degrees().iter().map(|&d| d as f64).collect())
+    }
+
+    /// Degree function with superlevel direction (paper Fig 5a). Under
+    /// superlevel + degree, *every* dominated vertex is admissible
+    /// (Remark 8: `deg(u) ≤ deg(v)` whenever v dominates u).
+    pub fn degree_superlevel(g: &Graph) -> Filtration {
+        Filtration::superlevel(g.degrees().iter().map(|&d| d as f64).collect())
+    }
+
+    /// Constant filtration — turns PH into plain homology (Betti numbers).
+    pub fn constant(n: usize) -> Filtration {
+        Filtration::sublevel(vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Raw f value of a vertex.
+    #[inline]
+    pub fn value(&self, v: u32) -> f64 {
+        self.values[v as usize]
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Ascending sort key: `f` for sublevel, `−f` for superlevel. The PH
+    /// engine and diagrams operate in key space; `display_value` maps back.
+    #[inline]
+    pub fn key(&self, v: u32) -> f64 {
+        match self.direction {
+            Direction::Sublevel => self.values[v as usize],
+            Direction::Superlevel => -self.values[v as usize],
+        }
+    }
+
+    /// Map a key back to the user-facing filtration value.
+    #[inline]
+    pub fn display_value(&self, key: f64) -> f64 {
+        match self.direction {
+            Direction::Sublevel => key,
+            Direction::Superlevel => -key,
+        }
+    }
+
+    /// PrunIT admissibility (Thm 7 / Rmk 8): may `u` (dominated by `v`) be
+    /// removed? Sublevel: `f(u) ≥ f(v)`; superlevel: `f(u) ≤ f(v)`.
+    /// Both reduce to `key(u) ≥ key(v)`.
+    #[inline]
+    pub fn admissible_removal(&self, u: u32, v: u32) -> bool {
+        self.key(u) >= self.key(v)
+    }
+
+    /// Restrict to a surviving vertex set (`new id -> old id`), keeping the
+    /// ORIGINAL values (paper Remark 1: f is restricted, never recomputed).
+    pub fn restrict(&self, old_ids: &[u32]) -> Filtration {
+        Filtration {
+            values: old_ids.iter().map(|&v| self.values[v as usize]).collect(),
+            direction: self.direction,
+        }
+    }
+
+    /// Validate the filtration matches a graph.
+    pub fn check(&self, g: &Graph) -> Result<()> {
+        if self.values.len() == g.n() {
+            Ok(())
+        } else {
+            Err(Error::FiltrationMismatch {
+                filtration: self.values.len(),
+                order: g.n(),
+            })
+        }
+    }
+
+    /// As f32 key values — marshalling format for the XLA domination
+    /// artifact (which implements sublevel semantics on keys).
+    pub fn keys_f32(&self) -> Vec<f32> {
+        (0..self.values.len() as u32)
+            .map(|v| self.key(v) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn degree_filtration_values() {
+        let g = gen::star(4);
+        let f = Filtration::degree(&g);
+        assert_eq!(f.values(), &[3.0, 1.0, 1.0, 1.0]);
+        assert_eq!(f.direction(), Direction::Sublevel);
+    }
+
+    #[test]
+    fn superlevel_key_negates() {
+        let f = Filtration::superlevel(vec![1.0, 5.0]);
+        assert_eq!(f.key(0), -1.0);
+        assert_eq!(f.display_value(f.key(1)), 5.0);
+    }
+
+    #[test]
+    fn admissibility_directions() {
+        // sublevel: u removable iff f(u) >= f(v)
+        let sub = Filtration::sublevel(vec![2.0, 1.0]);
+        assert!(sub.admissible_removal(0, 1));
+        assert!(!sub.admissible_removal(1, 0));
+        // superlevel: u removable iff f(u) <= f(v)
+        let sup = Filtration::superlevel(vec![2.0, 1.0]);
+        assert!(!sup.admissible_removal(0, 1));
+        assert!(sup.admissible_removal(1, 0));
+        // ties are admissible both ways in both directions
+        let tie = Filtration::sublevel(vec![3.0, 3.0]);
+        assert!(tie.admissible_removal(0, 1) && tie.admissible_removal(1, 0));
+    }
+
+    #[test]
+    fn degree_superlevel_always_admits_dominated() {
+        // v dominates u ⇒ deg(u) ≤ deg(v) ⇒ superlevel-admissible (Rmk 8).
+        let g = gen::star(5);
+        let f = Filtration::degree_superlevel(&g);
+        for leaf in 1..5u32 {
+            assert!(f.admissible_removal(leaf, 0));
+        }
+    }
+
+    #[test]
+    fn restrict_keeps_original_values() {
+        let f = Filtration::sublevel(vec![10.0, 20.0, 30.0, 40.0]);
+        let r = f.restrict(&[1, 3]);
+        assert_eq!(r.values(), &[20.0, 40.0]);
+    }
+
+    #[test]
+    fn check_mismatch() {
+        let g = gen::path(3);
+        assert!(Filtration::constant(3).check(&g).is_ok());
+        assert!(Filtration::constant(2).check(&g).is_err());
+    }
+}

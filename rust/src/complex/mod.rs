@@ -1,0 +1,11 @@
+//! Clique complexes and filtrations (S6/S7): the simplicial machinery the
+//! paper's persistence diagrams are defined over (§3).
+
+pub mod clique;
+pub mod filtration;
+pub mod power;
+pub mod simplex;
+
+pub use clique::{count_cliques, CliqueComplex};
+pub use filtration::{Direction, Filtration};
+pub use simplex::Simplex;

@@ -1,0 +1,186 @@
+//! Power filtration (§5, Thm 10): `G^n` adds edges between all vertex
+//! pairs at graph distance ≤ n; the filtration is the nested sequence of
+//! clique complexes `Ĝ⁰ ⊂ Ĝ¹ ⊂ …`. Equivalent formulation (used here):
+//! a Vietoris–Rips-style flag filtration over shortest-path distances —
+//! a simplex's key is the max pairwise distance of its vertices, vertices
+//! enter at key 0.
+//!
+//! Power filtrations explode combinatorially (a connected graph's
+//! diameter-power is complete), so this module is deliberately scoped to
+//! the small graphs of the paper's power-filtration results: the PrunIT
+//! extension (Thm 10) and the CoralTDA counterexample on cycles (Rmk 11).
+
+use super::clique::{CliqueComplex, FilteredSimplex};
+use super::simplex::Simplex;
+use crate::graph::Graph;
+
+/// All-pairs shortest-path distances via BFS from every vertex.
+/// `usize::MAX` marks unreachable pairs.
+pub fn distance_matrix(g: &Graph) -> Vec<Vec<usize>> {
+    (0..g.n() as u32).map(|v| g.bfs_distances(v)).collect()
+}
+
+/// Build the power filtration of `g` as a filtered flag complex, capped at
+/// `max_dim`-simplices and power ≤ `max_power`.
+pub fn power_complex(g: &Graph, max_dim: usize, max_power: usize) -> CliqueComplex {
+    let dist = distance_matrix(g);
+    let n = g.n();
+    // Threshold graph at max_power, as sorted adjacency lists.
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let d = dist[u][v];
+            if d != usize::MAX && d >= 1 && d <= max_power {
+                adj[u].push(v as u32);
+                adj[v].push(u as u32);
+            }
+        }
+    }
+    for l in adj.iter_mut() {
+        l.sort_unstable();
+    }
+
+    let mut simplices: Vec<FilteredSimplex> = Vec::new();
+    for v in 0..n as u32 {
+        simplices.push(FilteredSimplex {
+            simplex: Simplex::from_sorted(vec![v]),
+            key: 0.0,
+        });
+    }
+
+    // Ordered clique expansion over the threshold graph, tracking the max
+    // pairwise distance incrementally.
+    fn expand(
+        adj: &[Vec<u32>],
+        dist: &[Vec<usize>],
+        max_dim: usize,
+        clique: &mut Vec<u32>,
+        cand: &[u32],
+        key: usize,
+        out: &mut Vec<FilteredSimplex>,
+    ) {
+        for (i, &w) in cand.iter().enumerate() {
+            let mut k = key;
+            for &m in clique.iter() {
+                k = k.max(dist[m as usize][w as usize]);
+            }
+            clique.push(w);
+            out.push(FilteredSimplex {
+                simplex: Simplex::from_sorted(clique.clone()),
+                key: k as f64,
+            });
+            if clique.len() <= max_dim {
+                let next: Vec<u32> = cand[i + 1..]
+                    .iter()
+                    .copied()
+                    .filter(|&x| adj[w as usize].binary_search(&x).is_ok())
+                    .collect();
+                if !next.is_empty() {
+                    expand(adj, dist, max_dim, clique, &next, k, out);
+                }
+            }
+            clique.pop();
+        }
+    }
+
+    let mut clique = Vec::new();
+    for v in 0..n as u32 {
+        clique.clear();
+        clique.push(v);
+        let cand: Vec<u32> = adj[v as usize]
+            .iter()
+            .copied()
+            .filter(|&w| w > v)
+            .collect();
+        expand(&adj, &dist, max_dim, &mut clique, &cand, 0, &mut simplices);
+    }
+
+    simplices.sort_by(|a, b| {
+        a.key
+            .partial_cmp(&b.key)
+            .unwrap()
+            .then(a.simplex.dim().cmp(&b.simplex.dim()))
+            .then(a.simplex.vertices().cmp(b.simplex.vertices()))
+    });
+    CliqueComplex { simplices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn distances_on_cycle() {
+        let g = gen::cycle(6);
+        let d = distance_matrix(&g);
+        assert_eq!(d[0][3], 3);
+        assert_eq!(d[0][5], 1);
+        assert_eq!(d[2][2], 0);
+    }
+
+    #[test]
+    fn unreachable_is_max() {
+        let g = crate::graph::Graph::from_edges(3, &[(0, 1)]);
+        let d = distance_matrix(&g);
+        assert_eq!(d[0][2], usize::MAX);
+    }
+
+    #[test]
+    fn power_one_equals_clique_complex_counts() {
+        let g = gen::erdos_renyi(18, 0.25, 3);
+        let pc = power_complex(&g, 2, 1);
+        let cc = super::super::clique::CliqueComplex::build(
+            &g,
+            &super::super::filtration::Filtration::constant(g.n()),
+            2,
+        );
+        assert_eq!(pc.counts_by_dim(), cc.counts_by_dim());
+    }
+
+    #[test]
+    fn c5_power2_is_complete() {
+        // C5 squared is K5 → power-2 complex has C(5,3) triangles.
+        let g = gen::cycle(5);
+        let pc = power_complex(&g, 2, 2);
+        assert_eq!(pc.counts_by_dim(), vec![5, 10, 10]);
+    }
+
+    #[test]
+    fn keys_are_max_pairwise_distance() {
+        let g = gen::path(4); // 0-1-2-3
+        let pc = power_complex(&g, 2, 3);
+        let tri = pc
+            .simplices
+            .iter()
+            .find(|s| s.simplex.vertices() == [0, 1, 2])
+            .unwrap();
+        assert_eq!(tri.key, 2.0);
+        let tri2 = pc
+            .simplices
+            .iter()
+            .find(|s| s.simplex.vertices() == [0, 1, 3])
+            .unwrap();
+        assert_eq!(tri2.key, 3.0);
+    }
+
+    #[test]
+    fn faces_precede_cofaces() {
+        let g = gen::cycle(7);
+        let pc = power_complex(&g, 3, 3);
+        let pos: std::collections::HashMap<&[u32], usize> = pc
+            .simplices
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.simplex.vertices(), i))
+            .collect();
+        for (i, s) in pc.simplices.iter().enumerate() {
+            if s.simplex.dim() == 0 {
+                continue;
+            }
+            for f in s.simplex.faces() {
+                assert!(pos[f.vertices()] < i);
+            }
+        }
+    }
+}

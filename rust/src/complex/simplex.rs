@@ -1,0 +1,102 @@
+//! Simplices: sorted vertex tuples. A k-clique in the graph induces a
+//! (k−1)-simplex in the clique complex (paper §4.1).
+
+/// A simplex as a strictly increasing vertex tuple.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Simplex {
+    vertices: Vec<u32>,
+}
+
+impl Simplex {
+    /// Construct from vertices (sorted + deduped defensively).
+    pub fn new(mut vertices: Vec<u32>) -> Simplex {
+        vertices.sort_unstable();
+        vertices.dedup();
+        Simplex { vertices }
+    }
+
+    /// Construct from an already strictly-increasing tuple (hot path).
+    #[inline]
+    pub fn from_sorted(vertices: Vec<u32>) -> Simplex {
+        debug_assert!(vertices.windows(2).all(|w| w[0] < w[1]));
+        Simplex { vertices }
+    }
+
+    /// Dimension = |vertices| − 1.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.vertices.len() - 1
+    }
+
+    #[inline]
+    pub fn vertices(&self) -> &[u32] {
+        &self.vertices
+    }
+
+    /// The i-th codimension-1 face (drop vertex i).
+    pub fn face(&self, i: usize) -> Simplex {
+        let mut v = self.vertices.clone();
+        v.remove(i);
+        Simplex { vertices: v }
+    }
+
+    /// All codimension-1 faces (boundary support over Z/2).
+    pub fn faces(&self) -> Vec<Simplex> {
+        (0..self.vertices.len()).map(|i| self.face(i)).collect()
+    }
+
+    /// Does this simplex contain vertex `v`?
+    pub fn contains(&self, v: u32) -> bool {
+        self.vertices.binary_search(&v).is_ok()
+    }
+}
+
+impl std::fmt::Display for Simplex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, v) in self.vertices.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_sorts_and_dedups() {
+        let s = Simplex::new(vec![3, 1, 2, 1]);
+        assert_eq!(s.vertices(), &[1, 2, 3]);
+        assert_eq!(s.dim(), 2);
+    }
+
+    #[test]
+    fn faces_of_triangle() {
+        let s = Simplex::from_sorted(vec![0, 1, 2]);
+        let fs = s.faces();
+        assert_eq!(fs.len(), 3);
+        assert!(fs.contains(&Simplex::from_sorted(vec![1, 2])));
+        assert!(fs.contains(&Simplex::from_sorted(vec![0, 2])));
+        assert!(fs.contains(&Simplex::from_sorted(vec![0, 1])));
+    }
+
+    #[test]
+    fn vertex_simplex_has_empty_faceset_dim() {
+        let s = Simplex::from_sorted(vec![7]);
+        assert_eq!(s.dim(), 0);
+        assert_eq!(s.faces().len(), 1); // the empty simplex, dropped by PH
+    }
+
+    #[test]
+    fn contains_and_display() {
+        let s = Simplex::from_sorted(vec![2, 5, 9]);
+        assert!(s.contains(5));
+        assert!(!s.contains(4));
+        assert_eq!(s.to_string(), "[2,5,9]");
+    }
+}

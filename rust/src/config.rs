@@ -1,0 +1,222 @@
+//! Configuration system (S14): a TOML-subset parser (sections, string /
+//! number / bool scalars, `#` comments) feeding typed experiment and
+//! coordinator configs. serde/toml are unavailable offline; this subset
+//! covers everything the launcher needs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parsed config: `section.key -> raw string value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "line {}: unterminated section header",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::Config(format!("line {}: empty section", lineno + 1)));
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected `key = value`",
+                    lineno + 1
+                )));
+            };
+            let key = line[..eq].trim();
+            let mut val = line[eq + 1..].trim().to_string();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            // strip matched quotes
+            if val.len() >= 2
+                && ((val.starts_with('"') && val.ends_with('"'))
+                    || (val.starts_with('\'') && val.ends_with('\'')))
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::Io(format!("{}: {e}", path.as_ref().display())))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected number, got {v:?}"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("yes") | Some("1") => Ok(true),
+            Some("false") | Some("no") | Some("0") => Ok(false),
+            Some(v) => Err(Error::Config(format!("{key}: expected bool, got {v:?}"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|k| k.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: a `#` outside quotes starts a comment
+    let mut in_quote: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (c, in_quote) {
+            ('"', None) | ('\'', None) => in_quote = Some(c),
+            (q, Some(open)) if q == open => in_quote = None,
+            ('#', None) => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Typed batch-coordinator config (see `coordinator`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub max_k: usize,
+    pub reduction: String,
+    pub seed: u64,
+}
+
+impl CoordinatorConfig {
+    pub fn from_config(cfg: &Config) -> Result<CoordinatorConfig> {
+        let default_workers = std::thread::available_parallelism()
+            .map(|c| c.get())
+            .unwrap_or(2);
+        Ok(CoordinatorConfig {
+            workers: cfg.get_usize("coordinator.workers", default_workers)?,
+            queue_depth: cfg.get_usize("coordinator.queue_depth", 64)?,
+            max_k: cfg.get_usize("coordinator.max_k", 1)?,
+            reduction: cfg.get_str("coordinator.reduction", "prunit+coral"),
+            seed: cfg.get_u64("coordinator.seed", 42)?,
+        })
+    }
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig::from_config(&Config::default()).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let cfg = Config::parse(
+            "top = 1\n[coordinator]\nworkers = 4\nreduction = \"prunit\"\n# comment\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("top"), Some("1"));
+        assert_eq!(cfg.get_usize("coordinator.workers", 0).unwrap(), 4);
+        assert_eq!(cfg.get_str("coordinator.reduction", ""), "prunit");
+        assert!(cfg.get_bool("coordinator.flag", false).unwrap());
+    }
+
+    #[test]
+    fn inline_comments_stripped_outside_quotes() {
+        let cfg = Config::parse("a = 5 # five\nb = \"x # y\"\n").unwrap();
+        assert_eq!(cfg.get("a"), Some("5"));
+        assert_eq!(cfg.get("b"), Some("x # y"));
+    }
+
+    #[test]
+    fn errors_are_specific() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("no_equals_here\n").is_err());
+        assert!(Config::parse("= novalue\n").is_err());
+        let cfg = Config::parse("n = abc\n").unwrap();
+        assert!(cfg.get_usize("n", 0).is_err());
+        assert!(cfg.get_bool("n", false).is_err());
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(cfg.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(cfg.get_str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn coordinator_config_from_toml() {
+        let cfg = Config::parse(
+            "[coordinator]\nworkers = 3\nqueue_depth = 16\nmax_k = 2\nseed = 9\n",
+        )
+        .unwrap();
+        let cc = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(cc.workers, 3);
+        assert_eq!(cc.queue_depth, 16);
+        assert_eq!(cc.max_k, 2);
+        assert_eq!(cc.seed, 9);
+        assert_eq!(cc.reduction, "prunit+coral");
+    }
+}

@@ -1,0 +1,89 @@
+//! Job and result types for the batch coordinator.
+
+use crate::complex::Filtration;
+use crate::graph::Graph;
+use crate::homology::Diagram;
+use crate::reduce::{Reduction, ReductionReport};
+
+/// What to compute for one graph.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Highest homology dimension requested (PD_0..PD_max_k).
+    pub max_k: usize,
+    /// Which reduction to apply first.
+    pub reduction: Reduction,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            max_k: 1,
+            reduction: Reduction::Combined,
+        }
+    }
+}
+
+/// One unit of work: a graph + filtration + spec.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub graph: Graph,
+    pub filtration: Filtration,
+    pub spec: JobSpec,
+}
+
+impl Job {
+    pub fn new(id: u64, graph: Graph, filtration: Filtration, spec: JobSpec) -> Job {
+        Job {
+            id,
+            graph,
+            filtration,
+            spec,
+        }
+    }
+
+    /// Convenience: degree-superlevel filtration (always PrunIT-admissible).
+    pub fn degree_superlevel(id: u64, graph: Graph, spec: JobSpec) -> Job {
+        let filtration = Filtration::degree_superlevel(&graph);
+        Job {
+            id,
+            graph,
+            filtration,
+            spec,
+        }
+    }
+}
+
+/// Result of one job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub diagrams: Vec<Diagram>,
+    pub reduction: ReductionReport,
+    /// seconds spent in PH (excluding reduction, which is in `reduction`)
+    pub ph_secs: f64,
+    /// total wall seconds for the job on the worker
+    pub total_secs: f64,
+    /// worker thread index that executed the job
+    pub worker: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn default_spec_is_combined_pd1() {
+        let s = JobSpec::default();
+        assert_eq!(s.max_k, 1);
+        assert_eq!(s.reduction, Reduction::Combined);
+    }
+
+    #[test]
+    fn degree_superlevel_constructor() {
+        let j = Job::degree_superlevel(7, gen::star(5), JobSpec::default());
+        assert_eq!(j.id, 7);
+        assert_eq!(j.filtration.value(0), 4.0);
+    }
+}

@@ -1,0 +1,80 @@
+//! Atomic coordinator metrics (scrape-friendly counters).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live metrics shared between workers and the leader.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    /// microseconds, accumulated
+    pub reduce_us: AtomicU64,
+    pub ph_us: AtomicU64,
+    pub vertices_in: AtomicU64,
+    pub vertices_out: AtomicU64,
+    pub edges_in: AtomicU64,
+    pub edges_out: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record(&self, reduce_secs: f64, ph_secs: f64, v_in: usize, v_out: usize, e_in: usize, e_out: usize) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.reduce_us
+            .fetch_add((reduce_secs * 1e6) as u64, Ordering::Relaxed);
+        self.ph_us.fetch_add((ph_secs * 1e6) as u64, Ordering::Relaxed);
+        self.vertices_in.fetch_add(v_in as u64, Ordering::Relaxed);
+        self.vertices_out.fetch_add(v_out as u64, Ordering::Relaxed);
+        self.edges_in.fetch_add(e_in as u64, Ordering::Relaxed);
+        self.edges_out.fetch_add(e_out as u64, Ordering::Relaxed);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate vertex reduction across the batch, percent.
+    pub fn vertex_reduction_pct(&self) -> f64 {
+        let vin = self.vertices_in.load(Ordering::Relaxed) as f64;
+        let vout = self.vertices_out.load(Ordering::Relaxed) as f64;
+        if vin == 0.0 {
+            0.0
+        } else {
+            100.0 * (vin - vout) / vin
+        }
+    }
+
+    /// Human-readable summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs={} failed={} reduce={:.3}s ph={:.3}s vertex_reduction={:.1}%",
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.reduce_us.load(Ordering::Relaxed) as f64 / 1e6,
+            self.ph_us.load(Ordering::Relaxed) as f64 / 1e6,
+            self.vertex_reduction_pct(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        let m = Metrics::default();
+        m.record(0.5, 1.0, 100, 40, 200, 90);
+        m.record(0.5, 1.0, 100, 60, 200, 110);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.vertices_in.load(Ordering::Relaxed), 200);
+        assert!((m.vertex_reduction_pct() - 50.0).abs() < 1e-9);
+        assert!(m.summary().contains("jobs=2"));
+    }
+
+    #[test]
+    fn empty_metrics_no_div_by_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.vertex_reduction_pct(), 0.0);
+    }
+}

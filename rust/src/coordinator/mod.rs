@@ -1,0 +1,18 @@
+//! Batch coordinator (S12): the L3 runtime that schedules reduce+PD jobs
+//! across a worker pool — the paper's §6.2 workload ("compute persistence
+//! diagrams for *each vertex's* ego network in a 100k+ graph") is exactly
+//! a large batch of small independent PH jobs.
+//!
+//! std-only implementation (tokio is not in the offline registry): a
+//! bounded `sync_channel` job queue provides backpressure against the
+//! producer, a `Mutex<Receiver>` fans jobs out to `workers` OS threads,
+//! and results stream back over an unbounded channel. Metrics are atomic
+//! counters suitable for live scraping.
+
+pub mod job;
+pub mod metrics;
+pub mod pool;
+
+pub use job::{Job, JobResult, JobSpec};
+pub use metrics::Metrics;
+pub use pool::Coordinator;

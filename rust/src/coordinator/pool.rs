@@ -1,0 +1,231 @@
+//! Worker pool: bounded job queue (backpressure) + result stream.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use crate::config::CoordinatorConfig;
+use crate::error::{Error, Result};
+use crate::homology::persistence_diagrams;
+use crate::reduce::combined_with;
+use crate::util::Timer;
+
+use super::job::{Job, JobResult};
+use super::metrics::Metrics;
+
+/// The batch coordinator: owns config + metrics; `run` executes a batch.
+pub struct Coordinator {
+    config: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Coordinator {
+        Coordinator {
+            config,
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    pub fn with_defaults() -> Coordinator {
+        Coordinator::new(CoordinatorConfig::default())
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Execute one job inline (the worker body; public for testing and
+    /// for single-threaded callers).
+    pub fn execute(job: &Job, worker: usize) -> JobResult {
+        let total = Timer::start();
+        let report = combined_with(&job.graph, &job.filtration, job.spec.max_k, job.spec.reduction);
+        let (diagrams, ph_secs) = Timer::time(|| {
+            persistence_diagrams(&report.graph, &report.filtration, job.spec.max_k)
+        });
+        JobResult {
+            id: job.id,
+            diagrams,
+            reduction: report,
+            ph_secs,
+            total_secs: total.elapsed().as_secs_f64(),
+            worker,
+        }
+    }
+
+    /// Run a batch of jobs from an iterator, streaming results to `sink`
+    /// as they complete (out of order). The job queue is bounded at
+    /// `queue_depth`, so a slow pool backpressures the producer iterator.
+    pub fn run_streaming<I, F>(&self, jobs: I, mut sink: F) -> Result<usize>
+    where
+        I: Iterator<Item = Job>,
+        F: FnMut(JobResult),
+    {
+        let workers = self.config.workers.max(1);
+        let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) =
+            sync_channel(self.config.queue_depth.max(1));
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = std::sync::mpsc::channel::<JobResult>();
+
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let job_rx = Arc::clone(&job_rx);
+                let res_tx = res_tx.clone();
+                let metrics = Arc::clone(&self.metrics);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = job_rx.lock().expect("job queue poisoned");
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    let (v_in, e_in) = (job.graph.n(), job.graph.m());
+                    let result = Coordinator::execute(&job, w);
+                    metrics.record(
+                        result.reduction.reduce_secs,
+                        result.ph_secs,
+                        v_in,
+                        result.reduction.graph.n(),
+                        e_in,
+                        result.reduction.graph.m(),
+                    );
+                    if res_tx.send(result).is_err() {
+                        break;
+                    }
+                })
+            })
+            .collect();
+        drop(res_tx);
+
+        // Producer on the current thread; consume results opportunistically
+        // to keep the result channel drained.
+        let mut submitted = 0usize;
+        let mut received = 0usize;
+        for job in jobs {
+            self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+            job_tx
+                .send(job)
+                .map_err(|_| Error::Coordinator("all workers exited early".into()))?;
+            submitted += 1;
+            while let Ok(r) = res_rx.try_recv() {
+                received += 1;
+                sink(r);
+            }
+        }
+        drop(job_tx);
+        while let Ok(r) = res_rx.recv() {
+            received += 1;
+            sink(r);
+        }
+        for h in handles {
+            h.join()
+                .map_err(|_| Error::Coordinator("worker panicked".into()))?;
+        }
+        debug_assert_eq!(submitted, received);
+        Ok(received)
+    }
+
+    /// Run a batch and collect results sorted by job id.
+    pub fn run(&self, jobs: Vec<Job>) -> Result<Vec<JobResult>> {
+        let mut out = Vec::with_capacity(jobs.len());
+        self.run_streaming(jobs.into_iter(), |r| out.push(r))?;
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobSpec;
+    use crate::graph::gen;
+    use crate::reduce::Reduction;
+
+    fn cfg(workers: usize, depth: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            workers,
+            queue_depth: depth,
+            max_k: 1,
+            reduction: "prunit+coral".into(),
+            seed: 1,
+        }
+    }
+
+    fn jobs(n: usize) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                Job::degree_superlevel(
+                    i as u64,
+                    gen::barabasi_albert(40 + i, 2, i as u64),
+                    JobSpec::default(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn runs_all_jobs_and_sorts() {
+        let c = Coordinator::new(cfg(3, 4));
+        let res = c.run(jobs(20)).unwrap();
+        assert_eq!(res.len(), 20);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.diagrams.len(), 2);
+        }
+        assert_eq!(c.metrics().completed(), 20);
+    }
+
+    #[test]
+    fn single_worker_small_queue_backpressure() {
+        let c = Coordinator::new(cfg(1, 1));
+        let res = c.run(jobs(8)).unwrap();
+        assert_eq!(res.len(), 8);
+    }
+
+    #[test]
+    fn results_match_inline_execution() {
+        let c = Coordinator::new(cfg(2, 2));
+        let js = jobs(6);
+        let inline: Vec<JobResult> = js.iter().map(|j| Coordinator::execute(j, 0)).collect();
+        let pooled = c.run(js).unwrap();
+        for (a, b) in inline.iter().zip(&pooled) {
+            assert_eq!(a.id, b.id);
+            for k in 0..a.diagrams.len() {
+                assert!(a.diagrams[k].same_as(&b.diagrams[k], 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_spec_respected() {
+        let c = Coordinator::new(cfg(2, 4));
+        let g = gen::star(30);
+        let job = Job::degree_superlevel(
+            0,
+            g,
+            JobSpec {
+                max_k: 0,
+                reduction: Reduction::Prunit,
+            },
+        );
+        let res = c.run(vec![job]).unwrap();
+        assert_eq!(res[0].reduction.which, Reduction::Prunit);
+        assert!(res[0].reduction.vertex_reduction_pct() > 80.0);
+    }
+
+    #[test]
+    fn streaming_sink_sees_everything() {
+        let c = Coordinator::new(cfg(2, 2));
+        let mut seen = 0usize;
+        let n = c
+            .run_streaming(jobs(12).into_iter(), |_r| seen += 1)
+            .unwrap();
+        assert_eq!(n, 12);
+        assert_eq!(seen, 12);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let c = Coordinator::new(cfg(2, 2));
+        assert_eq!(c.run(vec![]).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dataset registry (S11): seeded synthetic stand-ins for the paper's
+//! datasets (Table 2 graph/node-classification sets and the 11 large SNAP
+//! networks of Table 1). No network access exists in this environment, so
+//! each dataset is a generator recipe whose order/size/structure class is
+//! matched to the published statistics; large networks are scaled down
+//! (factor recorded per recipe) so that full-PH baselines finish.
+//! See DESIGN.md §4 for the substitution argument.
+
+pub mod recipes;
+pub mod registry;
+
+pub use recipes::{Family, Recipe};
+pub use registry::{find, kernel_datasets, large_networks, node_datasets, ogb_like};

@@ -1,0 +1,415 @@
+//! Generator recipes: a dataset = a structural family + size parameters +
+//! an instance count, all seeded.
+
+use crate::graph::{gen, Graph, GraphBuilder};
+use crate::util::Rng;
+
+/// Structural family of a synthetic dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Family {
+    /// Erdős–Rényi with edge probability `p`.
+    Er { p: f64 },
+    /// Barabási–Albert with `m` edges per vertex.
+    Ba { m: usize },
+    /// Holme–Kim powerlaw-cluster (BA + triad closure `pt`).
+    Plc { m: usize, pt: f64 },
+    /// Random geometric graph with radius `r` (point-cloud-like; FIRSTMM).
+    Rgg { r: f64 },
+    /// Small-world ring.
+    Ws { k: usize, beta: f64 },
+    /// Molecule-like: random tree plus `extra` ring-closing edges
+    /// (NCI1 / DHFR class).
+    Molecule { extra: usize },
+    /// Citation-like: preferential tree grown to `target_m` edges
+    /// (CORA / CITESEER / ARXIV class).
+    Citation { avg_deg: f64 },
+    /// Social: BA core plus a dominated leaf fringe (`leaf_frac` of n)
+    /// (com-youtube / email class — drives high PrunIT reduction).
+    Social { m: usize, leaf_frac: f64 },
+    /// Collaboration: union of overlapping cliques of mean size `k`
+    /// (CA-CondMat / com-dblp class — twin-heavy, high reduction).
+    /// `overlap` ∈ [0,1]: fraction of members drawn globally (higher →
+    /// more multi-clique vertices → fewer dominated).
+    CliqueCover { k: usize, overlap: f64 },
+    /// Hub-and-fringe: BA core + `leaf_frac` pendant vertices +
+    /// `twin_frac` duplicated vertices (same neighbourhood as a random
+    /// core vertex — dominated twins whose removal cuts many edges).
+    /// Models email / web / trust networks (Table 1 reduction profiles).
+    HubFringe { m: usize, leaf_frac: f64, twin_frac: f64 },
+    /// Dense ego network (TWITTER/FACEBOOK): powerlaw-cluster core with a
+    /// `periphery` fraction of low-degree members (degree 1..=5) — the
+    /// ≈20% that CoralTDA peels even at k=5 (paper Fig 4).
+    Ego { m: usize, pt: f64, periphery: f64 },
+    /// Triangulated surface mesh (FIRSTMM's 3d-point-cloud graphs):
+    /// grid + `diag_frac` of the unit squares triangulated. Meshes carry
+    /// almost no dominated vertices (neighbourhoods never nest away from
+    /// the boundary) — the paper's "strong cores" explanation for
+    /// FIRSTMM's <10% PrunIT reduction.
+    Mesh { diag_frac: f64 },
+}
+
+/// A dataset recipe: named, sized, seeded.
+#[derive(Clone, Debug)]
+pub struct Recipe {
+    /// Paper dataset this stands in for.
+    pub name: &'static str,
+    /// Target (mean) graph order.
+    pub n: usize,
+    /// Relative jitter on n across instances (kernel datasets vary).
+    pub jitter: f64,
+    pub family: Family,
+    /// Number of graph instances (1 for node-classification / large nets).
+    pub instances: usize,
+    /// Scale-down factor vs the paper's dataset (1 = full scale).
+    pub scale_down: usize,
+}
+
+impl Recipe {
+    /// Generate instance `idx` deterministically from `seed`.
+    pub fn make(&self, seed: u64, idx: usize) -> Graph {
+        let mut rng = Rng::new(seed ^ (0x9E37 + idx as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+        let n = if self.jitter > 0.0 {
+            let lo = ((self.n as f64) * (1.0 - self.jitter)).max(3.0) as usize;
+            let hi = ((self.n as f64) * (1.0 + self.jitter)) as usize;
+            rng.range(lo, hi.max(lo + 1))
+        } else {
+            self.n
+        };
+        let s = rng.next_u64();
+        match self.family {
+            Family::Er { p } => gen::erdos_renyi(n, p, s),
+            Family::Ba { m } => gen::barabasi_albert(n, m, s),
+            Family::Plc { m, pt } => gen::powerlaw_cluster(n, m, pt, s),
+            Family::Rgg { r } => gen::random_geometric(n, r, s),
+            Family::Ws { k, beta } => gen::watts_strogatz(n.max(k + 2), k, beta, s),
+            Family::Molecule { extra } => molecule(n, extra, s),
+            Family::Citation { avg_deg } => citation(n, (n as f64 * avg_deg / 2.0) as usize, s),
+            Family::Social { m, leaf_frac } => social(n, m, leaf_frac, s),
+            Family::CliqueCover { k, overlap } => clique_cover(n, k, overlap, s),
+            Family::HubFringe { m, leaf_frac, twin_frac } => {
+                hub_fringe(n, m, leaf_frac, twin_frac, s)
+            }
+            Family::Ego { m, pt, periphery } => ego(n, m, pt, periphery, s),
+            Family::Mesh { diag_frac } => mesh(n, diag_frac, s),
+        }
+    }
+
+    /// All instances of this dataset.
+    pub fn make_all(&self, seed: u64) -> Vec<Graph> {
+        (0..self.instances).map(|i| self.make(seed, i)).collect()
+    }
+}
+
+/// Random tree (uniform random parent) plus `extra` ring-closing edges.
+pub fn molecule(n: usize, extra: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n {
+        let parent = rng.below(v) as u32;
+        b.add_edge(v as u32, parent);
+    }
+    let mut added = 0usize;
+    let mut attempts = 0usize;
+    while added < extra && attempts < extra * 20 + 20 {
+        attempts += 1;
+        if n < 2 {
+            break;
+        }
+        let a = rng.below(n) as u32;
+        let c = rng.below(n) as u32;
+        if a != c {
+            b.add_edge(a, c);
+            added += 1;
+        }
+    }
+    b.build()
+}
+
+/// Preferential-attachment tree densified to `target_m` edges with
+/// degree-biased extra links — citation-network degree profile.
+pub fn citation(n: usize, target_m: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut chips: Vec<u32> = vec![0];
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for v in 1..n as u32 {
+        let t = chips[rng.below(chips.len())];
+        edges.push((v, t));
+        chips.push(v);
+        chips.push(t);
+    }
+    let mut guard = 0usize;
+    while edges.len() < target_m && guard < 20 * target_m + 100 {
+        guard += 1;
+        let a = chips[rng.below(chips.len())];
+        let b = chips[rng.below(chips.len())];
+        if a != b {
+            edges.push((a, b));
+            chips.push(a);
+            chips.push(b);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// BA(core, m) plus `leaf_frac·n` pendant vertices attached
+/// degree-biased — the dominated fringe of social/email networks.
+pub fn social(n: usize, m: usize, leaf_frac: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let leaves = ((n as f64) * leaf_frac) as usize;
+    let core_n = n.saturating_sub(leaves).max(m + 2);
+    let core = gen::barabasi_albert(core_n, m, rng.next_u64());
+    let mut b = GraphBuilder::new(n);
+    for (u, v) in core.edges() {
+        b.add_edge(u, v);
+    }
+    // Degree-biased chips from the core.
+    let mut chips: Vec<u32> = Vec::new();
+    for v in 0..core_n as u32 {
+        for _ in 0..core.degree(v) {
+            chips.push(v);
+        }
+    }
+    for leaf in core_n..n {
+        let t = chips[rng.below(chips.len())];
+        b.add_edge(leaf as u32, t);
+    }
+    b.ensure_vertices(n);
+    b.build()
+}
+
+/// Union of overlapping random cliques of size ~k covering n vertices —
+/// collaboration-network structure (papers = cliques of co-authors).
+/// `overlap` = probability a member is drawn globally rather than from
+/// the clique's contiguous anchor block.
+pub fn clique_cover(n: usize, k: usize, overlap: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let k = k.max(2);
+    let mut b = GraphBuilder::new(n);
+    let cliques = (2 * n / k).max(1);
+    for _ in 0..cliques {
+        let size = rng.range(2, 2 * k - 1).min(n);
+        // anchor-biased membership: local block = "research group",
+        // global draws = outside collaborators.
+        let anchor = rng.below(n);
+        let mut members: Vec<u32> = Vec::with_capacity(size);
+        for j in 0..size {
+            let v = if rng.chance(overlap) {
+                rng.below(n) as u32
+            } else {
+                ((anchor + j) % n) as u32
+            };
+            if !members.contains(&v) {
+                members.push(v);
+            }
+        }
+        for i in 0..members.len() {
+            for j in (i + 1)..members.len() {
+                b.add_edge(members[i], members[j]);
+            }
+        }
+    }
+    b.ensure_vertices(n);
+    b.build()
+}
+
+/// BA core + pendant leaves + duplicated twins. Twins copy the full
+/// neighbourhood of a random core vertex, so they are dominated and
+/// their removal cuts `deg` edges each — the mechanism behind Table 1
+/// rows where edge reduction rivals or exceeds vertex reduction
+/// (web-Stanford, com-amazon, com-dblp).
+pub fn hub_fringe(n: usize, m: usize, leaf_frac: f64, twin_frac: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let leaves = ((n as f64) * leaf_frac) as usize;
+    let twins = ((n as f64) * twin_frac) as usize;
+    let core_n = n.saturating_sub(leaves + twins).max(m + 2);
+    let core = gen::barabasi_albert(core_n, m, rng.next_u64());
+    let mut b = GraphBuilder::new(n);
+    for (u, v) in core.edges() {
+        b.add_edge(u, v);
+    }
+    let mut chips: Vec<u32> = Vec::new();
+    for v in 0..core_n as u32 {
+        for _ in 0..core.degree(v) {
+            chips.push(v);
+        }
+    }
+    let mut next = core_n;
+    for _ in 0..twins.min(n.saturating_sub(core_n)) {
+        // partial twin: copy a random subset of a degree-biased core
+        // vertex's neighbourhood, plus the original itself. Any subset
+        // keeps N[twin] ⊆ N[orig], so the twin stays dominated while
+        // carrying tunable edge weight.
+        let orig = chips[rng.below(chips.len())];
+        let q = 0.4 + 0.4 * rng.f64();
+        for &w in core.neighbors(orig) {
+            if rng.chance(q) {
+                b.add_edge(next as u32, w);
+            }
+        }
+        b.add_edge(next as u32, orig); // twin adjacent to its original
+        next += 1;
+    }
+    while next < n {
+        let t = chips[rng.below(chips.len())];
+        b.add_edge(next as u32, t);
+        next += 1;
+    }
+    b.ensure_vertices(n);
+    b.build()
+}
+
+/// Dense social ego network: powerlaw-cluster core + `periphery` fraction
+/// of members with degree 1..=5 (friends-of-friends on the rim).
+pub fn ego(n: usize, m: usize, pt: f64, periphery: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let rim = ((n as f64) * periphery) as usize;
+    let core_n = n.saturating_sub(rim).max(m + 2);
+    let core = gen::powerlaw_cluster(core_n, m, pt, rng.next_u64());
+    let mut b = GraphBuilder::new(n);
+    for (u, v) in core.edges() {
+        b.add_edge(u, v);
+    }
+    for v in core_n..n {
+        let deg = rng.range(1, 5);
+        // attach to a random clique-ish set: a core vertex and some of its
+        // neighbours, so rim members sit on real communities
+        let anchor = rng.below(core_n) as u32;
+        b.add_edge(v as u32, anchor);
+        let nbrs = core.neighbors(anchor);
+        for _ in 1..deg {
+            if nbrs.is_empty() {
+                break;
+            }
+            b.add_edge(v as u32, nbrs[rng.below(nbrs.len())]);
+        }
+    }
+    b.ensure_vertices(n);
+    b.build()
+}
+
+/// Triangulated grid mesh of ~n vertices: w×h lattice, each unit square
+/// gaining a diagonal with probability `diag_frac`.
+pub fn mesh(n: usize, diag_frac: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let w = (n as f64).sqrt().round().max(2.0) as usize;
+    let h = (n + w - 1) / w;
+    let id = |x: usize, y: usize| (y * w + x) as u32;
+    let mut b = GraphBuilder::new(w * h);
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                b.add_edge(id(x, y), id(x + 1, y));
+            }
+            if y + 1 < h {
+                b.add_edge(id(x, y), id(x, y + 1));
+            }
+            if x + 1 < w && y + 1 < h && rng.chance(diag_frac) {
+                // random diagonal orientation
+                if rng.chance(0.5) {
+                    b.add_edge(id(x, y), id(x + 1, y + 1));
+                } else {
+                    b.add_edge(id(x + 1, y), id(x, y + 1));
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_has_few_dominated_vertices() {
+        let g = mesh(900, 0.6, 7);
+        let f = crate::complex::Filtration::degree_superlevel(&g);
+        let r = crate::prune::prunit(&g, &f);
+        let red = 100.0 * r.removed as f64 / g.n() as f64;
+        assert!(red < 15.0, "mesh PrunIT reduction should be small, got {red:.1}%");
+    }
+
+    #[test]
+    fn molecule_is_connected_ringy() {
+        let g = molecule(40, 4, 1);
+        assert_eq!(g.n(), 40);
+        assert!(g.is_connected());
+        assert!(g.m() >= 39, "tree + rings");
+    }
+
+    #[test]
+    fn citation_hits_edge_target() {
+        let g = citation(500, 1000, 2);
+        assert!(g.is_connected());
+        let m = g.m() as f64;
+        assert!((m - 1000.0).abs() < 120.0, "m={m}");
+    }
+
+    #[test]
+    fn social_has_leaf_fringe() {
+        let g = social(300, 2, 0.4, 3);
+        assert_eq!(g.n(), 300);
+        let leaves = (0..g.n() as u32).filter(|&v| g.degree(v) == 1).count();
+        assert!(leaves >= 90, "want a large pendant fringe, got {leaves}");
+    }
+
+    #[test]
+    fn clique_cover_has_triangles() {
+        let g = clique_cover(200, 6, 0.3, 4);
+        assert!(crate::graph::clustering::average(&g) > 0.3);
+    }
+
+    #[test]
+    fn hub_fringe_twins_are_dominated() {
+        let g = hub_fringe(300, 3, 0.2, 0.3, 5);
+        assert_eq!(g.n(), 300);
+        let f = crate::complex::Filtration::degree_superlevel(&g);
+        let dominated = (0..g.n() as u32)
+            .filter(|&u| crate::prune::find_dominator(&g, &f, u).is_some())
+            .count();
+        // every twin and leaf should be dominated initially
+        assert!(dominated >= 120, "dominated={dominated}");
+    }
+
+    #[test]
+    fn ego_has_dense_core_sparse_rim() {
+        let g = ego(200, 10, 0.8, 0.25, 6);
+        assert_eq!(g.n(), 200);
+        let core = crate::kcore::coreness(&g);
+        let low = core.iter().filter(|&&c| c <= 5).count();
+        assert!(low >= 30, "rim should be low-core, got {low}");
+        assert!(*core.iter().max().unwrap() >= 8, "core should be dense");
+    }
+
+    #[test]
+    fn recipe_instances_deterministic_and_distinct() {
+        let r = Recipe {
+            name: "TEST",
+            n: 50,
+            jitter: 0.2,
+            family: Family::Ba { m: 2 },
+            instances: 3,
+            scale_down: 1,
+        };
+        let a = r.make_all(7);
+        let b = r.make_all(7);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        assert_ne!(a[0], a[1], "instances should differ");
+    }
+
+    #[test]
+    fn jitter_zero_is_exact_n() {
+        let r = Recipe {
+            name: "T",
+            n: 64,
+            jitter: 0.0,
+            family: Family::Er { p: 0.1 },
+            instances: 1,
+            scale_down: 1,
+        };
+        assert_eq!(r.make(1, 0).n(), 64);
+    }
+}

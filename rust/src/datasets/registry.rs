@@ -1,0 +1,159 @@
+//! The named dataset registry: every paper dataset mapped to a recipe.
+//! Table 2 statistics (AvgNumNodes / AvgNumEdges) drive the parameters;
+//! instance counts are capped (`instances`) so full-PH baselines finish
+//! on this testbed — the caps and scale factors are recorded in
+//! EXPERIMENTS.md per experiment.
+
+use super::recipes::{Family, Recipe};
+use crate::error::{Error, Result};
+
+/// Graph-classification (kernel + ego) dataset stand-ins — paper Table 2.
+pub fn kernel_datasets() -> Vec<Recipe> {
+    vec![
+        // DD: 1178 graphs, avg 284.3 nodes / 715.7 edges (protein structure)
+        Recipe { name: "DD", n: 284, jitter: 0.4, family: Family::Rgg { r: 0.075 }, instances: 12, scale_down: 1 },
+        // DHFR: 467 graphs, 42.4 / 44.5 (molecules: trees + rings)
+        Recipe { name: "DHFR", n: 42, jitter: 0.25, family: Family::Molecule { extra: 3 }, instances: 20, scale_down: 1 },
+        // ENZYMES: 600 graphs, 32.6 / 62.1
+        Recipe { name: "ENZYMES", n: 33, jitter: 0.3, family: Family::Rgg { r: 0.21 }, instances: 20, scale_down: 1 },
+        // FIRSTMM: 41 graphs, 1377 / 3074 (3d point-cloud meshes → strong cores)
+        Recipe { name: "FIRSTMM", n: 1377, jitter: 0.2, family: Family::Mesh { diag_frac: 0.55 }, instances: 4, scale_down: 1 },
+        // NCI1: 4110 graphs, 29.9 / 32.3 (molecules)
+        Recipe { name: "NCI1", n: 30, jitter: 0.25, family: Family::Molecule { extra: 2 }, instances: 20, scale_down: 1 },
+        // OHSU: 79 graphs, 82.0 / 199.7 (brain networks: dense modules →
+        // high coreness but plenty of intra-module twins)
+        Recipe { name: "OHSU", n: 82, jitter: 0.2, family: Family::CliqueCover { k: 7, overlap: 0.3 }, instances: 12, scale_down: 1 },
+        // PROTEINS: 1113 graphs, 39.1 / 72.8
+        Recipe { name: "PROTEINS", n: 39, jitter: 0.3, family: Family::Rgg { r: 0.2 }, instances: 20, scale_down: 1 },
+        // REDDIT-BINARY: 2000 graphs, 429.6 / 497.8 (discussion trees + hubs)
+        Recipe { name: "REDDIT-BINARY", n: 430, jitter: 0.4, family: Family::Social { m: 1, leaf_frac: 0.5 }, instances: 10, scale_down: 1 },
+        // SYNNEW: 300 graphs, 100 / 196.3 (synthetic, strong cores → low PrunIT)
+        Recipe { name: "SYNNEW", n: 100, jitter: 0.05, family: Family::Er { p: 0.0397 }, instances: 15, scale_down: 1 },
+        // TWITTER: 973 graphs, 83.5 / 1817 (dense ego nets + ~20% rim)
+        Recipe { name: "TWITTER", n: 84, jitter: 0.25, family: Family::Ego { m: 14, pt: 0.85, periphery: 0.22 }, instances: 10, scale_down: 2 },
+        // FACEBOOK: 10 graphs, 403.9 / 8823.4 (dense ego nets + rim)
+        Recipe { name: "FACEBOOK", n: 240, jitter: 0.2, family: Family::Ego { m: 14, pt: 0.9, periphery: 0.2 }, instances: 4, scale_down: 2 },
+    ]
+}
+
+/// Node-classification dataset stand-ins (single citation graphs).
+pub fn node_datasets() -> Vec<Recipe> {
+    vec![
+        // CORA: 2708 nodes / 5429 edges
+        Recipe { name: "CORA", n: 2708, jitter: 0.0, family: Family::Citation { avg_deg: 4.0 }, instances: 1, scale_down: 1 },
+        // CITESEER: 3264 / 4536
+        Recipe { name: "CITESEER", n: 3264, jitter: 0.0, family: Family::Citation { avg_deg: 2.8 }, instances: 1, scale_down: 1 },
+    ]
+}
+
+/// OGB-like big citation graphs for the §6.2 ego-network workload,
+/// scaled down (ARXIV 169k → 16k, MAG 1.9M → 24k).
+pub fn ogb_like() -> Vec<Recipe> {
+    // avg_deg matched to the OGB graphs' undirected degree (ARXIV ≈ 13.7)
+    // so 1-hop ego networks hit the Table 2 ego sizes (~33 / ~31 nodes
+    // when centers are drawn edge-endpoint-biased, as hubs dominate cost).
+    vec![
+        Recipe { name: "OGB-ARXIV", n: 16_000, jitter: 0.0, family: Family::Citation { avg_deg: 13.7 }, instances: 1, scale_down: 10 },
+        Recipe { name: "OGB-MAG", n: 24_000, jitter: 0.0, family: Family::Citation { avg_deg: 11.0 }, instances: 1, scale_down: 80 },
+    ]
+}
+
+/// The 11 large SNAP networks of Table 1, scaled down ~20× (factor in
+/// `scale_down`); family chosen to match each network's structure class
+/// and therefore its reduction profile.
+pub fn large_networks() -> Vec<Recipe> {
+    vec![
+        // com-youtube 1,134,890 / 2,987,624 — social, big leaf fringe
+        Recipe { name: "com-youtube", n: 56_744, jitter: 0.0, family: Family::Social { m: 5, leaf_frac: 0.59 }, instances: 1, scale_down: 20 },
+        // com-amazon 334,863 / 925,872 — co-purchase, twin products
+        Recipe { name: "com-amazon", n: 16_743, jitter: 0.0, family: Family::HubFringe { m: 2, leaf_frac: 0.22, twin_frac: 0.15 }, instances: 1, scale_down: 20 },
+        // com-dblp 317,080 / 1,049,866 — collaboration cliques
+        Recipe { name: "com-dblp", n: 15_854, jitter: 0.0, family: Family::CliqueCover { k: 5, overlap: 0.08 }, instances: 1, scale_down: 20 },
+        // web-Stanford 281,903 / 1,992,636 — web graph, template twins
+        Recipe { name: "web-Stanford", n: 14_095, jitter: 0.0, family: Family::HubFringe { m: 5, leaf_frac: 0.10, twin_frac: 0.55 }, instances: 1, scale_down: 20 },
+        // emailEuAll 265,214 / 364,481 — star-dominated email (95% reduction!)
+        Recipe { name: "emailEuAll", n: 13_260, jitter: 0.0, family: Family::Social { m: 1, leaf_frac: 0.75 }, instances: 1, scale_down: 20 },
+        // soc-Epinions1 75,879 / 405,740 — trust net: dense core, 1-review fringe
+        Recipe { name: "soc-Epinions1", n: 7_588, jitter: 0.0, family: Family::Social { m: 11, leaf_frac: 0.57 }, instances: 1, scale_down: 10 },
+        // p2pGnutella31 62,586 / 147,892 — p2p overlay, leaf peers
+        Recipe { name: "p2pGnutella31", n: 6_258, jitter: 0.0, family: Family::Social { m: 3, leaf_frac: 0.46 }, instances: 1, scale_down: 10 },
+        // Brightkite 58,228 / 214,078 — location social
+        Recipe { name: "Brightkite_edges", n: 5_822, jitter: 0.0, family: Family::HubFringe { m: 5, leaf_frac: 0.44, twin_frac: 0.04 }, instances: 1, scale_down: 10 },
+        // Email-Enron 36,692 / 183,831 — email, hub-heavy with assistants(twins)
+        Recipe { name: "Email-Enron", n: 3_669, jitter: 0.0, family: Family::HubFringe { m: 7, leaf_frac: 0.65, twin_frac: 0.05 }, instances: 1, scale_down: 10 },
+        // CA-CondMat 23,133 / 93,439 — collaboration cliques
+        Recipe { name: "CA-CondMat", n: 4_626, jitter: 0.0, family: Family::CliqueCover { k: 5, overlap: 0.10 }, instances: 1, scale_down: 5 },
+        // oregon1_010526 11,174 / 23,409 — AS topology, stub ASes + twins
+        Recipe { name: "oregon1_010526", n: 2_234, jitter: 0.0, family: Family::HubFringe { m: 2, leaf_frac: 0.50, twin_frac: 0.10 }, instances: 1, scale_down: 5 },
+    ]
+}
+
+/// Look up any recipe by (case-insensitive) name across all registries.
+pub fn find(name: &str) -> Result<Recipe> {
+    let lname = name.to_ascii_lowercase();
+    kernel_datasets()
+        .into_iter()
+        .chain(node_datasets())
+        .chain(ogb_like())
+        .chain(large_networks())
+        .find(|r| r.name.to_ascii_lowercase() == lname)
+        .ok_or_else(|| Error::UnknownDataset(name.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_paper_tables() {
+        assert_eq!(kernel_datasets().len(), 11);
+        assert_eq!(large_networks().len(), 11);
+        assert_eq!(node_datasets().len(), 2);
+        assert_eq!(ogb_like().len(), 2);
+    }
+
+    #[test]
+    fn find_is_case_insensitive() {
+        assert!(find("twitter").is_ok());
+        assert!(find("COM-YOUTUBE").is_ok());
+        assert!(find("nope").is_err());
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<&str> = kernel_datasets()
+            .iter()
+            .chain(node_datasets().iter())
+            .chain(ogb_like().iter())
+            .chain(large_networks().iter())
+            .map(|r| r.name)
+            .collect();
+        let before = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), before);
+    }
+
+    #[test]
+    fn kernel_sizes_near_table2() {
+        // spot-check edge densities against Table 2 (±40%)
+        for (name, want_m) in [("DHFR", 44.5), ("ENZYMES", 62.1), ("SYNNEW", 196.3)] {
+            let r = find(name).unwrap();
+            let gs = (0..6).map(|i| r.make(123, i)).collect::<Vec<_>>();
+            let avg_m = gs.iter().map(|g| g.m()).sum::<usize>() as f64 / gs.len() as f64;
+            assert!(
+                (avg_m - want_m).abs() / want_m < 0.45,
+                "{name}: avg m {avg_m:.1} vs table {want_m}"
+            );
+        }
+    }
+
+    #[test]
+    fn large_networks_scale_factor_consistent() {
+        for r in large_networks() {
+            assert!(r.scale_down >= 5, "{} must record its scale", r.name);
+            let g = r.make(1, 0);
+            assert_eq!(g.n(), r.n, "{}", r.name);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Crate-wide error type. `anyhow` is reserved for binaries; the library
+//! surfaces a typed error so downstream callers can match on failure modes.
+
+use std::fmt;
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error cases surfaced by the coral-prunit library.
+#[derive(Debug)]
+pub enum Error {
+    /// A vertex id out of range for the graph it was used with.
+    VertexOutOfRange { vertex: usize, order: usize },
+    /// Filtration length does not match graph order.
+    FiltrationMismatch { filtration: usize, order: usize },
+    /// Graph too large for every exported XLA size bucket.
+    NoBucket { order: usize, largest: usize },
+    /// artifacts/ directory missing or artifact file unreadable.
+    ArtifactMissing(String),
+    /// PJRT / XLA failure (compile or execute).
+    Xla(String),
+    /// Config file syntax or schema error.
+    Config(String),
+    /// Dataset / experiment identifier not in the registry.
+    UnknownDataset(String),
+    /// Malformed edge-list input.
+    Parse(String),
+    /// Coordinator channel failure (worker panicked or receiver dropped).
+    Coordinator(String),
+    /// I/O error with context.
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::VertexOutOfRange { vertex, order } => {
+                write!(f, "vertex {vertex} out of range for graph of order {order}")
+            }
+            Error::FiltrationMismatch { filtration, order } => write!(
+                f,
+                "filtration has {filtration} values but graph has {order} vertices"
+            ),
+            Error::NoBucket { order, largest } => write!(
+                f,
+                "graph order {order} exceeds the largest XLA bucket {largest}; \
+                 use the sparse path"
+            ),
+            Error::ArtifactMissing(p) => write!(f, "missing AOT artifact: {p} (run `make artifacts`)"),
+            Error::Xla(msg) => write!(f, "xla/pjrt error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::UnknownDataset(name) => write!(f, "unknown dataset/experiment: {name}"),
+            Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Io(msg) => write!(f, "io error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}

@@ -1,0 +1,71 @@
+//! Incremental graph builder (mutable edge accumulation → immutable CSR).
+
+use super::Graph;
+
+/// Accumulates edges, then freezes into a [`Graph`].
+#[derive(Debug, Clone, Default)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new() }
+    }
+
+    /// Add an undirected edge; self-loops are ignored at build time.
+    pub fn add_edge(&mut self, a: u32, b: u32) -> &mut Self {
+        let hi = a.max(b) as usize;
+        if hi >= self.n {
+            self.n = hi + 1;
+        }
+        self.edges.push((a, b));
+        self
+    }
+
+    /// Ensure the graph has at least `n` vertices (for trailing isolates).
+    pub fn ensure_vertices(&mut self, n: usize) -> &mut Self {
+        self.n = self.n.max(n);
+        self
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn build(&self) -> Graph {
+        Graph::from_edges(self.n, &self.edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_to_fit() {
+        let mut b = GraphBuilder::new(0);
+        b.add_edge(0, 5);
+        let g = b.build();
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn isolates_preserved() {
+        let mut b = GraphBuilder::new(0);
+        b.add_edge(0, 1).ensure_vertices(10);
+        let g = b.build();
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.degree(9), 0);
+    }
+
+    #[test]
+    fn chained_building() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1).add_edge(1, 2);
+        assert_eq!(b.edge_count(), 2);
+        assert_eq!(b.build().m(), 2);
+    }
+}

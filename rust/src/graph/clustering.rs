@@ -1,0 +1,198 @@
+//! Clustering coefficients (S10) — the statistic behind the paper's
+//! Figure 2 / Figure 10 analysis and the Appendix D.2 conjecture relating
+//! `CC(G)` to (non)trivial higher persistence diagrams.
+
+use super::core::sorted_intersection_count;
+use super::Graph;
+
+/// Local clustering coefficient of `v`: triangles through `v` divided by
+/// `deg(v)·(deg(v)−1)/2`; zero when `deg(v) < 2`.
+pub fn local(g: &Graph, v: u32) -> f64 {
+    let d = g.degree(v);
+    if d < 2 {
+        return 0.0;
+    }
+    let nbrs = g.neighbors(v);
+    // Count edges among neighbours via sorted intersections.
+    let mut tri = 0usize;
+    for (i, &u) in nbrs.iter().enumerate() {
+        // only count pairs once: neighbours after u in v's list
+        let rest = &nbrs[i + 1..];
+        tri += sorted_intersection_count(g.neighbors(u), rest);
+    }
+    2.0 * tri as f64 / (d * (d - 1)) as f64
+}
+
+/// Average clustering coefficient (mean of local CCs over all vertices) —
+/// the "clustering coefficient" reported in the paper's figures.
+pub fn average(g: &Graph) -> f64 {
+    if g.n() == 0 {
+        return 0.0;
+    }
+    (0..g.n() as u32).map(|v| local(g, v)).sum::<f64>() / g.n() as f64
+}
+
+/// Global transitivity: 3·triangles / connected triples.
+pub fn transitivity(g: &Graph) -> f64 {
+    let mut tri3 = 0usize; // each triangle counted 3 times
+    let mut triples = 0usize;
+    for v in 0..g.n() as u32 {
+        let d = g.degree(v);
+        triples += d * d.saturating_sub(1) / 2;
+        let nbrs = g.neighbors(v);
+        for (i, &u) in nbrs.iter().enumerate() {
+            tri3 += sorted_intersection_count(g.neighbors(u), &nbrs[i + 1..]);
+        }
+    }
+    if triples == 0 {
+        0.0
+    } else {
+        // tri3 already counts each triangle once per apex vertex = 3 total
+        tri3 as f64 / triples as f64
+    }
+}
+
+/// Sequentially-sampled approximation of the average clustering
+/// coefficient with early stopping (paper Appendix D.2: "a stopping
+/// condition can be applied to terminate early when the coefficient can
+/// be approximated"). Samples vertex CCs until the standard error drops
+/// below `tol` (or all vertices are used); returns (estimate, samples).
+pub fn approximate_average(g: &Graph, tol: f64, seed: u64) -> (f64, usize) {
+    let n = g.n();
+    if n == 0 {
+        return (0.0, 0);
+    }
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = crate::util::Rng::new(seed);
+    rng.shuffle(&mut order);
+    let mut sum = 0.0;
+    let mut sum_sq = 0.0;
+    let min_samples = 32.min(n);
+    for (i, &v) in order.iter().enumerate() {
+        let c = local(g, v);
+        sum += c;
+        sum_sq += c * c;
+        let k = i + 1;
+        if k >= min_samples {
+            let mean = sum / k as f64;
+            let var = (sum_sq / k as f64 - mean * mean).max(0.0);
+            let stderr = (var / k as f64).sqrt();
+            if stderr < tol {
+                return (mean, k);
+            }
+        }
+    }
+    (sum / n as f64, n)
+}
+
+/// The Appendix D.2 conjecture as a predictor: for k ≥ 2 there are bands
+/// `(alpha_k, beta_k)` such that `CC(G)` outside the band predicts a
+/// trivial `PD_k(G)` with high probability. Returns `true` when the
+/// conjecture predicts **trivial** higher diagrams (CC too low or too
+/// high), i.e. the expensive β_k computation can be skipped.
+pub fn conjecture_predicts_trivial(cc: f64, alpha_k: f64, beta_k: f64) -> bool {
+    debug_assert!(alpha_k < beta_k);
+    cc < alpha_k || cc > beta_k
+}
+
+/// Total triangle count of the graph.
+pub fn triangle_count(g: &Graph) -> usize {
+    let mut tri = 0usize;
+    for v in 0..g.n() as u32 {
+        let nbrs = g.neighbors(v);
+        for (i, &u) in nbrs.iter().enumerate() {
+            if u < v {
+                continue; // apex ordering: count each triangle at min vertex
+            }
+            // pairs (u, w) with v < u < w all adjacent to v and u~w
+            tri += sorted_intersection_count(
+                g.neighbors(u),
+                &nbrs[i + 1..],
+            );
+        }
+    }
+    // Each triangle {a<b<c} is counted once at apex a with pair (b, c)?
+    // At apex v=a we iterate u=b and intersect nbrs(b) with a's neighbours
+    // after b → counts c once. Larger apexes skip via the u < v guard.
+    tri
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle_has_cc_one() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(average(&g), 1.0);
+        assert_eq!(transitivity(&g), 1.0);
+        assert_eq!(triangle_count(&g), 1);
+    }
+
+    #[test]
+    fn path_has_cc_zero() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(average(&g), 0.0);
+        assert_eq!(triangle_count(&g), 0);
+    }
+
+    #[test]
+    fn paw_graph_values() {
+        // triangle 0-1-2 plus pendant 3 attached to 2.
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        assert!((local(&g, 0) - 1.0).abs() < 1e-12);
+        assert!((local(&g, 2) - (1.0 / 3.0)).abs() < 1e-12);
+        assert_eq!(local(&g, 3), 0.0);
+        let avg = (1.0 + 1.0 + 1.0 / 3.0 + 0.0) / 4.0;
+        assert!((average(&g) - avg).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complete_graph_counts() {
+        let n = 6u32;
+        let mut edges = Vec::new();
+        for a in 0..n {
+            for b in a + 1..n {
+                edges.push((a, b));
+            }
+        }
+        let g = Graph::from_edges(n as usize, &edges);
+        assert_eq!(average(&g), 1.0);
+        // C(6,3) = 20 triangles
+        assert_eq!(triangle_count(&g), 20);
+    }
+
+    #[test]
+    fn transitivity_of_star_is_zero() {
+        let g = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        assert_eq!(transitivity(&g), 0.0);
+    }
+
+    #[test]
+    fn approximate_average_converges() {
+        let g = crate::graph::gen::powerlaw_cluster(2000, 4, 0.7, 3);
+        let exact = average(&g);
+        let (approx, samples) = approximate_average(&g, 0.01, 7);
+        assert!(
+            (approx - exact).abs() < 0.05,
+            "approx {approx:.3} vs exact {exact:.3} ({samples} samples)"
+        );
+        assert!(samples < g.n(), "early stopping should kick in");
+    }
+
+    #[test]
+    fn approximate_average_exact_when_uniform() {
+        // all-equal local CCs → variance 0 → stops at min_samples
+        let g = crate::graph::gen::complete(40);
+        let (approx, samples) = approximate_average(&g, 0.01, 1);
+        assert_eq!(approx, 1.0);
+        assert!(samples <= 40);
+    }
+
+    #[test]
+    fn conjecture_band_logic() {
+        assert!(conjecture_predicts_trivial(0.01, 0.05, 0.9));
+        assert!(conjecture_predicts_trivial(0.95, 0.05, 0.9));
+        assert!(!conjecture_predicts_trivial(0.5, 0.05, 0.9));
+    }
+}

@@ -1,0 +1,420 @@
+//! Immutable CSR graph — the substrate every algorithm in the crate runs on.
+//!
+//! Undirected, simple (no self-loops, no multi-edges), vertices are
+//! `0..n` as `u32`. Neighbour lists are sorted, enabling O(log d) edge
+//! queries and O(d₁+d₂) sorted intersections (the hot operation in both
+//! clique enumeration and domination checks).
+
+use crate::error::{Error, Result};
+
+/// Compressed-sparse-row undirected graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Graph {
+    offsets: Vec<usize>,
+    neighbors: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an edge list; duplicates and self-loops are dropped.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            let (a, b) = (a as usize, b as usize);
+            assert!(a < n && b < n, "edge ({a},{b}) out of range for n={n}");
+            if a == b {
+                continue;
+            }
+            adj[a].push(b as u32);
+            adj[b].push(a as u32);
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut neighbors = Vec::new();
+        offsets.push(0);
+        for list in adj.iter_mut() {
+            list.sort_unstable();
+            list.dedup();
+            neighbors.extend_from_slice(list);
+            offsets.push(neighbors.len());
+        }
+        Graph { offsets, neighbors }
+    }
+
+    /// Graph with `n` vertices and no edges.
+    pub fn empty(n: usize) -> Graph {
+        Graph {
+            offsets: vec![0; n + 1],
+            neighbors: Vec::new(),
+        }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        let v = v as usize;
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Sorted neighbour slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let v = v as usize;
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Edge query via binary search: O(log deg(u)).
+    #[inline]
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        if u == v {
+            return false;
+        }
+        // Search the smaller list.
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// All degrees.
+    pub fn degrees(&self) -> Vec<usize> {
+        (0..self.n() as u32).map(|v| self.degree(v)).collect()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as u32)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Iterate undirected edges with `u < v`.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n() as u32).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Induced subgraph on vertices where `keep[v]` is true.
+    ///
+    /// Returns the subgraph plus the mapping `new id -> old id`
+    /// (ascending). Edge set = edges with both endpoints kept.
+    pub fn induced(&self, keep: &[bool]) -> (Graph, Vec<u32>) {
+        assert_eq!(keep.len(), self.n());
+        let old_ids: Vec<u32> = (0..self.n() as u32)
+            .filter(|&v| keep[v as usize])
+            .collect();
+        let mut new_id = vec![u32::MAX; self.n()];
+        for (new, &old) in old_ids.iter().enumerate() {
+            new_id[old as usize] = new as u32;
+        }
+        let mut offsets = Vec::with_capacity(old_ids.len() + 1);
+        let mut neighbors = Vec::new();
+        offsets.push(0);
+        for &old in &old_ids {
+            for &w in self.neighbors(old) {
+                if keep[w as usize] {
+                    neighbors.push(new_id[w as usize]);
+                }
+            }
+            offsets.push(neighbors.len());
+        }
+        (Graph { offsets, neighbors }, old_ids)
+    }
+
+    /// Induced subgraph on an explicit (sorted or unsorted) vertex set.
+    pub fn induced_on(&self, vertices: &[u32]) -> (Graph, Vec<u32>) {
+        let mut keep = vec![false; self.n()];
+        for &v in vertices {
+            keep[v as usize] = true;
+        }
+        self.induced(&keep)
+    }
+
+    /// Number of connected components (isolated vertices count).
+    pub fn components(&self) -> usize {
+        let n = self.n();
+        let mut seen = vec![false; n];
+        let mut stack = Vec::new();
+        let mut comps = 0;
+        for s in 0..n {
+            if seen[s] {
+                continue;
+            }
+            comps += 1;
+            seen[s] = true;
+            stack.push(s as u32);
+            while let Some(v) = stack.pop() {
+                for &w in self.neighbors(v) {
+                    if !seen[w as usize] {
+                        seen[w as usize] = true;
+                        stack.push(w);
+                    }
+                }
+            }
+        }
+        comps
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.n() <= 1 || self.components() == 1
+    }
+
+    /// BFS distances from `src`; `usize::MAX` for unreachable.
+    pub fn bfs_distances(&self, src: u32) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.n()];
+        let mut queue = std::collections::VecDeque::new();
+        dist[src as usize] = 0;
+        queue.push_back(src);
+        while let Some(v) = queue.pop_front() {
+            let dv = dist[v as usize];
+            for &w in self.neighbors(v) {
+                if dist[w as usize] == usize::MAX {
+                    dist[w as usize] = dv + 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Vertices within `hops` of `center` (the paper's §6.2 ego-network
+    /// extraction), including the center.
+    pub fn ego_vertices(&self, center: u32, hops: usize) -> Vec<u32> {
+        let mut dist = vec![usize::MAX; self.n()];
+        let mut queue = std::collections::VecDeque::new();
+        dist[center as usize] = 0;
+        queue.push_back(center);
+        let mut out = vec![center];
+        while let Some(v) = queue.pop_front() {
+            let dv = dist[v as usize];
+            if dv == hops {
+                continue;
+            }
+            for &w in self.neighbors(v) {
+                if dist[w as usize] == usize::MAX {
+                    dist[w as usize] = dv + 1;
+                    out.push(w);
+                    queue.push_back(w);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Dense f32 adjacency (row-major), the marshalling format for the XLA
+    /// domination artifact.
+    pub fn to_dense_f32(&self) -> Vec<f32> {
+        let n = self.n();
+        let mut a = vec![0.0f32; n * n];
+        for (u, v) in self.edges() {
+            a[u as usize * n + v as usize] = 1.0;
+            a[v as usize * n + u as usize] = 1.0;
+        }
+        a
+    }
+
+    /// Validate a vertex id.
+    pub fn check_vertex(&self, v: usize) -> Result<()> {
+        if v < self.n() {
+            Ok(())
+        } else {
+            Err(Error::VertexOutOfRange {
+                vertex: v,
+                order: self.n(),
+            })
+        }
+    }
+
+    /// Sorted intersection size of two neighbour lists (shared triangles).
+    pub fn common_neighbors(&self, u: u32, v: u32) -> usize {
+        sorted_intersection_count(self.neighbors(u), self.neighbors(v))
+    }
+}
+
+/// Count |a ∩ b| for sorted slices via merge walk.
+#[inline]
+pub fn sorted_intersection_count(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut c) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Materialise |a ∩ b| for sorted slices into `out` (cleared first).
+#[inline]
+pub fn sorted_intersection_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Is sorted `a` a subset of sorted `b`?
+#[inline]
+pub fn sorted_is_subset(a: &[u32], b: &[u32]) -> bool {
+    if a.len() > b.len() {
+        return false;
+    }
+    let mut j = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j == b.len() || b[j] != x {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_tail() -> Graph {
+        // 0-1-2 triangle, 2-3 tail
+        Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)])
+    }
+
+    #[test]
+    fn basic_counts() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn from_edges_dedups_and_drops_loops() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)]);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = Graph::from_edges(5, &[(2, 4), (2, 0), (2, 3), (2, 1)]);
+        assert_eq!(g.neighbors(2), &[0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = triangle_plus_tail();
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+        assert!(!g.has_edge(1, 1));
+    }
+
+    #[test]
+    fn edges_iterator_ordered_unique() {
+        let g = triangle_plus_tail();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn induced_subgraph_remaps() {
+        let g = triangle_plus_tail();
+        let keep = vec![true, false, true, true];
+        let (h, ids) = g.induced(&keep);
+        assert_eq!(ids, vec![0, 2, 3]);
+        assert_eq!(h.n(), 3);
+        // surviving edges: 0-2 and 2-3 → new ids (0,1), (1,2)
+        assert_eq!(h.edges().collect::<Vec<_>>(), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn components_and_connectivity() {
+        let g = Graph::from_edges(5, &[(0, 1), (2, 3)]);
+        assert_eq!(g.components(), 3); // {0,1},{2,3},{4}
+        assert!(!g.is_connected());
+        assert!(triangle_plus_tail().is_connected());
+        assert!(Graph::empty(0).is_connected());
+        assert!(Graph::empty(1).is_connected());
+    }
+
+    #[test]
+    fn bfs_distances_path() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.bfs_distances(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ego_vertices_one_hop() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.ego_vertices(0, 1), vec![0, 1, 2]);
+        assert_eq!(g.ego_vertices(3, 1), vec![2, 3]);
+        assert_eq!(g.ego_vertices(3, 2), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let g = triangle_plus_tail();
+        let a = g.to_dense_f32();
+        let n = g.n();
+        for u in 0..n {
+            assert_eq!(a[u * n + u], 0.0);
+            for v in 0..n {
+                let want = if g.has_edge(u as u32, v as u32) { 1.0 } else { 0.0 };
+                assert_eq!(a[u * n + v], want);
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_set_helpers() {
+        assert_eq!(sorted_intersection_count(&[1, 3, 5], &[2, 3, 5, 7]), 2);
+        assert!(sorted_is_subset(&[2, 5], &[1, 2, 3, 5]));
+        assert!(!sorted_is_subset(&[2, 6], &[1, 2, 3, 5]));
+        assert!(sorted_is_subset(&[], &[1]));
+        let mut out = Vec::new();
+        sorted_intersection_into(&[1, 2, 9], &[2, 9, 10], &mut out);
+        assert_eq!(out, vec![2, 9]);
+    }
+
+    #[test]
+    fn check_vertex_bounds() {
+        let g = triangle_plus_tail();
+        assert!(g.check_vertex(3).is_ok());
+        assert!(g.check_vertex(4).is_err());
+    }
+}

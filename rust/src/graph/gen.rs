@@ -1,0 +1,486 @@
+//! Seeded graph generators (S2) — the synthetic stand-ins for the paper's
+//! datasets (no network access in this environment; see DESIGN.md §4).
+//!
+//! Families:
+//! * `erdos_renyi`       — G(n, p), the Remark 3 / Kahle-threshold baseline.
+//! * `barabasi_albert`   — preferential attachment; heavy-tailed citation /
+//!                         web-like degree sequences, many dominated leaves.
+//! * `powerlaw_cluster`  — Holme–Kim: BA + triad closure; social-network-like
+//!                         clustering (FACEBOOK/TWITTER ego stand-ins).
+//! * `watts_strogatz`    — small-world ring; low-core lattice-like graphs.
+//! * `random_geometric`  — unit-square proximity graph (FIRSTMM-like "3d
+//!                         point cloud" structure: dense local communities).
+//! * `planted_partition` — community structure (DBLP/Amazon-like).
+//! * deterministic families: `cycle`, `complete`, `star`, `path`, `grid`,
+//!   `octahedron` (the S² witness for PH-engine tests).
+
+use super::{Graph, GraphBuilder};
+use crate::util::Rng;
+
+/// Erdős–Rényi G(n, p) via geometric edge skipping — O(n + m) expected.
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    if n >= 2 && p > 0.0 {
+        if p >= 1.0 {
+            return complete(n);
+        }
+        let logq = (1.0 - p).ln();
+        // Iterate over the upper triangle with geometric jumps.
+        let total: u64 = (n as u64) * (n as u64 - 1) / 2;
+        let mut idx: i64 = -1;
+        loop {
+            let r = rng.f64().max(1e-300);
+            let skip = (r.ln() / logq).floor() as i64 + 1;
+            idx += skip.max(1);
+            if idx as u64 >= total {
+                break;
+            }
+            let (u, v) = unrank_pair(idx as u64, n as u64);
+            edges.push((u as u32, v as u32));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Map a linear index in [0, n·(n−1)/2) to the (u < v) pair, row-major.
+fn unrank_pair(idx: u64, n: u64) -> (u64, u64) {
+    // Row u starts at offset u·n − u·(u+1)/2 − u ... solve by scanning rows
+    // arithmetically: row u has (n − 1 − u) entries.
+    let mut u = 0u64;
+    let mut off = idx;
+    loop {
+        let row = n - 1 - u;
+        if off < row {
+            return (u, u + 1 + off);
+        }
+        off -= row;
+        u += 1;
+    }
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches to
+/// `m` distinct existing vertices chosen ∝ degree.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(m >= 1, "BA needs m >= 1");
+    let m = m.min(n.saturating_sub(1)).max(1);
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    // Repeated-endpoint list: sampling uniformly from it = degree-biased.
+    let mut chips: Vec<u32> = Vec::new();
+    // Seed clique of m+1 vertices keeps early attachment well-defined.
+    let seed_n = (m + 1).min(n);
+    for a in 0..seed_n {
+        for b in (a + 1)..seed_n {
+            edges.push((a as u32, b as u32));
+            chips.push(a as u32);
+            chips.push(b as u32);
+        }
+    }
+    for v in seed_n..n {
+        let mut targets = std::collections::BTreeSet::new();
+        while targets.len() < m {
+            let t = chips[rng.below(chips.len())];
+            targets.insert(t);
+        }
+        for &t in &targets {
+            edges.push((v as u32, t));
+            chips.push(v as u32);
+            chips.push(t);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Holme–Kim power-law cluster model: BA attachment where each subsequent
+/// link closes a triangle with probability `pt` — tunable clustering.
+pub fn powerlaw_cluster(n: usize, m: usize, pt: f64, seed: u64) -> Graph {
+    assert!(m >= 1);
+    let m = m.min(n.saturating_sub(1)).max(1);
+    let mut rng = Rng::new(seed);
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut chips: Vec<u32> = Vec::new();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let seed_n = (m + 1).min(n);
+    let add = |edges: &mut Vec<(u32, u32)>,
+                   adj: &mut Vec<Vec<u32>>,
+                   chips: &mut Vec<u32>,
+                   a: u32,
+                   b: u32| {
+        edges.push((a, b));
+        adj[a as usize].push(b);
+        adj[b as usize].push(a);
+        chips.push(a);
+        chips.push(b);
+    };
+    for a in 0..seed_n {
+        for b in (a + 1)..seed_n {
+            add(&mut edges, &mut adj, &mut chips, a as u32, b as u32);
+        }
+    }
+    for v in seed_n..n {
+        let mut targets: Vec<u32> = Vec::with_capacity(m);
+        // First link: pure preferential attachment.
+        let mut first = chips[rng.below(chips.len())];
+        while first == v as u32 {
+            first = chips[rng.below(chips.len())];
+        }
+        targets.push(first);
+        while targets.len() < m {
+            let last = *targets.last().unwrap();
+            let candidate = if rng.chance(pt) && !adj[last as usize].is_empty() {
+                // triad closure: neighbour of the previous target
+                adj[last as usize][rng.below(adj[last as usize].len())]
+            } else {
+                chips[rng.below(chips.len())]
+            };
+            if candidate != v as u32 && !targets.contains(&candidate) {
+                targets.push(candidate);
+            } else {
+                // fall back to PA to guarantee progress
+                let c = chips[rng.below(chips.len())];
+                if c != v as u32 && !targets.contains(&c) {
+                    targets.push(c);
+                }
+            }
+        }
+        for t in targets {
+            add(&mut edges, &mut adj, &mut chips, v as u32, t);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Watts–Strogatz small world: ring lattice with k/2 neighbours each side,
+/// rewired with probability `beta`.
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, seed: u64) -> Graph {
+    assert!(k % 2 == 0 && k < n, "WS needs even k < n");
+    let mut rng = Rng::new(seed);
+    let mut edge_set: std::collections::BTreeSet<(u32, u32)> = (0..n)
+        .flat_map(|i| {
+            (1..=k / 2).map(move |d| {
+                let j = (i + d) % n;
+                (i.min(j) as u32, i.max(j) as u32)
+            })
+        })
+        .collect();
+    let originals: Vec<(u32, u32)> = edge_set.iter().copied().collect();
+    for (a, b) in originals {
+        if rng.chance(beta) {
+            // rewire b-end to a uniform non-neighbour of a
+            for _ in 0..16 {
+                let c = rng.below(n) as u32;
+                let key = (a.min(c), a.max(c));
+                if c != a && !edge_set.contains(&key) {
+                    edge_set.remove(&(a, b));
+                    edge_set.insert(key);
+                    break;
+                }
+            }
+        }
+    }
+    Graph::from_edges(n, &edge_set.into_iter().collect::<Vec<_>>())
+}
+
+/// Random geometric graph on the unit square with connection radius `r`.
+pub fn random_geometric(n: usize, r: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+    // Grid bucketing for near-linear neighbour search.
+    let cell = r.max(1e-9);
+    let cells = (1.0 / cell).ceil() as i64 + 1;
+    let mut grid: std::collections::HashMap<(i64, i64), Vec<u32>> =
+        std::collections::HashMap::new();
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        grid.entry(((x / cell) as i64, (y / cell) as i64))
+            .or_default()
+            .push(i as u32);
+    }
+    let mut edges = Vec::new();
+    let r2 = r * r;
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let (cx, cy) = ((x / cell) as i64, (y / cell) as i64);
+        for dx in -1..=1 {
+            for dy in -1..=1 {
+                let (gx, gy) = (cx + dx, cy + dy);
+                if gx < 0 || gy < 0 || gx > cells || gy > cells {
+                    continue;
+                }
+                if let Some(bucket) = grid.get(&(gx, gy)) {
+                    for &j in bucket {
+                        if (j as usize) > i {
+                            let (px, py) = pts[j as usize];
+                            let (ddx, ddy) = (px - x, py - y);
+                            if ddx * ddx + ddy * ddy <= r2 {
+                                edges.push((i as u32, j));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Planted-partition community model: `c` communities of (roughly) equal
+/// size; intra-community edges w.p. `p_in`, inter w.p. `p_out`.
+pub fn planted_partition(n: usize, c: usize, p_in: f64, p_out: f64, seed: u64) -> Graph {
+    assert!(c >= 1);
+    let mut rng = Rng::new(seed);
+    let comm: Vec<usize> = (0..n).map(|i| i % c).collect();
+    let mut edges = Vec::new();
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let p = if comm[a] == comm[b] { p_in } else { p_out };
+            if rng.chance(p) {
+                edges.push((a as u32, b as u32));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Sparse planted-partition for large n: skip-sampling within and across
+/// blocks (O(m) expected instead of O(n²)).
+pub fn planted_partition_sparse(
+    n: usize,
+    c: usize,
+    deg_in: f64,
+    deg_out: f64,
+    seed: u64,
+) -> Graph {
+    // Convert expected intra/inter degrees to probabilities.
+    let size = (n / c.max(1)).max(1);
+    let p_in = (deg_in / size as f64).min(1.0);
+    let p_out = if n > size {
+        (deg_out / (n - size) as f64).min(1.0)
+    } else {
+        0.0
+    };
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    // Intra-community: ER per block.
+    for blk in 0..c {
+        let members: Vec<u32> = (0..n).filter(|i| i % c == blk).map(|i| i as u32).collect();
+        let g = erdos_renyi(members.len(), p_in, rng.next_u64());
+        for (a, b) in g.edges() {
+            edges.push((members[a as usize], members[b as usize]));
+        }
+    }
+    // Inter-community: global ER thinned to cross-block pairs.
+    if p_out > 0.0 {
+        let g = erdos_renyi(n, p_out, rng.next_u64());
+        for (a, b) in g.edges() {
+            if (a as usize) % c != (b as usize) % c {
+                edges.push((a, b));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Cycle graph Cₙ (the Remark 11 counterexample family).
+pub fn cycle(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (0..n)
+        .map(|i| (i as u32, ((i + 1) % n) as u32))
+        .collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// Complete graph Kₙ.
+pub fn complete(n: usize) -> Graph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            edges.push((a as u32, b as u32));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Star K₁,ₙ₋₁ (hub = 0).
+pub fn star(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (1..n).map(|i| (0, i as u32)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// Path Pₙ.
+pub fn path(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (1..n).map(|i| ((i - 1) as u32, i as u32)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// w×h grid lattice.
+pub fn grid(w: usize, h: usize) -> Graph {
+    let mut b = GraphBuilder::new(w * h);
+    let id = |x: usize, y: usize| (y * w + x) as u32;
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                b.add_edge(id(x, y), id(x + 1, y));
+            }
+            if y + 1 < h {
+                b.add_edge(id(x, y), id(x, y + 1));
+            }
+        }
+    }
+    b.build()
+}
+
+/// Octahedron = boundary of the 3-dim cross-polytope ≅ S²: the canonical
+/// witness for β₂ = 1 in the PH-engine tests (K₄-free, so its clique
+/// complex is exactly the 2-sphere).
+pub fn octahedron() -> Graph {
+    // vertices 0..6; antipodal pairs (0,1), (2,3), (4,5) are NOT adjacent.
+    let mut edges = Vec::new();
+    for a in 0..6u32 {
+        for b in (a + 1)..6u32 {
+            let antipodal = (a / 2 == b / 2) && (a % 2 != b % 2);
+            if !antipodal {
+                edges.push((a, b));
+            }
+        }
+    }
+    Graph::from_edges(6, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::clustering;
+
+    #[test]
+    fn er_edge_count_near_expectation() {
+        let n = 400;
+        let p = 0.05;
+        let g = erdos_renyi(n, p, 1);
+        let expect = p * (n * (n - 1) / 2) as f64;
+        let got = g.m() as f64;
+        assert!(
+            (got - expect).abs() < 4.0 * expect.sqrt() + 10.0,
+            "m={got} expect≈{expect}"
+        );
+    }
+
+    #[test]
+    fn er_extremes() {
+        assert_eq!(erdos_renyi(50, 0.0, 2).m(), 0);
+        assert_eq!(erdos_renyi(10, 1.0, 3).m(), 45);
+    }
+
+    #[test]
+    fn er_deterministic_in_seed() {
+        let a = erdos_renyi(100, 0.1, 9);
+        let b = erdos_renyi(100, 0.1, 9);
+        assert_eq!(a, b);
+        let c = erdos_renyi(100, 0.1, 10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn unrank_pair_covers_triangle() {
+        let n = 7u64;
+        let mut seen = std::collections::BTreeSet::new();
+        for idx in 0..(n * (n - 1) / 2) {
+            let (u, v) = unrank_pair(idx, n);
+            assert!(u < v && v < n);
+            assert!(seen.insert((u, v)));
+        }
+        assert_eq!(seen.len() as u64, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn ba_sizes_and_connectivity() {
+        let g = barabasi_albert(200, 3, 5);
+        assert_eq!(g.n(), 200);
+        assert!(g.is_connected());
+        // m edges per new vertex beyond the seed clique
+        let expect = 3 * (200 - 4) + 6;
+        assert_eq!(g.m(), expect);
+    }
+
+    #[test]
+    fn ba_has_heavy_tail() {
+        let g = barabasi_albert(500, 2, 6);
+        let max_d = g.max_degree();
+        let avg_d = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!(max_d as f64 > 4.0 * avg_d, "hub degree {max_d} vs avg {avg_d}");
+    }
+
+    #[test]
+    fn powerlaw_cluster_raises_clustering() {
+        let plain = barabasi_albert(300, 3, 7);
+        let clustered = powerlaw_cluster(300, 3, 0.9, 7);
+        assert!(
+            clustering::average(&clustered) > clustering::average(&plain) + 0.05,
+            "triad closure should raise CC: {} vs {}",
+            clustering::average(&clustered),
+            clustering::average(&plain)
+        );
+    }
+
+    #[test]
+    fn ws_ring_unrewired() {
+        let g = watts_strogatz(20, 4, 0.0, 1);
+        assert_eq!(g.m(), 40);
+        assert!(g.is_connected());
+        for v in 0..20u32 {
+            assert_eq!(g.degree(v), 4);
+        }
+    }
+
+    #[test]
+    fn ws_rewiring_preserves_edge_count() {
+        let g = watts_strogatz(50, 6, 0.3, 2);
+        assert_eq!(g.m(), 150);
+    }
+
+    #[test]
+    fn geometric_radius_monotone() {
+        let small = random_geometric(200, 0.05, 3);
+        let large = random_geometric(200, 0.2, 3);
+        assert!(large.m() > small.m());
+    }
+
+    #[test]
+    fn planted_partition_is_assortative() {
+        let g = planted_partition(120, 4, 0.4, 0.01, 4);
+        let mut intra = 0;
+        let mut inter = 0;
+        for (a, b) in g.edges() {
+            if (a as usize) % 4 == (b as usize) % 4 {
+                intra += 1;
+            } else {
+                inter += 1;
+            }
+        }
+        assert!(intra > inter * 2, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn sparse_partition_scales() {
+        let g = planted_partition_sparse(5000, 10, 8.0, 2.0, 5);
+        let avg_deg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!((avg_deg - 10.0).abs() < 2.0, "avg degree {avg_deg}");
+    }
+
+    #[test]
+    fn deterministic_families() {
+        assert_eq!(cycle(5).m(), 5);
+        assert_eq!(complete(6).m(), 15);
+        assert_eq!(star(7).m(), 6);
+        assert_eq!(path(4).m(), 3);
+        assert_eq!(grid(3, 3).m(), 12);
+        let oct = octahedron();
+        assert_eq!(oct.n(), 6);
+        assert_eq!(oct.m(), 12);
+        for v in 0..6u32 {
+            assert_eq!(oct.degree(v), 4);
+        }
+        // no K4: every triangle's vertex trio misses its antipode
+        assert!(!oct.has_edge(0, 1));
+        assert!(!oct.has_edge(2, 3));
+        assert!(!oct.has_edge(4, 5));
+    }
+}

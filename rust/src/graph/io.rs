@@ -1,0 +1,110 @@
+//! Edge-list IO in the SNAP plain-text format (`# comments`, one
+//! whitespace-separated `u v` pair per line). The large-network benches
+//! read/write this format so runs can be checkpointed and inspected.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::Graph;
+use crate::error::{Error, Result};
+
+/// Parse an edge list from a string. Vertex ids may be arbitrary u32s;
+/// they are compacted to `0..n` preserving order of first appearance? No —
+/// ids are used verbatim, with `n = max id + 1`, matching SNAP semantics.
+pub fn parse_edge_list(text: &str) -> Result<Graph> {
+    let mut edges = Vec::new();
+    let mut max_id: u32 = 0;
+    let mut any = false;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let a = it
+            .next()
+            .ok_or_else(|| Error::Parse(format!("line {}: missing source", lineno + 1)))?;
+        let b = it
+            .next()
+            .ok_or_else(|| Error::Parse(format!("line {}: missing target", lineno + 1)))?;
+        let a: u32 = a
+            .parse()
+            .map_err(|_| Error::Parse(format!("line {}: bad vertex id {a:?}", lineno + 1)))?;
+        let b: u32 = b
+            .parse()
+            .map_err(|_| Error::Parse(format!("line {}: bad vertex id {b:?}", lineno + 1)))?;
+        max_id = max_id.max(a).max(b);
+        edges.push((a, b));
+        any = true;
+    }
+    let n = if any { max_id as usize + 1 } else { 0 };
+    Ok(Graph::from_edges(n, &edges))
+}
+
+/// Read an edge-list file.
+pub fn read_edge_list(path: impl AsRef<Path>) -> Result<Graph> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .map_err(|e| Error::Io(format!("{}: {e}", path.as_ref().display())))?;
+    let mut text = String::new();
+    f.read_to_string(&mut text)
+        .map_err(|e| Error::Io(e.to_string()))?;
+    parse_edge_list(&text)
+}
+
+/// Write a graph as an edge list with a provenance header.
+pub fn write_edge_list(g: &Graph, path: impl AsRef<Path>, comment: &str) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .map_err(|e| Error::Io(format!("{}: {e}", path.as_ref().display())))?;
+    writeln!(f, "# {comment}")?;
+    writeln!(f, "# n={} m={}", g.n(), g.m())?;
+    for (u, v) in g.edges() {
+        writeln!(f, "{u}\t{v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let g = parse_edge_list("# header\n0 1\n1 2\n\n% alt comment\n2 0\n").unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+    }
+
+    #[test]
+    fn parse_tabs_and_gaps() {
+        let g = parse_edge_list("0\t5\n3   4").unwrap();
+        assert_eq!(g.n(), 6);
+        assert!(g.has_edge(0, 5));
+        assert!(g.has_edge(3, 4));
+    }
+
+    #[test]
+    fn parse_errors_are_located() {
+        let err = parse_edge_list("0 1\nbogus").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+        let err = parse_edge_list("7").unwrap_err();
+        assert!(err.to_string().contains("missing target"));
+    }
+
+    #[test]
+    fn empty_input_is_empty_graph() {
+        let g = parse_edge_list("# nothing\n").unwrap();
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let dir = std::env::temp_dir().join("coral_prunit_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c4.txt");
+        write_edge_list(&g, &path, "C4 test").unwrap();
+        let h = read_edge_list(&path).unwrap();
+        assert_eq!(g, h);
+    }
+}

@@ -1,0 +1,11 @@
+//! Graph substrate: compact CSR graphs, builders, IO, generators, and
+//! clustering-coefficient analysis (S1/S2/S10 in DESIGN.md).
+
+pub mod builder;
+pub mod clustering;
+pub mod core;
+pub mod gen;
+pub mod io;
+
+pub use builder::GraphBuilder;
+pub use core::Graph;

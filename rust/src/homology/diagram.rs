@@ -1,0 +1,157 @@
+//! Persistence diagrams: multisets of (birth, death) pairs per homology
+//! dimension (§3). Values live in *key space* (sublevel-normalised; see
+//! [`crate::complex::Filtration::key`]); `death = +∞` marks essential
+//! classes.
+
+/// A single persistence diagram `PD_k`.
+#[derive(Clone, Debug, Default)]
+pub struct Diagram {
+    dim: usize,
+    pairs: Vec<(f64, f64)>,
+}
+
+impl Diagram {
+    pub fn new(dim: usize, mut pairs: Vec<(f64, f64)>) -> Diagram {
+        pairs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Diagram { dim, pairs }
+    }
+
+    /// Homology dimension k of this PD_k.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// All pairs, including zero-persistence ones, sorted.
+    pub fn all_pairs(&self) -> &[(f64, f64)] {
+        &self.pairs
+    }
+
+    /// Off-diagonal points (birth ≠ death) — what the paper's diagrams
+    /// contain; homotopy-equivalence arguments preserve exactly these.
+    pub fn points(&self) -> Vec<(f64, f64)> {
+        self.pairs.iter().copied().filter(|&(b, d)| b != d).collect()
+    }
+
+    /// Essential (infinite) classes.
+    pub fn essential(&self) -> Vec<f64> {
+        self.pairs
+            .iter()
+            .filter(|&&(_, d)| d.is_infinite())
+            .map(|&(b, _)| b)
+            .collect()
+    }
+
+    /// Betti number of the final space = number of essential classes.
+    pub fn betti(&self) -> usize {
+        self.essential().len()
+    }
+
+    /// Total (finite) persistence Σ (d − b).
+    pub fn total_persistence(&self) -> f64 {
+        self.pairs
+            .iter()
+            .filter(|&&(_, d)| d.is_finite())
+            .map(|&(b, d)| d - b)
+            .sum()
+    }
+
+    /// Multiset equality of off-diagonal points up to `tol` per coordinate.
+    /// This is the equality the paper's theorems assert (diagrams agree up
+    /// to zero-persistence pairs).
+    pub fn same_as(&self, other: &Diagram, tol: f64) -> bool {
+        let a = self.points();
+        let b = other.points();
+        if a.len() != b.len() {
+            return false;
+        }
+        a.iter().zip(b.iter()).all(|(&(b1, d1), &(b2, d2))| {
+            (b1 - b2).abs() <= tol
+                && ((d1.is_infinite() && d2.is_infinite()) || (d1 - d2).abs() <= tol)
+        })
+    }
+
+    pub fn is_trivial(&self) -> bool {
+        self.points().is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+impl std::fmt::Display for Diagram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PD_{} {{", self.dim)?;
+        for (i, (b, d)) in self.points().iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            if d.is_infinite() {
+                write!(f, "({b:.3},∞)")?;
+            } else {
+                write!(f, "({b:.3},{d:.3})")?;
+            }
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_filter_diagonal() {
+        let d = Diagram::new(0, vec![(1.0, 1.0), (0.0, 2.0), (0.5, f64::INFINITY)]);
+        assert_eq!(d.points().len(), 2);
+        assert_eq!(d.len(), 3);
+    }
+
+    #[test]
+    fn essential_and_betti() {
+        let d = Diagram::new(1, vec![(0.0, f64::INFINITY), (1.0, 3.0)]);
+        assert_eq!(d.betti(), 1);
+        assert_eq!(d.essential(), vec![0.0]);
+    }
+
+    #[test]
+    fn same_as_is_multiset_equality() {
+        let a = Diagram::new(0, vec![(0.0, 1.0), (2.0, 3.0)]);
+        let b = Diagram::new(0, vec![(2.0, 3.0), (0.0, 1.0)]);
+        assert!(a.same_as(&b, 1e-9));
+        let c = Diagram::new(0, vec![(0.0, 1.0), (2.0, 4.0)]);
+        assert!(!a.same_as(&c, 1e-9));
+    }
+
+    #[test]
+    fn same_as_ignores_zero_persistence() {
+        let a = Diagram::new(0, vec![(0.0, 1.0), (5.0, 5.0)]);
+        let b = Diagram::new(0, vec![(0.0, 1.0)]);
+        assert!(a.same_as(&b, 1e-9));
+    }
+
+    #[test]
+    fn infinite_deaths_compare_equal() {
+        let a = Diagram::new(1, vec![(1.0, f64::INFINITY)]);
+        let b = Diagram::new(1, vec![(1.0, f64::INFINITY)]);
+        assert!(a.same_as(&b, 1e-9));
+        let c = Diagram::new(1, vec![(1.0, 9.0)]);
+        assert!(!a.same_as(&c, 1e-9));
+    }
+
+    #[test]
+    fn total_persistence_sums_finite() {
+        let d = Diagram::new(0, vec![(0.0, 2.0), (1.0, f64::INFINITY), (3.0, 4.5)]);
+        assert!((d.total_persistence() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_renders() {
+        let d = Diagram::new(1, vec![(0.0, f64::INFINITY)]);
+        assert_eq!(format!("{d}"), "PD_1 {(0.000,∞)}");
+    }
+}

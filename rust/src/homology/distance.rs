@@ -1,0 +1,379 @@
+//! Bottleneck distance between persistence diagrams — used by the test
+//! suite as a robust diagram comparator and by downstream ML users of the
+//! library.
+//!
+//! Implementation: binary search over candidate ε (the classic reduction)
+//! with a Hopcroft–Karp-style feasibility check on the ε-threshold
+//! bipartite graph, where every point may also match its diagonal
+//! projection. Diagrams in this crate are small (thousands of points at
+//! most), so the O(E·√V) matching is more than fast enough.
+
+use super::diagram::Diagram;
+
+const INF_MISMATCH: f64 = f64::INFINITY;
+
+/// L∞ distance between two points, treating +∞ coordinates exactly.
+fn dist_inf(a: (f64, f64), b: (f64, f64)) -> f64 {
+    let dd = match (a.1.is_infinite(), b.1.is_infinite()) {
+        (true, true) => 0.0,
+        (false, false) => (a.1 - b.1).abs(),
+        _ => return INF_MISMATCH,
+    };
+    (a.0 - b.0).abs().max(dd)
+}
+
+/// Distance from a (finite) point to the diagonal.
+fn diag_dist(p: (f64, f64)) -> f64 {
+    if p.1.is_infinite() {
+        INF_MISMATCH
+    } else {
+        (p.1 - p.0) / 2.0
+    }
+}
+
+/// Bottleneck distance between two diagrams (must be same homology dim to
+/// be meaningful; not enforced).
+pub fn bottleneck(a: &Diagram, b: &Diagram) -> f64 {
+    let pa = a.points();
+    let pb = b.points();
+    if pa.is_empty() && pb.is_empty() {
+        return 0.0;
+    }
+    // Infinite points must match among themselves; count mismatch = ∞.
+    let inf_a = pa.iter().filter(|p| p.1.is_infinite()).count();
+    let inf_b = pb.iter().filter(|p| p.1.is_infinite()).count();
+    if inf_a != inf_b {
+        return f64::INFINITY;
+    }
+
+    // Candidate ε values: all pairwise distances + diagonal distances.
+    let mut cands: Vec<f64> = Vec::new();
+    for &x in &pa {
+        for &y in &pb {
+            let d = dist_inf(x, y);
+            if d.is_finite() {
+                cands.push(d);
+            }
+        }
+        let d = diag_dist(x);
+        if d.is_finite() {
+            cands.push(d);
+        }
+    }
+    for &y in &pb {
+        let d = diag_dist(y);
+        if d.is_finite() {
+            cands.push(d);
+        }
+    }
+    cands.push(0.0);
+    cands.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    cands.dedup();
+
+    // Binary search the smallest feasible ε.
+    let mut lo = 0usize;
+    let mut hi = cands.len() - 1;
+    if !feasible(&pa, &pb, cands[hi]) {
+        return f64::INFINITY;
+    }
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(&pa, &pb, cands[mid]) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    cands[lo]
+}
+
+/// Is there a perfect matching at threshold ε (points may use diagonal)?
+fn feasible(pa: &[(f64, f64)], pb: &[(f64, f64)], eps: f64) -> bool {
+    let eps = eps + 1e-12;
+    let na = pa.len();
+    let nb = pb.len();
+    // Left nodes: points of A. Right: points of B. A point of A whose
+    // diagonal distance ≤ ε may stay unmatched; similarly for B — the
+    // standard trick: check max matching among "must-match" nodes.
+    // Build adjacency restricted to pairs within ε.
+    let adj: Vec<Vec<usize>> = pa
+        .iter()
+        .map(|&x| {
+            (0..nb)
+                .filter(|&j| dist_inf(x, pb[j]) <= eps)
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let a_must: Vec<bool> = pa.iter().map(|&x| diag_dist(x) > eps).collect();
+    let b_must: Vec<bool> = pb.iter().map(|&y| diag_dist(y) > eps).collect();
+
+    // Greedy + augmenting paths (Kuhn's algorithm) for must-match lefts,
+    // then verify every must-match right is covered.
+    let mut match_b: Vec<Option<usize>> = vec![None; nb];
+    let mut match_a: Vec<Option<usize>> = vec![None; na];
+
+    fn try_augment(
+        u: usize,
+        adj: &[Vec<usize>],
+        match_a: &mut [Option<usize>],
+        match_b: &mut [Option<usize>],
+        seen: &mut [bool],
+    ) -> bool {
+        for &v in &adj[u] {
+            if seen[v] {
+                continue;
+            }
+            seen[v] = true;
+            let free = match match_b[v] {
+                None => true,
+                Some(u2) => try_augment(u2, adj, match_a, match_b, seen),
+            };
+            if free {
+                match_b[v] = Some(u);
+                match_a[u] = Some(v);
+                return true;
+            }
+        }
+        false
+    }
+
+    for u in 0..na {
+        if a_must[u] && match_a[u].is_none() {
+            let mut seen = vec![false; nb];
+            if !try_augment(u, &adj, &mut match_a, &mut match_b, &mut seen) {
+                return false;
+            }
+        }
+    }
+    // Every must-match right must be matched; try augmenting from
+    // optional lefts to free them up.
+    for v in 0..nb {
+        if b_must[v] && match_b[v].is_none() {
+            // find any left adjacent to v that can route there
+            let mut done = false;
+            for u in 0..na {
+                if match_a[u].is_none() && adj[u].contains(&v) {
+                    let mut seen = vec![false; nb];
+                    if try_augment(u, &adj, &mut match_a, &mut match_b, &mut seen)
+                        && match_b[v].is_some()
+                    {
+                        done = true;
+                        break;
+                    }
+                }
+            }
+            if !done && match_b[v].is_none() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// 1-Wasserstein distance (L∞ ground metric) via the Hungarian algorithm
+/// on the augmented matching problem: each point may match a point of the
+/// other diagram or its own diagonal projection. Diagrams with different
+/// essential-class counts are at distance +∞.
+pub fn wasserstein1(a: &Diagram, b: &Diagram) -> f64 {
+    let pa = a.points();
+    let pb = b.points();
+    let inf_a = pa.iter().filter(|p| p.1.is_infinite()).count();
+    let inf_b = pb.iter().filter(|p| p.1.is_infinite()).count();
+    if inf_a != inf_b {
+        return f64::INFINITY;
+    }
+    // Split: essentials match among themselves (sorted births — optimal
+    // for 1-d transport); finite points go through the assignment solver.
+    let mut ess_a: Vec<f64> = pa.iter().filter(|p| p.1.is_infinite()).map(|p| p.0).collect();
+    let mut ess_b: Vec<f64> = pb.iter().filter(|p| p.1.is_infinite()).map(|p| p.0).collect();
+    ess_a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    ess_b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let ess_cost: f64 = ess_a
+        .iter()
+        .zip(&ess_b)
+        .map(|(x, y)| (x - y).abs())
+        .sum();
+
+    let fa: Vec<(f64, f64)> = pa.into_iter().filter(|p| p.1.is_finite()).collect();
+    let fb: Vec<(f64, f64)> = pb.into_iter().filter(|p| p.1.is_finite()).collect();
+    // Augmented square cost matrix: n+m rows/cols; point↔point, point↔its
+    // diagonal, diagonal↔diagonal (0).
+    let (n, m) = (fa.len(), fb.len());
+    let size = n + m;
+    if size == 0 {
+        return ess_cost;
+    }
+    let mut cost = vec![vec![0.0f64; size]; size];
+    for i in 0..size {
+        for j in 0..size {
+            cost[i][j] = match (i < n, j < m) {
+                (true, true) => dist_inf(fa[i], fb[j]),
+                (true, false) => diag_dist(fa[i]),
+                (false, true) => diag_dist(fb[j]),
+                (false, false) => 0.0,
+            };
+        }
+    }
+    ess_cost + hungarian(&cost)
+}
+
+/// O(n³) Hungarian algorithm (Jonker-style potentials) for square cost
+/// matrices; returns the minimal assignment cost.
+fn hungarian(cost: &[Vec<f64>]) -> f64 {
+    let n = cost.len();
+    if n == 0 {
+        return 0.0;
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed potentials
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut total = 0.0;
+    for j in 1..=n {
+        if p[j] > 0 {
+            total += cost[p[j] - 1][j - 1];
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_diagrams_distance_zero() {
+        let a = Diagram::new(1, vec![(0.0, 3.0), (1.0, 2.0)]);
+        let b = Diagram::new(1, vec![(1.0, 2.0), (0.0, 3.0)]);
+        assert_eq!(bottleneck(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn single_point_shift() {
+        let a = Diagram::new(1, vec![(0.0, 4.0)]);
+        let b = Diagram::new(1, vec![(0.5, 4.0)]);
+        assert!((bottleneck(&a, &b) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn point_vs_empty_uses_diagonal() {
+        let a = Diagram::new(1, vec![(0.0, 2.0)]);
+        let b = Diagram::new(1, vec![]);
+        assert!((bottleneck(&a, &b) - 1.0).abs() < 1e-9); // (2−0)/2
+    }
+
+    #[test]
+    fn infinite_count_mismatch_is_infinite() {
+        let a = Diagram::new(0, vec![(0.0, f64::INFINITY)]);
+        let b = Diagram::new(0, vec![]);
+        assert!(bottleneck(&a, &b).is_infinite());
+    }
+
+    #[test]
+    fn infinite_points_compare_by_birth() {
+        let a = Diagram::new(0, vec![(0.0, f64::INFINITY)]);
+        let b = Diagram::new(0, vec![(0.75, f64::INFINITY)]);
+        assert!((bottleneck(&a, &b) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = Diagram::new(1, vec![(0.0, 3.0), (2.0, 6.0)]);
+        let b = Diagram::new(1, vec![(0.5, 3.5)]);
+        assert!((bottleneck(&a, &b) - bottleneck(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wasserstein_identical_is_zero() {
+        let a = Diagram::new(1, vec![(0.0, 3.0), (2.0, 6.0), (1.0, f64::INFINITY)]);
+        let b = Diagram::new(1, vec![(2.0, 6.0), (1.0, f64::INFINITY), (0.0, 3.0)]);
+        assert!(wasserstein1(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wasserstein_sums_shifts() {
+        let a = Diagram::new(1, vec![(0.0, 4.0), (10.0, 14.0)]);
+        let b = Diagram::new(1, vec![(0.5, 4.0), (10.0, 14.5)]);
+        assert!((wasserstein1(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wasserstein_unmatched_goes_to_diagonal() {
+        let a = Diagram::new(1, vec![(0.0, 2.0), (5.0, 5.4)]);
+        let b = Diagram::new(1, vec![(0.0, 2.0)]);
+        // (5, 5.4) pays its diagonal distance 0.2
+        assert!((wasserstein1(&a, &b) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wasserstein_dominates_bottleneck() {
+        let a = Diagram::new(1, vec![(0.0, 3.0), (1.0, 5.0)]);
+        let b = Diagram::new(1, vec![(0.2, 3.0), (1.0, 4.5)]);
+        assert!(wasserstein1(&a, &b) >= bottleneck(&a, &b) - 1e-12);
+    }
+
+    #[test]
+    fn wasserstein_essential_mismatch_infinite() {
+        let a = Diagram::new(0, vec![(0.0, f64::INFINITY)]);
+        let b = Diagram::new(0, vec![]);
+        assert!(wasserstein1(&a, &b).is_infinite());
+    }
+
+    #[test]
+    fn hungarian_small_matrix() {
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        assert!((hungarian(&cost) - 5.0).abs() < 1e-12); // 1 + 2 + 2
+    }
+}

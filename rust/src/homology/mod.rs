@@ -1,0 +1,78 @@
+//! Persistent homology engine (S8) — the computation whose cost the
+//! paper's reductions attack. Z/2 clique-complex persistence with a
+//! union-find fast path for PD₀ and a twist-optimised matrix reduction
+//! for higher dimensions.
+
+pub mod diagram;
+pub mod distance;
+pub mod reduction;
+pub mod union_find;
+pub mod vectorize;
+
+pub use diagram::Diagram;
+pub use distance::{bottleneck, wasserstein1};
+pub use reduction::{diagrams_of_complex, Algorithm, BoundaryMatrix};
+pub use union_find::pd0;
+
+use crate::complex::{CliqueComplex, Filtration};
+use crate::graph::Graph;
+
+/// Persistence diagrams `PD_0 .. PD_max_k` of `(G, f)` over the clique-
+/// complex sublevel/superlevel filtration (§3). Uses the union-find fast
+/// path when only PD₀ is requested.
+pub fn persistence_diagrams(g: &Graph, f: &Filtration, max_k: usize) -> Vec<Diagram> {
+    if max_k == 0 {
+        return vec![pd0(g, f)];
+    }
+    let complex = CliqueComplex::build(g, f, max_k + 1);
+    diagrams_of_complex(&complex, max_k, Algorithm::Twist)
+}
+
+/// Betti numbers β₀..β_max_k of the clique complex of `G` (constant
+/// filtration → essential classes = homology ranks). Figure 2 / Figure 10
+/// count these as "numbers of topological features".
+pub fn betti_numbers(g: &Graph, max_k: usize) -> Vec<usize> {
+    let f = Filtration::constant(g.n());
+    persistence_diagrams(g, &f, max_k)
+        .iter()
+        .map(|d| d.betti())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn betti_of_known_spaces() {
+        assert_eq!(betti_numbers(&gen::cycle(7), 2), vec![1, 1, 0]);
+        assert_eq!(betti_numbers(&gen::complete(5), 2), vec![1, 0, 0]);
+        assert_eq!(betti_numbers(&gen::octahedron(), 2), vec![1, 0, 1]);
+        assert_eq!(betti_numbers(&gen::star(6), 1), vec![1, 0]);
+        assert_eq!(betti_numbers(&crate::graph::Graph::empty(4), 1), vec![4, 0]);
+    }
+
+    #[test]
+    fn grid_loops_all_filled_none() {
+        // 3x3 grid: 4 squares, no triangles → β₁ = 4.
+        assert_eq!(betti_numbers(&gen::grid(3, 3), 1), vec![1, 4]);
+    }
+
+    #[test]
+    fn pd0_fast_path_used_and_correct() {
+        let g = gen::barabasi_albert(60, 2, 3);
+        let f = Filtration::degree(&g);
+        let fast = persistence_diagrams(&g, &f, 0);
+        let complex = CliqueComplex::build(&g, &f, 1);
+        let slow = diagrams_of_complex(&complex, 0, Algorithm::Standard);
+        assert!(fast[0].same_as(&slow[0], 1e-12));
+    }
+
+    #[test]
+    fn diagram_count_matches_request() {
+        let g = gen::cycle(5);
+        let f = Filtration::degree(&g);
+        assert_eq!(persistence_diagrams(&g, &f, 2).len(), 3);
+    }
+}

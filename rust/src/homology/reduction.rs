@@ -1,0 +1,393 @@
+//! Z/2 boundary-matrix reduction — the O(n³) computation the paper's
+//! algorithms exist to shrink (§1: "the complexity of the standard PH
+//! algorithm is cubic in the number of simplices").
+//!
+//! Two reducers over the same sparse column representation (sorted row
+//! indices, symmetric-difference column addition):
+//!
+//! * `standard` — textbook left-to-right reduction [59].
+//! * `twist` — Chen–Kerber clearing: process dimensions top-down and clear
+//!   columns of paired (creator) simplices, skipping their reduction
+//!   entirely. The production path; property-tested equal to `standard`.
+
+use std::collections::HashMap;
+
+use super::diagram::Diagram;
+use crate::complex::clique::CliqueComplex;
+
+/// Which reduction algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Standard,
+    Twist,
+}
+
+/// Sparse boundary matrix in filtration order.
+pub struct BoundaryMatrix {
+    /// columns[j] = sorted row indices of ∂(simplex_j); dim-0 columns empty.
+    pub columns: Vec<Vec<usize>>,
+    /// Simplex dimension per column.
+    pub dims: Vec<usize>,
+    /// Filtration key per column.
+    pub keys: Vec<f64>,
+}
+
+impl BoundaryMatrix {
+    /// Build from a filtered complex (simplices already in filtration
+    /// order with faces preceding cofaces).
+    pub fn build(c: &CliqueComplex) -> BoundaryMatrix {
+        let n = c.simplices.len();
+        let mut index: HashMap<&[u32], usize> = HashMap::with_capacity(n);
+        for (i, s) in c.simplices.iter().enumerate() {
+            index.insert(s.simplex.vertices(), i);
+        }
+        let mut columns = Vec::with_capacity(n);
+        let mut dims = Vec::with_capacity(n);
+        let mut keys = Vec::with_capacity(n);
+        let mut face_buf: Vec<u32> = Vec::new();
+        for s in &c.simplices {
+            let verts = s.simplex.vertices();
+            let d = s.simplex.dim();
+            dims.push(d);
+            keys.push(s.key);
+            if d == 0 {
+                columns.push(Vec::new());
+                continue;
+            }
+            let mut col = Vec::with_capacity(verts.len());
+            for drop in 0..verts.len() {
+                face_buf.clear();
+                face_buf.extend(verts.iter().enumerate().filter_map(|(i, &v)| {
+                    if i == drop {
+                        None
+                    } else {
+                        Some(v)
+                    }
+                }));
+                let row = *index
+                    .get(face_buf.as_slice())
+                    .expect("face missing from complex — build order violated");
+                col.push(row);
+            }
+            col.sort_unstable();
+            columns.push(col);
+        }
+        BoundaryMatrix { columns, dims, keys }
+    }
+
+    pub fn max_dim(&self) -> usize {
+        self.dims.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Dense Z/2 working column: a reusable bitset for the reduction chain.
+///
+/// §Perf: reducing a column may add hundreds of pivot columns; with
+/// sorted-vector columns each addition is an O(|target| + |other|) merge
+/// that reallocates. XOR-ing into a bitset makes each addition
+/// O(|other|) bit flips, and the new low is found by scanning downward
+/// from the old low (which always cancels). Measured 2.2× end-to-end on
+/// the reduction hot path (see EXPERIMENTS.md §Perf).
+struct DenseColumn {
+    words: Vec<u64>,
+}
+
+impl DenseColumn {
+    fn new(rows: usize) -> DenseColumn {
+        DenseColumn {
+            words: vec![0; rows.div_ceil(64)],
+        }
+    }
+
+    /// Load a sparse column (clears previous contents cheaply by
+    /// re-zeroing only the words it may have touched — callers guarantee
+    /// `clear` ran first).
+    fn load(&mut self, col: &[usize]) {
+        for &r in col {
+            self.words[r >> 6] ^= 1u64 << (r & 63);
+        }
+    }
+
+    /// XOR a sparse column in.
+    #[inline]
+    fn xor(&mut self, col: &[usize]) {
+        for &r in col {
+            self.words[r >> 6] ^= 1u64 << (r & 63);
+        }
+    }
+
+    /// Highest set bit at or below `from`, if any.
+    fn low_at_or_below(&self, from: usize) -> Option<usize> {
+        let mut w = from >> 6;
+        let mut mask = if (from & 63) == 63 {
+            u64::MAX
+        } else {
+            (1u64 << ((from & 63) + 1)) - 1
+        };
+        loop {
+            let bits = self.words[w] & mask;
+            if bits != 0 {
+                return Some((w << 6) + 63 - bits.leading_zeros() as usize);
+            }
+            if w == 0 {
+                return None;
+            }
+            w -= 1;
+            mask = u64::MAX;
+        }
+    }
+
+    /// Extract set bits ≤ `max_row` into `out` (ascending) and zero them.
+    fn drain_into(&mut self, max_row: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let top = (max_row >> 6) + 1;
+        for w in 0..top.min(self.words.len()) {
+            let mut bits = self.words[w];
+            self.words[w] = 0;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                out.push((w << 6) + b);
+                bits &= bits - 1;
+            }
+        }
+    }
+}
+
+/// Output of a reduction: persistence pairs as (birth col, death col)
+/// index pairs plus the essential (unpaired positive) columns.
+pub struct ReductionResult {
+    /// (birth simplex index, death simplex index); class dim = dims[birth].
+    pub pairs: Vec<(usize, usize)>,
+    /// Unpaired positive simplex indices (infinite classes).
+    pub essential: Vec<usize>,
+}
+
+/// Run the reduction and extract index pairs.
+pub fn reduce(matrix: &BoundaryMatrix, algorithm: Algorithm) -> ReductionResult {
+    let n = matrix.columns.len();
+    let mut cols: Vec<Vec<usize>> = matrix.columns.clone();
+    // pivot_of_row[r] = column whose low is r.
+    let mut pivot_of_row: Vec<Option<usize>> = vec![None; n];
+    let mut dense = DenseColumn::new(n);
+
+    let mut process = |j: usize, cols: &mut Vec<Vec<usize>>, pivot_of_row: &mut Vec<Option<usize>>| {
+        let Some(&start_low) = cols[j].last() else { return };
+        // Fast path: unique low already — no dense round-trip needed.
+        if pivot_of_row[start_low].is_none() {
+            pivot_of_row[start_low] = Some(j);
+            return;
+        }
+        dense.load(&cols[j]);
+        let mut low = start_low;
+        loop {
+            match pivot_of_row[low] {
+                Some(jp) => {
+                    dense.xor(&cols[jp]);
+                    // the shared low always cancels; next low is strictly
+                    // below it
+                    match (low > 0).then(|| dense.low_at_or_below(low - 1)).flatten() {
+                        Some(l) => low = l,
+                        None => {
+                            // column reduced to zero
+                            cols[j].clear();
+                            return;
+                        }
+                    }
+                }
+                None => {
+                    pivot_of_row[low] = Some(j);
+                    dense.drain_into(low, &mut cols[j]);
+                    return;
+                }
+            }
+        }
+    };
+
+    match algorithm {
+        Algorithm::Standard => {
+            for j in 0..n {
+                process(j, &mut cols, &mut pivot_of_row);
+            }
+        }
+        Algorithm::Twist => {
+            let max_dim = matrix.max_dim();
+            let mut cleared = vec![false; n];
+            for d in (1..=max_dim).rev() {
+                for j in 0..n {
+                    if matrix.dims[j] != d || cleared[j] {
+                        continue;
+                    }
+                    process(j, &mut cols, &mut pivot_of_row);
+                    if let Some(&low) = cols[j].last() {
+                        // The paired creator column reduces to zero — clear.
+                        cleared[low] = true;
+                        cols[low].clear();
+                    }
+                }
+            }
+        }
+    }
+
+    let mut pairs = Vec::new();
+    let mut is_negative = vec![false; n];
+    for (row, &col) in pivot_of_row.iter().enumerate() {
+        if let Some(j) = col {
+            pairs.push((row, j));
+            is_negative[j] = true;
+        }
+    }
+    let mut paired_birth = vec![false; n];
+    for &(b, _) in &pairs {
+        paired_birth[b] = true;
+    }
+    let essential = (0..n)
+        .filter(|&i| !paired_birth[i] && !is_negative[i])
+        .collect();
+    ReductionResult { pairs, essential }
+}
+
+/// Persistence diagrams PD_0..PD_max_k from a filtered complex.
+///
+/// The complex must contain simplices up to dimension `max_k + 1`,
+/// otherwise deaths of k-classes are missed and PD_k is wrong.
+pub fn diagrams_of_complex(c: &CliqueComplex, max_k: usize, algorithm: Algorithm) -> Vec<Diagram> {
+    let matrix = BoundaryMatrix::build(c);
+    let red = reduce(&matrix, algorithm);
+    let mut per_dim: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_k + 1];
+    for &(b, d) in &red.pairs {
+        let k = matrix.dims[b];
+        if k <= max_k {
+            per_dim[k].push((matrix.keys[b], matrix.keys[d]));
+        }
+    }
+    for &i in &red.essential {
+        let k = matrix.dims[i];
+        if k <= max_k {
+            per_dim[k].push((matrix.keys[i], f64::INFINITY));
+        }
+    }
+    per_dim
+        .into_iter()
+        .enumerate()
+        .map(|(k, pairs)| Diagram::new(k, pairs))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complex::{CliqueComplex, Filtration};
+    use crate::graph::gen;
+
+    fn diagrams(g: &crate::graph::Graph, f: &Filtration, max_k: usize, alg: Algorithm) -> Vec<Diagram> {
+        let c = CliqueComplex::build(g, f, max_k + 1);
+        diagrams_of_complex(&c, max_k, alg)
+    }
+
+    #[test]
+    fn circle_has_one_loop() {
+        let g = gen::cycle(8);
+        let f = Filtration::constant(8);
+        for alg in [Algorithm::Standard, Algorithm::Twist] {
+            let pds = diagrams(&g, &f, 1, alg);
+            assert_eq!(pds[0].betti(), 1, "one component");
+            assert_eq!(pds[1].betti(), 1, "one essential loop");
+        }
+    }
+
+    #[test]
+    fn complete_graph_is_contractible() {
+        let g = gen::complete(5);
+        let f = Filtration::constant(5);
+        let pds = diagrams(&g, &f, 2, Algorithm::Twist);
+        assert_eq!(pds[0].betti(), 1);
+        assert_eq!(pds[1].betti(), 0);
+        assert_eq!(pds[2].betti(), 0);
+    }
+
+    #[test]
+    fn octahedron_is_a_sphere() {
+        let g = gen::octahedron();
+        let f = Filtration::constant(6);
+        let pds = diagrams(&g, &f, 2, Algorithm::Twist);
+        assert_eq!(pds[0].betti(), 1);
+        assert_eq!(pds[1].betti(), 0);
+        assert_eq!(pds[2].betti(), 1, "β₂(S²) = 1");
+    }
+
+    #[test]
+    fn disjoint_union_is_additive() {
+        // two 4-cycles, disjoint
+        let mut edges = Vec::new();
+        for i in 0..4u32 {
+            edges.push((i, (i + 1) % 4));
+            edges.push((4 + i, 4 + (i + 1) % 4));
+        }
+        let g = crate::graph::Graph::from_edges(8, &edges);
+        let pds = diagrams(&g, &Filtration::constant(8), 1, Algorithm::Twist);
+        assert_eq!(pds[0].betti(), 2);
+        assert_eq!(pds[1].betti(), 2);
+    }
+
+    #[test]
+    fn two_triangles_sharing_edge_no_loop() {
+        // 0-1-2 and 1-2-3 triangles: the square with a diagonal; both
+        // 1-cycles are filled by 2-simplices.
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (1, 3), (2, 3)]);
+        let pds = diagrams(&g, &Filtration::constant(4), 1, Algorithm::Twist);
+        assert_eq!(pds[1].betti(), 0);
+    }
+
+    #[test]
+    fn sublevel_degree_on_paper_figure1_loop() {
+        // A 4-cycle with degree filtration: the loop is born when the last
+        // of its vertices arrives, never dies (no triangles).
+        let g = gen::cycle(4);
+        let f = Filtration::degree(&g);
+        let pds = diagrams(&g, &f, 1, Algorithm::Twist);
+        assert_eq!(pds[1].betti(), 1);
+        assert_eq!(pds[1].essential(), vec![2.0]); // all degrees are 2
+    }
+
+    #[test]
+    fn birth_death_values_on_tadpole() {
+        // triangle 0-1-2 plus pendant 3 on vertex 0, f = vertex id.
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (0, 3)]);
+        let f = Filtration::sublevel(vec![0.0, 1.0, 2.0, 3.0]);
+        let pds = diagrams(&g, &f, 1, Algorithm::Twist);
+        // components: 0 born at 0 (essential); 1 born at 1 dies at 1 (edge
+        // 0-1); 2 born at 2 dies at 2; 3 born at 3 dies at 3.
+        assert_eq!(pds[0].betti(), 1);
+        assert!(pds[0].points().iter().all(|&(_, d)| d.is_infinite()));
+        // loop 0-1-2 born at key 2 (edge 1-2 arrives), filled at 2 (triangle).
+        assert!(pds[1].is_trivial());
+    }
+
+    #[test]
+    fn standard_equals_twist_on_random_graphs() {
+        let mut rng = crate::util::Rng::new(42);
+        for _ in 0..15 {
+            let n = rng.range(4, 24);
+            let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
+            let vals: Vec<f64> = (0..n).map(|_| (rng.below(5)) as f64).collect();
+            let f = Filtration::sublevel(vals);
+            let a = diagrams(&g, &f, 2, Algorithm::Standard);
+            let b = diagrams(&g, &f, 2, Algorithm::Twist);
+            for k in 0..=2 {
+                assert!(a[k].same_as(&b[k], 1e-12), "PD_{k} mismatch: {} vs {}", a[k], b[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn essential_plus_pairs_counts_match_simplices() {
+        // Euler-type sanity: every simplex is either a birth (paired or
+        // essential) or a death, exactly once.
+        let g = gen::erdos_renyi(16, 0.4, 7);
+        let f = Filtration::degree(&g);
+        let c = CliqueComplex::build(&g, &f, 3);
+        let m = BoundaryMatrix::build(&c);
+        let r = reduce(&m, Algorithm::Twist);
+        assert_eq!(2 * r.pairs.len() + r.essential.len(), c.len());
+    }
+}

@@ -1,0 +1,231 @@
+//! Diagram vectorizations — the fixed-length features that downstream
+//! graph-ML pipelines (the paper's §1 motivation: classification, link
+//! prediction, anomaly detection) consume. Implements the standard
+//! summaries: persistence statistics, Betti curves, persistence
+//! landscapes, and persistence images.
+
+use super::diagram::Diagram;
+
+/// Scalar summary statistics of a diagram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiagramStats {
+    pub points: usize,
+    pub essential: usize,
+    pub total_persistence: f64,
+    pub max_persistence: f64,
+    pub mean_birth: f64,
+    pub mean_death: f64,
+}
+
+/// Compute summary statistics (finite points only for death-derived
+/// values; essential classes counted separately).
+pub fn stats(d: &Diagram) -> DiagramStats {
+    let pts = d.points();
+    let finite: Vec<(f64, f64)> = pts.iter().copied().filter(|p| p.1.is_finite()).collect();
+    let n = pts.len();
+    DiagramStats {
+        points: n,
+        essential: d.essential().len(),
+        total_persistence: d.total_persistence(),
+        max_persistence: finite
+            .iter()
+            .map(|&(b, dd)| dd - b)
+            .fold(0.0, f64::max),
+        mean_birth: if n == 0 {
+            0.0
+        } else {
+            pts.iter().map(|p| p.0).sum::<f64>() / n as f64
+        },
+        mean_death: if finite.is_empty() {
+            0.0
+        } else {
+            finite.iter().map(|p| p.1).sum::<f64>() / finite.len() as f64
+        },
+    }
+}
+
+/// Betti curve: β(t) sampled at `bins` points across `[lo, hi]` — the
+/// number of classes alive at each threshold. Essential classes count as
+/// alive from birth onward.
+pub fn betti_curve(d: &Diagram, lo: f64, hi: f64, bins: usize) -> Vec<f64> {
+    assert!(bins >= 1 && hi >= lo);
+    let mut curve = vec![0.0; bins];
+    for (i, slot) in curve.iter_mut().enumerate() {
+        let t = if bins == 1 {
+            lo
+        } else {
+            lo + (hi - lo) * i as f64 / (bins - 1) as f64
+        };
+        *slot = d
+            .all_pairs()
+            .iter()
+            .filter(|&&(b, dd)| b <= t && t < dd)
+            .count() as f64;
+    }
+    curve
+}
+
+/// Persistence landscape: the k-th landscape λ_k sampled at `bins` points
+/// over `[lo, hi]`. λ_k(t) = k-th largest value of the tent functions
+/// Λ_p(t) = max(0, min(t − b, d − t)).
+pub fn landscape(d: &Diagram, k: usize, lo: f64, hi: f64, bins: usize) -> Vec<f64> {
+    assert!(bins >= 1 && hi >= lo);
+    let finite: Vec<(f64, f64)> = d
+        .points()
+        .into_iter()
+        .filter(|p| p.1.is_finite())
+        .collect();
+    let mut out = vec![0.0; bins];
+    let mut tents: Vec<f64> = Vec::with_capacity(finite.len());
+    for (i, slot) in out.iter_mut().enumerate() {
+        let t = if bins == 1 {
+            lo
+        } else {
+            lo + (hi - lo) * i as f64 / (bins - 1) as f64
+        };
+        tents.clear();
+        tents.extend(
+            finite
+                .iter()
+                .map(|&(b, dd)| (t - b).min(dd - t).max(0.0))
+                .filter(|&v| v > 0.0),
+        );
+        tents.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        *slot = tents.get(k).copied().unwrap_or(0.0);
+    }
+    out
+}
+
+/// Persistence image: a `res × res` grid over (birth, persistence) space
+/// with Gaussian bumps of bandwidth `sigma`, weighted by persistence.
+pub fn persistence_image(d: &Diagram, res: usize, sigma: f64) -> Vec<f64> {
+    assert!(res >= 1 && sigma > 0.0);
+    let finite: Vec<(f64, f64)> = d
+        .points()
+        .into_iter()
+        .filter(|p| p.1.is_finite())
+        .map(|(b, dd)| (b, dd - b)) // (birth, persistence)
+        .collect();
+    let mut img = vec![0.0; res * res];
+    if finite.is_empty() {
+        return img;
+    }
+    let (mut blo, mut bhi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut plo, mut phi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(b, p) in &finite {
+        blo = blo.min(b);
+        bhi = bhi.max(b);
+        plo = plo.min(p);
+        phi = phi.max(p);
+    }
+    let bspan = (bhi - blo).max(1e-9);
+    let pspan = (phi - plo).max(1e-9);
+    for iy in 0..res {
+        for ix in 0..res {
+            let gb = blo + bspan * ix as f64 / (res - 1).max(1) as f64;
+            let gp = plo + pspan * iy as f64 / (res - 1).max(1) as f64;
+            let mut acc = 0.0;
+            for &(b, p) in &finite {
+                let d2 = (gb - b) * (gb - b) + (gp - p) * (gp - p);
+                // persistence-weighted Gaussian
+                acc += p * (-d2 / (2.0 * sigma * sigma)).exp();
+            }
+            img[iy * res + ix] = acc;
+        }
+    }
+    img
+}
+
+/// Concatenated feature vector for classification: stats + Betti curve.
+pub fn feature_vector(diagrams: &[Diagram], lo: f64, hi: f64, bins: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    for d in diagrams {
+        let s = stats(d);
+        out.extend_from_slice(&[
+            s.points as f64,
+            s.essential as f64,
+            s.total_persistence,
+            s.max_persistence,
+            s.mean_birth,
+            s.mean_death,
+        ]);
+        out.extend(betti_curve(d, lo, hi, bins));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Diagram {
+        Diagram::new(1, vec![(0.0, 2.0), (1.0, 4.0), (0.5, f64::INFINITY)])
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&demo());
+        assert_eq!(s.points, 3);
+        assert_eq!(s.essential, 1);
+        assert!((s.total_persistence - 5.0).abs() < 1e-12);
+        assert!((s.max_persistence - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn betti_curve_counts_alive() {
+        let c = betti_curve(&demo(), 0.0, 4.0, 5); // t = 0,1,2,3,4
+        // t=0: (0,2) alive → 1; t=1: (0,2),(1,4),(0.5,∞) → 3;
+        // t=2: (1,4),(0.5,∞) → 2; t=3: same → 2; t=4: (0.5,∞) → 1
+        assert_eq!(c, vec![1.0, 3.0, 2.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn landscape_tent_peak() {
+        let d = Diagram::new(1, vec![(0.0, 2.0)]);
+        let l0 = landscape(&d, 0, 0.0, 2.0, 5); // t = 0, .5, 1, 1.5, 2
+        assert_eq!(l0, vec![0.0, 0.5, 1.0, 0.5, 0.0]);
+        let l1 = landscape(&d, 1, 0.0, 2.0, 5);
+        assert!(l1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn landscape_order_statistic() {
+        let d = Diagram::new(1, vec![(0.0, 2.0), (0.0, 2.0)]);
+        let l1 = landscape(&d, 1, 0.0, 2.0, 3);
+        assert_eq!(l1[1], 1.0, "second copy fills λ_1");
+    }
+
+    #[test]
+    fn image_mass_positive_and_empty_is_zero() {
+        let img = persistence_image(&demo(), 8, 0.5);
+        assert_eq!(img.len(), 64);
+        assert!(img.iter().sum::<f64>() > 0.0);
+        let empty = persistence_image(&Diagram::new(0, vec![]), 8, 0.5);
+        assert!(empty.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn feature_vector_shape() {
+        let ds = vec![demo(), Diagram::new(0, vec![])];
+        let v = feature_vector(&ds, 0.0, 4.0, 10);
+        assert_eq!(v.len(), 2 * (6 + 10));
+    }
+
+    #[test]
+    fn vectorizations_invariant_under_reduction() {
+        // End-to-end: features from reduced and unreduced graphs agree —
+        // the property that makes the paper's reductions safe for ML.
+        use crate::complex::Filtration;
+        use crate::graph::gen;
+        let g = gen::powerlaw_cluster(60, 3, 0.6, 5);
+        let f = Filtration::degree_superlevel(&g);
+        let base = crate::homology::persistence_diagrams(&g, &f, 1);
+        let r = crate::reduce::combined(&g, &f, 1);
+        let red = crate::homology::persistence_diagrams(&r.graph, &r.filtration, 1);
+        let fa = feature_vector(&base[1..], -20.0, 0.0, 16);
+        let fb = feature_vector(&red[1..], -20.0, 0.0, 16);
+        for (a, b) in fa.iter().zip(&fb) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Batagelj–Zaveršnik O(n + m) core decomposition ([5] in the paper):
+//! bucket vertices by current degree, peel in ascending degree order,
+//! decrementing neighbours in place via the position/bucket bookkeeping.
+
+use crate::graph::Graph;
+
+/// Coreness (core number) of every vertex in O(n + m).
+pub fn coreness(g: &Graph) -> Vec<usize> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut deg: Vec<usize> = g.degrees();
+    let max_deg = deg.iter().copied().max().unwrap_or(0);
+
+    // bin[d] = start index of the degree-d block in `vert`.
+    let mut bin = vec![0usize; max_deg + 2];
+    for &d in &deg {
+        bin[d + 1] += 1;
+    }
+    for d in 1..bin.len() {
+        bin[d] += bin[d - 1];
+    }
+    // vert: vertices sorted by degree; pos[v] = index of v in vert.
+    let mut vert = vec![0u32; n];
+    let mut pos = vec![0usize; n];
+    {
+        let mut next = bin.clone();
+        for v in 0..n {
+            let d = deg[v];
+            vert[next[d]] = v as u32;
+            pos[v] = next[d];
+            next[d] += 1;
+        }
+    }
+
+    let mut core = vec![0usize; n];
+    for i in 0..n {
+        let v = vert[i] as usize;
+        core[v] = deg[v];
+        for idx in 0..g.degree(v as u32) {
+            let u = g.neighbors(v as u32)[idx] as usize;
+            if deg[u] > deg[v] {
+                // Swap u with the first vertex of its degree block, then
+                // shrink the block boundary — an O(1) degree decrement.
+                let du = deg[u];
+                let pu = pos[u];
+                let pw = bin[du];
+                let w = vert[pw] as usize;
+                if u != w {
+                    vert[pu] = w as u32;
+                    vert[pw] = u as u32;
+                    pos[u] = pw;
+                    pos[w] = pu;
+                }
+                bin[du] += 1;
+                deg[u] -= 1;
+            }
+        }
+    }
+    core
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive::coreness_naive;
+    use super::*;
+    use crate::graph::{gen, Graph};
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_naive_on_small_families() {
+        for g in [
+            gen::cycle(9),
+            gen::complete(7),
+            gen::star(10),
+            gen::path(6),
+            gen::grid(4, 5),
+            gen::octahedron(),
+            Graph::empty(5),
+        ] {
+            assert_eq!(coreness(&g), coreness_naive(&g));
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_random_graphs() {
+        let mut rng = Rng::new(99);
+        for trial in 0..40 {
+            let n = rng.range(2, 60);
+            let p = rng.f64() * 0.25;
+            let g = gen::erdos_renyi(n, p, rng.next_u64());
+            assert_eq!(
+                coreness(&g),
+                coreness_naive(&g),
+                "trial {trial}: n={n} p={p:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_ba() {
+        for seed in 0..5 {
+            let g = gen::barabasi_albert(120, 3, seed);
+            assert_eq!(coreness(&g), coreness_naive(&g));
+        }
+    }
+
+    #[test]
+    fn coreness_bounded_by_degree() {
+        let g = gen::powerlaw_cluster(200, 3, 0.5, 8);
+        let core = coreness(&g);
+        for v in 0..g.n() {
+            assert!(core[v] <= g.degree(v as u32));
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(coreness(&Graph::empty(0)).is_empty());
+        assert_eq!(coreness(&Graph::empty(3)), vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,89 @@
+//! k-core decomposition (S3) — the substrate of the CoralTDA theorem.
+//!
+//! Two implementations: a naive iterative peel (`naive`, the paper's
+//! Algorithm 1 — kept as the test oracle) and the Batagelj–Zaveršnik
+//! O(n + m) bucket algorithm (`bz`, the production path). Both agree on
+//! every graph (property-tested).
+
+pub mod bz;
+pub mod naive;
+
+pub use bz::coreness;
+
+use crate::graph::Graph;
+
+/// The k-core `G^k`: the maximal subgraph with all degrees ≥ k.
+///
+/// Returns the core subgraph and the `new id -> old id` mapping needed to
+/// restrict a filtering function to the core (paper Remark 1: f keeps its
+/// *original* values on surviving vertices).
+pub fn kcore_subgraph(g: &Graph, k: usize) -> (Graph, Vec<u32>) {
+    let core = coreness(g);
+    let keep: Vec<bool> = core.iter().map(|&c| c >= k).collect();
+    g.induced(&keep)
+}
+
+/// Degeneracy: max k with non-empty k-core.
+pub fn degeneracy(g: &Graph) -> usize {
+    coreness(g).into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn kcore_of_cycle() {
+        let g = gen::cycle(8);
+        let (c2, ids) = kcore_subgraph(&g, 2);
+        assert_eq!(c2.n(), 8);
+        assert_eq!(ids.len(), 8);
+        let (c3, _) = kcore_subgraph(&g, 3);
+        assert_eq!(c3.n(), 0, "cycles have empty 3-core (Remark 11)");
+    }
+
+    #[test]
+    fn kcore_of_complete() {
+        let g = gen::complete(6);
+        assert_eq!(degeneracy(&g), 5);
+        let (c5, _) = kcore_subgraph(&g, 5);
+        assert_eq!(c5.n(), 6);
+        let (c6, _) = kcore_subgraph(&g, 6);
+        assert_eq!(c6.n(), 0);
+    }
+
+    #[test]
+    fn paper_figure1_shape() {
+        // A graph with an isolated vertex: it sits in the 0-core only.
+        let mut edges = vec![(1u32, 2u32), (2, 3), (1, 3)];
+        edges.push((3, 4));
+        let g = Graph::from_edges(5, &edges); // vertex 0 isolated
+        let core = coreness(&g);
+        assert_eq!(core[0], 0);
+        assert_eq!(core[4], 1);
+        assert_eq!(core[1], 2);
+    }
+
+    #[test]
+    fn cores_are_nested() {
+        let g = gen::barabasi_albert(150, 3, 11);
+        let mut prev = g.n() + 1;
+        for k in 0..=degeneracy(&g) + 1 {
+            let (ck, _) = kcore_subgraph(&g, k);
+            assert!(ck.n() <= prev, "G^{k} must be ⊆ G^{}", k.saturating_sub(1));
+            prev = ck.n();
+        }
+    }
+
+    #[test]
+    fn core_subgraph_min_degree() {
+        let g = gen::erdos_renyi(120, 0.06, 13);
+        for k in 1..=4 {
+            let (ck, _) = kcore_subgraph(&g, k);
+            for v in 0..ck.n() as u32 {
+                assert!(ck.degree(v) >= k, "vertex {v} has degree < {k} in {k}-core");
+            }
+        }
+    }
+}

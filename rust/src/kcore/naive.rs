@@ -1,0 +1,76 @@
+//! Naive k-core peel — the paper's Algorithm 1, verbatim: repeatedly
+//! delete vertices of degree < k until none remain. O(n·m) worst case;
+//! retained as the oracle for the Batagelj–Zaveršnik implementation.
+
+use crate::graph::Graph;
+
+/// Vertices surviving in the k-core, by iterative deletion.
+pub fn kcore_members_naive(g: &Graph, k: usize) -> Vec<bool> {
+    let n = g.n();
+    let mut alive = vec![true; n];
+    let mut deg: Vec<usize> = g.degrees();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for v in 0..n {
+            if alive[v] && deg[v] < k {
+                alive[v] = false;
+                changed = true;
+                for &w in g.neighbors(v as u32) {
+                    if alive[w as usize] {
+                        deg[w as usize] -= 1;
+                    }
+                }
+            }
+        }
+    }
+    alive
+}
+
+/// Coreness of every vertex by running the peel for increasing k.
+/// O(n·m·degeneracy) — test oracle only.
+pub fn coreness_naive(g: &Graph) -> Vec<usize> {
+    let n = g.n();
+    let mut core = vec![0usize; n];
+    let mut k = 1;
+    loop {
+        let alive = kcore_members_naive(g, k);
+        if !alive.iter().any(|&a| a) {
+            break;
+        }
+        for v in 0..n {
+            if alive[v] {
+                core[v] = k;
+            }
+        }
+        k += 1;
+    }
+    core
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn star_peels_to_nothing_at_2() {
+        let g = gen::star(6);
+        let alive = kcore_members_naive(&g, 2);
+        assert!(alive.iter().all(|&a| !a));
+    }
+
+    #[test]
+    fn triangle_with_tail() {
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let alive = kcore_members_naive(&g, 2);
+        assert_eq!(alive, vec![true, true, true, false]);
+        assert_eq!(coreness_naive(&g), vec![2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn zero_core_is_everything() {
+        let g = gen::path(5);
+        assert!(kcore_members_naive(&g, 0).iter().all(|&a| a));
+    }
+}

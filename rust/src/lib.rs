@@ -1,0 +1,65 @@
+//! # coral-prunit
+//!
+//! A production-grade reproduction of **"Reduction Algorithms for
+//! Persistence Diagrams of Networks: CoralTDA and PrunIT"** (Akcora,
+//! Kantarcioglu, Gel, Coskunuzer — NeurIPS 2022) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper proves two *exact* graph reductions for persistent homology
+//! over clique-complex filtrations:
+//!
+//! * **CoralTDA** (Theorem 2): `PD_k(G, f) = PD_k(G^{k+1}, f)` — the
+//!   (k+1)-core suffices for the k-th persistence diagram.
+//! * **PrunIT** (Theorem 7): removing a vertex `u` dominated by `v`
+//!   (`N[u] ⊆ N[v]`) with `f(u) ≥ f(v)` preserves *every* `PD_k`.
+//!
+//! This crate contains the complete system: the graph substrate and
+//! generators, k-core decomposition, domination pruning (sparse CPU path
+//! and a dense XLA path executing the AOT-compiled Pallas kernel),
+//! clique-complex filtrations, a Z/2 persistent-homology engine (the
+//! expensive computation the paper reduces), the combined reduction
+//! pipeline, a batch coordinator, and one bench driver per paper
+//! table/figure. See `DESIGN.md` for the experiment index.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use coral_prunit::prelude::*;
+//!
+//! let g = gen::barabasi_albert(200, 3, 42);
+//! let f = Filtration::degree(&g);
+//! // Reduce, then compute PD_1 — provably equal to the unreduced diagram.
+//! let reduced = reduce::combined(&g, &f, 1);
+//! let pd = homology::persistence_diagrams(&reduced.graph, &reduced.filtration, 1);
+//! println!("PD_1 has {} off-diagonal points", pd[1].points().len());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod complex;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod error;
+pub mod graph;
+pub mod homology;
+pub mod kcore;
+pub mod prune;
+pub mod reduce;
+pub mod runtime;
+pub mod testutil;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for downstream users and examples.
+pub mod prelude {
+    pub use crate::complex::filtration::{Direction, Filtration};
+    pub use crate::graph::gen;
+    pub use crate::graph::Graph;
+    pub use crate::homology::{self, Diagram};
+    pub use crate::kcore;
+    pub use crate::prune;
+    pub use crate::reduce;
+    pub use crate::{Error, Result};
+}

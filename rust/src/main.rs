@@ -1,0 +1,13 @@
+//! `repro` — the leader binary: CLI over the coral-prunit library.
+//! See `repro help` and DESIGN.md §5 for the experiment index.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match coral_prunit::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Domination queries (paper Definition 4 + Remark 9).
+//!
+//! `u` is dominated by `v` iff `N[u] ⊆ N[v]` (closed neighbourhoods) —
+//! which forces `u ~ v`. The sparse path walks sorted adjacency lists;
+//! the dense reference mirrors the XLA/Pallas kernel's matrix semantics
+//! and is the cross-check for `runtime::dense_prune`.
+
+use crate::complex::Filtration;
+use crate::graph::Graph;
+
+/// Does `v` dominate `u` in `g`? (Checked on immutable CSR.)
+pub fn dominates(g: &Graph, u: u32, v: u32) -> bool {
+    if u == v || !g.has_edge(u, v) {
+        return false;
+    }
+    // N[u] ⊆ N[v] ⟺ every x ∈ N(u), x == v or x ∈ N(v) (u ∈ N(v) holds by
+    // adjacency).
+    let nv = g.neighbors(v);
+    let mut j = 0usize;
+    for &x in g.neighbors(u) {
+        if x == v {
+            continue;
+        }
+        while j < nv.len() && nv[j] < x {
+            j += 1;
+        }
+        if j == nv.len() || nv[j] != x {
+            return false;
+        }
+    }
+    true
+}
+
+/// Find an admissible dominator of `u` under filtration `f` (Thm 7 /
+/// Rmk 8 condition), or None. Deterministic: smallest qualifying v.
+pub fn find_dominator(g: &Graph, f: &Filtration, u: u32) -> Option<u32> {
+    g.neighbors(u)
+        .iter()
+        .copied()
+        .find(|&v| g.degree(v) >= g.degree(u) && f.admissible_removal(u, v) && dominates(g, u, v))
+}
+
+/// Dense dominated-pair mask with filtration admissibility — the exact
+/// semantics of the AOT Pallas kernel (`python/compile/kernels/ref.py`),
+/// used to validate the XLA execution path bit-for-bit.
+pub fn dominated_pairs_dense(g: &Graph, f: &Filtration) -> Vec<Vec<bool>> {
+    let n = g.n();
+    let mut mask = vec![vec![false; n]; n];
+    for u in 0..n as u32 {
+        for &v in g.neighbors(u) {
+            if f.admissible_removal(u, v) && dominates(g, u, v) {
+                mask[u as usize][v as usize] = true;
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn figure3_graph() -> Graph {
+        // Paper Fig 3 (0-indexed): vertices 0,1 and 3 all adjacent to 2;
+        // plus edge 0-1 so N[0] = {0,1,2} ⊆ N[2].
+        Graph::from_edges(4, &[(0, 2), (1, 2), (0, 1), (2, 3)])
+    }
+
+    #[test]
+    fn figure3_dominations() {
+        let g = figure3_graph();
+        assert!(dominates(&g, 0, 2), "2 dominates 0");
+        assert!(dominates(&g, 1, 2), "2 dominates 1");
+        assert!(dominates(&g, 3, 2), "2 dominates 3");
+        assert!(!dominates(&g, 2, 0));
+        // 0 and 1 are twins: they dominate each other.
+        assert!(dominates(&g, 0, 1) && dominates(&g, 1, 0));
+    }
+
+    #[test]
+    fn domination_requires_adjacency() {
+        let g = gen::path(3); // 0-1-2
+        assert!(dominates(&g, 0, 1));
+        assert!(!dominates(&g, 0, 2), "non-adjacent cannot dominate");
+    }
+
+    #[test]
+    fn self_domination_excluded() {
+        let g = gen::complete(3);
+        assert!(!dominates(&g, 1, 1));
+    }
+
+    #[test]
+    fn complete_graph_all_mutually_dominate() {
+        let g = gen::complete(4);
+        for u in 0..4u32 {
+            for v in 0..4u32 {
+                assert_eq!(dominates(&g, u, v), u != v);
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_has_no_dominated_vertices() {
+        let g = gen::cycle(5);
+        let f = Filtration::degree(&g);
+        for u in 0..5u32 {
+            assert_eq!(find_dominator(&g, &f, u), None);
+        }
+    }
+
+    #[test]
+    fn filtration_vetoes_dominator() {
+        let g = gen::path(3); // 1 dominates 0 and 2
+        // sublevel needs f(u) >= f(v)
+        let f = Filtration::sublevel(vec![0.0, 1.0, 2.0]);
+        assert_eq!(find_dominator(&g, &f, 0), None, "f(0) < f(1)");
+        assert_eq!(find_dominator(&g, &f, 2), Some(1));
+    }
+
+    #[test]
+    fn degree_superlevel_always_admits(){
+        let g = figure3_graph();
+        let f = Filtration::degree_superlevel(&g);
+        assert_eq!(find_dominator(&g, &f, 3), Some(2));
+        assert!(find_dominator(&g, &f, 0).is_some());
+    }
+
+    #[test]
+    fn dense_mask_matches_pointwise() {
+        let g = gen::erdos_renyi(30, 0.25, 5);
+        let f = Filtration::degree(&g);
+        let mask = dominated_pairs_dense(&g, &f);
+        for u in 0..30u32 {
+            for v in 0..30u32 {
+                let want = u != v
+                    && g.has_edge(u, v)
+                    && f.admissible_removal(u, v)
+                    && dominates(&g, u, v);
+                assert_eq!(mask[u as usize][v as usize], want);
+            }
+        }
+    }
+}

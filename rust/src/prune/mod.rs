@@ -1,0 +1,9 @@
+//! PrunIT domination pruning (S4) and the Strong Collapse baseline (S5).
+
+pub mod domination;
+pub mod prunit;
+pub mod strong_collapse;
+
+pub use domination::{dominated_pairs_dense, dominates, find_dominator};
+pub use prunit::{prunit, PruneResult};
+pub use strong_collapse::{strong_collapse_core, StrongCollapseStats};

@@ -1,0 +1,265 @@
+//! PrunIT (paper Algorithm 2 + Theorem 7): iteratively remove dominated
+//! vertices whose filtration value admits removal, to a fixed point.
+//!
+//! Soundness of sequential removal: domination is preserved under removal
+//! of *other* vertices (`N[u]\{w} ⊆ N[v]\{w}`), and the admissibility
+//! condition only references `f`, which never changes — so each removal
+//! is individually justified by Theorem 7 in the current graph, and the
+//! final graph has all the original persistence diagrams.
+//!
+//! The worklist keeps the pass near-linear in practice: removing `u` can
+//! only create new dominations for pairs `(x, y)` whose violation witness
+//! was `u`, i.e. `x ∈ N(u)` — only former neighbours of `u` are re-queued.
+
+use crate::complex::Filtration;
+use crate::graph::Graph;
+
+/// Result of a pruning pass.
+#[derive(Clone, Debug)]
+pub struct PruneResult {
+    /// The pruned graph (vertices compacted).
+    pub graph: Graph,
+    /// `new id -> old id` of surviving vertices (ascending).
+    pub kept_old_ids: Vec<u32>,
+    /// The filtration restricted to survivors (original values; Rmk 1).
+    pub filtration: Filtration,
+    /// Number of vertices removed.
+    pub removed: usize,
+    /// Worklist pops — a proxy for work done (perf metric).
+    pub checks: usize,
+}
+
+/// Mutable adjacency view used during pruning.
+struct View {
+    adj: Vec<Vec<u32>>,
+    alive: Vec<bool>,
+}
+
+impl View {
+    fn new(g: &Graph) -> View {
+        View {
+            adj: (0..g.n() as u32).map(|v| g.neighbors(v).to_vec()).collect(),
+            alive: vec![true; g.n()],
+        }
+    }
+
+    /// Does alive neighbour `v` dominate alive `u` in the current graph?
+    fn dominates(&self, u: u32, v: u32) -> bool {
+        let nu = &self.adj[u as usize];
+        let nv = &self.adj[v as usize];
+        if nu.len() > nv.len() {
+            return false;
+        }
+        let mut j = 0usize;
+        for &x in nu {
+            if x == v {
+                continue;
+            }
+            while j < nv.len() && nv[j] < x {
+                j += 1;
+            }
+            if j == nv.len() || nv[j] != x {
+                return false;
+            }
+            j += 1;
+        }
+        true
+    }
+
+    /// Remove vertex u, updating neighbour lists exactly. The removed
+    /// vertex's list is left in place so callers can re-queue its former
+    /// neighbours.
+    fn remove(&mut self, u: u32) {
+        self.alive[u as usize] = false;
+        let nbrs = std::mem::take(&mut self.adj[u as usize]);
+        for &w in &nbrs {
+            let list = &mut self.adj[w as usize];
+            if let Ok(pos) = list.binary_search(&u) {
+                list.remove(pos);
+            }
+        }
+        self.adj[u as usize] = nbrs;
+    }
+}
+
+/// Core worklist collapse: remove vertices `u` that have a current-graph
+/// dominator `v` with `admissible(u, v)`, until a fixed point.
+/// Returns (alive mask, removed count, worklist pops).
+pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(
+    g: &Graph,
+    admissible: F,
+) -> (Vec<bool>, usize, usize) {
+    let n = g.n();
+    let mut view = View::new(g);
+    let mut in_queue = vec![true; n];
+    let mut queue: std::collections::VecDeque<u32> = (0..n as u32).collect();
+    let mut removed = 0usize;
+    let mut checks = 0usize;
+
+    while let Some(u) = queue.pop_front() {
+        in_queue[u as usize] = false;
+        if !view.alive[u as usize] {
+            continue;
+        }
+        checks += 1;
+        let dominator = view.adj[u as usize]
+            .iter()
+            .copied()
+            .find(|&v| admissible(u, v) && view.dominates(u, v));
+        if dominator.is_some() {
+            view.remove(u);
+            removed += 1;
+            for &w in &view.adj[u as usize] {
+                if view.alive[w as usize] && !in_queue[w as usize] {
+                    in_queue[w as usize] = true;
+                    queue.push_back(w);
+                }
+            }
+        }
+    }
+    (view.alive, removed, checks)
+}
+
+/// Run PrunIT to a fixed point. Deterministic: the worklist is processed
+/// in FIFO order seeded with ascending vertex ids.
+pub fn prunit(g: &Graph, f: &Filtration) -> PruneResult {
+    f.check(g).expect("filtration must match graph");
+    let (alive, removed, checks) = collapse_with(g, |u, v| f.admissible_removal(u, v));
+    let (graph, kept_old_ids) = g.induced(&alive);
+    let filtration = f.restrict(&kept_old_ids);
+    PruneResult {
+        graph,
+        kept_old_ids,
+        filtration,
+        removed,
+        checks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::homology::persistence_diagrams;
+
+    #[test]
+    fn star_prunes_to_near_nothing() {
+        // superlevel + degree: all leaves admissible (Rmk 8).
+        let g = gen::star(8);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        assert!(r.graph.n() <= 2, "star should collapse, got n={}", r.graph.n());
+        assert_eq!(r.removed, 8 - r.graph.n());
+    }
+
+    #[test]
+    fn complete_graph_collapses_to_point() {
+        let g = gen::complete(6);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        assert_eq!(r.graph.n(), 1);
+    }
+
+    #[test]
+    fn cycle_is_irreducible() {
+        let g = gen::cycle(6);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        assert_eq!(r.graph.n(), 6);
+        assert_eq!(r.removed, 0);
+    }
+
+    #[test]
+    fn sublevel_condition_blocks_removals() {
+        // path 0-1-2 with f = [0,1,2] sublevel: vertex 0 is dominated by 1
+        // but f(0) < f(1) vetoes it. Vertex 2 is removable (f(2) ≥ f(1));
+        // afterwards 1 becomes dominated by 0 with f(1) ≥ f(0) → removed.
+        let g = gen::path(3);
+        let f = Filtration::sublevel(vec![0.0, 1.0, 2.0]);
+        let r = prunit(&g, &f);
+        assert_eq!(r.removed, 2);
+        assert_eq!(r.kept_old_ids, vec![0]);
+    }
+
+    #[test]
+    fn sublevel_veto_is_strict_when_no_cascade() {
+        // star with hub f below the leaves: leaves removable; plus a
+        // configuration where the veto genuinely blocks: two leaves with
+        // f strictly below the hub survive.
+        let g = gen::star(4); // hub 0, leaves 1..3
+        let f = Filtration::sublevel(vec![5.0, 1.0, 1.0, 9.0]);
+        let r = prunit(&g, &f);
+        // leaf 3 (f=9 ≥ 5) is removable; leaves 1,2 (f=1 < 5) are vetoed;
+        // hub dominated by nobody (leaves have smaller nbhds).
+        assert!(!r.kept_old_ids.contains(&3));
+        assert!(r.kept_old_ids.contains(&1) && r.kept_old_ids.contains(&2));
+    }
+
+    #[test]
+    fn restricted_filtration_keeps_original_values() {
+        let g = gen::star(5);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        for (new, &old) in r.kept_old_ids.iter().enumerate() {
+            assert_eq!(r.filtration.value(new as u32), f.value(old));
+        }
+    }
+
+    #[test]
+    fn theorem7_pd_preserved_small_random() {
+        // The headline property (exhaustive version lives in rust/tests/).
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..10 {
+            let n = rng.range(4, 18);
+            let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let r = prunit(&g, &f);
+            let before = persistence_diagrams(&g, &f, 1);
+            let after = persistence_diagrams(&r.graph, &r.filtration, 1);
+            for k in 0..=1 {
+                assert!(
+                    before[k].same_as(&after[k], 1e-9),
+                    "PD_{k}: {} vs {} (n={n})",
+                    before[k],
+                    after[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_point_no_admissible_dominated_left() {
+        let g = gen::barabasi_albert(80, 2, 9);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        for u in 0..r.graph.n() as u32 {
+            assert!(
+                super::super::domination::find_dominator(&r.graph, &r.filtration, u).is_none(),
+                "vertex {u} still prunable"
+            );
+        }
+    }
+
+    #[test]
+    fn twins_collapse_preserves_homology() {
+        // K4 minus one edge: 2 and 3 are twins adjacent to {0, 1}.
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)]);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        assert!(r.graph.n() >= 1);
+        let before = persistence_diagrams(&g, &f, 1);
+        let after = persistence_diagrams(&r.graph, &r.filtration, 1);
+        assert!(before[0].same_as(&after[0], 1e-9));
+        assert!(before[1].same_as(&after[1], 1e-9));
+    }
+
+    #[test]
+    fn checks_bounded_reasonably() {
+        let g = gen::barabasi_albert(300, 2, 3);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        // worklist discipline: far fewer pops than n * rounds of full sweeps
+        assert!(r.checks < 20 * g.n(), "checks={} n={}", r.checks, g.n());
+        assert!(r.removed > 0, "BA graphs have dominated leaves");
+    }
+}

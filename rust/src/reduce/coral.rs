@@ -1,0 +1,114 @@
+//! CoralTDA (Theorem 2): `PD_j(G, f) = PD_j(G^{k+1}, f)` for all `j ≥ k`.
+//!
+//! To compute the k-th persistence diagram it suffices to take the
+//! (k+1)-core and *restrict* (never recompute — Remark 1) the filtering
+//! function to the surviving vertices.
+
+use crate::complex::Filtration;
+use crate::graph::Graph;
+use crate::kcore::kcore_subgraph;
+
+/// Result of a CoralTDA reduction targeting `PD_k`.
+#[derive(Clone, Debug)]
+pub struct CoralResult {
+    /// The (k+1)-core subgraph.
+    pub graph: Graph,
+    /// `new id -> old id` of surviving vertices.
+    pub kept_old_ids: Vec<u32>,
+    /// Filtration restricted to the core (original values).
+    pub filtration: Filtration,
+    /// The homology dimension this reduction is exact for (j ≥ k).
+    pub k: usize,
+}
+
+/// Reduce `(G, f)` to its (k+1)-core for computing `PD_j`, `j ≥ k`.
+pub fn coral_reduce(g: &Graph, f: &Filtration, k: usize) -> CoralResult {
+    f.check(g).expect("filtration must match graph");
+    let (core, ids) = kcore_subgraph(g, k + 1);
+    let filtration = f.restrict(&ids);
+    CoralResult {
+        graph: core,
+        kept_old_ids: ids,
+        filtration,
+        k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::homology::persistence_diagrams;
+
+    #[test]
+    fn coral_for_pd1_uses_2core() {
+        // BA with m=1 is a tree: its 2-core is empty → PD_1 trivial.
+        let g = gen::barabasi_albert(40, 1, 2);
+        let f = Filtration::degree(&g);
+        let r = coral_reduce(&g, &f, 1);
+        assert_eq!(r.graph.n(), 0, "trees have empty 2-core");
+        let pd = persistence_diagrams(&g, &f, 1);
+        assert!(pd[1].is_trivial(), "tree PD_1 must be trivial, matching the empty core");
+    }
+
+    #[test]
+    fn theorem2_on_cycle_with_tail() {
+        // cycle 0..5 plus tail 6-7: 2-core is the cycle alone.
+        let mut edges: Vec<(u32, u32)> = (0..6).map(|i| (i, (i + 1) % 6)).collect();
+        edges.push((0, 6));
+        edges.push((6, 7));
+        let g = Graph::from_edges(8, &edges);
+        let f = Filtration::degree(&g);
+        let r = coral_reduce(&g, &f, 1);
+        assert_eq!(r.graph.n(), 6);
+        let before = persistence_diagrams(&g, &f, 1);
+        let after = persistence_diagrams(&r.graph, &r.filtration, 1);
+        assert!(before[1].same_as(&after[1], 1e-9), "{} vs {}", before[1], after[1]);
+    }
+
+    #[test]
+    fn restriction_keeps_original_degree_values() {
+        // The tail vertex 6 contributes to degree(0)=3 in G; after coral
+        // reduction vertex 0 keeps f=3 even though its core degree is 2.
+        let mut edges: Vec<(u32, u32)> = (0..6).map(|i| (i, (i + 1) % 6)).collect();
+        edges.push((0, 6));
+        let g = Graph::from_edges(7, &edges);
+        let f = Filtration::degree(&g);
+        let r = coral_reduce(&g, &f, 1);
+        let new0 = r.kept_old_ids.iter().position(|&o| o == 0).unwrap();
+        assert_eq!(r.filtration.value(new0 as u32), 3.0, "Remark 1: keep original f");
+        assert_eq!(r.graph.degree(new0 as u32), 2);
+    }
+
+    #[test]
+    fn theorem2_random_graphs_pd_equal_above_k() {
+        let mut rng = crate::util::Rng::new(31);
+        for _ in 0..8 {
+            let n = rng.range(6, 20);
+            let g = gen::erdos_renyi(n, 0.4, rng.next_u64());
+            let f = Filtration::degree(&g);
+            for k in 1..=2usize {
+                let r = coral_reduce(&g, &f, k);
+                let before = persistence_diagrams(&g, &f, 2);
+                let after = persistence_diagrams(&r.graph, &r.filtration, 2);
+                for j in k..=2 {
+                    assert!(
+                        before[j].same_as(&after[j], 1e-9),
+                        "PD_{j} via {}-core: {} vs {}",
+                        k + 1,
+                        before[j],
+                        after[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph_reduces_to_empty() {
+        let g = Graph::empty(0);
+        let f = Filtration::constant(0);
+        let r = coral_reduce(&g, &f, 3);
+        assert_eq!(r.graph.n(), 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! The paper's reduction pipeline (S9): CoralTDA (Thm 2), PrunIT (Thm 7),
+//! and their composition `PD_k(G) = PD_k((G')^{k+1})` (§5 end).
+
+pub mod coral;
+pub mod pipeline;
+
+pub use coral::{coral_reduce, CoralResult};
+pub use pipeline::{combined, combined_with, pd_with_reduction, Reduction, ReductionReport};

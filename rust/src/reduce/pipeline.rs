@@ -1,0 +1,183 @@
+//! The combined reduction pipeline (§5 end):
+//! `PD_k(G) = PD_k(G') = PD_k((G')^{k+1})` — PrunIT first (valid in every
+//! dimension), then the (k+1)-core of the pruned graph.
+
+use crate::complex::Filtration;
+use crate::graph::Graph;
+use crate::homology::{persistence_diagrams, Diagram};
+use crate::prune::prunit;
+use crate::util::Timer;
+
+use super::coral::coral_reduce;
+
+/// Which reduction(s) to apply before PH.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduction {
+    /// No reduction — the baseline every paper experiment compares against.
+    None,
+    /// CoralTDA only (Thm 2; exact for PD_j, j ≥ k).
+    Coral,
+    /// PrunIT only (Thm 7; exact in every dimension).
+    Prunit,
+    /// PrunIT then CoralTDA (§5 end; exact for PD_j, j ≥ k).
+    Combined,
+}
+
+impl Reduction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Reduction::None => "none",
+            Reduction::Coral => "coral",
+            Reduction::Prunit => "prunit",
+            Reduction::Combined => "prunit+coral",
+        }
+    }
+}
+
+/// Output of a reduction: reduced instance plus bookkeeping for the
+/// paper's reduction-percentage metrics.
+#[derive(Clone, Debug)]
+pub struct ReductionReport {
+    pub graph: Graph,
+    pub filtration: Filtration,
+    /// composition of old-id mappings: `new id -> original id`
+    pub kept_old_ids: Vec<u32>,
+    pub vertices_before: usize,
+    pub edges_before: usize,
+    pub reduce_secs: f64,
+    pub which: Reduction,
+}
+
+impl ReductionReport {
+    /// `100·(|V| − |V'|)/|V|` (paper §6).
+    pub fn vertex_reduction_pct(&self) -> f64 {
+        crate::util::table::reduction_pct(self.vertices_before, self.graph.n())
+    }
+
+    /// `100·(|E| − |E'|)/|E|`.
+    pub fn edge_reduction_pct(&self) -> f64 {
+        crate::util::table::reduction_pct(self.edges_before, self.graph.m())
+    }
+}
+
+/// Apply a reduction targeting `PD_k`.
+pub fn combined_with(g: &Graph, f: &Filtration, k: usize, which: Reduction) -> ReductionReport {
+    let vertices_before = g.n();
+    let edges_before = g.m();
+    let ((graph, filtration, kept), secs) = Timer::time(|| match which {
+        Reduction::None => (g.clone(), f.clone(), (0..g.n() as u32).collect::<Vec<_>>()),
+        Reduction::Coral => {
+            let r = coral_reduce(g, f, k);
+            (r.graph, r.filtration, r.kept_old_ids)
+        }
+        Reduction::Prunit => {
+            let r = prunit(g, f);
+            (r.graph, r.filtration, r.kept_old_ids)
+        }
+        Reduction::Combined => {
+            let p = prunit(g, f);
+            let c = coral_reduce(&p.graph, &p.filtration, k);
+            // compose mappings
+            let ids = c
+                .kept_old_ids
+                .iter()
+                .map(|&mid| p.kept_old_ids[mid as usize])
+                .collect();
+            (c.graph, c.filtration, ids)
+        }
+    });
+    ReductionReport {
+        graph,
+        filtration,
+        kept_old_ids: kept,
+        vertices_before,
+        edges_before,
+        reduce_secs: secs,
+        which,
+    }
+}
+
+/// The default full pipeline (PrunIT + CoralTDA) targeting `PD_k`.
+pub fn combined(g: &Graph, f: &Filtration, k: usize) -> ReductionReport {
+    combined_with(g, f, k, Reduction::Combined)
+}
+
+/// End-to-end: reduce then compute diagrams `PD_0..PD_k` on the reduced
+/// instance. For `Coral`/`Combined` only `PD_k` (and above) are exact;
+/// for `Prunit`/`None` every returned diagram is exact.
+pub fn pd_with_reduction(
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+    which: Reduction,
+) -> (Vec<Diagram>, ReductionReport) {
+    let report = combined_with(g, f, k, which);
+    let diagrams = persistence_diagrams(&report.graph, &report.filtration, k);
+    (diagrams, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn combined_identity_statement_holds() {
+        // PD_k(G) == PD_k((G')^{k+1}) on random graphs, k = 1.
+        let mut rng = crate::util::Rng::new(77);
+        for _ in 0..8 {
+            let n = rng.range(6, 22);
+            let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let base = persistence_diagrams(&g, &f, 1);
+            let (red, report) = pd_with_reduction(&g, &f, 1, Reduction::Combined);
+            assert!(
+                base[1].same_as(&red[1], 1e-9),
+                "PD_1 mismatch after {}: {} vs {}",
+                report.which.name(),
+                base[1],
+                red[1]
+            );
+        }
+    }
+
+    #[test]
+    fn reduction_percentages_sane() {
+        let g = gen::barabasi_albert(120, 2, 5);
+        let f = Filtration::degree_superlevel(&g);
+        let r = combined(&g, &f, 1);
+        assert!(r.vertex_reduction_pct() >= 0.0 && r.vertex_reduction_pct() <= 100.0);
+        assert!(r.edge_reduction_pct() <= 100.0);
+        assert!(r.graph.n() <= g.n());
+    }
+
+    #[test]
+    fn none_reduction_is_identity() {
+        let g = gen::cycle(7);
+        let f = Filtration::degree(&g);
+        let r = combined_with(&g, &f, 1, Reduction::None);
+        assert_eq!(r.graph, g);
+        assert_eq!(r.vertex_reduction_pct(), 0.0);
+        assert_eq!(r.kept_old_ids, (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn mapping_composition_points_to_original() {
+        let g = gen::barabasi_albert(60, 2, 8);
+        let f = Filtration::degree_superlevel(&g);
+        let r = combined(&g, &f, 1);
+        for (new, &old) in r.kept_old_ids.iter().enumerate() {
+            assert_eq!(
+                r.filtration.value(new as u32),
+                f.value(old),
+                "restricted f must match original values"
+            );
+        }
+    }
+
+    #[test]
+    fn reduction_names() {
+        assert_eq!(Reduction::Combined.name(), "prunit+coral");
+        assert_eq!(Reduction::None.name(), "none");
+    }
+}

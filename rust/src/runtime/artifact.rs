@@ -1,0 +1,152 @@
+//! Artifact discovery: `artifacts/manifest.tsv` (written by
+//! `python -m compile.aot`) lists one HLO-text artifact per
+//! (kernel, size bucket) pair.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub kernel: String,
+    pub bucket: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|_| Error::ArtifactMissing(path.display().to_string()))?;
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() < 3 {
+                return Err(Error::Parse(format!("manifest line {}: {line:?}", i + 1)));
+            }
+            let bucket: usize = cols[2]
+                .parse()
+                .map_err(|_| Error::Parse(format!("manifest bucket {:?}", cols[2])))?;
+            entries.push(ArtifactEntry {
+                file: cols[0].to_string(),
+                kernel: cols[1].to_string(),
+                bucket,
+            });
+        }
+        entries.sort_by(|a, b| a.kernel.cmp(&b.kernel).then(a.bucket.cmp(&b.bucket)));
+        if entries.is_empty() {
+            return Err(Error::ArtifactMissing(format!(
+                "{}: manifest has no entries",
+                path.display()
+            )));
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Kernel names available.
+    pub fn kernels(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.entries.iter().map(|e| e.kernel.clone()).collect();
+        k.dedup();
+        k
+    }
+
+    /// Buckets for one kernel, ascending.
+    pub fn buckets(&self, kernel: &str) -> Vec<usize> {
+        self.entries
+            .iter()
+            .filter(|e| e.kernel == kernel)
+            .map(|e| e.bucket)
+            .collect()
+    }
+
+    /// Smallest bucket of `kernel` that fits a graph of order `n`.
+    pub fn pick_bucket(&self, kernel: &str, n: usize) -> Result<usize> {
+        let buckets = self.buckets(kernel);
+        if buckets.is_empty() {
+            return Err(Error::ArtifactMissing(format!("kernel {kernel:?}")));
+        }
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or(Error::NoBucket {
+                order: n,
+                largest: buckets.last().copied().unwrap_or(0),
+            })
+    }
+
+    /// Absolute path of the artifact for `(kernel, bucket)`.
+    pub fn path_for(&self, kernel: &str, bucket: usize) -> Result<PathBuf> {
+        self.entries
+            .iter()
+            .find(|e| e.kernel == kernel && e.bucket == bucket)
+            .map(|e| self.dir.join(&e.file))
+            .ok_or_else(|| Error::ArtifactMissing(format!("{kernel} bucket {bucket}")))
+    }
+}
+
+/// Default artifacts directory: `$CORAL_PRUNIT_ARTIFACTS` or
+/// `<manifest dir>/artifacts` (works for `cargo test`/`cargo bench` runs
+/// from the workspace).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("CORAL_PRUNIT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest() {
+        // `make artifacts` must have run (Makefile orders it before tests).
+        let m = Manifest::load(default_artifacts_dir()).expect("run `make artifacts` first");
+        assert!(m.kernels().contains(&"domination".to_string()));
+        assert!(m.kernels().contains(&"kcore".to_string()));
+        for k in m.kernels() {
+            assert!(m.buckets(&k).contains(&32));
+            assert!(m.buckets(&k).windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn pick_bucket_rounds_up() {
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        assert_eq!(m.pick_bucket("domination", 1).unwrap(), 32);
+        assert_eq!(m.pick_bucket("domination", 32).unwrap(), 32);
+        assert_eq!(m.pick_bucket("kcore", 33).unwrap(), 64);
+        assert!(m.pick_bucket("domination", 100_000).is_err());
+        assert!(m.pick_bucket("nonexistent", 4).is_err());
+    }
+
+    #[test]
+    fn paths_exist_on_disk() {
+        let m = Manifest::load(default_artifacts_dir()).unwrap();
+        for k in m.kernels() {
+            for b in m.buckets(&k) {
+                assert!(m.path_for(&k, b).unwrap().exists(), "{k} bucket {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_artifact_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(matches!(err, Error::ArtifactMissing(_)));
+    }
+}

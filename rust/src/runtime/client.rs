@@ -1,0 +1,264 @@
+//! PJRT client wrapper: compile-once-per-bucket executable cache and the
+//! typed `domination_sweep` entrypoint. Adapted from
+//! /opt/xla-example/load_hlo (HLO *text* interchange; see DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::complex::Filtration;
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+
+use super::artifact::{default_artifacts_dir, Manifest};
+use super::pad::pad_dense;
+
+/// Output of one dense domination sweep on the device.
+#[derive(Clone, Debug)]
+pub struct SweepOutput {
+    /// mask[u][v] = 1 iff v dominates u and key(u) ≥ key(v); n × n,
+    /// already un-padded.
+    pub mask: Vec<Vec<bool>>,
+    /// per-vertex dominated flag.
+    pub dominated: Vec<bool>,
+    /// bucket actually used.
+    pub bucket: usize,
+}
+
+/// PJRT CPU runtime with per-(kernel, bucket) compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Load from an artifacts dir (see [`default_artifacts_dir`]).
+    pub fn new(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Construct from the default artifacts location.
+    pub fn from_default() -> Result<XlaRuntime> {
+        XlaRuntime::new(default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.manifest.buckets("domination")
+    }
+
+    /// Largest graph order the runtime can process densely.
+    pub fn max_order(&self) -> usize {
+        self.buckets().last().copied().unwrap_or(0)
+    }
+
+    fn executable(
+        &self,
+        kernel: &str,
+        bucket: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (kernel.to_string(), bucket);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let path = self.manifest.path_for(kernel, bucket)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::Xla(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {kernel} bucket {bucket}: {e}")))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Run the dense k-core membership kernel (bulk-synchronous peeling;
+    /// the full fix-point runs inside one HLO `while`). Returns the alive
+    /// mask over `g`'s vertices.
+    pub fn kcore_mask(&self, g: &Graph, k: usize) -> Result<Vec<bool>> {
+        let n = g.n();
+        let bucket = self.manifest.pick_bucket("kcore", n)?;
+        let exe = self.executable("kcore", bucket)?;
+        // isolated pad vertices peel in round one for k ≥ 1 — inert.
+        let f = Filtration::constant(n);
+        let (adj, _) = pad_dense(g, &f, bucket);
+        let adj_lit = xla::Literal::vec1(&adj)
+            .reshape(&[bucket as i64, bucket as i64])
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let k_lit = xla::Literal::vec1(&[k as f32])
+            .reshape(&[1, 1])
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let result = exe
+            .execute::<xla::Literal>(&[adj_lit, k_lit])
+            .map_err(|e| Error::Xla(format!("execute kcore bucket {bucket}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let mask_lit = result
+            .to_tuple1()
+            .map_err(|e| Error::Xla(format!("expected 1-tuple output: {e}")))?;
+        let flat: Vec<f32> = mask_lit.to_vec().map_err(|e| Error::Xla(e.to_string()))?;
+        debug_assert_eq!(flat.len(), bucket);
+        Ok(flat[..n].iter().map(|&x| x != 0.0).collect())
+    }
+
+    /// Run one domination sweep (Pallas kernel semantics) for `(g, f)`.
+    pub fn domination_sweep(&self, g: &Graph, f: &Filtration) -> Result<SweepOutput> {
+        f.check(g)?;
+        let n = g.n();
+        let bucket = self.manifest.pick_bucket("domination", n)?;
+        let exe = self.executable("domination", bucket)?;
+        let (adj, keys) = pad_dense(g, f, bucket);
+
+        let adj_lit = xla::Literal::vec1(&adj)
+            .reshape(&[bucket as i64, bucket as i64])
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let key_lit = xla::Literal::vec1(&keys);
+
+        let result = exe
+            .execute::<xla::Literal>(&[adj_lit, key_lit])
+            .map_err(|e| Error::Xla(format!("execute bucket {bucket}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let (mask_lit, dom_lit) = result
+            .to_tuple2()
+            .map_err(|e| Error::Xla(format!("expected 2-tuple output: {e}")))?;
+        let mask_flat: Vec<f32> = mask_lit.to_vec().map_err(|e| Error::Xla(e.to_string()))?;
+        let dom_flat: Vec<f32> = dom_lit.to_vec().map_err(|e| Error::Xla(e.to_string()))?;
+        debug_assert_eq!(mask_flat.len(), bucket * bucket);
+        debug_assert_eq!(dom_flat.len(), bucket);
+
+        // Un-pad; assert the inertness contract in debug builds.
+        #[cfg(debug_assertions)]
+        {
+            for u in n..bucket {
+                debug_assert_eq!(dom_flat[u], 0.0, "pad vertex {u} flagged dominated");
+            }
+        }
+        let mask = (0..n)
+            .map(|u| (0..n).map(|v| mask_flat[u * bucket + v] != 0.0).collect())
+            .collect();
+        let dominated = (0..n).map(|u| dom_flat[u] != 0.0).collect();
+        Ok(SweepOutput {
+            mask,
+            dominated,
+            bucket,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::prune::domination::dominated_pairs_dense;
+
+    fn runtime() -> XlaRuntime {
+        XlaRuntime::from_default().expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn platform_is_cpu_pjrt() {
+        let rt = runtime();
+        assert!(!rt.platform().is_empty());
+        assert_eq!(rt.max_order(), 512);
+    }
+
+    #[test]
+    fn sweep_matches_sparse_reference_star() {
+        let rt = runtime();
+        let g = gen::star(9);
+        let f = Filtration::degree_superlevel(&g);
+        let out = rt.domination_sweep(&g, &f).unwrap();
+        assert_eq!(out.bucket, 32);
+        let want = dominated_pairs_dense(&g, &f);
+        assert_eq!(out.mask, want);
+        for leaf in 1..9 {
+            assert!(out.dominated[leaf], "leaf {leaf} dominated by hub");
+        }
+        assert!(!out.dominated[0]);
+    }
+
+    #[test]
+    fn sweep_matches_sparse_reference_random() {
+        let rt = runtime();
+        let mut rng = crate::util::Rng::new(4242);
+        for _ in 0..6 {
+            let n = rng.range(5, 60);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let f = crate::testutil::random_filtration(&mut rng, &g);
+            let out = rt.domination_sweep(&g, &f).unwrap();
+            let want = dominated_pairs_dense(&g, &f);
+            assert_eq!(out.mask, want, "n={n}");
+            for u in 0..n {
+                assert_eq!(out.dominated[u], want[u].iter().any(|&b| b));
+            }
+        }
+    }
+
+    #[test]
+    fn kcore_mask_matches_bz() {
+        let rt = runtime();
+        let mut rng = crate::util::Rng::new(777);
+        for _ in 0..6 {
+            let n = rng.range(4, 70);
+            let g = gen::erdos_renyi(n, 0.15, rng.next_u64());
+            for k in 1..=4usize {
+                let got = rt.kcore_mask(&g, k).unwrap();
+                let core = crate::kcore::coreness(&g);
+                let want: Vec<bool> = core.iter().map(|&c| c >= k).collect();
+                assert_eq!(got, want, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn kcore_mask_cycle_and_star() {
+        let rt = runtime();
+        let cyc = gen::cycle(10);
+        assert!(rt.kcore_mask(&cyc, 2).unwrap().iter().all(|&a| a));
+        assert!(rt.kcore_mask(&cyc, 3).unwrap().iter().all(|&a| !a));
+        let star = gen::star(9);
+        assert!(rt.kcore_mask(&star, 2).unwrap().iter().all(|&a| !a));
+    }
+
+    #[test]
+    fn bucket_rounding_and_cache_reuse() {
+        let rt = runtime();
+        let g1 = gen::cycle(33); // → bucket 64
+        let f1 = Filtration::degree(&g1);
+        let o1 = rt.domination_sweep(&g1, &f1).unwrap();
+        assert_eq!(o1.bucket, 64);
+        // second call hits the compiled-executable cache
+        let o2 = rt.domination_sweep(&g1, &f1).unwrap();
+        assert_eq!(o2.mask, o1.mask);
+    }
+
+    #[test]
+    fn oversize_graph_is_a_typed_error() {
+        let rt = runtime();
+        let g = gen::path(1000);
+        let f = Filtration::degree(&g);
+        match rt.domination_sweep(&g, &f) {
+            Err(Error::NoBucket { order, largest }) => {
+                assert_eq!(order, 1000);
+                assert_eq!(largest, 512);
+            }
+            other => panic!("expected NoBucket, got {other:?}"),
+        }
+    }
+}

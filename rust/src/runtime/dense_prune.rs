@@ -1,0 +1,221 @@
+//! Dense PrunIT via the AOT Pallas kernel: sweep → greedy-ascending
+//! removal → re-sweep on the reduced graph, to a fixed point.
+//!
+//! Soundness of the per-sweep greedy rule (process `u` ascending; remove
+//! `u` if some admissible dominator `v` is not already removed this
+//! sweep): each removal is justified in the graph state at its own moment
+//! — removing *other* vertices preserves domination among survivors — so
+//! the sequence of removals is a valid Theorem 7 chain. Twin classes
+//! (mutual domination cycles) keep exactly their first-surviving member.
+//!
+//! The dense path is exact but O(bucket³) per sweep, so it targets the
+//! small/dense graphs of the paper's graph-classification datasets; the
+//! sparse CPU path (`prune::prunit`) covers large networks. Both paths
+//! are cross-checked for PD equality in `rust/tests/`.
+
+use crate::complex::Filtration;
+use crate::error::Result;
+use crate::graph::Graph;
+use crate::prune::PruneResult;
+
+use super::client::XlaRuntime;
+
+/// CoralTDA on the device: the (k+1)-core via the k-core peeling artifact
+/// (Thm 2 → exact for PD_j, j ≥ k), filtration restricted per Remark 1.
+pub fn coral_dense(
+    rt: &XlaRuntime,
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+) -> Result<(Graph, Vec<u32>, Filtration)> {
+    f.check(g)?;
+    let alive = rt.kcore_mask(g, k + 1)?;
+    let (core, ids) = g.induced(&alive);
+    let rf = f.restrict(&ids);
+    Ok((core, ids, rf))
+}
+
+/// The combined dense pipeline (§5 end): PrunIT then CoralTDA, both
+/// executing the AOT Pallas artifacts — `PD_k(G) = PD_k((G')^{k+1})`.
+pub fn combined_dense(
+    rt: &XlaRuntime,
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+) -> Result<(Graph, Vec<u32>, Filtration)> {
+    let pruned = prunit_dense(rt, g, f)?;
+    let (core, ids, rf) = coral_dense(rt, &pruned.graph, &pruned.filtration, k)?;
+    let orig_ids: Vec<u32> = ids
+        .iter()
+        .map(|&mid| pruned.kept_old_ids[mid as usize])
+        .collect();
+    Ok((core, orig_ids, rf))
+}
+
+/// PrunIT to a fixed point using the XLA domination artifact.
+pub fn prunit_dense(rt: &XlaRuntime, g: &Graph, f: &Filtration) -> Result<PruneResult> {
+    f.check(g)?;
+    // alive mask over ORIGINAL ids
+    let mut alive = vec![true; g.n()];
+    let mut cur = g.clone();
+    let mut cur_f = f.clone();
+    let mut cur_ids: Vec<u32> = (0..g.n() as u32).collect();
+    let mut removed_total = 0usize;
+    let mut sweeps = 0usize;
+
+    loop {
+        sweeps += 1;
+        let out = rt.domination_sweep(&cur, &cur_f)?;
+        // Greedy ascending selection within the sweep.
+        let n = cur.n();
+        let mut removed_now = vec![false; n];
+        let mut any = false;
+        for u in 0..n {
+            if !out.dominated[u] {
+                continue;
+            }
+            let has_live_dominator = (0..n).any(|v| out.mask[u][v] && !removed_now[v]);
+            if has_live_dominator {
+                removed_now[u] = true;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        for u in 0..n {
+            if removed_now[u] {
+                alive[cur_ids[u] as usize] = false;
+                removed_total += 1;
+            }
+        }
+        let keep: Vec<bool> = removed_now.iter().map(|&r| !r).collect();
+        let (next, new_to_cur) = cur.induced(&keep);
+        cur_ids = new_to_cur.iter().map(|&m| cur_ids[m as usize]).collect();
+        cur_f = cur_f.restrict(&new_to_cur);
+        cur = next;
+        if cur.n() == 0 {
+            break;
+        }
+    }
+
+    let (graph, kept_old_ids) = g.induced(&alive);
+    let filtration = f.restrict(&kept_old_ids);
+    Ok(PruneResult {
+        graph,
+        kept_old_ids,
+        filtration,
+        removed: removed_total,
+        checks: sweeps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::homology::persistence_diagrams;
+    use crate::prune::prunit;
+
+    fn runtime() -> XlaRuntime {
+        XlaRuntime::from_default().expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn star_collapses_like_sparse() {
+        let rt = runtime();
+        let g = gen::star(12);
+        let f = Filtration::degree_superlevel(&g);
+        let dense = prunit_dense(&rt, &g, &f).unwrap();
+        let sparse = prunit(&g, &f);
+        assert_eq!(dense.graph.n(), sparse.graph.n());
+        assert!(dense.graph.n() <= 2);
+    }
+
+    #[test]
+    fn dense_and_sparse_preserve_the_same_diagrams() {
+        // Fixed points may differ vertex-wise (twin choices), but both must
+        // preserve every PD of the original graph (Theorem 7).
+        let rt = runtime();
+        let mut rng = crate::util::Rng::new(2024);
+        for _ in 0..5 {
+            let n = rng.range(5, 40);
+            let g = gen::erdos_renyi(n, 0.3, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let base = persistence_diagrams(&g, &f, 1);
+            let dense = prunit_dense(&rt, &g, &f).unwrap();
+            let dd = persistence_diagrams(&dense.graph, &dense.filtration, 1);
+            for k in 0..=1 {
+                assert!(
+                    base[k].same_as(&dd[k], 1e-9),
+                    "dense PD_{k}: {} vs {} (n={n})",
+                    base[k],
+                    dd[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_reaches_a_fixed_point() {
+        let rt = runtime();
+        let g = gen::barabasi_albert(50, 2, 6);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit_dense(&rt, &g, &f).unwrap();
+        // no admissible dominated vertex remains
+        for u in 0..r.graph.n() as u32 {
+            assert!(
+                crate::prune::find_dominator(&r.graph, &r.filtration, u).is_none(),
+                "vertex {u} still prunable after dense fixed point"
+            );
+        }
+        assert!(r.checks >= 1, "at least one sweep");
+    }
+
+    #[test]
+    fn coral_dense_matches_sparse_core() {
+        let rt = runtime();
+        let mut rng = crate::util::Rng::new(31);
+        for _ in 0..4 {
+            let n = rng.range(6, 60);
+            let g = gen::erdos_renyi(n, 0.2, rng.next_u64());
+            let f = Filtration::degree(&g);
+            for k in 1..=2usize {
+                let (core_d, ids_d, _) = coral_dense(&rt, &g, &f, k).unwrap();
+                let r = crate::reduce::coral_reduce(&g, &f, k);
+                assert_eq!(core_d, r.graph, "n={n} k={k}");
+                assert_eq!(ids_d, r.kept_old_ids);
+            }
+        }
+    }
+
+    #[test]
+    fn combined_dense_preserves_pd_k() {
+        let rt = runtime();
+        let mut rng = crate::util::Rng::new(57);
+        for _ in 0..4 {
+            let n = rng.range(8, 50);
+            let g = gen::erdos_renyi(n, 0.3, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let base = persistence_diagrams(&g, &f, 1);
+            let (core, _, rf) = combined_dense(&rt, &g, &f, 1).unwrap();
+            let red = persistence_diagrams(&core, &rf, 1);
+            assert!(
+                base[1].same_as(&red[1], 1e-9),
+                "combined dense PD_1: {} vs {} (n={n})",
+                base[1],
+                red[1]
+            );
+        }
+    }
+
+    #[test]
+    fn cycle_untouched() {
+        let rt = runtime();
+        let g = gen::cycle(10);
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit_dense(&rt, &g, &f).unwrap();
+        assert_eq!(r.removed, 0);
+        assert_eq!(r.graph.n(), 10);
+    }
+}

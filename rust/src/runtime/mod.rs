@@ -1,0 +1,14 @@
+//! XLA/PJRT runtime (S13): loads the AOT-compiled Pallas domination
+//! artifacts (`artifacts/domination_<bucket>.hlo.txt`, produced once by
+//! `make artifacts`) and executes them from the Rust hot path. Python is
+//! never involved at runtime.
+
+pub mod artifact;
+pub mod client;
+pub mod dense_prune;
+pub mod pad;
+
+pub use artifact::{default_artifacts_dir, Manifest};
+pub use client::XlaRuntime;
+pub use dense_prune::{combined_dense, coral_dense, prunit_dense};
+pub use pad::{pad_dense, PAD_SENTINEL};

@@ -1,0 +1,71 @@
+//! Bucket padding — mirrors `python/compile/model.py::pad_inputs`.
+//!
+//! Padding vertices are isolated and carry `f = PAD_SENTINEL`; the kernel's
+//! adjacency mask makes them inert (proved by `python/tests/test_model.py`
+//! and re-checked here against the live artifact in `client` tests).
+
+use crate::complex::Filtration;
+use crate::graph::Graph;
+
+/// Must match `python/compile/model.py::PAD_SENTINEL`.
+pub const PAD_SENTINEL: f32 = 3.0e38;
+
+/// Dense, padded inputs for the domination artifact: row-major (bucket ×
+/// bucket) f32 adjacency and bucket-length f32 sublevel keys.
+pub fn pad_dense(g: &Graph, f: &Filtration, bucket: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = g.n();
+    assert!(n <= bucket, "graph order {n} exceeds bucket {bucket}");
+    let mut adj = vec![0.0f32; bucket * bucket];
+    for (u, v) in g.edges() {
+        adj[u as usize * bucket + v as usize] = 1.0;
+        adj[v as usize * bucket + u as usize] = 1.0;
+    }
+    let mut keys = vec![PAD_SENTINEL; bucket];
+    for (v, k) in f.keys_f32().into_iter().enumerate() {
+        keys[v] = k;
+    }
+    (adj, keys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn pad_layout_matches_graph() {
+        let g = gen::cycle(4);
+        let f = Filtration::degree(&g);
+        let (adj, keys) = pad_dense(&g, &f, 8);
+        assert_eq!(adj.len(), 64);
+        assert_eq!(keys.len(), 8);
+        assert_eq!(adj[0 * 8 + 1], 1.0);
+        assert_eq!(adj[1 * 8 + 0], 1.0);
+        assert_eq!(adj[0 * 8 + 2], 0.0);
+        // pad rows empty
+        for i in 4..8 {
+            for j in 0..8 {
+                assert_eq!(adj[i * 8 + j], 0.0);
+            }
+        }
+        assert_eq!(keys[0], 2.0);
+        assert_eq!(keys[5], PAD_SENTINEL);
+    }
+
+    #[test]
+    fn superlevel_keys_negated() {
+        let g = gen::star(3);
+        let f = Filtration::degree_superlevel(&g);
+        let (_, keys) = pad_dense(&g, &f, 4);
+        assert_eq!(keys[0], -2.0);
+        assert_eq!(keys[1], -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds bucket")]
+    fn oversize_panics() {
+        let g = gen::cycle(10);
+        let f = Filtration::degree(&g);
+        pad_dense(&g, &f, 8);
+    }
+}

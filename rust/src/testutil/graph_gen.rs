@@ -1,0 +1,109 @@
+//! Random test-case generators shared by the theorem property suites.
+
+use crate::complex::{Direction, Filtration};
+use crate::graph::{gen, Graph};
+use crate::util::Rng;
+
+/// A generated test case: a graph plus a human-readable description for
+/// failure messages.
+#[derive(Clone, Debug)]
+pub struct GraphCase {
+    pub graph: Graph,
+    pub desc: String,
+}
+
+/// Sample a graph from a diverse family mix (ER sparse/dense, BA, WS,
+/// geometric, planted communities, deterministic families).
+pub fn random_graph_case(rng: &mut Rng, max_n: usize) -> GraphCase {
+    let n = rng.range(3, max_n.max(4));
+    let family = rng.below(8);
+    let seed = rng.next_u64();
+    let (graph, desc) = match family {
+        0 => (
+            gen::erdos_renyi(n, 0.15, seed),
+            format!("ER(n={n}, p=0.15, seed={seed})"),
+        ),
+        1 => (
+            gen::erdos_renyi(n, 0.45, seed),
+            format!("ER(n={n}, p=0.45, seed={seed})"),
+        ),
+        2 => {
+            let m = rng.range(1, 3);
+            (
+                gen::barabasi_albert(n, m, seed),
+                format!("BA(n={n}, m={m}, seed={seed})"),
+            )
+        }
+        3 => {
+            let nn = n.max(6);
+            (
+                gen::watts_strogatz(nn, 4, 0.2, seed),
+                format!("WS(n={nn}, k=4, beta=0.2, seed={seed})"),
+            )
+        }
+        4 => (
+            gen::random_geometric(n, 0.35, seed),
+            format!("RGG(n={n}, r=0.35, seed={seed})"),
+        ),
+        5 => (
+            gen::planted_partition(n, 2.max(n / 6), 0.5, 0.05, seed),
+            format!("PP(n={n}, seed={seed})"),
+        ),
+        6 => (gen::cycle(n), format!("C{n}")),
+        _ => {
+            let m = rng.range(1, 2);
+            (
+                gen::powerlaw_cluster(n, m, 0.7, seed),
+                format!("PLC(n={n}, m={m}, seed={seed})"),
+            )
+        }
+    };
+    GraphCase { graph, desc }
+}
+
+/// Sample a filtration for a graph: degree or random-integer values (ties
+/// are important for theorem edge cases), sublevel or superlevel.
+pub fn random_filtration(rng: &mut Rng, g: &Graph) -> Filtration {
+    let dir = if rng.chance(0.5) {
+        Direction::Sublevel
+    } else {
+        Direction::Superlevel
+    };
+    let values: Vec<f64> = match rng.below(3) {
+        0 => g.degrees().iter().map(|&d| d as f64).collect(),
+        1 => (0..g.n()).map(|_| rng.below(4) as f64).collect(),
+        _ => (0..g.n()).map(|_| rng.f64() * 10.0).collect(),
+    };
+    match dir {
+        Direction::Sublevel => Filtration::sublevel(values),
+        Direction::Superlevel => Filtration::superlevel(values),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_valid_graphs() {
+        let mut rng = Rng::new(1);
+        for _ in 0..30 {
+            let case = random_graph_case(&mut rng, 25);
+            assert!(case.graph.n() >= 1);
+            assert!(!case.desc.is_empty());
+            let f = random_filtration(&mut rng, &case.graph);
+            assert!(f.check(&case.graph).is_ok());
+        }
+    }
+
+    #[test]
+    fn family_mix_has_variety() {
+        let mut rng = Rng::new(2);
+        let mut prefixes = std::collections::BTreeSet::new();
+        for _ in 0..60 {
+            let case = random_graph_case(&mut rng, 20);
+            prefixes.insert(case.desc.chars().take(2).collect::<String>());
+        }
+        assert!(prefixes.len() >= 4, "want diverse families, got {prefixes:?}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Property-test mini-framework (S16) — proptest is not in the offline
+//! registry, so the crate ships its own: seeded case generation with
+//! per-case reproduction seeds in failure messages.
+
+pub mod graph_gen;
+pub mod propcheck;
+
+pub use graph_gen::{random_filtration, random_graph_case, GraphCase};
+pub use propcheck::forall;

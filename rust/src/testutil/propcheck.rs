@@ -1,0 +1,69 @@
+//! `forall`: run a property over `cases` seeded random cases; failures
+//! report the case index and reproduction seed.
+
+use crate::util::Rng;
+
+/// Run `prop` for `cases` cases derived deterministically from `seed`.
+/// The property receives a fresh RNG per case and returns `Err(reason)`
+/// to signal failure.
+///
+/// Panics with the failing case's seed so
+/// `forall("name", 1, failing_seed, prop)` reproduces it exactly.
+pub fn forall<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (repro: forall(\"{name}\", 1, {case_seed}, ..)): {reason}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0usize);
+        forall("count", 25, 1, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        assert_eq!(counter.get(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_name() {
+        forall("fails", 10, 2, |rng| {
+            if rng.below(3) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn case_seeds_are_deterministic() {
+        let mut seen_a = Vec::new();
+        forall("det", 5, 3, |rng| {
+            seen_a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        forall("det", 5, 3, |rng| {
+            seen_b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

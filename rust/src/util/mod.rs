@@ -1,0 +1,35 @@
+//! Small shared utilities: deterministic RNG, timing, table formatting.
+
+pub mod rng;
+pub mod table;
+pub mod timer;
+
+pub use rng::Rng;
+pub use table::Table;
+pub use timer::Timer;
+
+/// Order-preserving f64 → u64 bit transform (total order, NaN-free
+/// inputs assumed): integer sort keys beat `partial_cmp` in hot sorts.
+#[inline]
+pub fn sortable_f64(x: f64) -> u64 {
+    let bits = x.to_bits();
+    if bits >> 63 == 0 {
+        bits | (1 << 63)
+    } else {
+        !bits
+    }
+}
+
+#[cfg(test)]
+mod sortable_tests {
+    use super::sortable_f64;
+
+    #[test]
+    fn preserves_order() {
+        let xs = [-1e30, -2.5, -0.0, 0.0, 1e-9, 3.0, 1e30, f64::INFINITY];
+        for w in xs.windows(2) {
+            assert!(sortable_f64(w[0]) <= sortable_f64(w[1]), "{} vs {}", w[0], w[1]);
+        }
+        assert!(sortable_f64(-1.0) < sortable_f64(1.0));
+    }
+}

@@ -1,0 +1,154 @@
+//! Aligned plain-text table rendering for bench drivers — the benches print
+//! the same rows/series the paper's tables and figures report, plus a TSV
+//! dump for post-processing. (criterion is unavailable offline; see
+//! DESIGN.md §4.)
+
+use std::fmt::Write as _;
+
+/// Column-aligned table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity must match header"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                let _ = write!(line, "{:w$}", cells[i], w = widths[i]);
+                if i + 1 < ncol {
+                    line.push_str("  ");
+                }
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Tab-separated dump (machine-readable companion to `render`).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# {}", self.title);
+        let _ = writeln!(out, "{}", self.header.join("\t"));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join("\t"));
+        }
+        out
+    }
+
+    /// Print to stdout and append the TSV to `path` (best-effort).
+    pub fn emit(&self, tsv_path: Option<&str>) {
+        print!("{}", self.render());
+        println!();
+        if let Some(path) = tsv_path {
+            use std::io::Write;
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+            {
+                let _ = f.write_all(self.to_tsv().as_bytes());
+                let _ = f.write_all(b"\n");
+            }
+        }
+    }
+}
+
+/// Format a fraction as a percentage string like "62.3%".
+pub fn pct(numer: f64, denom: f64) -> String {
+    if denom == 0.0 {
+        "n/a".to_string()
+    } else {
+        format!("{:.1}%", 100.0 * numer / denom)
+    }
+}
+
+/// Reduction percentage `100·(before − after)/before` (paper §6 definition).
+pub fn reduction_pct(before: usize, after: usize) -> f64 {
+    if before == 0 {
+        0.0
+    } else {
+        100.0 * (before as f64 - after as f64) / before as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(&["x".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("a  bbbb"));
+    }
+
+    #[test]
+    fn tsv_roundtrip_columns() {
+        let mut t = Table::new("demo", &["c1", "c2"]);
+        t.row(&["1".into(), "2".into()]);
+        let tsv = t.to_tsv();
+        assert!(tsv.lines().any(|l| l == "1\t2"));
+    }
+
+    #[test]
+    fn reduction_pct_matches_paper_definition() {
+        assert!((reduction_pct(100, 41) - 59.0).abs() < 1e-12);
+        assert_eq!(reduction_pct(0, 0), 0.0);
+        assert_eq!(reduction_pct(10, 10), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

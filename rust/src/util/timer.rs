@@ -1,0 +1,56 @@
+//! Minimal wall-clock timing helpers shared by benches and the coordinator.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop timer with accumulated laps.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Time a closure; return (result, seconds).
+    pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+        let t = Instant::now();
+        let out = f();
+        (out, t.elapsed().as_secs_f64())
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_nonnegative() {
+        let (v, secs) = Timer::time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn elapsed_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+    }
+}

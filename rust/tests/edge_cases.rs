@@ -1,0 +1,269 @@
+//! Edge cases and failure injection across the stack: degenerate graphs,
+//! disconnected inputs, worker panics, config round-trips, and diagram
+//! invariants that must hold at the boundaries.
+
+use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::config::{Config, CoordinatorConfig};
+use coral_prunit::coordinator::{Coordinator, Job, JobSpec};
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::{betti_numbers, persistence_diagrams, bottleneck, wasserstein1};
+use coral_prunit::prune::prunit;
+use coral_prunit::reduce::{combined_with, coral_reduce, Reduction};
+use coral_prunit::testutil::forall;
+
+// ---------- degenerate graphs ----------
+
+#[test]
+fn empty_graph_full_pipeline() {
+    let g = Graph::empty(0);
+    let f = Filtration::constant(0);
+    let pds = persistence_diagrams(&g, &f, 2);
+    assert!(pds.iter().all(|d| d.is_empty()));
+    let r = combined_with(&g, &f, 1, Reduction::Combined);
+    assert_eq!(r.graph.n(), 0);
+    assert_eq!(r.vertex_reduction_pct(), 0.0);
+}
+
+#[test]
+fn single_vertex_pipeline() {
+    let g = Graph::empty(1);
+    let f = Filtration::sublevel(vec![7.0]);
+    let pds = persistence_diagrams(&g, &f, 1);
+    assert_eq!(pds[0].betti(), 1);
+    assert_eq!(pds[0].essential(), vec![7.0]);
+    assert!(pds[1].is_empty());
+    // nothing dominates in a K1
+    assert_eq!(prunit(&g, &f).removed, 0);
+}
+
+#[test]
+fn all_isolated_vertices() {
+    let g = Graph::empty(5);
+    let f = Filtration::sublevel(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    let pds = persistence_diagrams(&g, &f, 1);
+    assert_eq!(pds[0].betti(), 5, "five essential components");
+    let r = coral_reduce(&g, &f, 1);
+    assert_eq!(r.graph.n(), 0, "isolated vertices have coreness 0");
+    // and CoralTDA still preserves PD_1 (both trivial)
+    let after = persistence_diagrams(&r.graph, &r.filtration, 1);
+    assert!(pds[1].same_as(&after[1], 1e-12));
+}
+
+#[test]
+fn two_vertices_one_edge() {
+    let g = Graph::from_edges(2, &[(0, 1)]);
+    let f = Filtration::sublevel(vec![0.0, 1.0]);
+    let pds = persistence_diagrams(&g, &f, 1);
+    assert_eq!(pds[0].betti(), 1);
+    let pts = pds[0].points();
+    assert_eq!(pts, vec![(0.0, f64::INFINITY)]);
+    // vertex 1 is dominated by 0 and admissible (f(1) ≥ f(0))
+    let r = prunit(&g, &f);
+    assert_eq!(r.graph.n(), 1);
+    assert_eq!(r.kept_old_ids, vec![0]);
+}
+
+#[test]
+fn disconnected_components_are_independent() {
+    // triangle ⊔ path ⊔ isolate, constant filtration
+    let g = Graph::from_edges(7, &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5)]);
+    assert_eq!(betti_numbers(&g, 1), vec![3, 0]);
+    // prunit collapses the triangle and path but can't merge components
+    let f = Filtration::degree_superlevel(&g);
+    let r = prunit(&g, &f);
+    let after = persistence_diagrams(&r.graph, &r.filtration, 1);
+    assert_eq!(after[0].betti(), 3, "component count is a homotopy invariant");
+}
+
+#[test]
+fn filtration_with_equal_values_everywhere() {
+    // heavy tie-breaking stress: all f equal → every order is valid and
+    // every dominated vertex admissible in both directions.
+    forall("all-ties", 20, 0x71e, |rng| {
+        let n = rng.range(3, 16);
+        let g = gen::erdos_renyi(n, 0.4, rng.next_u64());
+        let f = Filtration::constant(n);
+        let base = persistence_diagrams(&g, &f, 1);
+        let r = prunit(&g, &f);
+        let after = persistence_diagrams(&r.graph, &r.filtration, 1);
+        for k in 0..=1 {
+            if !base[k].same_as(&after[k], 1e-12) {
+                return Err(format!("tie-breaking broke PD_{k}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn negative_and_huge_filtration_values() {
+    let g = gen::cycle(5);
+    let f = Filtration::sublevel(vec![-1e12, 3.5, -2.0, 1e12, 0.0]);
+    let pds = persistence_diagrams(&g, &f, 1);
+    assert_eq!(pds[1].betti(), 1);
+    assert_eq!(pds[1].essential(), vec![1e12], "loop completes at max f");
+}
+
+// ---------- complex construction boundaries ----------
+
+#[test]
+fn max_dim_zero_complex_is_vertices_only() {
+    let g = gen::complete(5);
+    let c = CliqueComplex::build(&g, &Filtration::constant(5), 0);
+    assert_eq!(c.counts_by_dim(), vec![5]);
+}
+
+#[test]
+fn requesting_k_above_degeneracy_gives_trivial_diagrams() {
+    let g = gen::cycle(6); // degeneracy 2, complex dim 1
+    let f = Filtration::degree(&g);
+    let pds = persistence_diagrams(&g, &f, 4);
+    assert_eq!(pds.len(), 5);
+    for k in 2..=4 {
+        assert!(pds[k].is_empty(), "PD_{k} of a cycle must be empty");
+    }
+}
+
+// ---------- distances at the boundaries ----------
+
+#[test]
+fn distances_on_empty_diagrams() {
+    let a = coral_prunit::homology::Diagram::new(1, vec![]);
+    let b = coral_prunit::homology::Diagram::new(1, vec![]);
+    assert_eq!(bottleneck(&a, &b), 0.0);
+    assert_eq!(wasserstein1(&a, &b), 0.0);
+}
+
+#[test]
+fn distance_is_zero_between_reduced_and_unreduced() {
+    forall("distance-zero", 15, 0xd15, |rng| {
+        let n = rng.range(4, 18);
+        let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
+        let f = Filtration::degree_superlevel(&g);
+        let base = persistence_diagrams(&g, &f, 1);
+        let r = prunit(&g, &f);
+        let red = persistence_diagrams(&r.graph, &r.filtration, 1);
+        let db = bottleneck(&base[1], &red[1]);
+        let dw = wasserstein1(&base[1], &red[1]);
+        if db > 1e-9 || dw > 1e-9 {
+            return Err(format!("distances nonzero: bottleneck={db}, W1={dw}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------- coordinator failure injection ----------
+
+#[test]
+fn worker_panic_surfaces_as_coordinator_error() {
+    // A filtration/graph mismatch panics inside the worker; the
+    // coordinator must report it as an error, not hang or crash the test.
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 2,
+        max_k: 1,
+        reduction: "prunit".into(),
+        seed: 1,
+    };
+    let coord = Coordinator::new(cfg);
+    let bad = Job::new(
+        0,
+        gen::cycle(5),
+        Filtration::constant(3), // wrong length → panic in worker
+        JobSpec::default(),
+    );
+    let result = coord.run(vec![bad]);
+    assert!(result.is_err(), "panicking worker must surface an error");
+}
+
+#[test]
+fn coordinator_survives_mixed_good_and_tiny_jobs() {
+    let cfg = CoordinatorConfig {
+        workers: 3,
+        queue_depth: 1,
+        max_k: 1,
+        reduction: "prunit+coral".into(),
+        seed: 2,
+    };
+    let coord = Coordinator::new(cfg);
+    let jobs: Vec<Job> = vec![
+        Job::degree_superlevel(0, Graph::empty(0), JobSpec::default()),
+        Job::degree_superlevel(1, Graph::empty(1), JobSpec::default()),
+        Job::degree_superlevel(2, gen::complete(12), JobSpec::default()),
+        Job::degree_superlevel(3, gen::cycle(40), JobSpec::default()),
+    ];
+    let out = coord.run(jobs).unwrap();
+    assert_eq!(out.len(), 4);
+    assert_eq!(out[3].diagrams[1].betti(), 1, "C40 keeps its loop");
+}
+
+// ---------- config + CLI robustness ----------
+
+#[test]
+fn config_file_round_trip_from_disk() {
+    let dir = std::env::temp_dir().join("coral_prunit_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("coordinator.toml");
+    std::fs::write(
+        &path,
+        "[coordinator]\nworkers = 5\nqueue_depth = 9\nmax_k = 2\nreduction = \"coral\"\nseed = 77\n",
+    )
+    .unwrap();
+    let cfg = CoordinatorConfig::from_config(&Config::load(&path).unwrap()).unwrap();
+    assert_eq!(cfg.workers, 5);
+    assert_eq!(cfg.queue_depth, 9);
+    assert_eq!(cfg.max_k, 2);
+    assert_eq!(cfg.reduction, "coral");
+    assert_eq!(cfg.seed, 77);
+}
+
+#[test]
+fn config_missing_file_is_io_error() {
+    assert!(Config::load("/definitely/not/here.toml").is_err());
+}
+
+// ---------- reduction bookkeeping invariants ----------
+
+#[test]
+fn kept_old_ids_always_strictly_ascending() {
+    forall("ids-ascending", 25, 0xa5c, |rng| {
+        let n = rng.range(3, 30);
+        let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+        let f = Filtration::degree_superlevel(&g);
+        for which in [Reduction::Coral, Reduction::Prunit, Reduction::Combined] {
+            let r = combined_with(&g, &f, 1, which);
+            if !r.kept_old_ids.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("{}: ids not ascending", which.name()));
+            }
+            if r.kept_old_ids.len() != r.graph.n() {
+                return Err(format!("{}: id/graph size mismatch", which.name()));
+            }
+            if r.filtration.len() != r.graph.n() {
+                return Err(format!("{}: filtration size mismatch", which.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reduced_graph_is_induced_subgraph() {
+    forall("induced-subgraph", 20, 0x1d5, |rng| {
+        let n = rng.range(4, 25);
+        let g = gen::erdos_renyi(n, 0.3, rng.next_u64());
+        let f = Filtration::degree_superlevel(&g);
+        let r = combined_with(&g, &f, 1, Reduction::Combined);
+        for (a_new, &a_old) in r.kept_old_ids.iter().enumerate() {
+            for (b_new, &b_old) in r.kept_old_ids.iter().enumerate() {
+                let has_new = r.graph.has_edge(a_new as u32, b_new as u32);
+                let has_old = g.has_edge(a_old, b_old);
+                if has_new != has_old {
+                    return Err(format!(
+                        "edge mismatch: new ({a_new},{b_new})={has_new} old ({a_old},{b_old})={has_old}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

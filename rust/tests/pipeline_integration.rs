@@ -1,0 +1,218 @@
+//! Integration tests across the full stack: combined reduction identity,
+//! coordinator batches, the XLA dense path against the sparse path, and
+//! engine-level cross-validation (standard vs twist vs union-find).
+
+use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::coordinator::{Coordinator, Job, JobSpec};
+use coral_prunit::config::CoordinatorConfig;
+use coral_prunit::graph::gen;
+use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
+use coral_prunit::homology::{pd0, persistence_diagrams};
+use coral_prunit::reduce::{combined_with, pd_with_reduction, Reduction};
+use coral_prunit::runtime::{prunit_dense, XlaRuntime};
+use coral_prunit::testutil::{forall, random_filtration, random_graph_case};
+
+/// §5 composition: `PD_k(G) = PD_k((G')^{k+1})` with all four reduction
+/// modes agreeing on PD_k.
+#[test]
+fn all_reduction_modes_agree_on_pd_k() {
+    forall("modes-agree", 40, 0xABCD, |rng| {
+        let case = random_graph_case(rng, 20);
+        let g = &case.graph;
+        let f = random_filtration(rng, g);
+        let k = 1usize;
+        let (base, _) = pd_with_reduction(g, &f, k, Reduction::None);
+        for which in [Reduction::Coral, Reduction::Prunit, Reduction::Combined] {
+            let (red, report) = pd_with_reduction(g, &f, k, which);
+            if !base[k].same_as(&red[k], 1e-9) {
+                return Err(format!(
+                    "{}: PD_{k} via {} ({}→{} vertices): {} vs {}",
+                    case.desc,
+                    which.name(),
+                    report.vertices_before,
+                    report.graph.n(),
+                    base[k],
+                    red[k]
+                ));
+            }
+        }
+        // PrunIT additionally preserves PD_0
+        let (p, _) = pd_with_reduction(g, &f, k, Reduction::Prunit);
+        if !base[0].same_as(&p[0], 1e-9) {
+            return Err(format!("{}: PrunIT broke PD_0", case.desc));
+        }
+        Ok(())
+    });
+}
+
+/// Combined reduces at least as much as either standalone algorithm.
+#[test]
+fn combined_dominates_either_alone() {
+    forall("combined-dominates", 30, 0xBEE, |rng| {
+        let case = random_graph_case(rng, 40);
+        let g = &case.graph;
+        let f = Filtration::degree_superlevel(g);
+        let coral = combined_with(g, &f, 1, Reduction::Coral);
+        let pru = combined_with(g, &f, 1, Reduction::Prunit);
+        let both = combined_with(g, &f, 1, Reduction::Combined);
+        if both.graph.n() > coral.graph.n() || both.graph.n() > pru.graph.n() {
+            return Err(format!(
+                "{}: combined kept {} vs coral {} / prunit {}",
+                case.desc,
+                both.graph.n(),
+                coral.graph.n(),
+                pru.graph.n()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Coordinator on a realistic batch reproduces inline results and its
+/// metrics add up.
+#[test]
+fn coordinator_batch_end_to_end() {
+    let recipe = coral_prunit::datasets::find("DHFR").unwrap();
+    let jobs: Vec<Job> = (0..recipe.instances)
+        .map(|i| Job::degree_superlevel(i as u64, recipe.make(7, i), JobSpec::default()))
+        .collect();
+    let expected: Vec<_> = jobs.iter().map(|j| Coordinator::execute(j, 0)).collect();
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 4,
+        queue_depth: 2,
+        max_k: 1,
+        reduction: "prunit+coral".into(),
+        seed: 7,
+    });
+    let got = coord.run(jobs).unwrap();
+    assert_eq!(got.len(), expected.len());
+    for (a, b) in expected.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        for k in 0..a.diagrams.len() {
+            assert!(a.diagrams[k].same_as(&b.diagrams[k], 1e-12));
+        }
+        assert_eq!(a.reduction.graph.n(), b.reduction.graph.n());
+    }
+    assert_eq!(coord.metrics().completed() as usize, got.len());
+    assert!(coord.metrics().vertex_reduction_pct() > 0.0);
+}
+
+/// Dense (XLA Pallas artifact) and sparse PrunIT both preserve every PD;
+/// their fixed-point sizes agree under degree-superlevel (Remark 8 makes
+/// admissibility vacuous, so both peel maximally).
+#[test]
+fn xla_dense_path_equivalent_to_sparse() {
+    let rt = XlaRuntime::from_default().expect("run `make artifacts` first");
+    forall("dense-vs-sparse", 12, 0xD0D0, |rng| {
+        let case = random_graph_case(rng, 50);
+        let g = &case.graph;
+        if g.n() > rt.max_order() {
+            return Ok(());
+        }
+        let f = Filtration::degree_superlevel(g);
+        let dense = prunit_dense(&rt, g, &f).map_err(|e| e.to_string())?;
+        let sparse = coral_prunit::prune::prunit(g, &f);
+        if dense.graph.n() != sparse.graph.n() {
+            return Err(format!(
+                "{}: dense kept {} vs sparse {}",
+                case.desc,
+                dense.graph.n(),
+                sparse.graph.n()
+            ));
+        }
+        let base = persistence_diagrams(g, &f, 1);
+        let dd = persistence_diagrams(&dense.graph, &dense.filtration, 1);
+        for k in 0..=1 {
+            if !base[k].same_as(&dd[k], 1e-9) {
+                return Err(format!("{}: dense path broke PD_{k}", case.desc));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Engine cross-validation: standard reduction, twist reduction, and the
+/// union-find PD_0 fast path agree everywhere.
+#[test]
+fn engine_three_way_agreement() {
+    forall("engine-agreement", 40, 0xE4, |rng| {
+        let case = random_graph_case(rng, 22);
+        let g = &case.graph;
+        let f = random_filtration(rng, g);
+        let c = CliqueComplex::build(g, &f, 3);
+        let std_pds = diagrams_of_complex(&c, 2, Algorithm::Standard);
+        let twist_pds = diagrams_of_complex(&c, 2, Algorithm::Twist);
+        for k in 0..=2 {
+            if !std_pds[k].same_as(&twist_pds[k], 1e-12) {
+                return Err(format!("{}: standard vs twist PD_{k}", case.desc));
+            }
+        }
+        let uf = pd0(g, &f);
+        if !uf.same_as(&std_pds[0], 1e-12) {
+            return Err(format!(
+                "{}: union-find vs matrix PD_0: {} vs {}",
+                case.desc, uf, std_pds[0]
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Euler characteristic consistency: Σ (−1)^k · #k-simplices =
+/// Σ (−1)^k · β_k for the full clique complex (a deep global check on the
+/// clique enumeration AND the reduction together).
+#[test]
+fn euler_characteristic_matches_betti_alternating_sum() {
+    forall("euler", 25, 0xEC, |rng| {
+        let case = random_graph_case(rng, 16);
+        let g = &case.graph;
+        if g.n() == 0 {
+            return Ok(());
+        }
+        // full clique complex: cap by degeneracy+1 (max clique size)
+        let d = coral_prunit::kcore::degeneracy(g);
+        let max_dim = d + 1;
+        let c = CliqueComplex::build(g, &Filtration::constant(g.n()), max_dim + 1);
+        let counts = c.counts_by_dim();
+        let chi_simplices: i64 = counts
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| if k % 2 == 0 { c as i64 } else { -(c as i64) })
+            .sum();
+        let betti = coral_prunit::homology::betti_numbers(g, max_dim);
+        let chi_betti: i64 = betti
+            .iter()
+            .enumerate()
+            .map(|(k, &b)| if k % 2 == 0 { b as i64 } else { -(b as i64) })
+            .sum();
+        if chi_simplices != chi_betti {
+            return Err(format!(
+                "{}: χ(simplices)={chi_simplices} vs χ(betti)={chi_betti} (counts {counts:?}, betti {betti:?})",
+                case.desc
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Ego-network workload slice (§6.2): PD_0 on 1-hop neighbourhoods with
+/// and without PrunIT agrees for every ego vertex of a citation graph.
+#[test]
+fn ego_network_pd0_with_prunit() {
+    let g = coral_prunit::datasets::recipes::citation(400, 800, 3);
+    let mut rng = coral_prunit::util::Rng::new(9);
+    for _ in 0..25 {
+        let center = rng.below(g.n()) as u32;
+        let verts = g.ego_vertices(center, 1);
+        let (ego, _) = g.induced_on(&verts);
+        let f = Filtration::degree_superlevel(&ego);
+        let base = pd0(&ego, &f);
+        let r = coral_prunit::prune::prunit(&ego, &f);
+        let red = pd0(&r.graph, &r.filtration);
+        assert!(
+            base.same_as(&red, 1e-9),
+            "ego {center}: {base} vs {red} after pruning {} vertices",
+            r.removed
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! Property suite for **Theorem 2 (CoralTDA)**:
+//! `PD_j(G, f) = PD_j(G^{k+1}, f)` for all `j ≥ k`, with `f` restricted
+//! (not recomputed) to the core.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::gen;
+use coral_prunit::homology::persistence_diagrams;
+use coral_prunit::kcore::{degeneracy, kcore_subgraph};
+use coral_prunit::reduce::coral_reduce;
+use coral_prunit::testutil::{forall, random_filtration, random_graph_case};
+
+/// The theorem, quantified over random graphs, filtrations, and k.
+#[test]
+fn theorem2_pd_equality_above_k() {
+    forall("coral-theorem2", 60, 0xC07A1, |rng| {
+        let case = random_graph_case(rng, 22);
+        let g = &case.graph;
+        let f = random_filtration(rng, g);
+        let max_j = 2usize;
+        let before = persistence_diagrams(g, &f, max_j);
+        for k in 1..=max_j {
+            let r = coral_reduce(g, &f, k);
+            let after = persistence_diagrams(&r.graph, &r.filtration, max_j);
+            for j in k..=max_j {
+                if !before[j].same_as(&after[j], 1e-9) {
+                    return Err(format!(
+                        "{}: PD_{j} differs on the {}-core: {} vs {}",
+                        case.desc,
+                        k + 1,
+                        before[j],
+                        after[j]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Below the guarantee (j < k) the diagrams genuinely may differ — make
+/// sure the suite would notice a violation (sanity of the test itself):
+/// PD_0 of the 2-core drops the tree periphery's components.
+#[test]
+fn below_k_equality_fails_as_expected() {
+    // star: 2-core is empty; PD_0 is decidedly nonempty.
+    let g = gen::star(6);
+    let f = Filtration::degree(&g);
+    let r = coral_reduce(&g, &f, 1);
+    assert_eq!(r.graph.n(), 0);
+    let before = persistence_diagrams(&g, &f, 1);
+    assert!(before[0].betti() > 0);
+}
+
+/// Deterministic families across several k.
+#[test]
+fn theorem2_on_deterministic_families() {
+    for g in [
+        gen::cycle(12),
+        gen::complete(7),
+        gen::octahedron(),
+        gen::grid(4, 4),
+        gen::star(9),
+        gen::path(8),
+    ] {
+        let f = Filtration::degree(&g);
+        let before = persistence_diagrams(&g, &f, 2);
+        for k in 1..=2 {
+            let r = coral_reduce(&g, &f, k);
+            let after = persistence_diagrams(&r.graph, &r.filtration, 2);
+            for j in k..=2 {
+                assert!(
+                    before[j].same_as(&after[j], 1e-9),
+                    "PD_{j} via {}-core on n={}: {} vs {}",
+                    k + 1,
+                    g.n(),
+                    before[j],
+                    after[j]
+                );
+            }
+        }
+    }
+}
+
+/// Superlevel variant of the theorem (the filtration direction is
+/// irrelevant to the core argument).
+#[test]
+fn theorem2_superlevel() {
+    forall("coral-superlevel", 25, 99, |rng| {
+        let case = random_graph_case(rng, 18);
+        let g = &case.graph;
+        let f = Filtration::degree_superlevel(g);
+        let before = persistence_diagrams(g, &f, 2);
+        let r = coral_reduce(g, &f, 1);
+        let after = persistence_diagrams(&r.graph, &r.filtration, 2);
+        for j in 1..=2 {
+            if !before[j].same_as(&after[j], 1e-9) {
+                return Err(format!("{}: PD_{j} {} vs {}", case.desc, before[j], after[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The §4.1 structural fact: the clique complex has a (k−1)-simplex iff
+/// the k-core is non-empty (degeneracy bounds the complex dimension).
+#[test]
+fn degeneracy_bounds_complex_dimension() {
+    forall("degeneracy-dimension", 30, 7, |rng| {
+        let case = random_graph_case(rng, 20);
+        let g = &case.graph;
+        let d = degeneracy(g);
+        let complex = coral_prunit::complex::CliqueComplex::build(
+            g,
+            &Filtration::constant(g.n()),
+            d + 2,
+        );
+        if g.n() == 0 {
+            return Ok(());
+        }
+        if complex.dim() > d {
+            return Err(format!(
+                "{}: complex dim {} exceeds degeneracy {d}",
+                case.desc,
+                complex.dim()
+            ));
+        }
+        // conversely the d-core is non-empty by definition of degeneracy
+        let (core, _) = kcore_subgraph(g, d);
+        if core.n() == 0 {
+            return Err(format!("{}: {d}-core empty at degeneracy", case.desc));
+        }
+        Ok(())
+    });
+}
+
+/// Reduction percentages are monotone in k: higher-dimensional targets
+/// peel at least as much (cores are nested).
+#[test]
+fn coral_reduction_monotone_in_k() {
+    forall("coral-monotone", 30, 13, |rng| {
+        let case = random_graph_case(rng, 40);
+        let g = &case.graph;
+        let f = Filtration::degree(g);
+        let mut prev = usize::MAX;
+        for k in 0..5 {
+            let r = coral_reduce(g, &f, k);
+            if r.graph.n() > prev {
+                return Err(format!("{}: core sizes not nested at k={k}", case.desc));
+            }
+            prev = r.graph.n();
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,122 @@
+//! **Theorem 10** (PrunIT for power filtration) and **Remark 11**
+//! (CoralTDA does *not* extend to power filtration — the cyclic-graph
+//! counterexample via Adamaszek's classification).
+
+use coral_prunit::complex::power::power_complex;
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
+use coral_prunit::homology::Diagram;
+use coral_prunit::prune::dominates;
+use coral_prunit::testutil::{forall, random_graph_case};
+
+fn power_pds(g: &Graph, max_k: usize, max_power: usize) -> Vec<Diagram> {
+    let c = power_complex(g, max_k + 1, max_power);
+    diagrams_of_complex(&c, max_k, Algorithm::Twist)
+}
+
+/// Theorem 10: removing a dominated vertex preserves power-filtration
+/// PD_k for k ≥ 1 on connected graphs.
+#[test]
+fn theorem10_dominated_removal_preserves_power_pds() {
+    forall("power-theorem10", 40, 0x70, |rng| {
+        let case = random_graph_case(rng, 12);
+        let g = &case.graph;
+        if !g.is_connected() || g.n() < 3 {
+            return Ok(()); // theorem assumes connected
+        }
+        // find a dominated vertex (no f condition in Thm 10)
+        let mut target = None;
+        'outer: for u in 0..g.n() as u32 {
+            for &v in g.neighbors(u) {
+                if dominates(g, u, v) {
+                    target = Some(u);
+                    break 'outer;
+                }
+            }
+        }
+        let Some(u) = target else { return Ok(()) };
+        let keep: Vec<bool> = (0..g.n() as u32).map(|v| v != u).collect();
+        let (h, _) = g.induced(&keep);
+        let max_power = 3;
+        let before = power_pds(g, 2, max_power);
+        let after = power_pds(&h, 2, max_power);
+        for k in 1..=2 {
+            if !before[k].same_as(&after[k], 1e-9) {
+                return Err(format!(
+                    "{}: power PD_{k} changed after removing dominated {u}: {} vs {}",
+                    case.desc, before[k], after[k]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Remark 11 counterexample, concrete instance: C₇ has an empty 3-core,
+/// yet its power filtration carries a nontrivial PD_1 point and C₉'s
+/// square (power 2) already has interesting higher structure. If CoralTDA
+/// were valid for power filtrations, PD_k(Cₙ) would be trivial for k ≥ 2
+/// — verify the premise (empty 3-core) and the nontrivial power PDs.
+#[test]
+fn remark11_cycles_power_filtration_counterexample() {
+    for n in [7usize, 9, 11] {
+        let g = gen::cycle(n);
+        // 3-core of any cycle is empty
+        let (core3, _) = coral_prunit::kcore::kcore_subgraph(&g, 3);
+        assert_eq!(core3.n(), 0, "C{n} must have empty 3-core");
+        // power filtration has a 1-dimensional feature (the circle persists
+        // until the power fills it)
+        let pds = power_pds(&g, 1, (n - 1) / 2);
+        assert!(
+            !pds[1].is_trivial(),
+            "C{n} power filtration should carry PD_1 points, got {}",
+            pds[1]
+        );
+    }
+}
+
+/// Adamaszek (Rmk 11): clique complexes of cycle powers are spheres or
+/// wedges — for C₅, power 2 gives K₅ (contractible complex via full
+/// simplex); cross-check a few closed forms the power engine must hit.
+#[test]
+fn cycle_power_closed_forms() {
+    // C4 at power 1: the square → β1 = 1; at power 2: K4 → contractible.
+    let g = gen::cycle(4);
+    let p1 = power_pds(&g, 1, 1);
+    assert_eq!(p1[1].betti(), 1);
+    let p2 = power_pds(&g, 1, 2);
+    // the essential loop from power 1 must DIE at power 2 (diagonals fill)
+    assert_eq!(p2[1].betti(), 0);
+    let pts = p2[1].points();
+    assert!(
+        pts.iter().any(|&(b, d)| b == 1.0 && d == 2.0),
+        "loop born at 1 should die at 2, got {:?}",
+        pts
+    );
+}
+
+/// PD_0 of the power filtration of a connected graph: everything merges
+/// at power 1 (the paper notes dimension 0 is trivial for power
+/// filtrations of connected graphs).
+#[test]
+fn power_pd0_trivial_for_connected() {
+    forall("power-pd0", 20, 0xF0, |rng| {
+        let case = random_graph_case(rng, 12);
+        let g = &case.graph;
+        if !g.is_connected() || g.n() < 2 {
+            return Ok(());
+        }
+        let pds = power_pds(g, 0, 2);
+        let pts = pds[0].points();
+        // one essential class born at 0; all other components die at 1
+        let essential = pts.iter().filter(|p| p.1.is_infinite()).count();
+        if essential != 1 {
+            return Err(format!("{}: {} essential components", case.desc, essential));
+        }
+        if pts.iter().any(|&(b, d)| d.is_finite() && (b, d) != (0.0, 1.0)) {
+            return Err(format!("{}: finite PD_0 point not (0,1): {:?}", case.desc, pts));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,191 @@
+//! Property suite for **Theorem 7 (PrunIT)** and **Remark 8**:
+//! removing a dominated vertex `u` with admissible `f` preserves every
+//! persistence diagram, for sublevel and superlevel filtrations — both
+//! for a single removal and for the full fixed-point algorithm.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::persistence_diagrams;
+use coral_prunit::prune::{find_dominator, prunit, strong_collapse_core};
+use coral_prunit::testutil::{forall, random_filtration, random_graph_case};
+
+/// Single-removal form of Theorem 7: find any admissible dominated vertex,
+/// remove exactly it, compare all PDs.
+#[test]
+fn theorem7_single_removal() {
+    forall("prunit-single", 60, 0x9147, |rng| {
+        let case = random_graph_case(rng, 20);
+        let g = &case.graph;
+        let f = random_filtration(rng, g);
+        // find the first admissible dominated vertex, if any
+        let target = (0..g.n() as u32).find(|&u| find_dominator(g, &f, u).is_some());
+        let Some(u) = target else { return Ok(()) };
+        let keep: Vec<bool> = (0..g.n() as u32).map(|v| v != u).collect();
+        let (h, ids) = g.induced(&keep);
+        let fh = f.restrict(&ids);
+        let before = persistence_diagrams(g, &f, 2);
+        let after = persistence_diagrams(&h, &fh, 2);
+        for k in 0..=2 {
+            if !before[k].same_as(&after[k], 1e-9) {
+                return Err(format!(
+                    "{}: removing dominated {u} changed PD_{k}: {} vs {}",
+                    case.desc, before[k], after[k]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Fixed-point form: the full PrunIT output has all the original PDs.
+#[test]
+fn theorem7_fixed_point_all_dimensions() {
+    forall("prunit-fixedpoint", 50, 0x517, |rng| {
+        let case = random_graph_case(rng, 20);
+        let g = &case.graph;
+        let f = random_filtration(rng, g);
+        let r = prunit(g, &f);
+        let before = persistence_diagrams(g, &f, 2);
+        let after = persistence_diagrams(&r.graph, &r.filtration, 2);
+        for k in 0..=2 {
+            if !before[k].same_as(&after[k], 1e-9) {
+                return Err(format!(
+                    "{}: PrunIT (removed {}) changed PD_{k}: {} vs {}",
+                    case.desc, r.removed, before[k], after[k]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Remark 8: with `f = degree` under superlevel, every vertex dominated
+/// *in the original graph* is admissible (`deg(u) ≤ deg(v)` whenever v
+/// dominates u). Note this holds only while f's degree values match the
+/// graph being inspected — after removals the restricted f keeps ORIGINAL
+/// degrees (Remark 1), so later sweeps may legitimately be blocked. The
+/// unconditional Strong Collapse is therefore a lower bound on size.
+#[test]
+fn remark8_degree_superlevel_first_pass_vacuous() {
+    forall("remark8", 40, 0x88, |rng| {
+        let case = random_graph_case(rng, 30);
+        let g = &case.graph;
+        let f = Filtration::degree_superlevel(g);
+        // (a) in the original graph, domination ⇒ admissibility
+        for u in 0..g.n() as u32 {
+            for &v in g.neighbors(u) {
+                if coral_prunit::prune::dominates(g, u, v) && !f.admissible_removal(u, v) {
+                    return Err(format!(
+                        "{}: {u} dominated by {v} but inadmissible under degree-superlevel",
+                        case.desc
+                    ));
+                }
+            }
+        }
+        // (b) PrunIT with the condition can never beat the unconditional
+        //     collapse, and must remove every originally-dominated vertex
+        //     class at least once (removed ≥ 1 whenever SC removes).
+        let r = prunit(g, &f);
+        let (sc, _, sc_removed) = strong_collapse_core(g);
+        if r.graph.n() < sc.n() {
+            return Err(format!(
+                "{}: prunit kept {} < unconditional collapse {}",
+                case.desc,
+                r.graph.n(),
+                sc.n()
+            ));
+        }
+        if sc_removed > 0 && r.removed == 0 {
+            return Err(format!(
+                "{}: SC removed {sc_removed} but PrunIT removed none despite Rmk 8",
+                case.desc
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// An *inadmissible* removal genuinely breaks diagrams — the test suite
+/// can detect violations (negative control for the property above).
+#[test]
+fn inadmissible_removal_breaks_pd0() {
+    // path 0-1-2, sublevel f = [1, 0, 1]: vertex 0 dominated by 1 and
+    // admissible... choose f = [0, 1, 0]: vertex 0 dominated by 1 but
+    // f(0) < f(1) — removing it anyway changes PD_0.
+    let g = gen::path(3);
+    let f = Filtration::sublevel(vec![0.0, 1.0, 0.0]);
+    let keep = vec![false, true, true];
+    let (h, ids) = g.induced(&keep);
+    let fh = f.restrict(&ids);
+    let before = persistence_diagrams(&g, &f, 0);
+    let after = persistence_diagrams(&h, &fh, 0);
+    // Before: components born at 0 (two of them; one dies at 1), essential
+    // min birth 0. After: births at 0 and 1 → the (0, 1) point vanishes.
+    assert!(
+        !before[0].same_as(&after[0], 1e-9),
+        "negative control failed: {} vs {}",
+        before[0],
+        after[0]
+    );
+}
+
+/// Figure 3 worked example from the paper.
+#[test]
+fn paper_figure3_prunes_dominated_vertices() {
+    // 0-indexed Fig 3: vertices 0,1 dominated by 2 (all their neighbours
+    // are neighbours of 2).
+    let g = Graph::from_edges(5, &[(0, 1), (0, 2), (1, 2), (2, 3), (2, 4), (3, 4)]);
+    let f = Filtration::degree_superlevel(&g);
+    let r = prunit(&g, &f);
+    let before = persistence_diagrams(&g, &f, 2);
+    let after = persistence_diagrams(&r.graph, &r.filtration, 2);
+    for k in 0..=2 {
+        assert!(before[k].same_as(&after[k], 1e-9));
+    }
+    assert!(r.removed >= 2, "both triangles collapse into the hub");
+}
+
+/// PrunIT never removes vertices from domination-free graphs.
+#[test]
+fn irreducible_graphs_are_untouched() {
+    for g in [gen::cycle(9), gen::grid(3, 4), gen::octahedron()] {
+        let f = Filtration::degree_superlevel(&g);
+        let r = prunit(&g, &f);
+        assert_eq!(r.removed, 0, "n={} should be irreducible", g.n());
+    }
+}
+
+/// Idempotence: running PrunIT twice changes nothing the second time.
+#[test]
+fn prunit_is_idempotent() {
+    forall("prunit-idempotent", 30, 0x1de, |rng| {
+        let case = random_graph_case(rng, 30);
+        let f = random_filtration(rng, &case.graph);
+        let r1 = prunit(&case.graph, &f);
+        let r2 = prunit(&r1.graph, &r1.filtration);
+        if r2.removed != 0 {
+            return Err(format!(
+                "{}: second pass removed {} more vertices",
+                case.desc, r2.removed
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Lemma 5 (homotopy equivalence) at the Betti level for the
+/// unconditional collapse.
+#[test]
+fn lemma5_collapse_preserves_betti() {
+    forall("lemma5", 40, 0x1e5, |rng| {
+        let case = random_graph_case(rng, 18);
+        let g = &case.graph;
+        let (h, _, _) = strong_collapse_core(g);
+        let b_g = coral_prunit::homology::betti_numbers(g, 2);
+        let b_h = coral_prunit::homology::betti_numbers(&h, 2);
+        if b_g != b_h {
+            return Err(format!("{}: betti {b_g:?} vs {b_h:?}", case.desc));
+        }
+        Ok(())
+    });
+}
