@@ -1,0 +1,135 @@
+//! **Shard scaling**: component-sharded PH vs the monolithic engine.
+//!
+//! The boundary-matrix reduction is cubic in total simplices, so a graph
+//! of `c` equal components costs the monolith `O((c·n)³)` but the sharded
+//! pipeline `c·O(n³)` — before parallelism even starts. Two workloads:
+//!
+//! * multi-component Erdős–Rényi unions (c ∈ {2, 4, 8} pieces), and
+//! * post-coral graphs: decorated-cycle networks whose 2-core shatters
+//!   into many small components (the regime CoralTDA produces).
+//!
+//! Reported: monolithic wall-time vs sharded wall-time at 1/2/4 workers.
+
+use coral_prunit::bench::{bench, sink};
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::decompose::{decompose_filtered, disjoint_union};
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::{persistence_diagrams, persistence_diagrams_sharded};
+use coral_prunit::reduce::{coral_reduce, pd_sharded, pd_with_reduction, Reduction};
+use coral_prunit::util::Table;
+
+const SEED: u64 = 42;
+const K: usize = 1;
+
+fn er_union(pieces: usize, n: usize, p: f64) -> Graph {
+    let parts: Vec<Graph> = (0..pieces)
+        .map(|i| gen::erdos_renyi(n, p, SEED ^ (i as u64 + 1)))
+        .collect();
+    disjoint_union(&parts)
+}
+
+/// A network whose 2-core shatters: `pieces` cycles, each decorated with
+/// pendant trees that coral peels away.
+fn shattering_graph(pieces: usize) -> Graph {
+    let parts: Vec<Graph> = (0..pieces)
+        .map(|i| {
+            let cyc = gen::cycle(24 + i);
+            let n = cyc.n() as u32;
+            let mut edges: Vec<(u32, u32)> = cyc.edges().collect();
+            // a pendant path of 6 vertices off vertex 0
+            for j in 0..6u32 {
+                let a = if j == 0 { 0 } else { n + j - 1 };
+                edges.push((a, n + j));
+            }
+            Graph::from_edges(n as usize + 6, &edges)
+        })
+        .collect();
+    disjoint_union(&parts)
+}
+
+fn main() {
+    let mut t = Table::new(
+        "shard scaling — monolithic vs component-sharded PD_0..PD_1 wall-time",
+        &[
+            "workload", "n", "m", "shards", "mono_ms", "shard_w1_ms", "shard_w2_ms",
+            "shard_w4_ms", "speedup_w2",
+        ],
+    );
+
+    // --- multi-component ER unions -------------------------------------
+    for pieces in [2usize, 4, 8] {
+        let g = er_union(pieces, 70, 0.12);
+        let f = Filtration::degree_superlevel(&g);
+        let shards = decompose_filtered(&g, &f).len();
+        let mono = bench(1, 3, || sink(persistence_diagrams(&g, &f, K).len()));
+        let w1 = bench(1, 3, || {
+            sink(persistence_diagrams_sharded(&g, &f, K, 1).len())
+        });
+        let w2 = bench(1, 3, || {
+            sink(persistence_diagrams_sharded(&g, &f, K, 2).len())
+        });
+        let w4 = bench(1, 3, || {
+            sink(persistence_diagrams_sharded(&g, &f, K, 4).len())
+        });
+        t.row(&[
+            format!("ER x{pieces}"),
+            g.n().to_string(),
+            g.m().to_string(),
+            shards.to_string(),
+            format!("{:.2}", mono.median_ms()),
+            format!("{:.2}", w1.median_ms()),
+            format!("{:.2}", w2.median_ms()),
+            format!("{:.2}", w4.median_ms()),
+            format!("{:.2}x", mono.median_secs / w2.median_secs.max(1e-12)),
+        ]);
+    }
+
+    // --- post-coral shattering -----------------------------------------
+    for pieces in [4usize, 12] {
+        let g = shattering_graph(pieces);
+        let f = Filtration::degree_superlevel(&g);
+        // monolithic: coral-reduce then one big PH call
+        let mono = bench(1, 3, || {
+            let r = coral_reduce(&g, &f, K);
+            sink(persistence_diagrams(&r.graph, &r.filtration, K).len())
+        });
+        // sharded: the pd_sharded entry point (reduce + split + parallel PH)
+        let time_sharded = |workers: usize| {
+            bench(1, 3, || {
+                sink(pd_sharded(&g, &f, K, Reduction::Coral, workers).0.len())
+            })
+        };
+        let w1 = time_sharded(1);
+        let w2 = time_sharded(2);
+        let w4 = time_sharded(4);
+        let (_, report) = pd_sharded(&g, &f, K, Reduction::Coral, 2);
+        t.row(&[
+            format!("coral-shatter x{pieces}"),
+            g.n().to_string(),
+            g.m().to_string(),
+            report.shard_count().to_string(),
+            format!("{:.2}", mono.median_ms()),
+            format!("{:.2}", w1.median_ms()),
+            format!("{:.2}", w2.median_ms()),
+            format!("{:.2}", w4.median_ms()),
+            format!("{:.2}x", mono.median_secs / w2.median_secs.max(1e-12)),
+        ]);
+    }
+
+    t.emit(Some("bench_results.tsv"));
+
+    // Exactness spot-check alongside the timing claim.
+    let g = er_union(4, 70, 0.12);
+    let f = Filtration::degree_superlevel(&g);
+    let (mono, _) = pd_with_reduction(&g, &f, K, Reduction::None);
+    let sharded = persistence_diagrams_sharded(&g, &f, K, 2);
+    for k in 0..=K {
+        assert!(
+            mono[k].same_as(&sharded[k], 1e-12),
+            "sharded PD_{k} diverged from monolithic"
+        );
+    }
+    println!("exactness verified: sharded == monolithic on the ER x4 union ✓");
+    println!("expected shape: sharded beats monolithic already at 1 worker (Σnᵢ³ < (Σnᵢ)³),");
+    println!("and scales further with workers while the largest shard bounds the critical path.");
+}

@@ -9,7 +9,7 @@ use crate::coordinator::{Coordinator, Job, JobSpec};
 use crate::datasets;
 use crate::error::{Error, Result};
 use crate::homology::persistence_diagrams;
-use crate::reduce::{combined_with, Reduction};
+use crate::reduce::{combined_with, pd_sharded, pd_with_reduction, Reduction};
 use crate::runtime::XlaRuntime;
 use crate::util::Table;
 
@@ -93,14 +93,16 @@ COMMANDS:
            [--k K] [--reduction none|coral|prunit|combined] [--seed S]
   pd       --dataset NAME      persistence diagrams of instance 0
            [--k K] [--seed S] [--instance I]
+           [--reduction none|coral|prunit|combined]
+           [--shard] [--workers W]   component-sharded parallel PH
   batch    --dataset NAME      run the batch coordinator over all instances
            [--config FILE] [--workers W] [--k K] [--seed S]
   dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
-           [--seed S]
+           [--seed S]          (needs the `xla` build feature + artifacts)
   help                         this text
 
 Datasets: see `repro info`. Experiments (paper tables/figures) live in
-`cargo bench` targets; see DESIGN.md §5 for the index.
+`cargo bench` targets; see README.md for the index.
 ";
 
 /// Entry: dispatch a parsed command, returning the process exit code.
@@ -132,7 +134,7 @@ fn dataset_flag(args: &Args) -> Result<datasets::Recipe> {
 
 fn cmd_info() -> Result<i32> {
     let mut t = Table::new(
-        "dataset registry (synthetic stand-ins; DESIGN.md §4)",
+        "dataset registry (synthetic stand-ins; README.md §Datasets)",
         &["name", "kind", "n", "instances", "scale_down", "family"],
     );
     let groups: [(&str, Vec<datasets::Recipe>); 4] = [
@@ -198,15 +200,44 @@ fn cmd_pd(args: &Args) -> Result<i32> {
     let k = args.flag_usize("k", 1)?;
     let seed = args.flag_u64("seed", 42)?;
     let idx = args.flag_usize("instance", 0)?;
+    let which = parse_reduction(args.flag("reduction").unwrap_or("none"))?;
+    let shard = args.flag("shard").map(|v| v != "false").unwrap_or(false);
+    let default_workers = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(2);
+    let workers = args.flag_usize("workers", default_workers)?;
     let g = recipe.make(seed, idx);
     let f = Filtration::degree_superlevel(&g);
-    let pds = persistence_diagrams(&g, &f, k);
     println!(
         "{} instance {idx}: n={} m={}",
         recipe.name,
         g.n(),
         g.m()
     );
+    let pds = if shard {
+        let (pds, report) = pd_sharded(&g, &f, k, which, workers);
+        println!(
+            "sharded: reduction={} {}->{} vertices, {} shards (largest {}), {workers} workers",
+            report.which.name(),
+            report.vertices_before,
+            report.graph.n(),
+            report.shard_count(),
+            report.largest_shard(),
+        );
+        pds
+    } else if which != Reduction::None {
+        let (pds, report) = pd_with_reduction(&g, &f, k, which);
+        println!(
+            "reduced: {} {}->{} vertices ({:.1}%)",
+            report.which.name(),
+            report.vertices_before,
+            report.graph.n(),
+            report.vertex_reduction_pct(),
+        );
+        pds
+    } else {
+        persistence_diagrams(&g, &f, k)
+    };
     for d in &pds {
         println!("  {d}");
     }
@@ -342,5 +373,23 @@ mod tests {
     fn bad_flag_value_errors() {
         let a = Args::parse(&argv("reduce --k abc")).unwrap();
         assert!(a.flag_usize("k", 0).is_err());
+    }
+
+    #[test]
+    fn pd_sharded_path_runs_end_to_end() {
+        // DHFR instance 0 is a ~40-vertex molecule graph: cheap, and the
+        // sharded pipeline must accept boolean `--shard` + `--workers`.
+        assert_eq!(
+            run(&argv("pd --dataset DHFR --shard --workers 2 --k 1")).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn pd_reduction_flag_runs() {
+        assert_eq!(
+            run(&argv("pd --dataset DHFR --reduction combined --k 1")).unwrap(),
+            0
+        );
     }
 }

@@ -39,6 +39,17 @@ impl Graph {
         Graph { offsets, neighbors }
     }
 
+    /// Assemble from raw CSR parts (crate-internal, used by
+    /// [`crate::graph::decompose`] and friends to skip the per-edge
+    /// rebuild). Callers guarantee per-vertex neighbour lists are sorted
+    /// and symmetric.
+    pub(crate) fn from_csr_parts(offsets: Vec<usize>, neighbors: Vec<u32>) -> Graph {
+        debug_assert_eq!(offsets.first(), Some(&0));
+        debug_assert_eq!(offsets.last().copied(), Some(neighbors.len()));
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]));
+        Graph { offsets, neighbors }
+    }
+
     /// Graph with `n` vertices and no edges.
     pub fn empty(n: usize) -> Graph {
         Graph {
@@ -148,28 +159,10 @@ impl Graph {
     }
 
     /// Number of connected components (isolated vertices count).
+    /// The labelled variant lives in [`crate::graph::decompose`], which
+    /// also materialises the per-component subgraphs for shard execution.
     pub fn components(&self) -> usize {
-        let n = self.n();
-        let mut seen = vec![false; n];
-        let mut stack = Vec::new();
-        let mut comps = 0;
-        for s in 0..n {
-            if seen[s] {
-                continue;
-            }
-            comps += 1;
-            seen[s] = true;
-            stack.push(s as u32);
-            while let Some(v) = stack.pop() {
-                for &w in self.neighbors(v) {
-                    if !seen[w as usize] {
-                        seen[w as usize] = true;
-                        stack.push(w);
-                    }
-                }
-            }
-        }
-        comps
+        crate::graph::decompose::component_labels(self).1
     }
 
     pub fn is_connected(&self) -> bool {

@@ -1,0 +1,221 @@
+//! Connected-component decomposition — the sharding substrate of the
+//! component-sharded persistence pipeline (see `homology::sharded`).
+//!
+//! Persistence diagrams are additive over disjoint unions: the boundary
+//! matrix of `G = G₁ ⊔ … ⊔ G_c` is block-diagonal in any filtration
+//! order, so column reduction never mixes blocks and every persistence
+//! pair lives inside one component. Splitting before PH therefore turns
+//! the `O((Σnᵢ)³)` monolithic reduction into `Σ O(nᵢ³)` independent jobs
+//! — an *exact* reduction in the same spirit as Theorems 2 and 7, and
+//! CoralTDA's (k+1)-core typically shatters a network into many small
+//! components, which is precisely when sharding pays off.
+
+use crate::complex::Filtration;
+use crate::graph::Graph;
+
+/// One connected component of a graph, as an induced subgraph.
+#[derive(Clone, Debug)]
+pub struct Component {
+    /// The component with vertices compacted to `0..nᵢ`.
+    pub graph: Graph,
+    /// `new id -> old id` (ascending), as in every reduction in the crate.
+    pub kept_old_ids: Vec<u32>,
+}
+
+/// One shard of a sharded PH job: a component plus its restricted
+/// filtration (original values, per Remark 1 — never recomputed).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub graph: Graph,
+    pub filtration: Filtration,
+    pub kept_old_ids: Vec<u32>,
+}
+
+/// Label every vertex with its component id (`0..count`, in order of the
+/// smallest vertex of each component) and return the component count.
+/// This is the labelled extension of [`Graph::components`].
+pub fn component_labels(g: &Graph) -> (Vec<u32>, usize) {
+    let n = g.n();
+    let mut label = vec![u32::MAX; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mut count: u32 = 0;
+    for s in 0..n as u32 {
+        if label[s as usize] != u32::MAX {
+            continue;
+        }
+        label[s as usize] = count;
+        stack.push(s);
+        while let Some(v) = stack.pop() {
+            for &w in g.neighbors(v) {
+                if label[w as usize] == u32::MAX {
+                    label[w as usize] = count;
+                    stack.push(w);
+                }
+            }
+        }
+        count += 1;
+    }
+    (label, count as usize)
+}
+
+/// Split a graph into its connected components in O(n + m) total — one
+/// labelling pass plus one CSR re-assembly pass per component (no O(n)
+/// mask per component, so a graph of many isolates stays linear).
+pub fn decompose(g: &Graph) -> Vec<Component> {
+    let (labels, count) = component_labels(g);
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); count];
+    for v in 0..g.n() as u32 {
+        members[labels[v as usize] as usize].push(v);
+    }
+    // Global old -> new map; within a component the assignment is
+    // monotone, so mapped neighbour lists stay sorted.
+    let mut new_id = vec![0u32; g.n()];
+    for part in &members {
+        for (i, &v) in part.iter().enumerate() {
+            new_id[v as usize] = i as u32;
+        }
+    }
+    members
+        .into_iter()
+        .map(|old_ids| {
+            let mut offsets = Vec::with_capacity(old_ids.len() + 1);
+            let mut neighbors = Vec::new();
+            offsets.push(0);
+            for &v in &old_ids {
+                neighbors.extend(g.neighbors(v).iter().map(|&w| new_id[w as usize]));
+                offsets.push(neighbors.len());
+            }
+            Component {
+                graph: Graph::from_csr_parts(offsets, neighbors),
+                kept_old_ids: old_ids,
+            }
+        })
+        .collect()
+}
+
+/// Split `(G, f)` into per-component shards, restricting the filtration
+/// to each component (original values; Remark 1).
+pub fn decompose_filtered(g: &Graph, f: &Filtration) -> Vec<Shard> {
+    f.check(g).expect("filtration must match graph");
+    decompose(g)
+        .into_iter()
+        .map(|c| {
+            let filtration = f.restrict(&c.kept_old_ids);
+            Shard {
+                graph: c.graph,
+                filtration,
+                kept_old_ids: c.kept_old_ids,
+            }
+        })
+        .collect()
+}
+
+/// Disjoint union `G₁ ⊔ … ⊔ G_c` with vertex ids offset in input order —
+/// the inverse operation of [`decompose`], used by the shard tests and
+/// the multi-component bench generators.
+pub fn disjoint_union(parts: &[Graph]) -> Graph {
+    let total: usize = parts.iter().map(|g| g.n()).sum();
+    let mut offsets = Vec::with_capacity(total + 1);
+    let mut neighbors = Vec::new();
+    offsets.push(0);
+    let mut base: u32 = 0;
+    for g in parts {
+        for v in 0..g.n() as u32 {
+            neighbors.extend(g.neighbors(v).iter().map(|&w| w + base));
+            offsets.push(neighbors.len());
+        }
+        base += g.n() as u32;
+    }
+    Graph::from_csr_parts(offsets, neighbors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn labels_match_component_count() {
+        let g = Graph::from_edges(5, &[(0, 1), (2, 3)]);
+        let (labels, count) = component_labels(&g);
+        assert_eq!(count, 3);
+        assert_eq!(count, g.components());
+        assert_eq!(labels, vec![0, 0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn decompose_partitions_vertices_and_edges() {
+        let g = disjoint_union(&[gen::cycle(5), gen::complete(4), Graph::empty(3)]);
+        let parts = decompose(&g);
+        assert_eq!(parts.len(), 5); // cycle, K4, three isolates
+        let n_sum: usize = parts.iter().map(|p| p.graph.n()).sum();
+        let m_sum: usize = parts.iter().map(|p| p.graph.m()).sum();
+        assert_eq!(n_sum, g.n());
+        assert_eq!(m_sum, g.m());
+        // kept_old_ids are ascending and jointly cover 0..n exactly once
+        let mut all: Vec<u32> = Vec::new();
+        for p in &parts {
+            assert!(p.kept_old_ids.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(p.kept_old_ids.len(), p.graph.n());
+            all.extend_from_slice(&p.kept_old_ids);
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..g.n() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn components_are_induced_subgraphs() {
+        let g = disjoint_union(&[gen::erdos_renyi(12, 0.3, 7), gen::path(6), gen::star(5)]);
+        for p in decompose(&g) {
+            for a in 0..p.graph.n() as u32 {
+                for b in 0..p.graph.n() as u32 {
+                    assert_eq!(
+                        p.graph.has_edge(a, b),
+                        g.has_edge(p.kept_old_ids[a as usize], p.kept_old_ids[b as usize])
+                    );
+                }
+            }
+            assert!(p.graph.is_connected());
+        }
+    }
+
+    #[test]
+    fn connected_graph_is_one_component() {
+        let g = gen::barabasi_albert(30, 2, 3);
+        let parts = decompose(&g);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].graph, g);
+        assert_eq!(parts[0].kept_old_ids, (0..30).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn empty_graph_decomposes_to_nothing() {
+        assert!(decompose(&Graph::empty(0)).is_empty());
+        assert_eq!(disjoint_union(&[]).n(), 0);
+    }
+
+    #[test]
+    fn filtered_shards_keep_original_values() {
+        let g = disjoint_union(&[gen::cycle(4), gen::star(4)]);
+        let f = Filtration::superlevel((0..8).map(|v| v as f64).collect());
+        for s in decompose_filtered(&g, &f) {
+            for (new, &old) in s.kept_old_ids.iter().enumerate() {
+                assert_eq!(s.filtration.value(new as u32), f.value(old));
+            }
+            assert_eq!(s.filtration.direction(), f.direction());
+        }
+    }
+
+    #[test]
+    fn union_then_decompose_roundtrips_sizes() {
+        let parts = [gen::cycle(6), gen::complete(5), gen::grid(3, 3)];
+        let g = disjoint_union(&parts);
+        let back = decompose(&g);
+        assert_eq!(back.len(), parts.len());
+        let mut got: Vec<usize> = back.iter().map(|p| p.graph.n()).collect();
+        let mut want: Vec<usize> = parts.iter().map(|p| p.n()).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

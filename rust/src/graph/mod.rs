@@ -1,11 +1,14 @@
-//! Graph substrate: compact CSR graphs, builders, IO, generators, and
-//! clustering-coefficient analysis (S1/S2/S10 in DESIGN.md).
+//! Graph substrate: compact CSR graphs, builders, IO, generators,
+//! clustering-coefficient analysis, and connected-component
+//! decomposition (the sharding substrate; see README.md).
 
 pub mod builder;
 pub mod clustering;
 pub mod core;
+pub mod decompose;
 pub mod gen;
 pub mod io;
 
 pub use builder::GraphBuilder;
 pub use core::Graph;
+pub use decompose::{decompose, decompose_filtered, disjoint_union, Component, Shard};

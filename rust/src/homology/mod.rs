@@ -6,12 +6,14 @@
 pub mod diagram;
 pub mod distance;
 pub mod reduction;
+pub mod sharded;
 pub mod union_find;
 pub mod vectorize;
 
 pub use diagram::Diagram;
 pub use distance::{bottleneck, wasserstein1};
 pub use reduction::{diagrams_of_complex, Algorithm, BoundaryMatrix};
+pub use sharded::{merge_shard_diagrams, persistence_diagrams_sharded};
 pub use union_find::pd0;
 
 use crate::complex::{CliqueComplex, Filtration};

@@ -1,0 +1,210 @@
+//! Component-sharded persistence: run the reduce→PH path once per
+//! connected component and merge the diagrams exactly.
+//!
+//! Soundness: the clique complex of a disjoint union is the disjoint
+//! union of the clique complexes, its boundary matrix is block-diagonal
+//! in every filtration order, and column reduction never mixes blocks —
+//! so for every `k`, `PD_k(G₁ ⊔ … ⊔ G_c)` is the multiset union of the
+//! per-component `PD_k`s. (For `PD_0` each component contributes exactly
+//! one essential class, which is what the union yields.) The merge below
+//! is therefore plain concatenation followed by the canonical sort.
+//!
+//! Cost: the monolithic boundary-matrix reduction is cubic in total
+//! simplices, `O((Σ nᵢ)³)`; sharding pays `Σ O(nᵢ³)` and the shards run
+//! in parallel on std threads — the same worker-pool shape as
+//! `coordinator::pool`, specialised to pre-materialised shards (an
+//! atomic work index replaces the bounded job queue because there is no
+//! producer to backpressure).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::complex::Filtration;
+use crate::graph::decompose::{decompose_filtered, Shard};
+use crate::graph::Graph;
+
+use super::diagram::Diagram;
+use super::persistence_diagrams;
+
+/// Diagrams `PD_0..PD_max_k` of a single shard. Singleton shards (the
+/// isolated-vertex fringe that PrunIT and coral leave behind in bulk)
+/// short-circuit to their one essential component instead of building a
+/// complex.
+pub fn shard_diagrams(shard: &Shard, max_k: usize) -> Vec<Diagram> {
+    if shard.graph.n() == 1 {
+        let mut out = Vec::with_capacity(max_k + 1);
+        out.push(Diagram::new(
+            0,
+            vec![(shard.filtration.key(0), f64::INFINITY)],
+        ));
+        for k in 1..=max_k {
+            out.push(Diagram::new(k, Vec::new()));
+        }
+        return out;
+    }
+    persistence_diagrams(&shard.graph, &shard.filtration, max_k)
+}
+
+/// Per-shard diagrams for a whole shard set, computed on up to `workers`
+/// std threads. Shards are dispatched largest-first (LPT scheduling): PH
+/// cost is superlinear in shard order, so starting the big shards first
+/// keeps the makespan near `max(largest shard, total/workers)` even on
+/// skewed shard sets. Deterministic: results land in shard order
+/// regardless of scheduling, and each shard's computation is itself
+/// deterministic.
+pub fn all_shard_diagrams(shards: &[Shard], max_k: usize, workers: usize) -> Vec<Vec<Diagram>> {
+    let workers = workers.max(1).min(shards.len().max(1));
+    if workers == 1 {
+        return shards.iter().map(|s| shard_diagrams(s, max_k)).collect();
+    }
+    let mut order: Vec<usize> = (0..shards.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(shards[i].graph.n()));
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Vec<Diagram>> = vec![Vec::new(); shards.len()];
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, Vec<Diagram>)>();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let order = &order;
+            scope.spawn(move || loop {
+                let slot = next.fetch_add(1, Ordering::Relaxed);
+                if slot >= order.len() {
+                    break;
+                }
+                let i = order[slot];
+                if tx.send((i, shard_diagrams(&shards[i], max_k))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, pds) in rx {
+            out[i] = pds;
+        }
+    });
+    out
+}
+
+/// Exact merge of per-shard diagrams: multiset union per dimension
+/// (`Diagram::new` restores the canonical sorted order). An empty shard
+/// set yields empty diagrams — the PDs of the empty graph.
+pub fn merge_shard_diagrams(parts: &[Vec<Diagram>], max_k: usize) -> Vec<Diagram> {
+    (0..=max_k)
+        .map(|k| {
+            let mut pairs: Vec<(f64, f64)> = Vec::new();
+            for p in parts {
+                if let Some(d) = p.get(k) {
+                    pairs.extend_from_slice(d.all_pairs());
+                }
+            }
+            Diagram::new(k, pairs)
+        })
+        .collect()
+}
+
+/// Drop-in sharded replacement for [`persistence_diagrams`]: split into
+/// components, compute per-shard PDs on `workers` threads, merge exactly.
+/// Equal to the monolithic result in every dimension (property-tested in
+/// `rust/tests/`).
+pub fn persistence_diagrams_sharded(
+    g: &Graph,
+    f: &Filtration,
+    max_k: usize,
+    workers: usize,
+) -> Vec<Diagram> {
+    let shards = decompose_filtered(g, f);
+    let per = all_shard_diagrams(&shards, max_k, workers);
+    merge_shard_diagrams(&per, max_k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::decompose::disjoint_union;
+    use crate::graph::gen;
+
+    #[test]
+    fn merge_is_additive_on_known_spaces() {
+        // octahedron ⊔ C8: betti = (2, 1, 1)
+        let g = disjoint_union(&[gen::octahedron(), gen::cycle(8)]);
+        let f = Filtration::constant(g.n());
+        let pds = persistence_diagrams_sharded(&g, &f, 2, 2);
+        assert_eq!(pds[0].betti(), 2);
+        assert_eq!(pds[1].betti(), 1);
+        assert_eq!(pds[2].betti(), 1);
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let g = disjoint_union(&[
+            gen::erdos_renyi(15, 0.3, 1),
+            gen::cycle(9),
+            gen::complete(5),
+            Graph::empty(4),
+        ]);
+        let f = Filtration::degree_superlevel(&g);
+        let seq = persistence_diagrams_sharded(&g, &f, 2, 1);
+        for workers in [2usize, 4, 16] {
+            let par = persistence_diagrams_sharded(&g, &f, 2, workers);
+            for k in 0..=2 {
+                assert!(seq[k].same_as(&par[k], 0.0), "workers={workers} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_monolithic_engine() {
+        let g = disjoint_union(&[gen::cycle(6), gen::star(5), gen::grid(3, 3)]);
+        let f = Filtration::degree(&g);
+        let mono = persistence_diagrams(&g, &f, 2);
+        let shard = persistence_diagrams_sharded(&g, &f, 2, 3);
+        for k in 0..=2 {
+            assert!(
+                mono[k].same_as(&shard[k], 1e-12),
+                "PD_{k}: {} vs {}",
+                mono[k],
+                shard[k]
+            );
+        }
+    }
+
+    #[test]
+    fn singleton_fast_path_is_exact() {
+        let g = Graph::empty(3);
+        let f = Filtration::superlevel(vec![1.0, 2.0, 3.0]);
+        let mono = persistence_diagrams(&g, &f, 1);
+        let shard = persistence_diagrams_sharded(&g, &f, 1, 2);
+        for k in 0..=1 {
+            assert!(mono[k].same_as(&shard[k], 0.0));
+        }
+        assert_eq!(shard[0].betti(), 3);
+        assert_eq!(shard[0].essential(), vec![-3.0, -2.0, -1.0]);
+    }
+
+    #[test]
+    fn empty_graph_gives_empty_diagrams() {
+        let pds = persistence_diagrams_sharded(&Graph::empty(0), &Filtration::constant(0), 2, 4);
+        assert_eq!(pds.len(), 3);
+        assert!(pds.iter().all(|d| d.is_empty()));
+    }
+
+    #[test]
+    fn pd0_only_request_uses_union_find_per_shard() {
+        let g = disjoint_union(&[gen::path(7), gen::cycle(4)]);
+        let f = Filtration::degree(&g);
+        let mono = persistence_diagrams(&g, &f, 0);
+        let shard = persistence_diagrams_sharded(&g, &f, 0, 2);
+        assert_eq!(shard.len(), 1);
+        assert!(mono[0].same_as(&shard[0], 1e-12));
+    }
+
+    #[test]
+    fn workers_capped_by_shard_count() {
+        // more workers than shards must not deadlock or drop results
+        let g = gen::cycle(5);
+        let f = Filtration::degree(&g);
+        let pds = persistence_diagrams_sharded(&g, &f, 1, 64);
+        assert_eq!(pds[1].betti(), 1);
+    }
+}

@@ -15,11 +15,16 @@
 //!
 //! This crate contains the complete system: the graph substrate and
 //! generators, k-core decomposition, domination pruning (sparse CPU path
-//! and a dense XLA path executing the AOT-compiled Pallas kernel),
-//! clique-complex filtrations, a Z/2 persistent-homology engine (the
-//! expensive computation the paper reduces), the combined reduction
-//! pipeline, a batch coordinator, and one bench driver per paper
-//! table/figure. See `DESIGN.md` for the experiment index.
+//! and a dense XLA path executing the AOT-compiled Pallas kernel, gated
+//! behind the `xla` feature), clique-complex filtrations, a Z/2
+//! persistent-homology engine (the expensive computation the paper
+//! reduces), the combined reduction pipeline, a **component-sharded
+//! parallel pipeline** (`reduce::pd_sharded` — PDs are additive over
+//! disjoint unions, so per-component PH is exact and turns the cubic
+//! monolithic reduction into independent parallel jobs), a batch
+//! coordinator, and one bench driver per paper table/figure. See the
+//! top-level `README.md` for build instructions and the experiment
+//! index.
 //!
 //! ## Quickstart
 //!

@@ -1,5 +1,5 @@
 //! `repro` — the leader binary: CLI over the coral-prunit library.
-//! See `repro help` and DESIGN.md §5 for the experiment index.
+//! See `repro help` and README.md for the experiment index.
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

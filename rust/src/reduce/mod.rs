@@ -5,4 +5,6 @@ pub mod coral;
 pub mod pipeline;
 
 pub use coral::{coral_reduce, CoralResult};
-pub use pipeline::{combined, combined_with, pd_with_reduction, Reduction, ReductionReport};
+pub use pipeline::{
+    combined, combined_with, pd_sharded, pd_with_reduction, Reduction, ReductionReport,
+};

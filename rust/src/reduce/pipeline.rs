@@ -3,7 +3,9 @@
 //! dimension), then the (k+1)-core of the pruned graph.
 
 use crate::complex::Filtration;
+use crate::graph::decompose::decompose_filtered;
 use crate::graph::Graph;
+use crate::homology::sharded::{all_shard_diagrams, merge_shard_diagrams};
 use crate::homology::{persistence_diagrams, Diagram};
 use crate::prune::prunit;
 use crate::util::Timer;
@@ -46,6 +48,10 @@ pub struct ReductionReport {
     pub edges_before: usize,
     pub reduce_secs: f64,
     pub which: Reduction,
+    /// Vertex count per connected component of the reduced graph, filled
+    /// by the sharded pipeline ([`pd_sharded`]); empty when the monolithic
+    /// path ran.
+    pub shard_sizes: Vec<usize>,
 }
 
 impl ReductionReport {
@@ -57,6 +63,17 @@ impl ReductionReport {
     /// `100·(|E| − |E'|)/|E|`.
     pub fn edge_reduction_pct(&self) -> f64 {
         crate::util::table::reduction_pct(self.edges_before, self.graph.m())
+    }
+
+    /// Number of shards the reduced graph split into (0 = not sharded).
+    pub fn shard_count(&self) -> usize {
+        self.shard_sizes.len()
+    }
+
+    /// Largest shard order — the quantity that bounds sharded PH cost
+    /// (the cubic reduction runs per shard, not on Σnᵢ).
+    pub fn largest_shard(&self) -> usize {
+        self.shard_sizes.iter().copied().max().unwrap_or(0)
     }
 }
 
@@ -94,6 +111,7 @@ pub fn combined_with(g: &Graph, f: &Filtration, k: usize, which: Reduction) -> R
         edges_before,
         reduce_secs: secs,
         which,
+        shard_sizes: Vec::new(),
     }
 }
 
@@ -113,6 +131,30 @@ pub fn pd_with_reduction(
 ) -> (Vec<Diagram>, ReductionReport) {
     let report = combined_with(g, f, k, which);
     let diagrams = persistence_diagrams(&report.graph, &report.filtration, k);
+    (diagrams, report)
+}
+
+/// Component-sharded end-to-end pipeline: reduce, split the reduced graph
+/// into connected components, run PH per shard on up to `workers` std
+/// threads, and merge the diagrams exactly (PDs are additive over
+/// disjoint unions — see `homology::sharded`).
+///
+/// Exactness matches [`pd_with_reduction`]: for `Coral`/`Combined` only
+/// `PD_k` (and above) is exact; for `Prunit`/`None` every returned
+/// diagram is exact. Sharding itself never changes any diagram.
+/// The report records the shard census (`shard_sizes`).
+pub fn pd_sharded(
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+    which: Reduction,
+    workers: usize,
+) -> (Vec<Diagram>, ReductionReport) {
+    let mut report = combined_with(g, f, k, which);
+    let shards = decompose_filtered(&report.graph, &report.filtration);
+    report.shard_sizes = shards.iter().map(|s| s.graph.n()).collect();
+    let per_shard = all_shard_diagrams(&shards, k, workers);
+    let diagrams = merge_shard_diagrams(&per_shard, k);
     (diagrams, report)
 }
 
@@ -179,5 +221,39 @@ mod tests {
     fn reduction_names() {
         assert_eq!(Reduction::Combined.name(), "prunit+coral");
         assert_eq!(Reduction::None.name(), "none");
+    }
+
+    #[test]
+    fn pd_sharded_matches_monolithic_pipeline() {
+        let mut rng = crate::util::Rng::new(404);
+        for _ in 0..6 {
+            let n = rng.range(8, 24);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            for which in [Reduction::None, Reduction::Prunit, Reduction::Combined] {
+                let (mono, _) = pd_with_reduction(&g, &f, 1, which);
+                let (shard, report) = pd_sharded(&g, &f, 1, which, 2);
+                assert_eq!(report.shard_count(), report.graph.components());
+                assert_eq!(report.shard_sizes.iter().sum::<usize>(), report.graph.n());
+                for k in 0..=1 {
+                    assert!(
+                        mono[k].same_as(&shard[k], 1e-12),
+                        "{} PD_{k}: {} vs {}",
+                        which.name(),
+                        mono[k],
+                        shard[k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_report_defaults_empty_on_monolithic_path() {
+        let g = gen::cycle(6);
+        let f = Filtration::degree(&g);
+        let r = combined(&g, &f, 1);
+        assert_eq!(r.shard_count(), 0);
+        assert_eq!(r.largest_shard(), 0);
     }
 }

@@ -9,6 +9,6 @@ pub mod dense_prune;
 pub mod pad;
 
 pub use artifact::{default_artifacts_dir, Manifest};
-pub use client::XlaRuntime;
+pub use client::{backend_compiled, try_runtime, SweepOutput, XlaRuntime};
 pub use dense_prune::{combined_dense, coral_dense, prunit_dense};
 pub use pad::{pad_dense, PAD_SENTINEL};

@@ -9,7 +9,7 @@ use coral_prunit::graph::gen;
 use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
 use coral_prunit::homology::{pd0, persistence_diagrams};
 use coral_prunit::reduce::{combined_with, pd_with_reduction, Reduction};
-use coral_prunit::runtime::{prunit_dense, XlaRuntime};
+use coral_prunit::runtime::{prunit_dense, try_runtime};
 use coral_prunit::testutil::{forall, random_filtration, random_graph_case};
 
 /// §5 composition: `PD_k(G) = PD_k((G')^{k+1})` with all four reduction
@@ -102,7 +102,13 @@ fn coordinator_batch_end_to_end() {
 /// admissibility vacuous, so both peel maximally).
 #[test]
 fn xla_dense_path_equivalent_to_sparse() {
-    let rt = XlaRuntime::from_default().expect("run `make artifacts` first");
+    let Some(rt) = try_runtime() else {
+        eprintln!(
+            "skipping xla_dense_path_equivalent_to_sparse: dense backend unavailable \
+             (build with `--features xla` and run `make artifacts`)"
+        );
+        return;
+    };
     forall("dense-vs-sparse", 12, 0xD0D0, |rng| {
         let case = random_graph_case(rng, 50);
         let g = &case.graph;

@@ -1,0 +1,157 @@
+//! Exact-merge edge cases for the component-sharded persistence pipeline:
+//! degenerate graphs, the single-component identity, and known spaces
+//! whose Betti numbers must add component-wise.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::decompose::{decompose_filtered, disjoint_union};
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::{persistence_diagrams, persistence_diagrams_sharded};
+use coral_prunit::reduce::{pd_sharded, pd_with_reduction, Reduction};
+
+fn assert_same(a: &[coral_prunit::homology::Diagram], b: &[coral_prunit::homology::Diagram]) {
+    assert_eq!(a.len(), b.len());
+    for k in 0..a.len() {
+        assert!(
+            a[k].same_as(&b[k], 1e-12),
+            "PD_{k} mismatch: {} vs {}",
+            a[k],
+            b[k]
+        );
+    }
+}
+
+// ---------- degenerate inputs ----------
+
+#[test]
+fn empty_graph_all_paths_empty() {
+    let g = Graph::empty(0);
+    let f = Filtration::constant(0);
+    let mono = persistence_diagrams(&g, &f, 2);
+    let shard = persistence_diagrams_sharded(&g, &f, 2, 4);
+    assert_same(&mono, &shard);
+    assert!(shard.iter().all(|d| d.is_empty()));
+    let (pds, report) = pd_sharded(&g, &f, 2, Reduction::Combined, 4);
+    assert_eq!(report.shard_count(), 0);
+    assert!(pds.iter().all(|d| d.is_empty()));
+}
+
+#[test]
+fn all_isolated_vertices_one_essential_class_each() {
+    let g = Graph::empty(6);
+    let f = Filtration::sublevel(vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0]);
+    let mono = persistence_diagrams(&g, &f, 1);
+    let shard = persistence_diagrams_sharded(&g, &f, 1, 3);
+    assert_same(&mono, &shard);
+    assert_eq!(shard[0].betti(), 6, "one essential class per shard");
+    assert!(shard[1].is_empty());
+    // every shard is a singleton
+    let shards = decompose_filtered(&g, &f);
+    assert_eq!(shards.len(), 6);
+    assert!(shards.iter().all(|s| s.graph.n() == 1));
+}
+
+#[test]
+fn single_component_shard_path_is_identity() {
+    for g in [
+        gen::cycle(9),
+        gen::complete(6),
+        gen::octahedron(),
+        gen::powerlaw_cluster(40, 3, 0.6, 5),
+    ] {
+        let f = Filtration::degree_superlevel(&g);
+        let mono = persistence_diagrams(&g, &f, 2);
+        for workers in [1usize, 2, 4] {
+            let shard = persistence_diagrams_sharded(&g, &f, 2, workers);
+            assert_same(&mono, &shard);
+        }
+        let shards = decompose_filtered(&g, &f);
+        assert_eq!(shards.len(), 1, "connected graph is one shard");
+        assert_eq!(shards[0].graph, g);
+    }
+}
+
+// ---------- known spaces: Betti numbers add component-wise ----------
+
+#[test]
+fn octahedron_cycle_complete_betti_add() {
+    // β(octahedron) = (1, 0, 1); β(C8) = (1, 1, 0); β(K5) = (1, 0, 0)
+    // → union: β0 = 3, β1 = 1, β2 = 1.
+    let g = disjoint_union(&[gen::octahedron(), gen::cycle(8), gen::complete(5)]);
+    let f = Filtration::constant(g.n());
+    let shard = persistence_diagrams_sharded(&g, &f, 2, 3);
+    assert_eq!(shard[0].betti(), 3);
+    assert_eq!(shard[1].betti(), 1);
+    assert_eq!(shard[2].betti(), 1);
+    // and the merged diagrams equal the monolithic engine's
+    let mono = persistence_diagrams(&g, &f, 2);
+    assert_same(&mono, &shard);
+}
+
+#[test]
+fn merged_diagram_points_carry_per_component_values() {
+    // Two cycles with distinct filtration plateaus: the merged PD_1 must
+    // contain one essential loop born at each plateau's key.
+    let g = disjoint_union(&[gen::cycle(4), gen::cycle(5)]);
+    let mut vals = vec![2.0; 4];
+    vals.extend(vec![7.0; 5]);
+    let f = Filtration::sublevel(vals);
+    let shard = persistence_diagrams_sharded(&g, &f, 1, 2);
+    assert_eq!(shard[1].betti(), 2);
+    assert_eq!(shard[1].essential(), vec![2.0, 7.0]);
+    let mono = persistence_diagrams(&g, &f, 1);
+    assert_same(&mono, &shard);
+}
+
+// ---------- sharded reduction pipeline ----------
+
+#[test]
+fn pd_sharded_agrees_with_monolithic_for_every_reduction() {
+    let g = disjoint_union(&[
+        gen::barabasi_albert(25, 2, 1),
+        gen::cycle(7),
+        gen::erdos_renyi(18, 0.3, 2),
+        Graph::empty(3),
+    ]);
+    let f = Filtration::degree_superlevel(&g);
+    for which in [
+        Reduction::None,
+        Reduction::Coral,
+        Reduction::Prunit,
+        Reduction::Combined,
+    ] {
+        let (mono, _) = pd_with_reduction(&g, &f, 1, which);
+        let (shard, report) = pd_sharded(&g, &f, 1, which, 2);
+        assert_same(&mono, &shard);
+        assert_eq!(report.shard_count(), report.graph.components());
+        assert_eq!(
+            report.shard_sizes.iter().sum::<usize>(),
+            report.graph.n(),
+            "{}: shard census must cover the reduced graph",
+            which.name()
+        );
+    }
+}
+
+#[test]
+fn coral_shatters_then_shards_exactly() {
+    // A graph designed to shatter under the 2-core: several cycles, each
+    // with tree decorations that coral peels away, leaving 4 components.
+    let mut parts = Vec::new();
+    for seed in 0..4u64 {
+        let cycle = gen::cycle(6 + seed as usize);
+        let mut edges: Vec<(u32, u32)> = cycle.edges().collect();
+        let n = cycle.n() as u32;
+        // pendant path hanging off vertex 0
+        edges.push((0, n));
+        edges.push((n, n + 1));
+        parts.push(Graph::from_edges(n as usize + 2, &edges));
+    }
+    let g = disjoint_union(&parts);
+    let f = Filtration::degree_superlevel(&g);
+    let (mono, _) = pd_with_reduction(&g, &f, 1, Reduction::Coral);
+    let (shard, report) = pd_sharded(&g, &f, 1, Reduction::Coral, 2);
+    assert_eq!(report.shard_count(), 4, "2-core = the four bare cycles");
+    assert!(report.largest_shard() <= 9);
+    assert_same(&mono, &shard);
+    assert_eq!(shard[1].betti(), 4, "one essential loop per cycle");
+}

@@ -1,0 +1,132 @@
+//! Property suite for the component-sharded persistence pipeline:
+//! sharded diagrams equal monolithic diagrams — exactly, in every
+//! dimension k ≤ 2 — on random graphs with forced multiple components
+//! (disjoint unions of ER / BA / cycle / star pieces plus isolates).
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::decompose::{decompose_filtered, disjoint_union};
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::{persistence_diagrams, persistence_diagrams_sharded};
+use coral_prunit::reduce::{pd_sharded, pd_with_reduction, Reduction};
+use coral_prunit::testutil::{forall, random_filtration};
+use coral_prunit::util::Rng;
+
+/// A random multi-component graph: 2–5 pieces from a family mix, with an
+/// occasional batch of isolated vertices.
+fn multi_component_graph(rng: &mut Rng) -> (Graph, String) {
+    let pieces = rng.range(2, 5);
+    let mut parts = Vec::new();
+    let mut desc = String::new();
+    for _ in 0..pieces {
+        let n = rng.range(3, 14);
+        let (part, tag) = match rng.below(4) {
+            0 => (
+                gen::erdos_renyi(n, 0.35, rng.next_u64()),
+                format!("ER{n}"),
+            ),
+            1 => (
+                gen::barabasi_albert(n, 2, rng.next_u64()),
+                format!("BA{n}"),
+            ),
+            2 => (gen::cycle(n), format!("C{n}")),
+            _ => (gen::star(n), format!("S{n}")),
+        };
+        parts.push(part);
+        desc.push_str(&tag);
+        desc.push('+');
+    }
+    if rng.chance(0.4) {
+        let iso = rng.range(1, 4);
+        parts.push(Graph::empty(iso));
+        desc.push_str(&format!("iso{iso}"));
+    }
+    (disjoint_union(&parts), desc)
+}
+
+#[test]
+fn sharded_equals_monolithic_all_dimensions() {
+    forall("sharded-vs-monolithic", 30, 0x5AAD, |rng| {
+        let (g, desc) = multi_component_graph(rng);
+        let f = random_filtration(rng, &g);
+        let mono = persistence_diagrams(&g, &f, 2);
+        for workers in [1usize, 3] {
+            let sharded = persistence_diagrams_sharded(&g, &f, 2, workers);
+            for k in 0..=2 {
+                if !mono[k].same_as(&sharded[k], 1e-12) {
+                    return Err(format!(
+                        "{desc} (workers={workers}): PD_{k} mismatch: {} vs {}",
+                        mono[k], sharded[k]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_reduction_pipeline_equals_monolithic() {
+    forall("pd-sharded-vs-pipeline", 25, 0x5AAE, |rng| {
+        let (g, desc) = multi_component_graph(rng);
+        let f = Filtration::degree_superlevel(&g);
+        for which in [Reduction::None, Reduction::Prunit, Reduction::Combined] {
+            let (mono, _) = pd_with_reduction(&g, &f, 1, which);
+            let (sharded, report) = pd_sharded(&g, &f, 1, which, 2);
+            for k in 0..=1 {
+                // For Combined/Coral only PD_k (k=1) is guaranteed; for
+                // None/Prunit both dimensions must match. Either way the
+                // sharded result must equal the monolithic result on the
+                // SAME reduced graph — sharding itself is always exact.
+                if !mono[k].same_as(&sharded[k], 1e-12) {
+                    return Err(format!(
+                        "{desc} via {}: PD_{k} mismatch: {} vs {}",
+                        which.name(),
+                        mono[k],
+                        sharded[k]
+                    ));
+                }
+            }
+            if report.shard_count() != report.graph.components() {
+                return Err(format!(
+                    "{desc} via {}: shard count {} != components {}",
+                    which.name(),
+                    report.shard_count(),
+                    report.graph.components()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shard_census_partitions_the_graph() {
+    forall("shard-census", 25, 0x5AAF, |rng| {
+        let (g, desc) = multi_component_graph(rng);
+        let f = random_filtration(rng, &g);
+        let shards = decompose_filtered(&g, &f);
+        let n_sum: usize = shards.iter().map(|s| s.graph.n()).sum();
+        let m_sum: usize = shards.iter().map(|s| s.graph.m()).sum();
+        if n_sum != g.n() || m_sum != g.m() {
+            return Err(format!(
+                "{desc}: shard census n={n_sum}/{} m={m_sum}/{}",
+                g.n(),
+                g.m()
+            ));
+        }
+        for s in &shards {
+            if !s.graph.is_connected() {
+                return Err(format!("{desc}: disconnected shard of order {}", s.graph.n()));
+            }
+            if s.filtration.len() != s.graph.n() {
+                return Err(format!("{desc}: filtration/shard size mismatch"));
+            }
+            for (new, &old) in s.kept_old_ids.iter().enumerate() {
+                if s.filtration.value(new as u32) != f.value(old) {
+                    return Err(format!("{desc}: restricted f lost original values"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

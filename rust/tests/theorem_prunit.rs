@@ -173,6 +173,58 @@ fn prunit_is_idempotent() {
     });
 }
 
+/// Lemma 5 at the *diagram* level: under the constant filtration every
+/// domination is admissible (ties admit both ways), so the unconditional
+/// Strong Collapse coincides with a valid Theorem 7 removal chain and
+/// must preserve PD_k exactly for k ≤ 2 against the unreduced diagrams.
+#[test]
+fn strong_collapse_preserves_constant_filtration_diagrams() {
+    forall("sc-preserves-pd", 40, 0x5C11, |rng| {
+        let case = random_graph_case(rng, 18);
+        let g = &case.graph;
+        let (h, ids, removed) = strong_collapse_core(g);
+        let before = persistence_diagrams(g, &Filtration::constant(g.n()), 2);
+        let after = persistence_diagrams(&h, &Filtration::constant(h.n()), 2);
+        for k in 0..=2 {
+            if !before[k].same_as(&after[k], 1e-12) {
+                return Err(format!(
+                    "{} (removed {removed}): collapse changed PD_{k}: {} vs {}",
+                    case.desc, before[k], after[k]
+                ));
+            }
+        }
+        if ids.len() != h.n() {
+            return Err(format!("{}: id map size mismatch", case.desc));
+        }
+        Ok(())
+    });
+}
+
+/// Cross-check against PrunIT: with a constant filtration the
+/// admissibility condition is vacuous, so PrunIT performs the same kind
+/// of unconditional collapse (possibly in a different order) and must
+/// equally preserve every diagram of the constant filtration.
+#[test]
+fn constant_filtration_prunit_also_preserves_all_diagrams() {
+    forall("const-prunit-pd", 25, 0x5C12, |rng| {
+        let case = random_graph_case(rng, 18);
+        let g = &case.graph;
+        let f = Filtration::constant(g.n());
+        let r = prunit(g, &f);
+        let before = persistence_diagrams(g, &f, 2);
+        let after = persistence_diagrams(&r.graph, &r.filtration, 2);
+        for k in 0..=2 {
+            if !before[k].same_as(&after[k], 1e-12) {
+                return Err(format!(
+                    "{}: constant-f PrunIT changed PD_{k}",
+                    case.desc
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Lemma 5 (homotopy equivalence) at the Betti level for the
 /// unconditional collapse.
 #[test]
