@@ -8,7 +8,7 @@
 //! benchmark. Paper shape: >25% time reduction on most ego nets,
 //! ARXIV ≈ 37% avg, MAG ≈ 23% avg, tails reaching 75%.
 
-use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::complex::{Filtration, FlatComplex};
 use coral_prunit::datasets;
 use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
 use coral_prunit::prune::prunit;
@@ -22,7 +22,7 @@ const EGO_SAMPLES: usize = 400;
 /// fast path makes PD_0 so cheap that pruning cannot pay off at ego-net
 /// scale; that engine-level result is recorded in EXPERIMENTS.md.
 fn pd0_generic(g: &coral_prunit::graph::Graph, f: &Filtration) -> usize {
-    let c = CliqueComplex::build(g, f, 1);
+    let c = FlatComplex::build(g, f, 1);
     diagrams_of_complex(&c, 0, Algorithm::Standard)[0].len()
 }
 

@@ -3,9 +3,10 @@
 //! re-run after each change and record deltas.
 
 use coral_prunit::bench::{bench_auto, sink};
-use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::complex::{CliqueComplex, Filtration, FlatComplex};
 use coral_prunit::graph::gen;
-use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm, BoundaryMatrix};
+use coral_prunit::homology::legacy;
+use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
 use coral_prunit::homology::{pd0, persistence_diagrams};
 use coral_prunit::kcore::coreness;
 use coral_prunit::prune::prunit;
@@ -28,25 +29,42 @@ fn main() {
     let m = bench_auto(|| sink(prunit(&social, &f_social).removed));
     t.row(&["prunit/sparse".into(), format!("social n=50k m={}", social.m()), m.fmt_ms()]);
 
-    // 3. clique enumeration (complex build) on a clustered graph
+    // 3. clique enumeration (complex build) on a clustered graph:
+    //    columnar production path vs the retained AoS reference. Note the
+    //    flat build also resolves every boundary column, which the legacy
+    //    build defers to its separate HashMap matrix pass (measured on the
+    //    row-4 reduction workload in row 5 — a different graph, so don't
+    //    difference rows 3 and 5 directly; `flat_complex` is the
+    //    like-for-like layout bench).
     let plc = gen::powerlaw_cluster(2_000, 6, 0.7, 3);
     let f_plc = Filtration::degree(&plc);
+    let m = bench_auto(|| sink(FlatComplex::build(&plc, &f_plc, 3).len()));
+    t.row(&["complex/build-flat(dim≤3)".into(), format!("PLC n=2k m={}", plc.m()), m.fmt_ms()]);
     let m = bench_auto(|| sink(CliqueComplex::build(&plc, &f_plc, 3).len()));
-    t.row(&["complex/build(dim≤3)".into(), format!("PLC n=2k m={}", plc.m()), m.fmt_ms()]);
+    t.row(&["complex/build-legacy(dim≤3)".into(), format!("PLC n=2k m={}", plc.m()), m.fmt_ms()]);
 
-    // 4. boundary-matrix reduction: standard vs twist
+    // 4. boundary-matrix reduction: standard vs twist (columnar engine)
     let er = gen::erdos_renyi(300, 0.1, 4);
     let f_er = Filtration::degree(&er);
-    let complex = CliqueComplex::build(&er, &f_er, 3);
+    let complex = FlatComplex::build(&er, &f_er, 3);
     println!("reduction workload: {} simplices", complex.len());
     let m_std = bench_auto(|| sink(diagrams_of_complex(&complex, 2, Algorithm::Standard).len()));
     t.row(&["homology/standard".into(), format!("{} simplices", complex.len()), m_std.fmt_ms()]);
     let m_tw = bench_auto(|| sink(diagrams_of_complex(&complex, 2, Algorithm::Twist).len()));
     t.row(&["homology/twist".into(), format!("{} simplices", complex.len()), m_tw.fmt_ms()]);
 
-    // 5. boundary matrix construction alone
-    let m = bench_auto(|| sink(BoundaryMatrix::build(&complex).columns.len()));
-    t.row(&["homology/matrix-build".into(), format!("{} simplices", complex.len()), m.fmt_ms()]);
+    // 5. legacy HashMap boundary-matrix build on the row-4 workload — the
+    //    pass the flat layout folds into construction
+    let legacy_complex = CliqueComplex::build(&er, &f_er, 3);
+    let m = bench_auto(|| {
+        sink(
+            legacy::BoundaryMatrix::build(&legacy_complex)
+                .expect("clique complex is face-closed")
+                .columns
+                .len(),
+        )
+    });
+    t.row(&["homology/matrix-build-legacy".into(), format!("{} simplices", legacy_complex.len()), m.fmt_ms()]);
 
     // 6. PD_0 union-find on a large sparse graph
     let cite = coral_prunit::datasets::recipes::citation(200_000, 600_000, 5);

@@ -3,12 +3,12 @@
 
 use std::collections::BTreeMap;
 
-use crate::complex::Filtration;
+use crate::complex::{CliqueComplex, Filtration};
 use crate::config::{Config, CoordinatorConfig};
 use crate::coordinator::{Coordinator, Job, JobSpec};
 use crate::datasets;
 use crate::error::{Error, Result};
-use crate::homology::persistence_diagrams;
+use crate::homology::{legacy, persistence_diagrams, Algorithm};
 use crate::reduce::{combined_with, pd_sharded, pd_with_reduction, Reduction};
 use crate::runtime::XlaRuntime;
 use crate::util::Table;
@@ -95,6 +95,8 @@ COMMANDS:
            [--k K] [--seed S] [--instance I]
            [--reduction none|coral|prunit|combined]
            [--shard] [--workers W]   component-sharded parallel PH
+           [--engine flat|legacy]    columnar engine (default) or the
+                                     AoS reference engine (cross-check)
   batch    --dataset NAME      run the batch coordinator over all instances
            [--config FILE] [--workers W] [--k K] [--seed S]
   dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
@@ -202,6 +204,17 @@ fn cmd_pd(args: &Args) -> Result<i32> {
     let idx = args.flag_usize("instance", 0)?;
     let which = parse_reduction(args.flag("reduction").unwrap_or("none"))?;
     let shard = args.flag("shard").map(|v| v != "false").unwrap_or(false);
+    let engine = args.flag("engine").unwrap_or("flat");
+    if engine != "flat" && engine != "legacy" {
+        return Err(Error::Parse(format!(
+            "--engine must be flat|legacy, got {engine:?}"
+        )));
+    }
+    if engine == "legacy" && shard {
+        return Err(Error::Parse(
+            "--engine legacy is the monolithic reference path; drop --shard".into(),
+        ));
+    }
     let default_workers = std::thread::available_parallelism()
         .map(|c| c.get())
         .unwrap_or(2);
@@ -214,7 +227,19 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         g.n(),
         g.m()
     );
-    let pds = if shard {
+    let pds = if engine == "legacy" {
+        let report = combined_with(&g, &f, k, which);
+        let c = CliqueComplex::build(&report.graph, &report.filtration, k + 1);
+        let pds = legacy::diagrams_of_complex(&c, k, Algorithm::Twist)?;
+        println!(
+            "legacy engine: reduction={} {}->{} vertices, {} simplices (AoS)",
+            report.which.name(),
+            report.vertices_before,
+            report.graph.n(),
+            c.len(),
+        );
+        pds
+    } else if shard {
         let (pds, report) = pd_sharded(&g, &f, k, which, workers);
         println!(
             "sharded: reduction={} {}->{} vertices, {} shards (largest {}), {workers} workers",
@@ -391,5 +416,19 @@ mod tests {
             run(&argv("pd --dataset DHFR --reduction combined --k 1")).unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn pd_legacy_engine_runs() {
+        assert_eq!(
+            run(&argv("pd --dataset DHFR --engine legacy --k 1")).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn pd_engine_flag_validated() {
+        assert!(run(&argv("pd --dataset DHFR --engine bogus")).is_err());
+        assert!(run(&argv("pd --dataset DHFR --engine legacy --shard")).is_err());
     }
 }

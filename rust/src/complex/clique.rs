@@ -2,6 +2,14 @@
 //! graph up to a dimension cap and order them by sublevel filtration value
 //! (max vertex key, then dimension, then lexicographic tuple — which
 //! guarantees every face precedes its cofaces).
+//!
+//! [`CliqueComplex`] is the **legacy AoS representation** (one `Vec<u32>`
+//! per simplex). Production code uses the columnar
+//! [`FlatComplex`](super::flat::FlatComplex); this type is retained as the
+//! reference implementation for the differential property suite
+//! (`rust/tests/flat_vs_legacy.rs`), the legacy engine
+//! ([`crate::homology::legacy`]), and the `flat_complex` layout bench.
+//! [`count_cliques`] remains the production clique counter (Fig 7).
 
 use super::filtration::Filtration;
 use super::simplex::Simplex;
@@ -138,29 +146,42 @@ fn expand(
 }
 
 /// Count cliques of each size 1..=max_size without materialising them
-/// (Fig 7's simplex-count reduction metric).
+/// (Fig 7's simplex-count reduction metric). §Perf: candidate buffers are
+/// pooled per recursion depth, the same scheme as `expand` — no
+/// allocation in the inner loop.
 pub fn count_cliques(g: &Graph, max_size: usize) -> Vec<usize> {
     let mut counts = vec![0usize; max_size.max(1)];
     if max_size == 0 {
         return counts;
     }
     counts[0] = g.n();
-    fn rec(g: &Graph, depth: usize, cand: &[u32], max_size: usize, counts: &mut [usize]) {
-        let mut next: Vec<u32> = Vec::new();
+    fn rec(
+        g: &Graph,
+        depth: usize,
+        cand: &[u32],
+        max_size: usize,
+        counts: &mut [usize],
+        pool: &mut Vec<Vec<u32>>,
+    ) {
         for (i, &w) in cand.iter().enumerate() {
             counts[depth] += 1;
             if depth + 1 < max_size {
+                let mut next = std::mem::take(&mut pool[depth]);
                 sorted_intersection_into(&cand[i + 1..], g.neighbors(w), &mut next);
                 if !next.is_empty() {
-                    rec(g, depth + 1, &next, max_size, counts);
+                    rec(g, depth + 1, &next, max_size, counts, pool);
                 }
+                pool[depth] = next;
             }
         }
     }
+    let mut pool: Vec<Vec<u32>> = vec![Vec::new(); max_size + 1];
+    let mut root_cand: Vec<u32> = Vec::new();
     for v in 0..g.n() as u32 {
-        let cand: Vec<u32> = g.neighbors(v).iter().copied().filter(|&w| w > v).collect();
-        if !cand.is_empty() && max_size >= 2 {
-            rec(g, 1, &cand, max_size, &mut counts);
+        root_cand.clear();
+        root_cand.extend(g.neighbors(v).iter().copied().filter(|&w| w > v));
+        if !root_cand.is_empty() && max_size >= 2 {
+            rec(g, 1, &root_cand, max_size, &mut counts, &mut pool);
         }
     }
     counts

@@ -1,0 +1,741 @@
+//! Columnar **FlatComplex** — the production simplex storage (§Perf).
+//!
+//! The legacy [`CliqueComplex`](super::clique::CliqueComplex) is an
+//! array-of-structs: one heap `Vec<u32>` per simplex, and boundary
+//! construction re-derives every face through a `HashMap<&[u32], usize>`.
+//! At the sharded-pipeline scale (thousands of small PH jobs per batch)
+//! that allocation churn dominates the wall time. This module replaces it
+//! with a structure-of-arrays layout:
+//!
+//! * one contiguous **vertex arena** + CSR offsets (simplex `i`'s tuple is
+//!   a slice of the arena),
+//! * parallel arrays for filtration keys and dimensions,
+//! * a **boundary CSR** (`bnd_rows`/`bnd_offsets`) with face *positions*
+//!   resolved during construction — so [`crate::homology::reduction::reduce`]
+//!   consumes columns straight from the arena with no per-column `Vec` and
+//!   no post-hoc hashing.
+//!
+//! Face resolution exploits a structural fact of ordered clique expansion:
+//! within each dimension the DFS emits tuples in strictly increasing
+//! lexicographic order, so every face of a d-simplex can be located in the
+//! (d−1)-pool by a strided binary search — `O(d · log n_{d-1})` integer
+//! comparisons, zero hashing, zero allocation (one reusable face buffer).
+//!
+//! [`ComplexWorkspace`] keeps every scratch buffer (expansion candidate
+//! pools, per-dimension tuple pools, the sort/permutation vectors) alive
+//! across builds, which is what the sharded pipeline and the coordinator
+//! worker threads reuse per shard/job.
+
+use crate::complex::filtration::Filtration;
+use crate::error::{Error, Result};
+use crate::graph::core::sorted_intersection_into;
+use crate::graph::Graph;
+use crate::util::sortable_f64;
+
+/// A filtered flag complex in columnar (structure-of-arrays) layout,
+/// simplices in filtration order (key, dim, lexicographic tuple) with the
+/// Z/2 boundary resolved to column positions.
+#[derive(Clone, Debug)]
+pub struct FlatComplex {
+    /// Vertex arena: tuple of simplex `i` is `verts[offsets[i]..offsets[i+1]]`.
+    verts: Vec<u32>,
+    /// CSR offsets into `verts`, length `len() + 1`.
+    offsets: Vec<u32>,
+    /// Filtration key per simplex (ascending in the sort order).
+    keys: Vec<f64>,
+    /// Dimension per simplex.
+    dims: Vec<u32>,
+    /// Boundary arena: positions of the codim-1 faces of simplex `i`,
+    /// ascending, at `bnd_rows[bnd_offsets[i]..bnd_offsets[i+1]]`.
+    /// Dim-0 simplices have empty columns.
+    bnd_rows: Vec<u32>,
+    /// CSR offsets into `bnd_rows`, length `len() + 1`.
+    bnd_offsets: Vec<u32>,
+    /// Max dimension present (0 for the empty complex).
+    max_dim: usize,
+}
+
+impl Default for FlatComplex {
+    /// The empty complex. Hand-written so the CSR invariant
+    /// (`offsets.len() == len() + 1`, first offset 0) holds even for the
+    /// default value.
+    fn default() -> FlatComplex {
+        FlatComplex {
+            verts: Vec::new(),
+            offsets: vec![0],
+            keys: Vec::new(),
+            dims: Vec::new(),
+            bnd_rows: Vec::new(),
+            bnd_offsets: vec![0],
+            max_dim: 0,
+        }
+    }
+}
+
+impl FlatComplex {
+    /// Build the clique complex of `g` up to `max_dim`-simplices, filtered
+    /// by the vertex function. To compute `PD_k` you need `max_dim = k+1`.
+    /// Allocates fresh scratch; batch callers should hold a
+    /// [`ComplexWorkspace`] and use [`ComplexWorkspace::build_clique`].
+    pub fn build(g: &Graph, f: &Filtration, max_dim: usize) -> FlatComplex {
+        ComplexWorkspace::new().build_clique(g, f, max_dim)
+    }
+
+    /// Number of simplices.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Max dimension present.
+    pub fn dim(&self) -> usize {
+        self.max_dim
+    }
+
+    /// Dimension of simplex `i`.
+    #[inline]
+    pub fn dim_of(&self, i: usize) -> usize {
+        self.dims[i] as usize
+    }
+
+    /// Filtration key of simplex `i`.
+    #[inline]
+    pub fn key_of(&self, i: usize) -> f64 {
+        self.keys[i]
+    }
+
+    /// All filtration keys, in filtration order.
+    pub fn keys(&self) -> &[f64] {
+        &self.keys
+    }
+
+    /// Vertex tuple of simplex `i` (strictly increasing).
+    #[inline]
+    pub fn vertices_of(&self, i: usize) -> &[u32] {
+        &self.verts[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Boundary column of simplex `i`: positions of its codim-1 faces,
+    /// ascending. Every entry is `< i` (faces precede cofaces).
+    #[inline]
+    pub fn boundary_of(&self, i: usize) -> &[u32] {
+        &self.bnd_rows[self.bnd_offsets[i] as usize..self.bnd_offsets[i + 1] as usize]
+    }
+
+    /// Number of simplices per dimension.
+    pub fn counts_by_dim(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; if self.keys.is_empty() { 0 } else { self.max_dim + 1 }];
+        for &d in &self.dims {
+            counts[d as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Incremental builder over per-dimension columnar pools. Push simplices
+/// as strictly increasing vertex tuples (each simplex exactly once, faces
+/// included for every coface), then [`finish`](FlatComplexBuilder::finish).
+/// Missing faces surface as [`Error::FaceMissing`] instead of a panic.
+/// The pools and scratch retain capacity across `finish` calls, so one
+/// builder amortises allocation over many complexes — on the in-order
+/// (clique/power expansion) path; the unsorted-push fallback allocates
+/// fresh pool storage for each permuted dimension, and an erroring
+/// `finish` leaves the scratch cold (both are off the hot path).
+#[derive(Debug, Default)]
+pub struct FlatComplexBuilder {
+    /// Per-dimension tuple pools, stride `d + 1`.
+    pool_verts: Vec<Vec<u32>>,
+    /// Per-dimension keys, parallel to the tuples.
+    pool_keys: Vec<Vec<f64>>,
+    // finish() scratch, reused across builds
+    order: Vec<u32>,
+    pos: Vec<u32>,
+    sortkeys: Vec<u64>,
+    dim_global: Vec<u32>,
+    face: Vec<u32>,
+}
+
+/// Tuple of global simplex `g` inside the per-dim pools.
+fn tuple_of<'a>(
+    pool_verts: &'a [Vec<u32>],
+    dim_global: &[u32],
+    base: &[usize],
+    g: usize,
+) -> &'a [u32] {
+    let d = dim_global[g] as usize;
+    let l = g - base[d];
+    &pool_verts[d][l * (d + 1)..(l + 1) * (d + 1)]
+}
+
+/// Strided lower-bound search for `needle` in a lex-sorted tuple pool.
+fn find_tuple(pool: &[u32], stride: usize, needle: &[u32]) -> Option<usize> {
+    debug_assert_eq!(needle.len(), stride);
+    let count = pool.len() / stride;
+    let (mut lo, mut hi) = (0usize, count);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if &pool[mid * stride..(mid + 1) * stride] < needle {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    if lo < count && &pool[lo * stride..(lo + 1) * stride] == needle {
+        Some(lo)
+    } else {
+        None
+    }
+}
+
+/// Render a vertex tuple as `[a,b,c]` — the format shared by
+/// [`Error::FaceMissing`] / [`Error::DuplicateSimplex`] in both the flat
+/// and the legacy engine (matches `Simplex`'s `Display`).
+pub(crate) fn fmt_tuple(t: &[u32]) -> String {
+    let mut s = String::from("[");
+    for (i, v) in t.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&v.to_string());
+    }
+    s.push(']');
+    s
+}
+
+impl FlatComplexBuilder {
+    pub fn new() -> FlatComplexBuilder {
+        FlatComplexBuilder::default()
+    }
+
+    /// Number of simplices pushed so far.
+    pub fn len(&self) -> usize {
+        self.pool_keys.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pool_keys.iter().all(|p| p.is_empty())
+    }
+
+    /// Drop all pushed simplices (capacity retained). A successful
+    /// [`finish`](FlatComplexBuilder::finish) drains the pools itself; call
+    /// this to reuse a builder after `finish` returned an error.
+    pub fn clear(&mut self) {
+        for p in &mut self.pool_verts {
+            p.clear();
+        }
+        for p in &mut self.pool_keys {
+            p.clear();
+        }
+    }
+
+    /// Append a simplex as a strictly increasing vertex tuple. The tuple
+    /// bytes are copied into the dimension's arena — no per-simplex heap
+    /// allocation beyond amortised arena growth.
+    #[inline]
+    pub fn push(&mut self, tuple: &[u32], key: f64) {
+        debug_assert!(
+            !tuple.is_empty() && tuple.windows(2).all(|w| w[0] < w[1]),
+            "tuple must be strictly increasing"
+        );
+        let d = tuple.len() - 1;
+        while self.pool_verts.len() <= d {
+            self.pool_verts.push(Vec::new());
+            self.pool_keys.push(Vec::new());
+        }
+        self.pool_verts[d].extend_from_slice(tuple);
+        self.pool_keys[d].push(key);
+    }
+
+    /// Sort into filtration order, resolve every boundary column, and emit
+    /// the columnar complex. Errors with [`Error::FaceMissing`] if a pushed
+    /// simplex has a codim-1 face that was never pushed (a build-order /
+    /// closure violation — formerly a panic in `BoundaryMatrix::build`).
+    /// The builder's pools are drained (capacity retained) for reuse.
+    pub fn finish(&mut self) -> Result<FlatComplex> {
+        let ndims = self.pool_verts.len();
+        let mut counts = vec![0usize; ndims];
+        let mut base = vec![0usize; ndims + 1];
+        for d in 0..ndims {
+            counts[d] = self.pool_keys[d].len();
+            base[d + 1] = base[d] + counts[d];
+        }
+        let n = base[ndims];
+        // u32 indices cap the arena (and with it every offset/position
+        // array — arena_len bounds them all, each simplex holding ≥ 1
+        // vertex). Fail loudly rather than wrap: a complex this size must
+        // be sharded before building.
+        let arena_len: usize = (0..ndims).map(|d| counts[d] * (d + 1)).sum();
+        assert!(
+            arena_len <= u32::MAX as usize,
+            "complex exceeds the u32 arena-index space ({arena_len} vertex slots); \
+             shard the graph before building"
+        );
+
+        // Canonical per-dim lexicographic order. Ordered clique expansion
+        // already emits it (DFS over ascending candidates), so the sort
+        // below is a no-op check on the hot path; the permutation branch
+        // serves builder users pushing in arbitrary order. Adjacent equal
+        // tuples — a simplex pushed twice — are a build violation and
+        // surface as a typed error, like missing faces.
+        for d in 0..ndims {
+            let stride = d + 1;
+            let cnt = counts[d];
+            let mut sorted = true;
+            {
+                let pv = &self.pool_verts[d];
+                for i in 1..cnt {
+                    let prev = &pv[(i - 1) * stride..i * stride];
+                    let cur = &pv[i * stride..(i + 1) * stride];
+                    if prev > cur {
+                        sorted = false;
+                        break;
+                    }
+                    if prev == cur {
+                        return Err(Error::DuplicateSimplex {
+                            simplex: fmt_tuple(cur),
+                        });
+                    }
+                }
+            }
+            if sorted {
+                continue;
+            }
+            let mut perm: Vec<u32> = (0..cnt as u32).collect();
+            {
+                let pv = &self.pool_verts[d];
+                perm.sort_unstable_by(|&x, &y| {
+                    let (x, y) = (x as usize, y as usize);
+                    pv[x * stride..(x + 1) * stride].cmp(&pv[y * stride..(y + 1) * stride])
+                });
+            }
+            let (new_v, new_k) = {
+                let pv = &self.pool_verts[d];
+                let pk = &self.pool_keys[d];
+                let mut nv = Vec::with_capacity(pv.len());
+                let mut nk = Vec::with_capacity(cnt);
+                for &x in &perm {
+                    let x = x as usize;
+                    nv.extend_from_slice(&pv[x * stride..(x + 1) * stride]);
+                    nk.push(pk[x]);
+                }
+                (nv, nk)
+            };
+            // the sort fallback must also reject duplicates, now adjacent
+            for i in 1..cnt {
+                let prev = &new_v[(i - 1) * stride..i * stride];
+                let cur = &new_v[i * stride..(i + 1) * stride];
+                if prev == cur {
+                    return Err(Error::DuplicateSimplex {
+                        simplex: fmt_tuple(cur),
+                    });
+                }
+            }
+            self.pool_verts[d] = new_v;
+            self.pool_keys[d] = new_k;
+        }
+
+        // Global filtration order: (key, dim, lex tuple). §Perf: integer
+        // key transform avoids partial_cmp in the hot sort.
+        self.sortkeys.clear();
+        self.dim_global.clear();
+        for d in 0..ndims {
+            for l in 0..counts[d] {
+                self.sortkeys.push(sortable_f64(self.pool_keys[d][l]));
+                self.dim_global.push(d as u32);
+            }
+        }
+        let mut order = std::mem::take(&mut self.order);
+        order.clear();
+        order.extend(0..n as u32);
+        {
+            let sortkeys = &self.sortkeys;
+            let dim_global = &self.dim_global;
+            let pool_verts = &self.pool_verts;
+            let base = &base;
+            order.sort_unstable_by(|&a, &b| {
+                let (a, b) = (a as usize, b as usize);
+                sortkeys[a]
+                    .cmp(&sortkeys[b])
+                    .then(dim_global[a].cmp(&dim_global[b]))
+                    .then_with(|| {
+                        tuple_of(pool_verts, dim_global, base, a)
+                            .cmp(tuple_of(pool_verts, dim_global, base, b))
+                    })
+            });
+        }
+        let mut pos = std::mem::take(&mut self.pos);
+        pos.clear();
+        pos.resize(n, 0);
+        for (j, &g) in order.iter().enumerate() {
+            pos[g as usize] = j as u32;
+        }
+
+        // Emit the columnar arrays in filtration order.
+        let mut verts: Vec<u32> = Vec::with_capacity(arena_len);
+        let mut offsets: Vec<u32> = Vec::with_capacity(n + 1);
+        let mut keys: Vec<f64> = Vec::with_capacity(n);
+        let mut dims: Vec<u32> = Vec::with_capacity(n);
+        offsets.push(0);
+        for &gid in &order {
+            let g = gid as usize;
+            let d = self.dim_global[g] as usize;
+            let l = g - base[d];
+            verts.extend_from_slice(&self.pool_verts[d][l * (d + 1)..(l + 1) * (d + 1)]);
+            offsets.push(verts.len() as u32);
+            keys.push(self.pool_keys[d][l]);
+            dims.push(d as u32);
+        }
+
+        // Resolve boundary columns: each face is found in the (d−1)-pool by
+        // strided binary search (the pools are lex-sorted), then mapped to
+        // its filtration position. No HashMap, no per-face allocation.
+        let bnd_len: usize = (1..ndims).map(|d| counts[d] * (d + 1)).sum();
+        let mut bnd_rows: Vec<u32> = Vec::with_capacity(bnd_len);
+        let mut bnd_offsets: Vec<u32> = Vec::with_capacity(n + 1);
+        bnd_offsets.push(0);
+        let mut face = std::mem::take(&mut self.face);
+        for &gid in &order {
+            let g = gid as usize;
+            let d = self.dim_global[g] as usize;
+            if d > 0 {
+                let t = tuple_of(&self.pool_verts, &self.dim_global, &base, g);
+                let col_start = bnd_rows.len();
+                for drop in 0..=d {
+                    face.clear();
+                    face.extend(
+                        t.iter()
+                            .enumerate()
+                            .filter_map(|(i, &v)| if i == drop { None } else { Some(v) }),
+                    );
+                    let fl = match find_tuple(&self.pool_verts[d - 1], d, &face) {
+                        Some(fl) => fl,
+                        None => {
+                            return Err(Error::FaceMissing {
+                                simplex: fmt_tuple(t),
+                                face: fmt_tuple(&face),
+                            })
+                        }
+                    };
+                    bnd_rows.push(pos[base[d - 1] + fl]);
+                }
+                bnd_rows[col_start..].sort_unstable();
+            }
+            bnd_offsets.push(bnd_rows.len() as u32);
+        }
+
+        // Drain pools (retain capacity) and hand scratch back for reuse.
+        for p in &mut self.pool_verts {
+            p.clear();
+        }
+        for p in &mut self.pool_keys {
+            p.clear();
+        }
+        self.sortkeys.clear();
+        self.dim_global.clear();
+        self.order = order;
+        self.pos = pos;
+        self.face = face;
+
+        let max_dim = dims.iter().copied().max().unwrap_or(0) as usize;
+        Ok(FlatComplex {
+            verts,
+            offsets,
+            keys,
+            dims,
+            bnd_rows,
+            bnd_offsets,
+            max_dim,
+        })
+    }
+}
+
+/// Reusable build state for the clique-expansion hot path: the tuple pools
+/// (inside the builder) plus the DFS candidate buffers. One workspace per
+/// worker thread amortises every allocation over a whole batch of shards.
+#[derive(Debug, Default)]
+pub struct ComplexWorkspace {
+    builder: FlatComplexBuilder,
+    clique: Vec<u32>,
+    cand: Vec<u32>,
+    pool: Vec<Vec<u32>>,
+}
+
+impl ComplexWorkspace {
+    pub fn new() -> ComplexWorkspace {
+        ComplexWorkspace::default()
+    }
+
+    /// Build the filtered clique complex of `g` up to `max_dim`-simplices,
+    /// reusing this workspace's arenas. Equivalent to
+    /// [`FlatComplex::build`].
+    pub fn build_clique(&mut self, g: &Graph, f: &Filtration, max_dim: usize) -> FlatComplex {
+        f.check(g).expect("filtration must match graph");
+
+        // dim 0
+        for v in 0..g.n() as u32 {
+            self.builder.push(&[v], f.key(v));
+        }
+
+        // dims >= 1 by ordered expansion: each clique is discovered exactly
+        // once as its ascending vertex tuple, per dimension in lex order.
+        if self.pool.len() < max_dim + 2 {
+            self.pool.resize_with(max_dim + 2, Vec::new);
+        }
+        if max_dim > 0 {
+            for v in 0..g.n() as u32 {
+                self.clique.clear();
+                self.clique.push(v);
+                self.cand.clear();
+                self.cand
+                    .extend(g.neighbors(v).iter().copied().filter(|&w| w > v));
+                expand_flat(
+                    g,
+                    f,
+                    max_dim,
+                    &mut self.clique,
+                    &self.cand,
+                    f.key(v),
+                    &mut self.builder,
+                    &mut self.pool,
+                );
+            }
+        }
+
+        match self.builder.finish() {
+            Ok(c) => c,
+            // Ordered clique expansion emits every face of every clique.
+            Err(e) => unreachable!("clique expansion is face-closed: {e}"),
+        }
+    }
+}
+
+/// Recursive ordered clique expansion into the columnar builder. `clique`
+/// is the current ascending tuple, `cand` the common later neighbours,
+/// `key` the running max, `pool` the per-depth candidate buffers
+/// (allocation-free inner loop).
+#[allow(clippy::too_many_arguments)]
+fn expand_flat(
+    g: &Graph,
+    f: &Filtration,
+    max_dim: usize,
+    clique: &mut Vec<u32>,
+    cand: &[u32],
+    key: f64,
+    b: &mut FlatComplexBuilder,
+    pool: &mut Vec<Vec<u32>>,
+) {
+    let depth = clique.len();
+    for (i, &w) in cand.iter().enumerate() {
+        clique.push(w);
+        let k = key.max(f.key(w));
+        b.push(&clique[..], k);
+        if clique.len() <= max_dim {
+            // candidates after w that stay adjacent to the whole clique
+            let mut next = std::mem::take(&mut pool[depth]);
+            sorted_intersection_into(&cand[i + 1..], g.neighbors(w), &mut next);
+            if !next.is_empty() {
+                expand_flat(g, f, max_dim, clique, &next, k, b, pool);
+            }
+            pool[depth] = next;
+        }
+        clique.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn boundary_valid(c: &FlatComplex) {
+        for i in 0..c.len() {
+            let col = c.boundary_of(i);
+            if c.dim_of(i) == 0 {
+                assert!(col.is_empty());
+                continue;
+            }
+            assert_eq!(col.len(), c.dim_of(i) + 1);
+            for w in col.windows(2) {
+                assert!(w[0] < w[1], "column rows must be strictly ascending");
+            }
+            for &r in col {
+                let r = r as usize;
+                assert!(r < i, "face must precede coface");
+                assert_eq!(c.dim_of(r) + 1, c.dim_of(i));
+                // every face tuple is a subset of the coface tuple
+                assert!(crate::graph::core::sorted_is_subset(
+                    c.vertices_of(r),
+                    c.vertices_of(i)
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_complex() {
+        let g = gen::complete(3);
+        let f = Filtration::constant(3);
+        let c = FlatComplex::build(&g, &f, 2);
+        assert_eq!(c.counts_by_dim(), vec![3, 3, 1]);
+        boundary_valid(&c);
+    }
+
+    #[test]
+    fn k4_counts() {
+        let g = gen::complete(4);
+        let c = FlatComplex::build(&g, &Filtration::constant(4), 3);
+        assert_eq!(c.counts_by_dim(), vec![4, 6, 4, 1]);
+        boundary_valid(&c);
+    }
+
+    #[test]
+    fn dim_cap_respected() {
+        let g = gen::complete(6);
+        let c = FlatComplex::build(&g, &Filtration::constant(6), 2);
+        assert_eq!(c.dim(), 2);
+        assert_eq!(c.counts_by_dim(), vec![6, 15, 20]);
+    }
+
+    #[test]
+    fn simplex_key_is_max_vertex_key() {
+        let g = gen::complete(3);
+        let f = Filtration::sublevel(vec![1.0, 5.0, 3.0]);
+        let c = FlatComplex::build(&g, &f, 2);
+        let tri = (0..c.len()).find(|&i| c.dim_of(i) == 2).unwrap();
+        assert_eq!(c.key_of(tri), 5.0);
+        boundary_valid(&c);
+    }
+
+    #[test]
+    fn superlevel_ordering_reverses() {
+        let g = gen::path(3); // 0-1-2, degrees 1,2,1
+        let f = Filtration::degree_superlevel(&g);
+        let c = FlatComplex::build(&g, &f, 1);
+        // vertex 1 (degree 2) must enter first under superlevel
+        assert_eq!(c.vertices_of(0), &[1]);
+        boundary_valid(&c);
+    }
+
+    #[test]
+    fn empty_graph_complex() {
+        let g = Graph::empty(0);
+        let c = FlatComplex::build(&g, &Filtration::constant(0), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.dim(), 0);
+        assert_eq!(c.counts_by_dim(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn max_dim_zero_is_vertices_only() {
+        let g = gen::complete(5);
+        let c = FlatComplex::build(&g, &Filtration::constant(5), 0);
+        assert_eq!(c.counts_by_dim(), vec![5]);
+        boundary_valid(&c);
+    }
+
+    #[test]
+    fn builder_missing_face_is_typed_error() {
+        // triangle [0,1,2] with edge [1,2] never pushed
+        let mut b = FlatComplexBuilder::new();
+        for v in 0..3u32 {
+            b.push(&[v], 0.0);
+        }
+        b.push(&[0, 1], 0.0);
+        b.push(&[0, 2], 0.0);
+        b.push(&[0, 1, 2], 0.0);
+        match b.finish() {
+            Err(Error::FaceMissing { simplex, face }) => {
+                assert_eq!(simplex, "[0,1,2]");
+                assert_eq!(face, "[1,2]");
+            }
+            other => panic!("expected FaceMissing, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_duplicate_simplex_is_typed_error() {
+        // sorted push order: duplicate caught by the adjacency scan
+        let mut b = FlatComplexBuilder::new();
+        b.push(&[0], 0.0);
+        b.push(&[1], 0.0);
+        b.push(&[0, 1], 0.0);
+        b.push(&[0, 1], 0.0);
+        match b.finish() {
+            Err(Error::DuplicateSimplex { simplex }) => assert_eq!(simplex, "[0,1]"),
+            other => panic!("expected DuplicateSimplex, got {other:?}"),
+        }
+        // unsorted push order: duplicate caught after the fallback sort
+        b.clear();
+        b.push(&[1], 0.0);
+        b.push(&[0], 0.0);
+        b.push(&[1], 0.0);
+        match b.finish() {
+            Err(Error::DuplicateSimplex { simplex }) => assert_eq!(simplex, "[1]"),
+            other => panic!("expected DuplicateSimplex, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_reuses_pools_across_finishes() {
+        let mut b = FlatComplexBuilder::new();
+        b.push(&[0], 0.0);
+        b.push(&[1], 0.0);
+        b.push(&[0, 1], 1.0);
+        let c = b.finish().unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.boundary_of(2), &[0, 1]);
+        // pools drained: a second build sees only its own pushes
+        b.push(&[4], 2.0);
+        let c2 = b.finish().unwrap();
+        assert_eq!(c2.len(), 1);
+        assert_eq!(c2.vertices_of(0), &[4]);
+    }
+
+    #[test]
+    fn builder_accepts_unsorted_push_order() {
+        // same complex pushed in scrambled order must normalise
+        let mut b = FlatComplexBuilder::new();
+        b.push(&[0, 1, 2], 1.0);
+        b.push(&[2], 0.0);
+        b.push(&[0, 2], 0.0);
+        b.push(&[0], 0.0);
+        b.push(&[1, 2], 1.0);
+        b.push(&[1], 1.0);
+        b.push(&[0, 1], 1.0);
+        let c = b.finish().unwrap();
+        let direct = FlatComplex::build(
+            &gen::complete(3),
+            &Filtration::sublevel(vec![0.0, 1.0, 0.0]),
+            2,
+        );
+        assert_eq!(c.len(), direct.len());
+        for i in 0..c.len() {
+            assert_eq!(c.vertices_of(i), direct.vertices_of(i), "position {i}");
+            assert_eq!(c.key_of(i), direct.key_of(i));
+            assert_eq!(c.boundary_of(i), direct.boundary_of(i));
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_equivalent_to_fresh_builds() {
+        let mut ws = ComplexWorkspace::new();
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..6 {
+            let n = rng.range(3, 16);
+            let g = gen::erdos_renyi(n, 0.4, rng.next_u64());
+            let f = Filtration::degree(&g);
+            let a = ws.build_clique(&g, &f, 3);
+            let b = FlatComplex::build(&g, &f, 3);
+            assert_eq!(a.len(), b.len());
+            for i in 0..a.len() {
+                assert_eq!(a.vertices_of(i), b.vertices_of(i));
+                assert_eq!(a.key_of(i), b.key_of(i));
+                assert_eq!(a.boundary_of(i), b.boundary_of(i));
+            }
+            boundary_valid(&a);
+        }
+    }
+}

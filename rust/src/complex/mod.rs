@@ -1,11 +1,19 @@
 //! Clique complexes and filtrations (S6/S7): the simplicial machinery the
 //! paper's persistence diagrams are defined over (§3).
+//!
+//! The production representation is the columnar [`FlatComplex`]
+//! (`flat.rs`): vertex arena + CSR offsets + boundary columns resolved at
+//! construction. The AoS [`CliqueComplex`] (`clique.rs`) is retained as
+//! the reference implementation for differential tests and the
+//! `flat_complex` bench.
 
 pub mod clique;
 pub mod filtration;
+pub mod flat;
 pub mod power;
 pub mod simplex;
 
 pub use clique::{count_cliques, CliqueComplex};
 pub use filtration::{Direction, Filtration};
+pub use flat::{ComplexWorkspace, FlatComplex, FlatComplexBuilder};
 pub use simplex::Simplex;

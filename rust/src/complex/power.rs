@@ -9,9 +9,10 @@
 //! diameter-power is complete), so this module is deliberately scoped to
 //! the small graphs of the paper's power-filtration results: the PrunIT
 //! extension (Thm 10) and the CoralTDA counterexample on cycles (Rmk 11).
+//! The complex is emitted through [`FlatComplexBuilder`] into the same
+//! columnar layout the production clique path uses.
 
-use super::clique::{CliqueComplex, FilteredSimplex};
-use super::simplex::Simplex;
+use super::flat::{FlatComplex, FlatComplexBuilder};
 use crate::graph::Graph;
 
 /// All-pairs shortest-path distances via BFS from every vertex.
@@ -22,7 +23,7 @@ pub fn distance_matrix(g: &Graph) -> Vec<Vec<usize>> {
 
 /// Build the power filtration of `g` as a filtered flag complex, capped at
 /// `max_dim`-simplices and power ≤ `max_power`.
-pub fn power_complex(g: &Graph, max_dim: usize, max_power: usize) -> CliqueComplex {
+pub fn power_complex(g: &Graph, max_dim: usize, max_power: usize) -> FlatComplex {
     let dist = distance_matrix(g);
     let n = g.n();
     // Threshold graph at max_power, as sorted adjacency lists.
@@ -40,12 +41,9 @@ pub fn power_complex(g: &Graph, max_dim: usize, max_power: usize) -> CliqueCompl
         l.sort_unstable();
     }
 
-    let mut simplices: Vec<FilteredSimplex> = Vec::new();
+    let mut builder = FlatComplexBuilder::new();
     for v in 0..n as u32 {
-        simplices.push(FilteredSimplex {
-            simplex: Simplex::from_sorted(vec![v]),
-            key: 0.0,
-        });
+        builder.push(&[v], 0.0);
     }
 
     // Ordered clique expansion over the threshold graph, tracking the max
@@ -57,7 +55,7 @@ pub fn power_complex(g: &Graph, max_dim: usize, max_power: usize) -> CliqueCompl
         clique: &mut Vec<u32>,
         cand: &[u32],
         key: usize,
-        out: &mut Vec<FilteredSimplex>,
+        out: &mut FlatComplexBuilder,
     ) {
         for (i, &w) in cand.iter().enumerate() {
             let mut k = key;
@@ -65,10 +63,7 @@ pub fn power_complex(g: &Graph, max_dim: usize, max_power: usize) -> CliqueCompl
                 k = k.max(dist[m as usize][w as usize]);
             }
             clique.push(w);
-            out.push(FilteredSimplex {
-                simplex: Simplex::from_sorted(clique.clone()),
-                key: k as f64,
-            });
+            out.push(&clique[..], k as f64);
             if clique.len() <= max_dim {
                 let next: Vec<u32> = cand[i + 1..]
                     .iter()
@@ -92,23 +87,26 @@ pub fn power_complex(g: &Graph, max_dim: usize, max_power: usize) -> CliqueCompl
             .copied()
             .filter(|&w| w > v)
             .collect();
-        expand(&adj, &dist, max_dim, &mut clique, &cand, 0, &mut simplices);
+        expand(&adj, &dist, max_dim, &mut clique, &cand, 0, &mut builder);
     }
 
-    simplices.sort_by(|a, b| {
-        a.key
-            .partial_cmp(&b.key)
-            .unwrap()
-            .then(a.simplex.dim().cmp(&b.simplex.dim()))
-            .then(a.simplex.vertices().cmp(b.simplex.vertices()))
-    });
-    CliqueComplex { simplices }
+    match builder.finish() {
+        Ok(c) => c,
+        // Flag expansion over the threshold graph emits every face.
+        Err(e) => unreachable!("power-flag expansion is face-closed: {e}"),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::gen;
+
+    fn find(c: &FlatComplex, tuple: &[u32]) -> usize {
+        (0..c.len())
+            .find(|&i| c.vertices_of(i) == tuple)
+            .unwrap_or_else(|| panic!("tuple {tuple:?} not in complex"))
+    }
 
     #[test]
     fn distances_on_cycle() {
@@ -130,7 +128,7 @@ mod tests {
     fn power_one_equals_clique_complex_counts() {
         let g = gen::erdos_renyi(18, 0.25, 3);
         let pc = power_complex(&g, 2, 1);
-        let cc = super::super::clique::CliqueComplex::build(
+        let cc = FlatComplex::build(
             &g,
             &super::super::filtration::Filtration::constant(g.n()),
             2,
@@ -150,36 +148,23 @@ mod tests {
     fn keys_are_max_pairwise_distance() {
         let g = gen::path(4); // 0-1-2-3
         let pc = power_complex(&g, 2, 3);
-        let tri = pc
-            .simplices
-            .iter()
-            .find(|s| s.simplex.vertices() == [0, 1, 2])
-            .unwrap();
-        assert_eq!(tri.key, 2.0);
-        let tri2 = pc
-            .simplices
-            .iter()
-            .find(|s| s.simplex.vertices() == [0, 1, 3])
-            .unwrap();
-        assert_eq!(tri2.key, 3.0);
+        assert_eq!(pc.key_of(find(&pc, &[0, 1, 2])), 2.0);
+        assert_eq!(pc.key_of(find(&pc, &[0, 1, 3])), 3.0);
     }
 
     #[test]
     fn faces_precede_cofaces() {
         let g = gen::cycle(7);
         let pc = power_complex(&g, 3, 3);
-        let pos: std::collections::HashMap<&[u32], usize> = pc
-            .simplices
-            .iter()
-            .enumerate()
-            .map(|(i, s)| (s.simplex.vertices(), i))
-            .collect();
-        for (i, s) in pc.simplices.iter().enumerate() {
-            if s.simplex.dim() == 0 {
-                continue;
+        for i in 0..pc.len() {
+            let col = pc.boundary_of(i);
+            if pc.dim_of(i) == 0 {
+                assert!(col.is_empty());
+            } else {
+                assert_eq!(col.len(), pc.dim_of(i) + 1);
             }
-            for f in s.simplex.faces() {
-                assert!(pos[f.vertices()] < i);
+            for &r in col {
+                assert!((r as usize) < i, "face {r} must precede coface {i}");
             }
         }
     }

@@ -4,9 +4,10 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 
+use crate::complex::ComplexWorkspace;
 use crate::config::CoordinatorConfig;
 use crate::error::{Error, Result};
-use crate::homology::persistence_diagrams;
+use crate::homology::persistence_diagrams_with;
 use crate::reduce::combined_with;
 use crate::util::Timer;
 
@@ -35,13 +36,21 @@ impl Coordinator {
         Arc::clone(&self.metrics)
     }
 
-    /// Execute one job inline (the worker body; public for testing and
-    /// for single-threaded callers).
+    /// Execute one job inline (public for testing and for single-threaded
+    /// callers). Allocates fresh complex arenas; the pool's worker threads
+    /// go through [`Coordinator::execute_with`] instead.
     pub fn execute(job: &Job, worker: usize) -> JobResult {
+        Coordinator::execute_with(&mut ComplexWorkspace::new(), job, worker)
+    }
+
+    /// The worker body: execute one job, building its complex into the
+    /// caller's reusable workspace (one per worker thread — amortises the
+    /// arena allocations across every job the thread picks up).
+    pub fn execute_with(ws: &mut ComplexWorkspace, job: &Job, worker: usize) -> JobResult {
         let total = Timer::start();
         let report = combined_with(&job.graph, &job.filtration, job.spec.max_k, job.spec.reduction);
         let (diagrams, ph_secs) = Timer::time(|| {
-            persistence_diagrams(&report.graph, &report.filtration, job.spec.max_k)
+            persistence_diagrams_with(ws, &report.graph, &report.filtration, job.spec.max_k)
         });
         JobResult {
             id: job.id,
@@ -72,24 +81,27 @@ impl Coordinator {
                 let job_rx = Arc::clone(&job_rx);
                 let res_tx = res_tx.clone();
                 let metrics = Arc::clone(&self.metrics);
-                std::thread::spawn(move || loop {
-                    let job = {
-                        let guard = job_rx.lock().expect("job queue poisoned");
-                        guard.recv()
-                    };
-                    let Ok(job) = job else { break };
-                    let (v_in, e_in) = (job.graph.n(), job.graph.m());
-                    let result = Coordinator::execute(&job, w);
-                    metrics.record(
-                        result.reduction.reduce_secs,
-                        result.ph_secs,
-                        v_in,
-                        result.reduction.graph.n(),
-                        e_in,
-                        result.reduction.graph.m(),
-                    );
-                    if res_tx.send(result).is_err() {
-                        break;
+                std::thread::spawn(move || {
+                    let mut ws = ComplexWorkspace::new();
+                    loop {
+                        let job = {
+                            let guard = job_rx.lock().expect("job queue poisoned");
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { break };
+                        let (v_in, e_in) = (job.graph.n(), job.graph.m());
+                        let result = Coordinator::execute_with(&mut ws, &job, w);
+                        metrics.record(
+                            result.reduction.reduce_secs,
+                            result.ph_secs,
+                            v_in,
+                            result.reduction.graph.n(),
+                            e_in,
+                            result.reduction.graph.m(),
+                        );
+                        if res_tx.send(result).is_err() {
+                            break;
+                        }
                     }
                 })
             })

@@ -19,6 +19,11 @@ pub enum Error {
     ArtifactMissing(String),
     /// PJRT / XLA failure (compile or execute).
     Xla(String),
+    /// A simplex was added to a complex without one of its codim-1 faces
+    /// (boundary construction requires face-closed input in build order).
+    FaceMissing { simplex: String, face: String },
+    /// The same simplex was added to a complex builder more than once.
+    DuplicateSimplex { simplex: String },
     /// Config file syntax or schema error.
     Config(String),
     /// Dataset / experiment identifier not in the registry.
@@ -48,6 +53,13 @@ impl fmt::Display for Error {
             ),
             Error::ArtifactMissing(p) => write!(f, "missing AOT artifact: {p} (run `make artifacts`)"),
             Error::Xla(msg) => write!(f, "xla/pjrt error: {msg}"),
+            Error::FaceMissing { simplex, face } => write!(
+                f,
+                "face {face} of simplex {simplex} missing from complex — build order violated"
+            ),
+            Error::DuplicateSimplex { simplex } => {
+                write!(f, "simplex {simplex} pushed to the complex builder twice")
+            }
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::UnknownDataset(name) => write!(f, "unknown dataset/experiment: {name}"),
             Error::Parse(msg) => write!(f, "parse error: {msg}"),

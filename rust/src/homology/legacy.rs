@@ -1,0 +1,264 @@
+//! Legacy AoS persistence engine — the reference implementation the
+//! columnar [`FlatComplex`](crate::complex::FlatComplex) engine replaced.
+//!
+//! Retained deliberately: the differential property suite
+//! (`rust/tests/flat_vs_legacy.rs`) and the `flat_complex` bench compare
+//! the production engine against this one, so every layout-level
+//! optimisation stays *measured against* and *equal to* a known-good
+//! baseline. Its two costs are exactly what the flat engine deleted:
+//!
+//! * [`BoundaryMatrix::build`] re-derives every face of every simplex
+//!   through a `HashMap<&[u32], usize>` over per-simplex `Vec`s;
+//! * [`reduce`] clones the entire column set before reducing.
+//!
+//! Do not wire this into production paths — use
+//! [`crate::homology::reduction`].
+
+use std::collections::HashMap;
+
+use super::diagram::Diagram;
+use super::reduction::{Algorithm, DenseColumn, ReductionResult};
+use crate::complex::clique::CliqueComplex;
+use crate::error::{Error, Result};
+
+/// Sparse boundary matrix in filtration order (AoS layout).
+pub struct BoundaryMatrix {
+    /// columns[j] = sorted row indices of ∂(simplex_j); dim-0 columns empty.
+    pub columns: Vec<Vec<u32>>,
+    /// Simplex dimension per column.
+    pub dims: Vec<usize>,
+    /// Filtration key per column.
+    pub keys: Vec<f64>,
+}
+
+impl BoundaryMatrix {
+    /// Build from a filtered complex (simplices already in filtration
+    /// order with faces preceding cofaces). A face absent from the
+    /// complex surfaces as [`Error::FaceMissing`].
+    pub fn build(c: &CliqueComplex) -> Result<BoundaryMatrix> {
+        let n = c.simplices.len();
+        // same u32 row-index cap the flat engine asserts in `finish`
+        assert!(
+            n <= u32::MAX as usize,
+            "complex exceeds the u32 row-index space ({n} simplices)"
+        );
+        let mut index: HashMap<&[u32], usize> = HashMap::with_capacity(n);
+        for (i, s) in c.simplices.iter().enumerate() {
+            index.insert(s.simplex.vertices(), i);
+        }
+        let mut columns = Vec::with_capacity(n);
+        let mut dims = Vec::with_capacity(n);
+        let mut keys = Vec::with_capacity(n);
+        let mut face_buf: Vec<u32> = Vec::new();
+        for s in &c.simplices {
+            let verts = s.simplex.vertices();
+            let d = s.simplex.dim();
+            dims.push(d);
+            keys.push(s.key);
+            if d == 0 {
+                columns.push(Vec::new());
+                continue;
+            }
+            let mut col = Vec::with_capacity(verts.len());
+            for drop in 0..verts.len() {
+                face_buf.clear();
+                face_buf.extend(verts.iter().enumerate().filter_map(|(i, &v)| {
+                    if i == drop {
+                        None
+                    } else {
+                        Some(v)
+                    }
+                }));
+                let row = *index.get(face_buf.as_slice()).ok_or_else(|| Error::FaceMissing {
+                    simplex: crate::complex::flat::fmt_tuple(verts),
+                    face: crate::complex::flat::fmt_tuple(&face_buf),
+                })?;
+                col.push(row as u32);
+            }
+            col.sort_unstable();
+            columns.push(col);
+        }
+        Ok(BoundaryMatrix { columns, dims, keys })
+    }
+
+    pub fn max_dim(&self) -> usize {
+        self.dims.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Run the legacy reduction and extract index pairs. Clones the full
+/// column set up front — the allocation the flat engine's lazy
+/// working-column scheme removed.
+pub fn reduce(matrix: &BoundaryMatrix, algorithm: Algorithm) -> ReductionResult {
+    let n = matrix.columns.len();
+    let mut cols: Vec<Vec<u32>> = matrix.columns.clone();
+    // pivot_of_row[r] = column whose low is r.
+    let mut pivot_of_row: Vec<Option<usize>> = vec![None; n];
+    let mut dense = DenseColumn::new(n);
+
+    let mut process = |j: usize, cols: &mut Vec<Vec<u32>>, pivot_of_row: &mut Vec<Option<usize>>| {
+        let Some(&start_low) = cols[j].last() else { return };
+        let start_low = start_low as usize;
+        // Fast path: unique low already — no dense round-trip needed.
+        if pivot_of_row[start_low].is_none() {
+            pivot_of_row[start_low] = Some(j);
+            return;
+        }
+        dense.load(&cols[j]);
+        let mut low = start_low;
+        loop {
+            match pivot_of_row[low] {
+                Some(jp) => {
+                    dense.xor(&cols[jp]);
+                    // the shared low always cancels; next low is strictly
+                    // below it
+                    match (low > 0).then(|| dense.low_at_or_below(low - 1)).flatten() {
+                        Some(l) => low = l,
+                        None => {
+                            // column reduced to zero
+                            cols[j].clear();
+                            return;
+                        }
+                    }
+                }
+                None => {
+                    pivot_of_row[low] = Some(j);
+                    dense.drain_into(low, &mut cols[j]);
+                    return;
+                }
+            }
+        }
+    };
+
+    match algorithm {
+        Algorithm::Standard => {
+            for j in 0..n {
+                process(j, &mut cols, &mut pivot_of_row);
+            }
+        }
+        Algorithm::Twist => {
+            let max_dim = matrix.max_dim();
+            let mut cleared = vec![false; n];
+            for d in (1..=max_dim).rev() {
+                for j in 0..n {
+                    if matrix.dims[j] != d || cleared[j] {
+                        continue;
+                    }
+                    process(j, &mut cols, &mut pivot_of_row);
+                    if let Some(&low) = cols[j].last() {
+                        // The paired creator column reduces to zero — clear.
+                        let low = low as usize;
+                        cleared[low] = true;
+                        cols[low].clear();
+                    }
+                }
+            }
+        }
+    }
+
+    let mut pairs = Vec::new();
+    let mut is_negative = vec![false; n];
+    for (row, &column) in pivot_of_row.iter().enumerate() {
+        if let Some(j) = column {
+            pairs.push((row, j));
+            is_negative[j] = true;
+        }
+    }
+    let mut paired_birth = vec![false; n];
+    for &(b, _) in &pairs {
+        paired_birth[b] = true;
+    }
+    let essential = (0..n)
+        .filter(|&i| !paired_birth[i] && !is_negative[i])
+        .collect();
+    ReductionResult { pairs, essential }
+}
+
+/// Persistence diagrams PD_0..PD_max_k through the legacy AoS pipeline.
+pub fn diagrams_of_complex(
+    c: &CliqueComplex,
+    max_k: usize,
+    algorithm: Algorithm,
+) -> Result<Vec<Diagram>> {
+    let matrix = BoundaryMatrix::build(c)?;
+    let red = reduce(&matrix, algorithm);
+    let mut per_dim: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_k + 1];
+    for &(b, d) in &red.pairs {
+        let k = matrix.dims[b];
+        if k <= max_k {
+            per_dim[k].push((matrix.keys[b], matrix.keys[d]));
+        }
+    }
+    for &i in &red.essential {
+        let k = matrix.dims[i];
+        if k <= max_k {
+            per_dim[k].push((matrix.keys[i], f64::INFINITY));
+        }
+    }
+    Ok(per_dim
+        .into_iter()
+        .enumerate()
+        .map(|(k, pairs)| Diagram::new(k, pairs))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complex::clique::FilteredSimplex;
+    use crate::complex::{Filtration, Simplex};
+    use crate::graph::gen;
+
+    #[test]
+    fn known_spaces_through_legacy_pipeline() {
+        let g = gen::octahedron();
+        let c = CliqueComplex::build(&g, &Filtration::constant(6), 3);
+        let pds = diagrams_of_complex(&c, 2, Algorithm::Twist).unwrap();
+        assert_eq!(pds[0].betti(), 1);
+        assert_eq!(pds[1].betti(), 0);
+        assert_eq!(pds[2].betti(), 1);
+    }
+
+    #[test]
+    fn missing_face_is_typed_error_not_panic() {
+        // triangle [0,1,2] whose edge [1,2] was never added
+        let mk = |v: Vec<u32>, key: f64| FilteredSimplex {
+            simplex: Simplex::from_sorted(v),
+            key,
+        };
+        let c = CliqueComplex {
+            simplices: vec![
+                mk(vec![0], 0.0),
+                mk(vec![1], 0.0),
+                mk(vec![2], 0.0),
+                mk(vec![0, 1], 0.0),
+                mk(vec![0, 2], 0.0),
+                mk(vec![0, 1, 2], 0.0),
+            ],
+        };
+        match BoundaryMatrix::build(&c) {
+            Err(Error::FaceMissing { simplex, face }) => {
+                assert_eq!(simplex, "[0,1,2]");
+                assert_eq!(face, "[1,2]");
+            }
+            Ok(_) => panic!("expected FaceMissing error"),
+            Err(other) => panic!("wrong error variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn standard_equals_twist_through_legacy_path() {
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..6 {
+            let n = rng.range(4, 18);
+            let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
+            let f = Filtration::degree(&g);
+            let c = CliqueComplex::build(&g, &f, 3);
+            let a = diagrams_of_complex(&c, 2, Algorithm::Standard).unwrap();
+            let b = diagrams_of_complex(&c, 2, Algorithm::Twist).unwrap();
+            for k in 0..=2 {
+                assert!(a[k].same_as(&b[k], 1e-12));
+            }
+        }
+    }
+}

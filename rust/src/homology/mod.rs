@@ -1,10 +1,13 @@
 //! Persistent homology engine (S8) — the computation whose cost the
-//! paper's reductions attack. Z/2 clique-complex persistence with a
+//! paper's reductions attack. Z/2 clique-complex persistence over the
+//! columnar [`FlatComplex`](crate::complex::FlatComplex), with a
 //! union-find fast path for PD₀ and a twist-optimised matrix reduction
-//! for higher dimensions.
+//! for higher dimensions. The pre-columnar AoS engine survives in
+//! [`legacy`] as the differential-testing baseline.
 
 pub mod diagram;
 pub mod distance;
+pub mod legacy;
 pub mod reduction;
 pub mod sharded;
 pub mod union_find;
@@ -12,21 +15,34 @@ pub mod vectorize;
 
 pub use diagram::Diagram;
 pub use distance::{bottleneck, wasserstein1};
-pub use reduction::{diagrams_of_complex, Algorithm, BoundaryMatrix};
+pub use reduction::{diagrams_of_complex, reduce, Algorithm, ReductionResult};
 pub use sharded::{merge_shard_diagrams, persistence_diagrams_sharded};
 pub use union_find::pd0;
 
-use crate::complex::{CliqueComplex, Filtration};
+use crate::complex::{ComplexWorkspace, Filtration};
 use crate::graph::Graph;
 
 /// Persistence diagrams `PD_0 .. PD_max_k` of `(G, f)` over the clique-
 /// complex sublevel/superlevel filtration (§3). Uses the union-find fast
 /// path when only PD₀ is requested.
 pub fn persistence_diagrams(g: &Graph, f: &Filtration, max_k: usize) -> Vec<Diagram> {
+    persistence_diagrams_with(&mut ComplexWorkspace::new(), g, f, max_k)
+}
+
+/// [`persistence_diagrams`] reusing a caller-held [`ComplexWorkspace`] —
+/// the batch entry point: shard workers and coordinator threads hold one
+/// workspace each, so complex construction allocates once per thread, not
+/// once per job.
+pub fn persistence_diagrams_with(
+    ws: &mut ComplexWorkspace,
+    g: &Graph,
+    f: &Filtration,
+    max_k: usize,
+) -> Vec<Diagram> {
     if max_k == 0 {
         return vec![pd0(g, f)];
     }
-    let complex = CliqueComplex::build(g, f, max_k + 1);
+    let complex = ws.build_clique(g, f, max_k + 1);
     diagrams_of_complex(&complex, max_k, Algorithm::Twist)
 }
 
@@ -44,6 +60,7 @@ pub fn betti_numbers(g: &Graph, max_k: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::complex::FlatComplex;
     use crate::graph::gen;
 
     #[test]
@@ -66,7 +83,7 @@ mod tests {
         let g = gen::barabasi_albert(60, 2, 3);
         let f = Filtration::degree(&g);
         let fast = persistence_diagrams(&g, &f, 0);
-        let complex = CliqueComplex::build(&g, &f, 1);
+        let complex = FlatComplex::build(&g, &f, 1);
         let slow = diagrams_of_complex(&complex, 0, Algorithm::Standard);
         assert!(fast[0].same_as(&slow[0], 1e-12));
     }
@@ -76,5 +93,21 @@ mod tests {
         let g = gen::cycle(5);
         let f = Filtration::degree(&g);
         assert_eq!(persistence_diagrams(&g, &f, 2).len(), 3);
+    }
+
+    #[test]
+    fn workspace_variant_matches_fresh_path() {
+        let mut ws = ComplexWorkspace::new();
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..5 {
+            let n = rng.range(4, 20);
+            let g = gen::erdos_renyi(n, 0.3, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let a = persistence_diagrams_with(&mut ws, &g, &f, 2);
+            let b = persistence_diagrams(&g, &f, 2);
+            for k in 0..=2 {
+                assert!(a[k].same_as(&b[k], 0.0));
+            }
+        }
     }
 }

@@ -2,82 +2,25 @@
 //! algorithms exist to shrink (§1: "the complexity of the standard PH
 //! algorithm is cubic in the number of simplices").
 //!
-//! Two reducers over the same sparse column representation (sorted row
-//! indices, symmetric-difference column addition):
+//! The reducers consume a [`FlatComplex`]'s boundary CSR **in place**:
+//! unreduced columns are read straight from the arena, and per-column
+//! storage materialises only for columns the reduction actually rewrites
+//! (the legacy engine cloned the whole column set up front — see
+//! [`super::legacy`]). Two strategies over the same layout:
 //!
 //! * `standard` — textbook left-to-right reduction [59].
 //! * `twist` — Chen–Kerber clearing: process dimensions top-down and clear
 //!   columns of paired (creator) simplices, skipping their reduction
 //!   entirely. The production path; property-tested equal to `standard`.
 
-use std::collections::HashMap;
-
 use super::diagram::Diagram;
-use crate::complex::clique::CliqueComplex;
+use crate::complex::flat::FlatComplex;
 
 /// Which reduction algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
     Standard,
     Twist,
-}
-
-/// Sparse boundary matrix in filtration order.
-pub struct BoundaryMatrix {
-    /// columns[j] = sorted row indices of ∂(simplex_j); dim-0 columns empty.
-    pub columns: Vec<Vec<usize>>,
-    /// Simplex dimension per column.
-    pub dims: Vec<usize>,
-    /// Filtration key per column.
-    pub keys: Vec<f64>,
-}
-
-impl BoundaryMatrix {
-    /// Build from a filtered complex (simplices already in filtration
-    /// order with faces preceding cofaces).
-    pub fn build(c: &CliqueComplex) -> BoundaryMatrix {
-        let n = c.simplices.len();
-        let mut index: HashMap<&[u32], usize> = HashMap::with_capacity(n);
-        for (i, s) in c.simplices.iter().enumerate() {
-            index.insert(s.simplex.vertices(), i);
-        }
-        let mut columns = Vec::with_capacity(n);
-        let mut dims = Vec::with_capacity(n);
-        let mut keys = Vec::with_capacity(n);
-        let mut face_buf: Vec<u32> = Vec::new();
-        for s in &c.simplices {
-            let verts = s.simplex.vertices();
-            let d = s.simplex.dim();
-            dims.push(d);
-            keys.push(s.key);
-            if d == 0 {
-                columns.push(Vec::new());
-                continue;
-            }
-            let mut col = Vec::with_capacity(verts.len());
-            for drop in 0..verts.len() {
-                face_buf.clear();
-                face_buf.extend(verts.iter().enumerate().filter_map(|(i, &v)| {
-                    if i == drop {
-                        None
-                    } else {
-                        Some(v)
-                    }
-                }));
-                let row = *index
-                    .get(face_buf.as_slice())
-                    .expect("face missing from complex — build order violated");
-                col.push(row);
-            }
-            col.sort_unstable();
-            columns.push(col);
-        }
-        BoundaryMatrix { columns, dims, keys }
-    }
-
-    pub fn max_dim(&self) -> usize {
-        self.dims.iter().copied().max().unwrap_or(0)
-    }
 }
 
 /// Dense Z/2 working column: a reusable bitset for the reduction chain.
@@ -88,12 +31,12 @@ impl BoundaryMatrix {
 /// O(|other|) bit flips, and the new low is found by scanning downward
 /// from the old low (which always cancels). Measured 2.2× end-to-end on
 /// the reduction hot path (see EXPERIMENTS.md §Perf).
-struct DenseColumn {
+pub(crate) struct DenseColumn {
     words: Vec<u64>,
 }
 
 impl DenseColumn {
-    fn new(rows: usize) -> DenseColumn {
+    pub(crate) fn new(rows: usize) -> DenseColumn {
         DenseColumn {
             words: vec![0; rows.div_ceil(64)],
         }
@@ -101,23 +44,23 @@ impl DenseColumn {
 
     /// Load a sparse column (clears previous contents cheaply by
     /// re-zeroing only the words it may have touched — callers guarantee
-    /// `clear` ran first).
-    fn load(&mut self, col: &[usize]) {
+    /// `drain_into` ran first).
+    pub(crate) fn load(&mut self, col: &[u32]) {
         for &r in col {
-            self.words[r >> 6] ^= 1u64 << (r & 63);
+            self.words[(r >> 6) as usize] ^= 1u64 << (r & 63);
         }
     }
 
     /// XOR a sparse column in.
     #[inline]
-    fn xor(&mut self, col: &[usize]) {
+    pub(crate) fn xor(&mut self, col: &[u32]) {
         for &r in col {
-            self.words[r >> 6] ^= 1u64 << (r & 63);
+            self.words[(r >> 6) as usize] ^= 1u64 << (r & 63);
         }
     }
 
     /// Highest set bit at or below `from`, if any.
-    fn low_at_or_below(&self, from: usize) -> Option<usize> {
+    pub(crate) fn low_at_or_below(&self, from: usize) -> Option<usize> {
         let mut w = from >> 6;
         let mut mask = if (from & 63) == 63 {
             u64::MAX
@@ -138,7 +81,7 @@ impl DenseColumn {
     }
 
     /// Extract set bits ≤ `max_row` into `out` (ascending) and zero them.
-    fn drain_into(&mut self, max_row: usize, out: &mut Vec<usize>) {
+    pub(crate) fn drain_into(&mut self, max_row: usize, out: &mut Vec<u32>) {
         out.clear();
         let top = (max_row >> 6) + 1;
         for w in 0..top.min(self.words.len()) {
@@ -146,7 +89,7 @@ impl DenseColumn {
             self.words[w] = 0;
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
-                out.push((w << 6) + b);
+                out.push(((w << 6) + b) as u32);
                 bits &= bits - 1;
             }
         }
@@ -156,72 +99,104 @@ impl DenseColumn {
 /// Output of a reduction: persistence pairs as (birth col, death col)
 /// index pairs plus the essential (unpaired positive) columns.
 pub struct ReductionResult {
-    /// (birth simplex index, death simplex index); class dim = dims[birth].
+    /// (birth simplex index, death simplex index); class dim = dim of birth.
     pub pairs: Vec<(usize, usize)>,
     /// Unpaired positive simplex indices (infinite classes).
     pub essential: Vec<usize>,
 }
 
-/// Run the reduction and extract index pairs.
-pub fn reduce(matrix: &BoundaryMatrix, algorithm: Algorithm) -> ReductionResult {
-    let n = matrix.columns.len();
-    let mut cols: Vec<Vec<usize>> = matrix.columns.clone();
+/// Current view of column `j`: the reduced form if the reduction rewrote
+/// it, otherwise the original CSR slice straight from the complex arena.
+#[inline]
+fn col<'a>(c: &'a FlatComplex, work: &'a [Vec<u32>], touched: &[bool], j: usize) -> &'a [u32] {
+    if touched[j] {
+        &work[j]
+    } else {
+        c.boundary_of(j)
+    }
+}
+
+/// Reduce column `j` against the pivots found so far.
+fn process(
+    j: usize,
+    c: &FlatComplex,
+    work: &mut [Vec<u32>],
+    touched: &mut [bool],
+    pivot_of_row: &mut [Option<usize>],
+    dense: &mut DenseColumn,
+) {
+    let Some(&start_low) = col(c, work, touched, j).last() else {
+        return; // structurally empty (dim-0) column
+    };
+    let start_low = start_low as usize;
+    // Fast path: unique low already — the CSR slice stays the column's
+    // reduced form; no dense round-trip, no storage.
+    if pivot_of_row[start_low].is_none() {
+        pivot_of_row[start_low] = Some(j);
+        return;
+    }
+    dense.load(col(c, work, touched, j));
+    let mut low = start_low;
+    loop {
+        match pivot_of_row[low] {
+            Some(jp) => {
+                dense.xor(col(c, work, touched, jp));
+                // the shared low always cancels; next low is strictly
+                // below it
+                match (low > 0).then(|| dense.low_at_or_below(low - 1)).flatten() {
+                    Some(l) => low = l,
+                    None => {
+                        // column reduced to zero
+                        work[j].clear();
+                        touched[j] = true;
+                        return;
+                    }
+                }
+            }
+            None => {
+                pivot_of_row[low] = Some(j);
+                let out = &mut work[j];
+                dense.drain_into(low, out);
+                touched[j] = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Run the reduction and extract index pairs. Columns are consumed from
+/// the complex's boundary CSR; nothing is cloned up front.
+pub fn reduce(c: &FlatComplex, algorithm: Algorithm) -> ReductionResult {
+    let n = c.len();
+    // Lazily materialised reduced columns: work[j] is meaningful only
+    // when touched[j]; untouched columns read from the arena.
+    let mut work: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut touched = vec![false; n];
     // pivot_of_row[r] = column whose low is r.
     let mut pivot_of_row: Vec<Option<usize>> = vec![None; n];
     let mut dense = DenseColumn::new(n);
 
-    let mut process = |j: usize, cols: &mut Vec<Vec<usize>>, pivot_of_row: &mut Vec<Option<usize>>| {
-        let Some(&start_low) = cols[j].last() else { return };
-        // Fast path: unique low already — no dense round-trip needed.
-        if pivot_of_row[start_low].is_none() {
-            pivot_of_row[start_low] = Some(j);
-            return;
-        }
-        dense.load(&cols[j]);
-        let mut low = start_low;
-        loop {
-            match pivot_of_row[low] {
-                Some(jp) => {
-                    dense.xor(&cols[jp]);
-                    // the shared low always cancels; next low is strictly
-                    // below it
-                    match (low > 0).then(|| dense.low_at_or_below(low - 1)).flatten() {
-                        Some(l) => low = l,
-                        None => {
-                            // column reduced to zero
-                            cols[j].clear();
-                            return;
-                        }
-                    }
-                }
-                None => {
-                    pivot_of_row[low] = Some(j);
-                    dense.drain_into(low, &mut cols[j]);
-                    return;
-                }
-            }
-        }
-    };
-
     match algorithm {
         Algorithm::Standard => {
             for j in 0..n {
-                process(j, &mut cols, &mut pivot_of_row);
+                process(j, c, &mut work, &mut touched, &mut pivot_of_row, &mut dense);
             }
         }
         Algorithm::Twist => {
-            let max_dim = matrix.max_dim();
+            let max_dim = c.dim();
             let mut cleared = vec![false; n];
             for d in (1..=max_dim).rev() {
                 for j in 0..n {
-                    if matrix.dims[j] != d || cleared[j] {
+                    if c.dim_of(j) != d || cleared[j] {
                         continue;
                     }
-                    process(j, &mut cols, &mut pivot_of_row);
-                    if let Some(&low) = cols[j].last() {
+                    process(j, c, &mut work, &mut touched, &mut pivot_of_row, &mut dense);
+                    if let Some(&low) = col(c, &work, &touched, j).last() {
                         // The paired creator column reduces to zero — clear.
+                        let low = low as usize;
                         cleared[low] = true;
-                        cols[low].clear();
+                        work[low].clear();
+                        touched[low] = true;
                     }
                 }
             }
@@ -230,8 +205,8 @@ pub fn reduce(matrix: &BoundaryMatrix, algorithm: Algorithm) -> ReductionResult 
 
     let mut pairs = Vec::new();
     let mut is_negative = vec![false; n];
-    for (row, &col) in pivot_of_row.iter().enumerate() {
-        if let Some(j) = col {
+    for (row, &column) in pivot_of_row.iter().enumerate() {
+        if let Some(j) = column {
             pairs.push((row, j));
             is_negative[j] = true;
         }
@@ -250,20 +225,19 @@ pub fn reduce(matrix: &BoundaryMatrix, algorithm: Algorithm) -> ReductionResult 
 ///
 /// The complex must contain simplices up to dimension `max_k + 1`,
 /// otherwise deaths of k-classes are missed and PD_k is wrong.
-pub fn diagrams_of_complex(c: &CliqueComplex, max_k: usize, algorithm: Algorithm) -> Vec<Diagram> {
-    let matrix = BoundaryMatrix::build(c);
-    let red = reduce(&matrix, algorithm);
+pub fn diagrams_of_complex(c: &FlatComplex, max_k: usize, algorithm: Algorithm) -> Vec<Diagram> {
+    let red = reduce(c, algorithm);
     let mut per_dim: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_k + 1];
     for &(b, d) in &red.pairs {
-        let k = matrix.dims[b];
+        let k = c.dim_of(b);
         if k <= max_k {
-            per_dim[k].push((matrix.keys[b], matrix.keys[d]));
+            per_dim[k].push((c.key_of(b), c.key_of(d)));
         }
     }
     for &i in &red.essential {
-        let k = matrix.dims[i];
+        let k = c.dim_of(i);
         if k <= max_k {
-            per_dim[k].push((matrix.keys[i], f64::INFINITY));
+            per_dim[k].push((c.key_of(i), f64::INFINITY));
         }
     }
     per_dim
@@ -276,11 +250,16 @@ pub fn diagrams_of_complex(c: &CliqueComplex, max_k: usize, algorithm: Algorithm
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::complex::{CliqueComplex, Filtration};
+    use crate::complex::{Filtration, FlatComplex};
     use crate::graph::gen;
 
-    fn diagrams(g: &crate::graph::Graph, f: &Filtration, max_k: usize, alg: Algorithm) -> Vec<Diagram> {
-        let c = CliqueComplex::build(g, f, max_k + 1);
+    fn diagrams(
+        g: &crate::graph::Graph,
+        f: &Filtration,
+        max_k: usize,
+        alg: Algorithm,
+    ) -> Vec<Diagram> {
+        let c = FlatComplex::build(g, f, max_k + 1);
         diagrams_of_complex(&c, max_k, alg)
     }
 
@@ -374,7 +353,12 @@ mod tests {
             let a = diagrams(&g, &f, 2, Algorithm::Standard);
             let b = diagrams(&g, &f, 2, Algorithm::Twist);
             for k in 0..=2 {
-                assert!(a[k].same_as(&b[k], 1e-12), "PD_{k} mismatch: {} vs {}", a[k], b[k]);
+                assert!(
+                    a[k].same_as(&b[k], 1e-12),
+                    "PD_{k} mismatch: {} vs {}",
+                    a[k],
+                    b[k]
+                );
             }
         }
     }
@@ -385,9 +369,20 @@ mod tests {
         // essential) or a death, exactly once.
         let g = gen::erdos_renyi(16, 0.4, 7);
         let f = Filtration::degree(&g);
-        let c = CliqueComplex::build(&g, &f, 3);
-        let m = BoundaryMatrix::build(&c);
-        let r = reduce(&m, Algorithm::Twist);
+        let c = FlatComplex::build(&g, &f, 3);
+        let r = reduce(&c, Algorithm::Twist);
         assert_eq!(2 * r.pairs.len() + r.essential.len(), c.len());
+    }
+
+    #[test]
+    fn untouched_columns_read_from_arena() {
+        // A path graph's edge columns all have unique lows — the fast path
+        // must leave every column untouched and still pair correctly.
+        let g = gen::path(6);
+        let f = Filtration::sublevel(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let c = FlatComplex::build(&g, &f, 2);
+        let r = reduce(&c, Algorithm::Standard);
+        assert_eq!(r.pairs.len(), 5, "five edges kill five components");
+        assert_eq!(r.essential.len(), 1);
     }
 }

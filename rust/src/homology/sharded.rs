@@ -19,18 +19,30 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use crate::complex::Filtration;
+use crate::complex::{ComplexWorkspace, Filtration};
 use crate::graph::decompose::{decompose_filtered, Shard};
 use crate::graph::Graph;
 
 use super::diagram::Diagram;
-use super::persistence_diagrams;
+use super::persistence_diagrams_with;
 
 /// Diagrams `PD_0..PD_max_k` of a single shard. Singleton shards (the
 /// isolated-vertex fringe that PrunIT and coral leave behind in bulk)
 /// short-circuit to their one essential component instead of building a
 /// complex.
 pub fn shard_diagrams(shard: &Shard, max_k: usize) -> Vec<Diagram> {
+    shard_diagrams_with(&mut ComplexWorkspace::new(), shard, max_k)
+}
+
+/// [`shard_diagrams`] reusing a caller-held [`ComplexWorkspace`]. The
+/// sharded pipeline runs thousands of small PH jobs per batch; building
+/// each shard's complex into the same per-thread arenas removes the
+/// per-shard allocation churn.
+pub fn shard_diagrams_with(
+    ws: &mut ComplexWorkspace,
+    shard: &Shard,
+    max_k: usize,
+) -> Vec<Diagram> {
     if shard.graph.n() == 1 {
         let mut out = Vec::with_capacity(max_k + 1);
         out.push(Diagram::new(
@@ -42,7 +54,7 @@ pub fn shard_diagrams(shard: &Shard, max_k: usize) -> Vec<Diagram> {
         }
         return out;
     }
-    persistence_diagrams(&shard.graph, &shard.filtration, max_k)
+    persistence_diagrams_with(ws, &shard.graph, &shard.filtration, max_k)
 }
 
 /// Per-shard diagrams for a whole shard set, computed on up to `workers`
@@ -55,7 +67,11 @@ pub fn shard_diagrams(shard: &Shard, max_k: usize) -> Vec<Diagram> {
 pub fn all_shard_diagrams(shards: &[Shard], max_k: usize, workers: usize) -> Vec<Vec<Diagram>> {
     let workers = workers.max(1).min(shards.len().max(1));
     if workers == 1 {
-        return shards.iter().map(|s| shard_diagrams(s, max_k)).collect();
+        let mut ws = ComplexWorkspace::new();
+        return shards
+            .iter()
+            .map(|s| shard_diagrams_with(&mut ws, s, max_k))
+            .collect();
     }
     let mut order: Vec<usize> = (0..shards.len()).collect();
     order.sort_by_key(|&i| std::cmp::Reverse(shards[i].graph.n()));
@@ -67,14 +83,22 @@ pub fn all_shard_diagrams(shards: &[Shard], max_k: usize, workers: usize) -> Vec
             let tx = tx.clone();
             let next = &next;
             let order = &order;
-            scope.spawn(move || loop {
-                let slot = next.fetch_add(1, Ordering::Relaxed);
-                if slot >= order.len() {
-                    break;
-                }
-                let i = order[slot];
-                if tx.send((i, shard_diagrams(&shards[i], max_k))).is_err() {
-                    break;
+            scope.spawn(move || {
+                // one complex workspace per worker thread: every shard on
+                // this thread builds into the same arenas
+                let mut ws = ComplexWorkspace::new();
+                loop {
+                    let slot = next.fetch_add(1, Ordering::Relaxed);
+                    if slot >= order.len() {
+                        break;
+                    }
+                    let i = order[slot];
+                    if tx
+                        .send((i, shard_diagrams_with(&mut ws, &shards[i], max_k)))
+                        .is_err()
+                    {
+                        break;
+                    }
                 }
             });
         }
@@ -123,6 +147,7 @@ mod tests {
     use super::*;
     use crate::graph::decompose::disjoint_union;
     use crate::graph::gen;
+    use crate::homology::persistence_diagrams;
 
     #[test]
     fn merge_is_additive_on_known_spaces() {

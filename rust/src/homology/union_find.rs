@@ -79,7 +79,7 @@ pub fn pd0(g: &Graph, f: &Filtration) -> Diagram {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::complex::clique::CliqueComplex;
+    use crate::complex::FlatComplex;
     use crate::homology::reduction::{diagrams_of_complex, Algorithm};
     use crate::graph::gen;
     use crate::util::Rng;
@@ -126,7 +126,7 @@ mod tests {
             let vals: Vec<f64> = (0..n).map(|_| rng.below(6) as f64).collect();
             let f = Filtration::sublevel(vals);
             let fast = pd0(&g, &f);
-            let c = CliqueComplex::build(&g, &f, 1);
+            let c = FlatComplex::build(&g, &f, 1);
             let slow = &diagrams_of_complex(&c, 0, Algorithm::Twist)[0];
             assert!(
                 fast.same_as(slow, 1e-12),

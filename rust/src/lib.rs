@@ -16,9 +16,12 @@
 //! This crate contains the complete system: the graph substrate and
 //! generators, k-core decomposition, domination pruning (sparse CPU path
 //! and a dense XLA path executing the AOT-compiled Pallas kernel, gated
-//! behind the `xla` feature), clique-complex filtrations, a Z/2
-//! persistent-homology engine (the expensive computation the paper
-//! reduces), the combined reduction pipeline, a **component-sharded
+//! behind the `xla` feature), clique-complex filtrations stored in the
+//! **columnar `FlatComplex`** (vertex arena + boundary CSR resolved at
+//! construction; the AoS path survives in `homology::legacy` as the
+//! differential-test reference), a Z/2 persistent-homology engine that
+//! reduces the boundary CSR in place (the expensive computation the
+//! paper reduces), the combined reduction pipeline, a **component-sharded
 //! parallel pipeline** (`reduce::pd_sharded` — PDs are additive over
 //! disjoint unions, so per-component PH is exact and turns the cubic
 //! monolithic reduction into independent parallel jobs), a batch

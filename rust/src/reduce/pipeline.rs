@@ -225,12 +225,21 @@ mod tests {
 
     #[test]
     fn pd_sharded_matches_monolithic_pipeline() {
+        // Full reduction matrix, Coral included: mono and sharded apply
+        // the identical reduction to the identical instance, so their
+        // diagrams must agree in every computed dimension — in particular
+        // PD_1, the dimension Coral's (k+1)-core targets.
         let mut rng = crate::util::Rng::new(404);
         for _ in 0..6 {
             let n = rng.range(8, 24);
             let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
             let f = Filtration::degree_superlevel(&g);
-            for which in [Reduction::None, Reduction::Prunit, Reduction::Combined] {
+            for which in [
+                Reduction::None,
+                Reduction::Coral,
+                Reduction::Prunit,
+                Reduction::Combined,
+            ] {
                 let (mono, _) = pd_with_reduction(&g, &f, 1, which);
                 let (shard, report) = pd_sharded(&g, &f, 1, which, 2);
                 assert_eq!(report.shard_count(), report.graph.components());
@@ -245,6 +254,26 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn pd_sharded_coral_pd1_matches_unreduced_baseline() {
+        // Theorem 2 through the sharded pipeline: coral's PD_1 equals the
+        // unreduced PD_1 (the guarantee is k ≥ 1 only).
+        let mut rng = crate::util::Rng::new(405);
+        for _ in 0..6 {
+            let n = rng.range(8, 22);
+            let g = gen::erdos_renyi(n, 0.3, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let base = persistence_diagrams(&g, &f, 1);
+            let (coral, _) = pd_sharded(&g, &f, 1, Reduction::Coral, 2);
+            assert!(
+                base[1].same_as(&coral[1], 1e-12),
+                "PD_1: {} vs {}",
+                base[1],
+                coral[1]
+            );
         }
     }
 

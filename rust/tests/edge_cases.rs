@@ -2,7 +2,7 @@
 //! disconnected inputs, worker panics, config round-trips, and diagram
 //! invariants that must hold at the boundaries.
 
-use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::complex::{Filtration, FlatComplex};
 use coral_prunit::config::{Config, CoordinatorConfig};
 use coral_prunit::coordinator::{Coordinator, Job, JobSpec};
 use coral_prunit::graph::{gen, Graph};
@@ -109,7 +109,7 @@ fn negative_and_huge_filtration_values() {
 #[test]
 fn max_dim_zero_complex_is_vertices_only() {
     let g = gen::complete(5);
-    let c = CliqueComplex::build(&g, &Filtration::constant(5), 0);
+    let c = FlatComplex::build(&g, &Filtration::constant(5), 0);
     assert_eq!(c.counts_by_dim(), vec![5]);
 }
 

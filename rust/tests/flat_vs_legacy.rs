@@ -1,0 +1,120 @@
+//! Differential properties of the columnar `FlatComplex` engine against
+//! the legacy AoS `CliqueComplex` path, on seeded random graphs: simplex
+//! order, counts by dimension, boundary structure, and persistence
+//! diagrams (Standard + Twist) must all coincide. This suite is the
+//! contract that lets the legacy type be deleted later without losing
+//! the reference semantics.
+
+use coral_prunit::complex::{CliqueComplex, Filtration, FlatComplex};
+use coral_prunit::graph::gen;
+use coral_prunit::homology::legacy;
+use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
+use coral_prunit::util::Rng;
+
+const MAX_DIM: usize = 3;
+const MAX_K: usize = 2;
+
+fn case_graph(case: usize, rng: &mut Rng) -> coral_prunit::graph::Graph {
+    let n = rng.range(4, 28);
+    match case % 4 {
+        0 | 1 => gen::erdos_renyi(n, 0.15 + rng.below(30) as f64 / 100.0, rng.next_u64()),
+        2 => gen::barabasi_albert(n.max(5), 2, rng.next_u64()),
+        _ => gen::powerlaw_cluster(n.max(6), 2, 0.5, rng.next_u64()),
+    }
+}
+
+fn case_filtration(case: usize, rng: &mut Rng, g: &coral_prunit::graph::Graph) -> Filtration {
+    match case % 3 {
+        0 => Filtration::sublevel((0..g.n()).map(|_| rng.below(6) as f64).collect()),
+        1 => Filtration::degree(g),
+        _ => Filtration::degree_superlevel(g),
+    }
+}
+
+#[test]
+fn flat_matches_legacy_on_seeded_random_graphs() {
+    let mut rng = Rng::new(0xF1A7);
+    for case in 0..24 {
+        let g = case_graph(case, &mut rng);
+        let f = case_filtration(case, &mut rng, &g);
+
+        let legacy_c = CliqueComplex::build(&g, &f, MAX_DIM);
+        let flat = FlatComplex::build(&g, &f, MAX_DIM);
+
+        // identical simplex order: same tuples, same keys, position by position
+        assert_eq!(flat.len(), legacy_c.len(), "case {case}: simplex count");
+        assert_eq!(
+            flat.counts_by_dim(),
+            legacy_c.counts_by_dim(),
+            "case {case}: counts by dim"
+        );
+        for (i, s) in legacy_c.simplices.iter().enumerate() {
+            assert_eq!(
+                flat.vertices_of(i),
+                s.simplex.vertices(),
+                "case {case}: order diverged at position {i}"
+            );
+            assert_eq!(
+                flat.key_of(i),
+                s.key,
+                "case {case}: key diverged at position {i}"
+            );
+            assert_eq!(flat.dim_of(i), s.simplex.dim());
+        }
+
+        // boundary structure: faces strictly precede cofaces
+        for i in 0..flat.len() {
+            let col = flat.boundary_of(i);
+            if flat.dim_of(i) == 0 {
+                assert!(col.is_empty());
+            } else {
+                assert_eq!(col.len(), flat.dim_of(i) + 1);
+            }
+            for &r in col {
+                assert!((r as usize) < i, "case {case}: face after coface");
+            }
+        }
+
+        // diagrams through both engines, both algorithms
+        for alg in [Algorithm::Standard, Algorithm::Twist] {
+            let a = legacy::diagrams_of_complex(&legacy_c, MAX_K, alg).unwrap();
+            let b = diagrams_of_complex(&flat, MAX_K, alg);
+            for k in 0..=MAX_K {
+                assert!(
+                    a[k].same_as(&b[k], 0.0),
+                    "case {case} ({alg:?}): PD_{k} {} vs {}",
+                    a[k],
+                    b[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_matches_legacy_on_structured_graphs() {
+    let f_of = |g: &coral_prunit::graph::Graph| Filtration::degree(g);
+    for (name, g) in [
+        ("cycle8", gen::cycle(8)),
+        ("complete6", gen::complete(6)),
+        ("octahedron", gen::octahedron()),
+        ("star7", gen::star(7)),
+        ("grid3x4", gen::grid(3, 4)),
+        ("path5", gen::path(5)),
+        ("empty", coral_prunit::graph::Graph::empty(4)),
+    ] {
+        let f = f_of(&g);
+        let legacy_c = CliqueComplex::build(&g, &f, MAX_DIM);
+        let flat = FlatComplex::build(&g, &f, MAX_DIM);
+        assert_eq!(flat.len(), legacy_c.len(), "{name}");
+        for (i, s) in legacy_c.simplices.iter().enumerate() {
+            assert_eq!(flat.vertices_of(i), s.simplex.vertices(), "{name} at {i}");
+            assert_eq!(flat.key_of(i), s.key, "{name} at {i}");
+        }
+        let a = legacy::diagrams_of_complex(&legacy_c, MAX_K, Algorithm::Twist).unwrap();
+        let b = diagrams_of_complex(&flat, MAX_K, Algorithm::Twist);
+        for k in 0..=MAX_K {
+            assert!(a[k].same_as(&b[k], 0.0), "{name}: PD_{k}");
+        }
+    }
+}

@@ -2,7 +2,7 @@
 //! coordinator batches, the XLA dense path against the sparse path, and
 //! engine-level cross-validation (standard vs twist vs union-find).
 
-use coral_prunit::complex::{CliqueComplex, Filtration};
+use coral_prunit::complex::{Filtration, FlatComplex};
 use coral_prunit::coordinator::{Coordinator, Job, JobSpec};
 use coral_prunit::config::CoordinatorConfig;
 use coral_prunit::graph::gen;
@@ -145,7 +145,7 @@ fn engine_three_way_agreement() {
         let case = random_graph_case(rng, 22);
         let g = &case.graph;
         let f = random_filtration(rng, g);
-        let c = CliqueComplex::build(g, &f, 3);
+        let c = FlatComplex::build(g, &f, 3);
         let std_pds = diagrams_of_complex(&c, 2, Algorithm::Standard);
         let twist_pds = diagrams_of_complex(&c, 2, Algorithm::Twist);
         for k in 0..=2 {
@@ -178,7 +178,7 @@ fn euler_characteristic_matches_betti_alternating_sum() {
         // full clique complex: cap by degeneracy+1 (max clique size)
         let d = coral_prunit::kcore::degeneracy(g);
         let max_dim = d + 1;
-        let c = CliqueComplex::build(g, &Filtration::constant(g.n()), max_dim + 1);
+        let c = FlatComplex::build(g, &Filtration::constant(g.n()), max_dim + 1);
         let counts = c.counts_by_dim();
         let chi_simplices: i64 = counts
             .iter()

@@ -109,7 +109,7 @@ fn degeneracy_bounds_complex_dimension() {
         let case = random_graph_case(rng, 20);
         let g = &case.graph;
         let d = degeneracy(g);
-        let complex = coral_prunit::complex::CliqueComplex::build(
+        let complex = coral_prunit::complex::FlatComplex::build(
             g,
             &Filtration::constant(g.n()),
             d + 2,
