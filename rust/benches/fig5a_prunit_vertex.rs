@@ -24,7 +24,7 @@ fn main() {
         let mut rem_acc = 0usize;
         for g in &graphs {
             let f = Filtration::degree_superlevel(g);
-            let r = prunit(g, &f);
+            let r = prunit(g, &f).unwrap();
             acc += reduction_pct(g.n(), r.graph.n());
             n_acc += g.n();
             rem_acc += r.removed;

@@ -58,7 +58,7 @@ fn main() {
             // pruned: ALL PrunIT steps counted (find+remove dominated,
             // induced graph, then PD_0), as in the paper
             let (_, t_pru) = Timer::time(|| {
-                let r = prunit(&ego, &f);
+                let r = prunit(&ego, &f).unwrap();
                 pd0_generic(&r.graph, &r.filtration)
             });
             t_raw_tot += t_raw;

@@ -22,7 +22,7 @@ fn main() {
     for recipe in datasets::large_networks() {
         let g = recipe.make(SEED, 0);
         let f = Filtration::degree_superlevel(&g);
-        let pruned = prunit(&g, &f);
+        let pruned = prunit(&g, &f).unwrap();
         let mut row = vec![recipe.name.to_string()];
         for (i, &c) in CORES.iter().enumerate() {
             let (core, _) = kcore_subgraph(&pruned.graph, c);

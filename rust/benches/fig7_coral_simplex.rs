@@ -29,7 +29,7 @@ fn main() {
             for g in &graphs {
                 let f = Filtration::degree(g);
                 let before: usize = count_cliques(g, k + 2).iter().sum();
-                let r = coral_reduce(g, &f, k);
+                let r = coral_reduce(g, &f, k).unwrap();
                 let after: usize = count_cliques(&r.graph, k + 2).iter().sum();
                 acc += reduction_pct(before, after);
             }

@@ -39,7 +39,7 @@ fn main() {
                 let f = Filtration::degree(g);
                 let (_, secs_orig) = Timer::time(|| persistence_diagrams(g, &f, k));
                 let (_, secs_red) = Timer::time(|| {
-                    let r = coral_reduce(g, &f, k);
+                    let r = coral_reduce(g, &f, k).unwrap();
                     persistence_diagrams(&r.graph, &r.filtration, k)
                 });
                 t_orig += secs_orig;

@@ -25,7 +25,7 @@ fn main() {
             let mut acc = 0.0;
             for g in &graphs {
                 let f = Filtration::degree(g);
-                let r = coral_reduce(g, &f, k);
+                let r = coral_reduce(g, &f, k).unwrap();
                 acc += reduction_pct(g.m(), r.graph.m());
             }
             row.push(format!("{:.1}", acc / graphs.len() as f64));

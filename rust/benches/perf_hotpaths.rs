@@ -2,6 +2,7 @@
 //! measurement harness for the optimization pass. One row per hot path;
 //! re-run after each change and record deltas.
 
+use coral_prunit::bench::json::{write_records, JsonRecord};
 use coral_prunit::bench::{bench_auto, sink};
 use coral_prunit::complex::{CliqueComplex, Filtration, FlatComplex};
 use coral_prunit::graph::gen;
@@ -23,11 +24,48 @@ fn main() {
     let m = bench_auto(|| sink(coreness(&big)));
     t.row(&["kcore/bz".into(), format!("BA n=100k m={}", big.m()), m.fmt_ms()]);
 
-    // 2. PrunIT sparse fixed point
+    // 2. PrunIT sparse fixed point (materializing reference path)
     let social = coral_prunit::datasets::recipes::social(50_000, 2, 0.45, 2);
     let f_social = Filtration::degree_superlevel(&social);
-    let m = bench_auto(|| sink(prunit(&social, &f_social).removed));
+    let m = bench_auto(|| sink(prunit(&social, &f_social).unwrap().removed));
     t.row(&["prunit/sparse".into(), format!("social n=50k m={}", social.m()), m.fmt_ms()]);
+
+    // 2b. zero-copy reduction planner on the same workload: in-place
+    //     prunit+coral and its fixed-point alternation, one compaction —
+    //     rows also land in BENCH_hotpaths.json (same schema as the
+    //     planner_scaling driver's BENCH_planner.json; distinct file so
+    //     a full `cargo bench` run cannot clobber either)
+    let mut planner_records: Vec<JsonRecord> = Vec::new();
+    {
+        use coral_prunit::reduce::{combined_with_ws, Reduction, ReductionWorkspace};
+        let mut ws = ReductionWorkspace::new();
+        for which in [Reduction::Combined, Reduction::FixedPoint] {
+            let red = combined_with_ws(&mut ws, &social, &f_social, 1, which).unwrap();
+            let m = bench_auto(|| {
+                sink(combined_with_ws(&mut ws, &social, &f_social, 1, which).unwrap().graph.n())
+            });
+            t.row(&[
+                format!("reduce/planner {}", which.name()),
+                format!("social n=50k m={}", social.m()),
+                m.fmt_ms(),
+            ]);
+            planner_records.push(JsonRecord {
+                bench: "perf_hotpaths".into(),
+                graph: format!("social({},{})", social.n(), social.m()),
+                pipeline: "in-place".into(),
+                reduction: which.name().into(),
+                stage: "reduce".into(),
+                wall_secs: m.median_secs,
+                removed_per_round: red
+                    .report
+                    .rounds
+                    .iter()
+                    .map(|r| r.prunit_removed + r.core_removed)
+                    .collect(),
+                vertices_after: red.graph.n(),
+            });
+        }
+    }
 
     // 3. clique enumeration (complex build) on a clustered graph:
     //    columnar production path vs the retained AoS reference. Note the
@@ -78,7 +116,7 @@ fn main() {
     let m_none = bench_auto(|| sink(persistence_diagrams(&reddit, &f_r, 1).len()));
     t.row(&["e2e/pd1 no-reduction".into(), format!("REDDIT n={}", reddit.n()), m_none.fmt_ms()]);
     let m_red = bench_auto(|| {
-        let r = coral_prunit::reduce::combined(&reddit, &f_r, 1);
+        let r = coral_prunit::reduce::combined(&reddit, &f_r, 1).unwrap();
         sink(persistence_diagrams(&r.graph, &r.filtration, 1).len())
     });
     t.row(&["e2e/pd1 prunit+coral".into(), format!("REDDIT n={}", reddit.n()), m_red.fmt_ms()]);
@@ -97,4 +135,6 @@ fn main() {
     }
 
     t.emit(Some("bench_results.tsv"));
+    write_records("BENCH_hotpaths.json", &planner_records).expect("write BENCH_hotpaths.json");
+    println!("wrote BENCH_hotpaths.json ({} records)", planner_records.len());
 }

@@ -1,0 +1,90 @@
+//! §Planner — materializing vs in-place reduction pipelines
+//! (EXPERIMENTS.md §Perf): the acceptance bench for the zero-copy
+//! planner. Both sides run the identical reduction (differential-tested
+//! equal in `rust/tests/fixed_point.rs`); only the execution strategy
+//! differs — per-stage `Graph` materialization vs tombstone masks on the
+//! original CSR with a single compaction.
+//!
+//! Workloads: ER(20000, 5/n) and BA(20000, 3) (pass `--quick` for a
+//! 2000-vertex CI profile), reductions Combined and FixedPoint. Emits
+//! the wall-time table plus machine-readable `BENCH_planner.json`
+//! (graph, stage, wall seconds, vertices removed per round) for the
+//! cross-PR perf trajectory.
+
+use coral_prunit::bench::json::{write_records, JsonRecord};
+use coral_prunit::bench::{bench_auto, sink};
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::gen;
+use coral_prunit::reduce::{
+    combined_with_materializing, combined_with_ws, Reduction, ReductionWorkspace,
+};
+use coral_prunit::util::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: usize = if quick { 2_000 } else { 20_000 };
+    let graphs = [
+        (
+            format!("ER({n},5/n)"),
+            gen::erdos_renyi(n, 5.0 / n as f64, 11),
+        ),
+        (format!("BA({n},3)"), gen::barabasi_albert(n, 3, 11)),
+    ];
+    let mut t = Table::new(
+        "§Planner — reduce wall-time, materializing vs in-place (median ± MAD)",
+        &["graph", "reduction", "pipeline", "|V'|", "rounds", "time"],
+    );
+    let mut records: Vec<JsonRecord> = Vec::new();
+    let mut ws = ReductionWorkspace::new();
+    for (label, g) in &graphs {
+        let f = Filtration::degree_superlevel(g);
+        for which in [Reduction::Combined, Reduction::FixedPoint] {
+            // one reference run for the telemetry the JSON rows carry
+            let mat = combined_with_materializing(g, &f, 1, which).unwrap();
+            let inp = combined_with_ws(&mut ws, g, &f, 1, which).unwrap();
+            assert_eq!(
+                mat.graph, inp.graph,
+                "materializing and in-place pipelines must agree"
+            );
+            let removed_per_round: Vec<usize> = inp
+                .report
+                .rounds
+                .iter()
+                .map(|r| r.prunit_removed + r.core_removed)
+                .collect();
+
+            let m_mat = bench_auto(|| {
+                sink(combined_with_materializing(g, &f, 1, which).unwrap().graph.n())
+            });
+            let m_inp =
+                bench_auto(|| sink(combined_with_ws(&mut ws, g, &f, 1, which).unwrap().graph.n()));
+
+            for (pipeline, m, red) in [
+                ("materializing", m_mat, &mat),
+                ("in-place", m_inp, &inp),
+            ] {
+                t.row(&[
+                    label.clone(),
+                    which.name().into(),
+                    pipeline.into(),
+                    red.graph.n().to_string(),
+                    red.report.rounds_run().to_string(),
+                    m.fmt_ms(),
+                ]);
+                records.push(JsonRecord {
+                    bench: "planner_scaling".into(),
+                    graph: label.clone(),
+                    pipeline: pipeline.into(),
+                    reduction: which.name().into(),
+                    stage: "reduce".into(),
+                    wall_secs: m.median_secs,
+                    removed_per_round: removed_per_round.clone(),
+                    vertices_after: red.graph.n(),
+                });
+            }
+        }
+    }
+    t.emit(Some("bench_results.tsv"));
+    write_records("BENCH_planner.json", &records).expect("write BENCH_planner.json");
+    println!("wrote BENCH_planner.json ({} records)", records.len());
+}

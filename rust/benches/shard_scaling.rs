@@ -90,19 +90,19 @@ fn main() {
         let f = Filtration::degree_superlevel(&g);
         // monolithic: coral-reduce then one big PH call
         let mono = bench(1, 3, || {
-            let r = coral_reduce(&g, &f, K);
+            let r = coral_reduce(&g, &f, K).unwrap();
             sink(persistence_diagrams(&r.graph, &r.filtration, K).len())
         });
         // sharded: the pd_sharded entry point (reduce + split + parallel PH)
         let time_sharded = |workers: usize| {
             bench(1, 3, || {
-                sink(pd_sharded(&g, &f, K, Reduction::Coral, workers).0.len())
+                sink(pd_sharded(&g, &f, K, Reduction::Coral, workers).unwrap().0.len())
             })
         };
         let w1 = time_sharded(1);
         let w2 = time_sharded(2);
         let w4 = time_sharded(4);
-        let (_, report) = pd_sharded(&g, &f, K, Reduction::Coral, 2);
+        let (_, report) = pd_sharded(&g, &f, K, Reduction::Coral, 2).unwrap();
         t.row(&[
             format!("coral-shatter x{pieces}"),
             g.n().to_string(),
@@ -121,7 +121,7 @@ fn main() {
     // Exactness spot-check alongside the timing claim.
     let g = er_union(4, 70, 0.12);
     let f = Filtration::degree_superlevel(&g);
-    let (mono, _) = pd_with_reduction(&g, &f, K, Reduction::None);
+    let (mono, _) = pd_with_reduction(&g, &f, K, Reduction::None).unwrap();
     let sharded = persistence_diagrams_sharded(&g, &f, K, 2);
     for k in 0..=K {
         assert!(

@@ -38,7 +38,7 @@ fn main() {
     for recipe in datasets::large_networks() {
         let g = recipe.make(SEED, 0);
         let f = Filtration::degree_superlevel(&g);
-        let (r, secs) = Timer::time(|| prunit(&g, &f));
+        let (r, secs) = Timer::time(|| prunit(&g, &f).unwrap());
         let v_red = reduction_pct(g.n(), r.graph.n());
         let e_red = reduction_pct(g.m(), r.graph.m());
         v_red_sum += v_red;

@@ -35,7 +35,7 @@ fn make_dataset(seed: u64) -> Vec<(Graph, usize)> {
 
 fn features(g: &Graph, reduction: Reduction) -> Vec<f64> {
     let f = Filtration::degree_superlevel(g);
-    let r = combined_with(g, &f, 1, reduction);
+    let r = combined_with(g, &f, 1, reduction).unwrap();
     let pds = persistence_diagrams(&r.graph, &r.filtration, 1);
     // PD_1 features only: exactness holds for k ≥ 1 under Combined.
     feature_vector(&pds[1..], -30.0, 0.0, 24)

@@ -29,7 +29,7 @@ fn main() {
 
     // Stage 1: PrunIT (valid in every dimension).
     let f = Filtration::degree_superlevel(&g);
-    let (pruned, p_secs) = Timer::time(|| prunit(&g, &f));
+    let (pruned, p_secs) = Timer::time(|| prunit(&g, &f).unwrap());
     println!(
         "PrunIT: removed {} vertices in {:.3}s → n={} ({:.1}%), m={} ({:.1}%)",
         pruned.removed,

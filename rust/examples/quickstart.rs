@@ -22,16 +22,16 @@ fn main() {
     // 4. Reduce first — exactly, per the paper's theorems.
     //    PrunIT (Thm 7) preserves every PD; CoralTDA (Thm 2) preserves
     //    PD_j for j ≥ k; combined: PD_k(G) = PD_k((G')^{k+1}).
-    let r = reduce::combined(&g, &f, 1);
+    let r = reduce::combined(&g, &f, 1).unwrap();
     println!(
         "reduced: {} -> {} vertices ({:.1}%), {} -> {} edges ({:.1}%) in {:.1} ms",
-        r.vertices_before,
+        r.report.vertices_before,
         r.graph.n(),
         r.vertex_reduction_pct(),
-        r.edges_before,
+        r.report.edges_before,
         r.graph.m(),
         r.edge_reduction_pct(),
-        r.reduce_secs * 1e3,
+        r.report.reduce_secs * 1e3,
     );
 
     // 5. Same diagram, much smaller input.

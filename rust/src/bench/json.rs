@@ -1,0 +1,148 @@
+//! Machine-readable bench output: a dependency-free JSON emitter for the
+//! planner perf trajectory (`BENCH_planner.json`). One record per
+//! (bench, graph, pipeline, stage) measurement; CI runs the quick bench
+//! profile and uploads the file as an artifact so reduce wall-times are
+//! comparable across PRs.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+
+/// One measurement row of a bench run.
+#[derive(Clone, Debug)]
+pub struct JsonRecord {
+    /// bench driver name, e.g. `planner_scaling`
+    pub bench: String,
+    /// workload label, e.g. `ER(20000,5/n)`
+    pub graph: String,
+    /// `in-place` (planner) or `materializing` (reference pipeline)
+    pub pipeline: String,
+    /// reduction variant name (`Reduction::name`)
+    pub reduction: String,
+    /// measured stage, e.g. `reduce`
+    pub stage: String,
+    /// median wall seconds of the stage
+    pub wall_secs: f64,
+    /// vertices removed per PrunIT⇄core round (prunit + core per entry)
+    pub removed_per_round: Vec<usize>,
+    /// residue order after the reduction
+    pub vertices_after: usize,
+}
+
+fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn push_json_f64(out: &mut String, x: f64) {
+    if x.is_finite() {
+        // Rust's shortest-roundtrip Display for f64 is valid JSON except
+        // that integral values print without a fractional part — fine.
+        let _ = write!(out, "{x}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Serialise records as a pretty-enough JSON array.
+pub fn to_json(records: &[JsonRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("  {");
+        out.push_str("\"bench\": ");
+        push_json_str(&mut out, &r.bench);
+        out.push_str(", \"graph\": ");
+        push_json_str(&mut out, &r.graph);
+        out.push_str(", \"pipeline\": ");
+        push_json_str(&mut out, &r.pipeline);
+        out.push_str(", \"reduction\": ");
+        push_json_str(&mut out, &r.reduction);
+        out.push_str(", \"stage\": ");
+        push_json_str(&mut out, &r.stage);
+        out.push_str(", \"wall_secs\": ");
+        push_json_f64(&mut out, r.wall_secs);
+        out.push_str(", \"removed_per_round\": [");
+        for (j, c) in r.removed_per_round.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{c}");
+        }
+        out.push_str("], \"vertices_after\": ");
+        let _ = write!(out, "{}", r.vertices_after);
+        out.push('}');
+        if i + 1 < records.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write records to `path`. Cargo runs bench binaries with the working
+/// directory set to the PACKAGE root (`rust/`), not the invocation cwd,
+/// so a relative path here lands next to `rust/Cargo.toml` — the same
+/// place `bench_results.tsv` accumulates; CI uploads
+/// `rust/BENCH_planner.json`.
+pub fn write_records(path: &str, records: &[JsonRecord]) -> io::Result<()> {
+    fs::write(path, to_json(records))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let rec = JsonRecord {
+            bench: "planner_scaling".into(),
+            graph: "ER(\"n\",5/n)".into(),
+            pipeline: "in-place".into(),
+            reduction: "fixed-point".into(),
+            stage: "reduce".into(),
+            wall_secs: 0.125,
+            removed_per_round: vec![10, 3, 0],
+            vertices_after: 42,
+        };
+        let s = to_json(std::slice::from_ref(&rec));
+        assert!(s.starts_with("[\n"));
+        assert!(s.contains("\\\"n\\\""), "quotes escaped: {s}");
+        assert!(s.contains("\"wall_secs\": 0.125"));
+        assert!(s.contains("\"removed_per_round\": [10, 3, 0]"));
+        assert!(s.contains("\"vertices_after\": 42"));
+        assert!(s.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn non_finite_times_become_null() {
+        let rec = JsonRecord {
+            bench: "b".into(),
+            graph: "g".into(),
+            pipeline: "p".into(),
+            reduction: "r".into(),
+            stage: "s".into(),
+            wall_secs: f64::NAN,
+            removed_per_round: vec![],
+            vertices_after: 0,
+        };
+        let s = to_json(&[rec]);
+        assert!(s.contains("\"wall_secs\": null"));
+        assert!(s.contains("\"removed_per_round\": []"));
+    }
+
+    #[test]
+    fn empty_record_list_is_valid_json_array() {
+        assert_eq!(to_json(&[]), "[\n]\n");
+    }
+}

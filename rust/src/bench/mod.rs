@@ -1,6 +1,10 @@
 //! Custom micro-bench harness (S15; criterion is not in the offline
 //! registry). Warmup + repeated timed runs, reporting median and MAD so
-//! bench drivers can print stable paper-style rows.
+//! bench drivers can print stable paper-style rows. The `json` submodule
+//! adds the machine-readable `BENCH_*.json` emitter the CI perf
+//! trajectory is tracked with.
+
+pub mod json;
 
 use crate::util::Timer;
 

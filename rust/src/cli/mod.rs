@@ -75,8 +75,9 @@ pub fn parse_reduction(s: &str) -> Result<Reduction> {
         "coral" => Ok(Reduction::Coral),
         "prunit" => Ok(Reduction::Prunit),
         "combined" | "prunit+coral" => Ok(Reduction::Combined),
+        "fixed-point" | "fixedpoint" | "fp" => Ok(Reduction::FixedPoint),
         other => Err(Error::Parse(format!(
-            "--reduction must be none|coral|prunit|combined, got {other:?}"
+            "--reduction must be none|coral|prunit|combined|fixed-point, got {other:?}"
         ))),
     }
 }
@@ -90,10 +91,13 @@ USAGE:
 COMMANDS:
   info                         registry, artifact buckets, PJRT platform
   reduce   --dataset NAME      reduction stats for a dataset
-           [--k K] [--reduction none|coral|prunit|combined] [--seed S]
+           [--k K] [--seed S]
+           [--reduction none|coral|prunit|combined|fixed-point]
   pd       --dataset NAME      persistence diagrams of instance 0
            [--k K] [--seed S] [--instance I]
-           [--reduction none|coral|prunit|combined]
+           [--reduction none|coral|prunit|combined|fixed-point]
+                                     fixed-point alternates PrunIT and the
+                                     (k+1)-core on the in-place planner
            [--shard] [--workers W]   component-sharded parallel PH
            [--engine flat|legacy]    columnar engine (default) or the
                                      AoS reference engine (cross-check)
@@ -176,21 +180,23 @@ fn cmd_reduce(args: &Args) -> Result<i32> {
     let which = parse_reduction(args.flag("reduction").unwrap_or("combined"))?;
     let mut t = Table::new(
         &format!("{} reduction on {} (k={k})", which.name(), recipe.name),
-        &["instance", "|V|", "|V'|", "V-red", "|E|", "|E'|", "E-red", "secs"],
+        &["instance", "|V|", "|V'|", "V-red", "|E|", "|E'|", "E-red", "rounds", "secs"],
     );
+    let mut ws = crate::reduce::ReductionWorkspace::new();
     for i in 0..recipe.instances {
         let g = recipe.make(seed, i);
         let f = Filtration::degree_superlevel(&g);
-        let r = combined_with(&g, &f, k, which);
+        let r = crate::reduce::combined_with_ws(&mut ws, &g, &f, k, which)?;
         t.row(&[
             i.to_string(),
-            r.vertices_before.to_string(),
+            r.report.vertices_before.to_string(),
             r.graph.n().to_string(),
             format!("{:.1}%", r.vertex_reduction_pct()),
-            r.edges_before.to_string(),
+            r.report.edges_before.to_string(),
             r.graph.m().to_string(),
             format!("{:.1}%", r.edge_reduction_pct()),
-            format!("{:.4}", r.reduce_secs),
+            r.report.rounds_run().to_string(),
+            format!("{:.4}", r.report.reduce_secs),
         ]);
     }
     t.emit(None);
@@ -228,36 +234,42 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         g.m()
     );
     let pds = if engine == "legacy" {
-        let report = combined_with(&g, &f, k, which);
-        let c = CliqueComplex::build(&report.graph, &report.filtration, k + 1);
+        let red = combined_with(&g, &f, k, which)?;
+        let c = CliqueComplex::build(&red.graph, &red.filtration, k + 1);
         let pds = legacy::diagrams_of_complex(&c, k, Algorithm::Twist)?;
         println!(
             "legacy engine: reduction={} {}->{} vertices, {} simplices (AoS)",
-            report.which.name(),
-            report.vertices_before,
-            report.graph.n(),
+            red.report.which.name(),
+            red.report.vertices_before,
+            red.graph.n(),
             c.len(),
         );
         pds
     } else if shard {
-        let (pds, report) = pd_sharded(&g, &f, k, which, workers);
+        let (pds, report) = pd_sharded(&g, &f, k, which, workers)?;
         println!(
-            "sharded: reduction={} {}->{} vertices, {} shards (largest {}), {workers} workers",
+            "sharded: reduction={} {}->{} vertices in {} round(s), {} shards (largest {}), {workers} workers",
             report.which.name(),
             report.vertices_before,
-            report.graph.n(),
+            report.vertices_after,
+            report.rounds_run().max(1),
             report.shard_count(),
             report.largest_shard(),
         );
         pds
     } else if which != Reduction::None {
-        let (pds, report) = pd_with_reduction(&g, &f, k, which);
+        let (pds, report) = pd_with_reduction(&g, &f, k, which)?;
         println!(
-            "reduced: {} {}->{} vertices ({:.1}%)",
+            "reduced: {} {}->{} vertices ({:.1}%) in {} round(s) \
+             [prunit {:.4}s, core {:.4}s, compact {:.4}s]",
             report.which.name(),
             report.vertices_before,
-            report.graph.n(),
+            report.vertices_after,
             report.vertex_reduction_pct(),
+            report.rounds_run(),
+            report.prunit_secs,
+            report.core_secs,
+            report.compact_secs,
         );
         pds
     } else {
@@ -324,7 +336,7 @@ fn cmd_dense_check(args: &Args) -> Result<i32> {
         }
         let f = Filtration::degree_superlevel(&g);
         let dense = crate::runtime::prunit_dense(&rt, &g, &f)?;
-        let sparse = crate::prune::prunit(&g, &f);
+        let sparse = crate::prune::prunit(&g, &f)?;
         let pd_dense = persistence_diagrams(&dense.graph, &dense.filtration, 1);
         let pd_sparse = persistence_diagrams(&sparse.graph, &sparse.filtration, 1);
         for k in 0..=1 {
@@ -376,6 +388,11 @@ mod tests {
             parse_reduction("prunit+coral").unwrap(),
             Reduction::Combined
         );
+        assert_eq!(
+            parse_reduction("fixed-point").unwrap(),
+            Reduction::FixedPoint
+        );
+        assert_eq!(parse_reduction("fp").unwrap(), Reduction::FixedPoint);
         assert!(parse_reduction("bogus").is_err());
     }
 
@@ -414,6 +431,19 @@ mod tests {
     fn pd_reduction_flag_runs() {
         assert_eq!(
             run(&argv("pd --dataset DHFR --reduction combined --k 1")).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn pd_fixed_point_reduction_runs() {
+        assert_eq!(
+            run(&argv("pd --dataset DHFR --reduction fixed-point --k 1")).unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv("pd --dataset DHFR --reduction fixed-point --shard --workers 2 --k 1"))
+                .unwrap(),
             0
         );
     }

@@ -15,4 +15,4 @@ pub mod pool;
 
 pub use job::{Job, JobResult, JobSpec};
 pub use metrics::Metrics;
-pub use pool::Coordinator;
+pub use pool::{Coordinator, WorkerScratch};

@@ -8,11 +8,26 @@ use crate::complex::ComplexWorkspace;
 use crate::config::CoordinatorConfig;
 use crate::error::{Error, Result};
 use crate::homology::persistence_diagrams_with;
-use crate::reduce::combined_with;
+use crate::reduce::{combined_with_ws, ReductionWorkspace};
 use crate::util::Timer;
 
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
+
+/// Per-worker reusable state: complex arenas for PH plus the zero-copy
+/// reduction planner's masks/degree arrays. One of each per thread —
+/// every job the thread picks up plans and builds into the same buffers.
+#[derive(Default)]
+pub struct WorkerScratch {
+    pub complex: ComplexWorkspace,
+    pub reduce: ReductionWorkspace,
+}
+
+impl WorkerScratch {
+    pub fn new() -> WorkerScratch {
+        WorkerScratch::default()
+    }
+}
 
 /// The batch coordinator: owns config + metrics; `run` executes a batch.
 pub struct Coordinator {
@@ -37,29 +52,48 @@ impl Coordinator {
     }
 
     /// Execute one job inline (public for testing and for single-threaded
-    /// callers). Allocates fresh complex arenas; the pool's worker threads
-    /// go through [`Coordinator::execute_with`] instead.
-    pub fn execute(job: &Job, worker: usize) -> JobResult {
-        Coordinator::execute_with(&mut ComplexWorkspace::new(), job, worker)
+    /// callers). Allocates fresh scratch; the pool's worker threads go
+    /// through [`Coordinator::execute_with`] instead.
+    pub fn execute(job: &Job, worker: usize) -> Result<JobResult> {
+        Coordinator::execute_with(&mut WorkerScratch::new(), job, worker)
     }
 
-    /// The worker body: execute one job, building its complex into the
-    /// caller's reusable workspace (one per worker thread — amortises the
-    /// arena allocations across every job the thread picks up).
-    pub fn execute_with(ws: &mut ComplexWorkspace, job: &Job, worker: usize) -> JobResult {
+    /// The worker body: execute one job, planning the reduction and
+    /// building the complex in the caller's reusable scratch (one per
+    /// worker thread — amortises both the planner's mask/degree arrays
+    /// and the complex arenas across every job the thread picks up).
+    ///
+    /// A filtration/graph mismatch surfaces as a typed error instead of
+    /// the pre-planner panic.
+    pub fn execute_with(
+        scratch: &mut WorkerScratch,
+        job: &Job,
+        worker: usize,
+    ) -> Result<JobResult> {
         let total = Timer::start();
-        let report = combined_with(&job.graph, &job.filtration, job.spec.max_k, job.spec.reduction);
+        let red = combined_with_ws(
+            &mut scratch.reduce,
+            &job.graph,
+            &job.filtration,
+            job.spec.max_k,
+            job.spec.reduction,
+        )?;
         let (diagrams, ph_secs) = Timer::time(|| {
-            persistence_diagrams_with(ws, &report.graph, &report.filtration, job.spec.max_k)
+            persistence_diagrams_with(
+                &mut scratch.complex,
+                &red.graph,
+                &red.filtration,
+                job.spec.max_k,
+            )
         });
-        JobResult {
+        Ok(JobResult {
             id: job.id,
             diagrams,
-            reduction: report,
+            reduction: red.report,
             ph_secs,
             total_secs: total.elapsed().as_secs_f64(),
             worker,
-        }
+        })
     }
 
     /// Run a batch of jobs from an iterator, streaming results to `sink`
@@ -74,7 +108,7 @@ impl Coordinator {
         let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) =
             sync_channel(self.config.queue_depth.max(1));
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (res_tx, res_rx) = std::sync::mpsc::channel::<JobResult>();
+        let (res_tx, res_rx) = std::sync::mpsc::channel::<Result<JobResult>>();
 
         let handles: Vec<_> = (0..workers)
             .map(|w| {
@@ -82,7 +116,7 @@ impl Coordinator {
                 let res_tx = res_tx.clone();
                 let metrics = Arc::clone(&self.metrics);
                 std::thread::spawn(move || {
-                    let mut ws = ComplexWorkspace::new();
+                    let mut scratch = WorkerScratch::new();
                     loop {
                         let job = {
                             let guard = job_rx.lock().expect("job queue poisoned");
@@ -90,15 +124,20 @@ impl Coordinator {
                         };
                         let Ok(job) = job else { break };
                         let (v_in, e_in) = (job.graph.n(), job.graph.m());
-                        let result = Coordinator::execute_with(&mut ws, &job, w);
-                        metrics.record(
-                            result.reduction.reduce_secs,
-                            result.ph_secs,
-                            v_in,
-                            result.reduction.graph.n(),
-                            e_in,
-                            result.reduction.graph.m(),
-                        );
+                        let result = Coordinator::execute_with(&mut scratch, &job, w);
+                        match &result {
+                            Ok(r) => metrics.record(
+                                r.reduction.reduce_secs,
+                                r.ph_secs,
+                                v_in,
+                                r.reduction.vertices_after,
+                                e_in,
+                                r.reduction.edges_after,
+                            ),
+                            Err(_) => {
+                                metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
                         if res_tx.send(result).is_err() {
                             break;
                         }
@@ -109,9 +148,19 @@ impl Coordinator {
         drop(res_tx);
 
         // Producer on the current thread; consume results opportunistically
-        // to keep the result channel drained.
+        // to keep the result channel drained. A failed job surfaces as the
+        // batch's error after the pool drains — remaining jobs still run.
         let mut submitted = 0usize;
         let mut received = 0usize;
+        let mut first_err: Option<Error> = None;
+        let mut consume = |r: Result<JobResult>, first_err: &mut Option<Error>| match r {
+            Ok(r) => sink(r),
+            Err(e) => {
+                if first_err.is_none() {
+                    *first_err = Some(e);
+                }
+            }
+        };
         for job in jobs {
             self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
             job_tx
@@ -120,17 +169,20 @@ impl Coordinator {
             submitted += 1;
             while let Ok(r) = res_rx.try_recv() {
                 received += 1;
-                sink(r);
+                consume(r, &mut first_err);
             }
         }
         drop(job_tx);
         while let Ok(r) = res_rx.recv() {
             received += 1;
-            sink(r);
+            consume(r, &mut first_err);
         }
         for h in handles {
             h.join()
                 .map_err(|_| Error::Coordinator("worker panicked".into()))?;
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         debug_assert_eq!(submitted, received);
         Ok(received)
@@ -197,7 +249,10 @@ mod tests {
     fn results_match_inline_execution() {
         let c = Coordinator::new(cfg(2, 2));
         let js = jobs(6);
-        let inline: Vec<JobResult> = js.iter().map(|j| Coordinator::execute(j, 0)).collect();
+        let inline: Vec<JobResult> = js
+            .iter()
+            .map(|j| Coordinator::execute(j, 0).unwrap())
+            .collect();
         let pooled = c.run(js).unwrap();
         for (a, b) in inline.iter().zip(&pooled) {
             assert_eq!(a.id, b.id);
@@ -239,5 +294,39 @@ mod tests {
     fn empty_batch_is_fine() {
         let c = Coordinator::new(cfg(2, 2));
         assert_eq!(c.run(vec![]).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn mismatched_filtration_job_fails_batch_with_typed_error() {
+        let c = Coordinator::new(cfg(2, 2));
+        let bad = Job::new(
+            0,
+            gen::cycle(5),
+            crate::complex::Filtration::constant(3),
+            JobSpec::default(),
+        );
+        let err = c.run(vec![bad]).unwrap_err();
+        assert!(matches!(
+            err,
+            crate::error::Error::FiltrationMismatch { .. }
+        ));
+        assert_eq!(c.metrics().jobs_failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fixed_point_jobs_run_through_the_pool() {
+        let c = Coordinator::new(cfg(2, 2));
+        let g = gen::barabasi_albert(60, 2, 3);
+        let job = Job::degree_superlevel(
+            0,
+            g,
+            JobSpec {
+                max_k: 1,
+                reduction: Reduction::FixedPoint,
+            },
+        );
+        let res = c.run(vec![job]).unwrap();
+        assert_eq!(res[0].reduction.which, Reduction::FixedPoint);
+        assert!(res[0].reduction.rounds_run() >= 1);
     }
 }

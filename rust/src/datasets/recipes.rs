@@ -324,7 +324,7 @@ mod tests {
     fn mesh_has_few_dominated_vertices() {
         let g = mesh(900, 0.6, 7);
         let f = crate::complex::Filtration::degree_superlevel(&g);
-        let r = crate::prune::prunit(&g, &f);
+        let r = crate::prune::prunit(&g, &f).unwrap();
         let red = 100.0 * r.removed as f64 / g.n() as f64;
         assert!(red < 15.0, "mesh PrunIT reduction should be small, got {red:.1}%");
     }

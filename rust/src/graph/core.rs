@@ -135,8 +135,13 @@ impl Graph {
         for (new, &old) in old_ids.iter().enumerate() {
             new_id[old as usize] = new as u32;
         }
+        // degree-sum upper bound on surviving half-edges: one reservation
+        // instead of repeated doubling reallocations. Exact when the kept
+        // set is neighbourhood-closed; otherwise an overestimate (sparse
+        // kept sets over hubs reserve more than they fill)
+        let cap: usize = old_ids.iter().map(|&v| self.degree(v)).sum();
         let mut offsets = Vec::with_capacity(old_ids.len() + 1);
-        let mut neighbors = Vec::new();
+        let mut neighbors = Vec::with_capacity(cap);
         offsets.push(0);
         for &old in &old_ids {
             for &w in self.neighbors(old) {
@@ -150,12 +155,35 @@ impl Graph {
     }
 
     /// Induced subgraph on an explicit (sorted or unsorted) vertex set.
+    ///
+    /// A strictly-ascending vertex set (the common case: ego extractions
+    /// and every `kept_old_ids` mapping in the crate) takes an O(s log s)
+    /// path that maps neighbours by binary search into the set itself —
+    /// no O(n) `keep` mask, so extracting a small subgraph from a huge
+    /// graph costs only the subgraph.
     pub fn induced_on(&self, vertices: &[u32]) -> (Graph, Vec<u32>) {
-        let mut keep = vec![false; self.n()];
-        for &v in vertices {
-            keep[v as usize] = true;
+        let sorted = vertices.windows(2).all(|w| w[0] < w[1]);
+        if !sorted {
+            let mut keep = vec![false; self.n()];
+            for &v in vertices {
+                keep[v as usize] = true;
+            }
+            return self.induced(&keep);
         }
-        self.induced(&keep)
+        let old_ids = vertices.to_vec();
+        let cap: usize = old_ids.iter().map(|&v| self.degree(v)).sum();
+        let mut offsets = Vec::with_capacity(old_ids.len() + 1);
+        let mut neighbors = Vec::with_capacity(cap);
+        offsets.push(0);
+        for &old in &old_ids {
+            for &w in self.neighbors(old) {
+                if let Ok(new) = vertices.binary_search(&w) {
+                    neighbors.push(new as u32);
+                }
+            }
+            offsets.push(neighbors.len());
+        }
+        (Graph { offsets, neighbors }, old_ids)
     }
 
     /// Number of connected components (isolated vertices count).
@@ -353,6 +381,32 @@ mod tests {
         assert_eq!(h.n(), 3);
         // surviving edges: 0-2 and 2-3 → new ids (0,1), (1,2)
         assert_eq!(h.edges().collect::<Vec<_>>(), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn induced_on_sorted_and_unsorted_agree() {
+        let g = Graph::from_edges(
+            8,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (0, 7), (2, 6)],
+        );
+        let sorted = vec![1u32, 2, 3, 6];
+        let unsorted = vec![6u32, 2, 1, 3];
+        let (hs, ids_s) = g.induced_on(&sorted);
+        let (hu, ids_u) = g.induced_on(&unsorted);
+        assert_eq!(ids_s, vec![1, 2, 3, 6]);
+        assert_eq!(ids_s, ids_u);
+        assert_eq!(hs, hu);
+        assert_eq!(hs.edges().collect::<Vec<_>>(), vec![(0, 1), (1, 2), (1, 3)]);
+    }
+
+    #[test]
+    fn induced_on_duplicate_input_falls_back_to_mask_path() {
+        // duplicates are not strictly ascending → the keep-mask path
+        // dedups them, same as before
+        let g = triangle_plus_tail();
+        let (h, ids) = g.induced_on(&[2, 2, 3]);
+        assert_eq!(ids, vec![2, 3]);
+        assert_eq!(h.m(), 1);
     }
 
     #[test]

@@ -16,7 +16,9 @@ pub mod vectorize;
 pub use diagram::Diagram;
 pub use distance::{bottleneck, wasserstein1};
 pub use reduction::{diagrams_of_complex, reduce, Algorithm, ReductionResult};
-pub use sharded::{merge_shard_diagrams, persistence_diagrams_sharded};
+pub use sharded::{
+    merge_shard_diagrams, persistence_diagrams_sharded, persistence_diagrams_sharded_with,
+};
 pub use union_find::pd0;
 
 use crate::complex::{ComplexWorkspace, Filtration};

@@ -22,6 +22,8 @@ use std::sync::mpsc;
 use crate::complex::{ComplexWorkspace, Filtration};
 use crate::graph::decompose::{decompose_filtered, Shard};
 use crate::graph::Graph;
+use crate::reduce::planner::ReductionWorkspace;
+use crate::reduce::Reduction;
 
 use super::diagram::Diagram;
 use super::persistence_diagrams_with;
@@ -142,6 +144,28 @@ pub fn persistence_diagrams_sharded(
     merge_shard_diagrams(&per, max_k)
 }
 
+/// [`persistence_diagrams_sharded`] reusing a caller-held planner
+/// workspace for the component labeling + shard emission (an identity
+/// plan: nothing is reduced, but the labeling buffers and per-shard CSR
+/// assembly run through the same in-place machinery as `pd_sharded`,
+/// one compaction per shard). Batch drivers hold one
+/// [`ReductionWorkspace`] per worker alongside the [`ComplexWorkspace`].
+///
+/// Errors with `Error::FiltrationMismatch` (like every planner entry
+/// point) when `f` does not match `g`'s order.
+pub fn persistence_diagrams_sharded_with(
+    rws: &mut ReductionWorkspace,
+    g: &Graph,
+    f: &Filtration,
+    max_k: usize,
+    workers: usize,
+) -> crate::error::Result<Vec<Diagram>> {
+    rws.plan(g, f, 0, Reduction::None)?;
+    let shards = rws.emit_shards(g, f);
+    let per = all_shard_diagrams(&shards, max_k, workers);
+    Ok(merge_shard_diagrams(&per, max_k))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +182,24 @@ mod tests {
         assert_eq!(pds[0].betti(), 2);
         assert_eq!(pds[1].betti(), 1);
         assert_eq!(pds[2].betti(), 1);
+    }
+
+    #[test]
+    fn workspace_variant_matches_plain_sharded() {
+        let g = disjoint_union(&[gen::cycle(6), gen::erdos_renyi(14, 0.3, 9), Graph::empty(2)]);
+        let f = Filtration::degree_superlevel(&g);
+        let plain = persistence_diagrams_sharded(&g, &f, 2, 2);
+        let mut rws = ReductionWorkspace::new();
+        // run twice through the same workspace: reuse must be clean
+        for _ in 0..2 {
+            let via_ws = persistence_diagrams_sharded_with(&mut rws, &g, &f, 2, 2).unwrap();
+            for k in 0..=2 {
+                assert!(plain[k].same_as(&via_ws[k], 0.0), "k={k}");
+            }
+        }
+        // mismatched filtration is the typed error, not a panic
+        let bad = Filtration::constant(1);
+        assert!(persistence_diagrams_sharded_with(&mut rws, &g, &bad, 1, 1).is_err());
     }
 
     #[test]

@@ -220,7 +220,7 @@ mod tests {
         let g = gen::powerlaw_cluster(60, 3, 0.6, 5);
         let f = Filtration::degree_superlevel(&g);
         let base = crate::homology::persistence_diagrams(&g, &f, 1);
-        let r = crate::reduce::combined(&g, &f, 1);
+        let r = crate::reduce::combined(&g, &f, 1).unwrap();
         let red = crate::homology::persistence_diagrams(&r.graph, &r.filtration, 1);
         let fa = feature_vector(&base[1..], -20.0, 0.0, 16);
         let fb = feature_vector(&red[1..], -20.0, 0.0, 16);

@@ -61,6 +61,48 @@ pub fn coreness(g: &Graph) -> Vec<usize> {
     core
 }
 
+/// Peel a tombstoned residue of `g` down to its `k`-core **in place**:
+/// kill every alive vertex whose residual degree is below `k`, cascading
+/// until all survivors have degree ≥ k — the Batagelj–Zaveršnik peel
+/// specialised to a fixed threshold, so the degree-bucket array collapses
+/// to a single below-`k` worklist and the pass is O(n + removed edges).
+///
+/// `alive[v]` and `deg[v]` (the residual degree, i.e. alive neighbours
+/// only) are updated in place; `deg` of killed vertices is left stale.
+/// `stack` is caller-owned scratch. Returns the number of vertices
+/// removed.
+pub fn peel_residue(
+    g: &Graph,
+    k: u32,
+    alive: &mut [bool],
+    deg: &mut [u32],
+    stack: &mut Vec<u32>,
+) -> usize {
+    debug_assert_eq!(alive.len(), g.n());
+    debug_assert_eq!(deg.len(), g.n());
+    debug_assert!(stack.is_empty());
+    let mut removed = 0usize;
+    for v in 0..g.n() {
+        if alive[v] && deg[v] < k {
+            alive[v] = false;
+            stack.push(v as u32);
+        }
+    }
+    while let Some(v) = stack.pop() {
+        removed += 1;
+        for &w in g.neighbors(v) {
+            if alive[w as usize] {
+                deg[w as usize] -= 1;
+                if deg[w as usize] < k {
+                    alive[w as usize] = false;
+                    stack.push(w);
+                }
+            }
+        }
+    }
+    removed
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::naive::coreness_naive;
@@ -104,6 +146,48 @@ mod tests {
             let g = gen::barabasi_albert(120, 3, seed);
             assert_eq!(coreness(&g), coreness_naive(&g));
         }
+    }
+
+    #[test]
+    fn peel_residue_matches_kcore_subgraph() {
+        let mut rng = Rng::new(17);
+        for trial in 0..25 {
+            let n = rng.range(2, 80);
+            let g = gen::erdos_renyi(n, 0.12, rng.next_u64());
+            for k in 1..=4u32 {
+                let mut alive = vec![true; g.n()];
+                let mut deg: Vec<u32> = (0..g.n() as u32).map(|v| g.degree(v) as u32).collect();
+                let mut stack = Vec::new();
+                let cnt = peel_residue(&g, k, &mut alive, &mut deg, &mut stack);
+                let (core, ids) = crate::kcore::kcore_subgraph(&g, k as usize);
+                let survivors: Vec<u32> = (0..g.n() as u32)
+                    .filter(|&v| alive[v as usize])
+                    .collect();
+                assert_eq!(survivors, ids, "trial {trial} k={k}");
+                assert_eq!(cnt, g.n() - core.n());
+                // residual degrees of survivors match the core subgraph
+                for (new, &old) in ids.iter().enumerate() {
+                    assert_eq!(deg[old as usize] as usize, core.degree(new as u32));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn peel_residue_on_a_tombstoned_residue() {
+        // kill vertex 0 of a star by hand: the 1-core peel must then drop
+        // every leaf (their residual degree is 0), using residual degrees.
+        let g = gen::star(6);
+        let mut alive = vec![true; g.n()];
+        let mut deg: Vec<u32> = (0..g.n() as u32).map(|v| g.degree(v) as u32).collect();
+        alive[0] = false;
+        for leaf in 1..6 {
+            deg[leaf] -= 1;
+        }
+        let mut stack = Vec::new();
+        let cnt = peel_residue(&g, 1, &mut alive, &mut deg, &mut stack);
+        assert_eq!(cnt, 5);
+        assert!((1..6).all(|v| !alive[v]), "all leaves must peel");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 pub mod bz;
 pub mod naive;
 
-pub use bz::coreness;
+pub use bz::{coreness, peel_residue};
 
 use crate::graph::Graph;
 

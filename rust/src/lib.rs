@@ -36,8 +36,9 @@
 //!
 //! let g = gen::barabasi_albert(200, 3, 42);
 //! let f = Filtration::degree(&g);
-//! // Reduce, then compute PD_1 — provably equal to the unreduced diagram.
-//! let reduced = reduce::combined(&g, &f, 1);
+//! // Reduce (PrunIT + coral on the in-place planner; one compaction),
+//! // then compute PD_1 — provably equal to the unreduced diagram.
+//! let reduced = reduce::combined(&g, &f, 1).unwrap();
 //! let pd = homology::persistence_diagrams(&reduced.graph, &reduced.filtration, 1);
 //! println!("PD_1 has {} off-diagonal points", pd[1].points().len());
 //! ```

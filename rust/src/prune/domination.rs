@@ -8,6 +8,78 @@
 use crate::complex::Filtration;
 use crate::graph::Graph;
 
+/// Original-CSR degree above which the planner's domination checks switch
+/// from the sorted-merge walk to the [`HubBitset`] membership path. A merge
+/// pays `O(deg(u) + deg(v))` per check — quadratic in the hub degree when a
+/// hub's many low-degree neighbours each probe it — while the bitset pays
+/// `O(deg(v)/64)` once per hub and `O(deg(u))` per check thereafter.
+pub const HUB_DEGREE: usize = 64;
+
+/// Reusable one-vertex neighbourhood bitset (`n` bits in u64 blocks) for
+/// domination checks against hubs. Loading vertex `v` clears the previous
+/// owner's bits neighbour-by-neighbour (O(deg) — never a full O(n/64)
+/// rescan), so repeated probes against the same hub are near-free.
+///
+/// The bits always encode the ORIGINAL adjacency of the owner; callers
+/// that operate on a tombstoned residue (the reduction planner) must skip
+/// dead vertices themselves before testing membership.
+#[derive(Clone, Debug)]
+pub struct HubBitset {
+    bits: Vec<u64>,
+    owner: u32,
+}
+
+impl Default for HubBitset {
+    fn default() -> HubBitset {
+        HubBitset::new()
+    }
+}
+
+impl HubBitset {
+    pub fn new() -> HubBitset {
+        HubBitset {
+            bits: Vec::new(),
+            owner: u32::MAX,
+        }
+    }
+
+    /// Forget the cached owner and zero every block. Required when the
+    /// workspace is re-targeted at a different graph: the stale owner id
+    /// is meaningless there and must not be used to clear bits.
+    pub fn invalidate(&mut self) {
+        self.bits.iter_mut().for_each(|b| *b = 0);
+        self.owner = u32::MAX;
+    }
+
+    /// Make the bitset hold `N(v)` of `g`, reusing the allocation.
+    pub fn load(&mut self, g: &Graph, v: u32) {
+        let words = g.n().div_ceil(64);
+        if self.bits.len() != words {
+            self.bits.clear();
+            self.bits.resize(words, 0);
+            self.owner = u32::MAX;
+        }
+        if self.owner == v {
+            return;
+        }
+        if self.owner != u32::MAX {
+            for &w in g.neighbors(self.owner) {
+                self.bits[w as usize / 64] &= !(1u64 << (w % 64));
+            }
+        }
+        for &w in g.neighbors(v) {
+            self.bits[w as usize / 64] |= 1u64 << (w % 64);
+        }
+        self.owner = v;
+    }
+
+    /// Is `x` a neighbour of the loaded owner?
+    #[inline]
+    pub fn contains(&self, x: u32) -> bool {
+        self.bits[x as usize / 64] & (1u64 << (x % 64)) != 0
+    }
+}
+
 /// Does `v` dominate `u` in `g`? (Checked on immutable CSR.)
 pub fn dominates(g: &Graph, u: u32, v: u32) -> bool {
     if u == v || !g.has_edge(u, v) {
@@ -125,6 +197,25 @@ mod tests {
         let f = Filtration::degree_superlevel(&g);
         assert_eq!(find_dominator(&g, &f, 3), Some(2));
         assert!(find_dominator(&g, &f, 0).is_some());
+    }
+
+    #[test]
+    fn hub_bitset_tracks_neighbourhoods_across_loads() {
+        let g = gen::erdos_renyi(130, 0.1, 3);
+        let mut bits = HubBitset::new();
+        for v in [0u32, 7, 7, 99, 0] {
+            bits.load(&g, v);
+            for x in 0..g.n() as u32 {
+                assert_eq!(bits.contains(x), g.has_edge(v, x), "owner {v} bit {x}");
+            }
+        }
+        bits.invalidate();
+        // retarget to a different graph with the same word count
+        let h = gen::star(70);
+        bits.load(&h, 0);
+        for x in 0..h.n() as u32 {
+            assert_eq!(bits.contains(x), h.has_edge(0, x));
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! was `u`, i.e. `x ∈ N(u)` — only former neighbours of `u` are re-queued.
 
 use crate::complex::Filtration;
+use crate::error::Result;
 use crate::graph::Graph;
 
 /// Result of a pruning pass.
@@ -122,18 +123,21 @@ pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(
 
 /// Run PrunIT to a fixed point. Deterministic: the worklist is processed
 /// in FIFO order seeded with ascending vertex ids.
-pub fn prunit(g: &Graph, f: &Filtration) -> PruneResult {
-    f.check(g).expect("filtration must match graph");
+///
+/// Errors with [`crate::error::Error::FiltrationMismatch`] when `f` does
+/// not match `g`'s order (the pre-planner `expect` panic is gone).
+pub fn prunit(g: &Graph, f: &Filtration) -> Result<PruneResult> {
+    f.check(g)?;
     let (alive, removed, checks) = collapse_with(g, |u, v| f.admissible_removal(u, v));
     let (graph, kept_old_ids) = g.induced(&alive);
     let filtration = f.restrict(&kept_old_ids);
-    PruneResult {
+    Ok(PruneResult {
         graph,
         kept_old_ids,
         filtration,
         removed,
         checks,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -147,7 +151,7 @@ mod tests {
         // superlevel + degree: all leaves admissible (Rmk 8).
         let g = gen::star(8);
         let f = Filtration::degree_superlevel(&g);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         assert!(r.graph.n() <= 2, "star should collapse, got n={}", r.graph.n());
         assert_eq!(r.removed, 8 - r.graph.n());
     }
@@ -156,7 +160,7 @@ mod tests {
     fn complete_graph_collapses_to_point() {
         let g = gen::complete(6);
         let f = Filtration::degree_superlevel(&g);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         assert_eq!(r.graph.n(), 1);
     }
 
@@ -164,7 +168,7 @@ mod tests {
     fn cycle_is_irreducible() {
         let g = gen::cycle(6);
         let f = Filtration::degree_superlevel(&g);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         assert_eq!(r.graph.n(), 6);
         assert_eq!(r.removed, 0);
     }
@@ -176,7 +180,7 @@ mod tests {
         // afterwards 1 becomes dominated by 0 with f(1) ≥ f(0) → removed.
         let g = gen::path(3);
         let f = Filtration::sublevel(vec![0.0, 1.0, 2.0]);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         assert_eq!(r.removed, 2);
         assert_eq!(r.kept_old_ids, vec![0]);
     }
@@ -188,7 +192,7 @@ mod tests {
         // f strictly below the hub survive.
         let g = gen::star(4); // hub 0, leaves 1..3
         let f = Filtration::sublevel(vec![5.0, 1.0, 1.0, 9.0]);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         // leaf 3 (f=9 ≥ 5) is removable; leaves 1,2 (f=1 < 5) are vetoed;
         // hub dominated by nobody (leaves have smaller nbhds).
         assert!(!r.kept_old_ids.contains(&3));
@@ -199,7 +203,7 @@ mod tests {
     fn restricted_filtration_keeps_original_values() {
         let g = gen::star(5);
         let f = Filtration::degree_superlevel(&g);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         for (new, &old) in r.kept_old_ids.iter().enumerate() {
             assert_eq!(r.filtration.value(new as u32), f.value(old));
         }
@@ -213,7 +217,7 @@ mod tests {
             let n = rng.range(4, 18);
             let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
             let f = Filtration::degree_superlevel(&g);
-            let r = prunit(&g, &f);
+            let r = prunit(&g, &f).unwrap();
             let before = persistence_diagrams(&g, &f, 1);
             let after = persistence_diagrams(&r.graph, &r.filtration, 1);
             for k in 0..=1 {
@@ -231,7 +235,7 @@ mod tests {
     fn fixed_point_no_admissible_dominated_left() {
         let g = gen::barabasi_albert(80, 2, 9);
         let f = Filtration::degree_superlevel(&g);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         for u in 0..r.graph.n() as u32 {
             assert!(
                 super::super::domination::find_dominator(&r.graph, &r.filtration, u).is_none(),
@@ -245,7 +249,7 @@ mod tests {
         // K4 minus one edge: 2 and 3 are twins adjacent to {0, 1}.
         let g = Graph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)]);
         let f = Filtration::degree_superlevel(&g);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         assert!(r.graph.n() >= 1);
         let before = persistence_diagrams(&g, &f, 1);
         let after = persistence_diagrams(&r.graph, &r.filtration, 1);
@@ -257,7 +261,7 @@ mod tests {
     fn checks_bounded_reasonably() {
         let g = gen::barabasi_albert(300, 2, 3);
         let f = Filtration::degree_superlevel(&g);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         // worklist discipline: far fewer pops than n * rounds of full sweeps
         assert!(r.checks < 20 * g.n(), "checks={} n={}", r.checks, g.n());
         assert!(r.removed > 0, "BA graphs have dominated leaves");

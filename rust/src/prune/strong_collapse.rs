@@ -90,7 +90,8 @@ pub fn prunit_sweep(
     max_clique: usize,
 ) -> StrongCollapseStats {
     let mut stats = StrongCollapseStats::default();
-    let (r, secs) = Timer::time(|| prunit(g, f));
+    let (r, secs) =
+        Timer::time(|| prunit(g, f).expect("prunit_sweep: filtration must match graph"));
     stats.collapse_secs = secs;
     stats.removed = r.removed;
     for alpha in thresholds(f, step) {

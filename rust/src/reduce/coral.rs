@@ -5,6 +5,7 @@
 //! function to the surviving vertices.
 
 use crate::complex::Filtration;
+use crate::error::Result;
 use crate::graph::Graph;
 use crate::kcore::kcore_subgraph;
 
@@ -22,16 +23,19 @@ pub struct CoralResult {
 }
 
 /// Reduce `(G, f)` to its (k+1)-core for computing `PD_j`, `j ≥ k`.
-pub fn coral_reduce(g: &Graph, f: &Filtration, k: usize) -> CoralResult {
-    f.check(g).expect("filtration must match graph");
+///
+/// Errors with [`crate::error::Error::FiltrationMismatch`] when `f` does
+/// not match `g`'s order (the pre-planner `expect` panic is gone).
+pub fn coral_reduce(g: &Graph, f: &Filtration, k: usize) -> Result<CoralResult> {
+    f.check(g)?;
     let (core, ids) = kcore_subgraph(g, k + 1);
     let filtration = f.restrict(&ids);
-    CoralResult {
+    Ok(CoralResult {
         graph: core,
         kept_old_ids: ids,
         filtration,
         k,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -45,7 +49,7 @@ mod tests {
         // BA with m=1 is a tree: its 2-core is empty → PD_1 trivial.
         let g = gen::barabasi_albert(40, 1, 2);
         let f = Filtration::degree(&g);
-        let r = coral_reduce(&g, &f, 1);
+        let r = coral_reduce(&g, &f, 1).unwrap();
         assert_eq!(r.graph.n(), 0, "trees have empty 2-core");
         let pd = persistence_diagrams(&g, &f, 1);
         assert!(pd[1].is_trivial(), "tree PD_1 must be trivial, matching the empty core");
@@ -59,7 +63,7 @@ mod tests {
         edges.push((6, 7));
         let g = Graph::from_edges(8, &edges);
         let f = Filtration::degree(&g);
-        let r = coral_reduce(&g, &f, 1);
+        let r = coral_reduce(&g, &f, 1).unwrap();
         assert_eq!(r.graph.n(), 6);
         let before = persistence_diagrams(&g, &f, 1);
         let after = persistence_diagrams(&r.graph, &r.filtration, 1);
@@ -74,7 +78,7 @@ mod tests {
         edges.push((0, 6));
         let g = Graph::from_edges(7, &edges);
         let f = Filtration::degree(&g);
-        let r = coral_reduce(&g, &f, 1);
+        let r = coral_reduce(&g, &f, 1).unwrap();
         let new0 = r.kept_old_ids.iter().position(|&o| o == 0).unwrap();
         assert_eq!(r.filtration.value(new0 as u32), 3.0, "Remark 1: keep original f");
         assert_eq!(r.graph.degree(new0 as u32), 2);
@@ -88,7 +92,7 @@ mod tests {
             let g = gen::erdos_renyi(n, 0.4, rng.next_u64());
             let f = Filtration::degree(&g);
             for k in 1..=2usize {
-                let r = coral_reduce(&g, &f, k);
+                let r = coral_reduce(&g, &f, k).unwrap();
                 let before = persistence_diagrams(&g, &f, 2);
                 let after = persistence_diagrams(&r.graph, &r.filtration, 2);
                 for j in k..=2 {
@@ -108,7 +112,7 @@ mod tests {
     fn empty_graph_reduces_to_empty() {
         let g = Graph::empty(0);
         let f = Filtration::constant(0);
-        let r = coral_reduce(&g, &f, 3);
+        let r = coral_reduce(&g, &f, 3).unwrap();
         assert_eq!(r.graph.n(), 0);
     }
 }

@@ -1,10 +1,15 @@
 //! The paper's reduction pipeline (S9): CoralTDA (Thm 2), PrunIT (Thm 7),
-//! and their composition `PD_k(G) = PD_k((G')^{k+1})` (§5 end).
+//! their composition `PD_k(G) = PD_k((G')^{k+1})` (§5 end), and the
+//! zero-copy planner that runs all stages in place on the original CSR
+//! (`planner`), including the PrunIT⇄core fixed-point alternation.
 
 pub mod coral;
 pub mod pipeline;
+pub mod planner;
 
 pub use coral::{coral_reduce, CoralResult};
 pub use pipeline::{
-    combined, combined_with, pd_sharded, pd_with_reduction, Reduction, ReductionReport,
+    combined, combined_with, combined_with_materializing, combined_with_ws, pd_sharded,
+    pd_sharded_with, pd_with_reduction, Reduced, Reduction, ReductionReport, RoundStats,
 };
+pub use planner::ReductionWorkspace;

@@ -1,9 +1,19 @@
 //! The combined reduction pipeline (§5 end):
 //! `PD_k(G) = PD_k(G') = PD_k((G')^{k+1})` — PrunIT first (valid in every
-//! dimension), then the (k+1)-core of the pruned graph.
+//! dimension), then the (k+1)-core of the pruned graph — plus the
+//! fixed-point alternation of the two (Choi et al. 2023 show iterating
+//! complementary reductions compounds the savings; each stage is exact
+//! for `PD_j`, `j ≥ k`, hence so is any finite alternation).
+//!
+//! The production path runs on the zero-copy [`planner`](super::planner):
+//! all stages execute in place on the original CSR and the reduced
+//! instance is compacted exactly once — see [`combined_with`]. The old
+//! materializing composition survives as
+//! [`combined_with_materializing`], the differential reference for tests
+//! and the `planner_scaling` bench.
 
 use crate::complex::Filtration;
-use crate::graph::decompose::decompose_filtered;
+use crate::error::Result;
 use crate::graph::Graph;
 use crate::homology::sharded::{all_shard_diagrams, merge_shard_diagrams};
 use crate::homology::{persistence_diagrams, Diagram};
@@ -11,6 +21,7 @@ use crate::prune::prunit;
 use crate::util::Timer;
 
 use super::coral::coral_reduce;
+use super::planner::ReductionWorkspace;
 
 /// Which reduction(s) to apply before PH.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,8 +32,11 @@ pub enum Reduction {
     Coral,
     /// PrunIT only (Thm 7; exact in every dimension).
     Prunit,
-    /// PrunIT then CoralTDA (§5 end; exact for PD_j, j ≥ k).
+    /// PrunIT then CoralTDA, one round each (§5 end; exact for PD_j, j ≥ k).
     Combined,
+    /// Alternate PrunIT and the (k+1)-core to a mutual fixed point
+    /// (exact for PD_j, j ≥ k; never keeps more vertices than Combined).
+    FixedPoint,
 }
 
 impl Reduction {
@@ -32,21 +46,40 @@ impl Reduction {
             Reduction::Coral => "coral",
             Reduction::Prunit => "prunit",
             Reduction::Combined => "prunit+coral",
+            Reduction::FixedPoint => "fixed-point",
         }
     }
 }
 
-/// Output of a reduction: reduced instance plus bookkeeping for the
-/// paper's reduction-percentage metrics.
+/// Removal counts of one PrunIT⇄core round of the planner.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundStats {
+    pub prunit_removed: usize,
+    pub core_removed: usize,
+}
+
+/// Bookkeeping for the paper's reduction-percentage metrics plus planner
+/// telemetry (per-stage wall times, per-round removal counts). The report
+/// no longer owns the reduced instance — the planner compacts exactly
+/// once, into [`Reduced`] on the monolithic path or per-shard on the
+/// sharded path.
 #[derive(Clone, Debug)]
 pub struct ReductionReport {
-    pub graph: Graph,
-    pub filtration: Filtration,
-    /// composition of old-id mappings: `new id -> original id`
-    pub kept_old_ids: Vec<u32>,
     pub vertices_before: usize,
     pub edges_before: usize,
+    pub vertices_after: usize,
+    pub edges_after: usize,
+    /// total reduction wall time (stages + compaction, excluding PH)
     pub reduce_secs: f64,
+    /// seconds in PrunIT passes
+    pub prunit_secs: f64,
+    /// seconds in (k+1)-core peels
+    pub core_secs: f64,
+    /// seconds compacting the residue (whole-graph or per shard)
+    pub compact_secs: f64,
+    /// removal counts per PrunIT⇄core round (single round for
+    /// Coral/Prunit/Combined; one entry per alternation for FixedPoint)
+    pub rounds: Vec<RoundStats>,
     pub which: Reduction,
     /// Vertex count per connected component of the reduced graph, filled
     /// by the sharded pipeline ([`pd_sharded`]); empty when the monolithic
@@ -57,12 +90,22 @@ pub struct ReductionReport {
 impl ReductionReport {
     /// `100·(|V| − |V'|)/|V|` (paper §6).
     pub fn vertex_reduction_pct(&self) -> f64 {
-        crate::util::table::reduction_pct(self.vertices_before, self.graph.n())
+        crate::util::table::reduction_pct(self.vertices_before, self.vertices_after)
     }
 
     /// `100·(|E| − |E'|)/|E|`.
     pub fn edge_reduction_pct(&self) -> f64 {
-        crate::util::table::reduction_pct(self.edges_before, self.graph.m())
+        crate::util::table::reduction_pct(self.edges_before, self.edges_after)
+    }
+
+    /// Vertices removed by the reduction.
+    pub fn removed(&self) -> usize {
+        self.vertices_before - self.vertices_after
+    }
+
+    /// Number of PrunIT⇄core rounds the planner ran.
+    pub fn rounds_run(&self) -> usize {
+        self.rounds.len()
     }
 
     /// Number of shards the reduced graph split into (0 = not sharded).
@@ -77,24 +120,122 @@ impl ReductionReport {
     }
 }
 
-/// Apply a reduction targeting `PD_k`.
-pub fn combined_with(g: &Graph, f: &Filtration, k: usize, which: Reduction) -> ReductionReport {
+/// A reduced instance: the planner's single compaction plus its report.
+#[derive(Clone, Debug)]
+pub struct Reduced {
+    pub graph: Graph,
+    /// The filtration restricted to survivors (original values; Rmk 1).
+    pub filtration: Filtration,
+    /// composition of old-id mappings: `new id -> original id` (ascending)
+    pub kept_old_ids: Vec<u32>,
+    pub report: ReductionReport,
+}
+
+impl Reduced {
+    pub fn vertex_reduction_pct(&self) -> f64 {
+        self.report.vertex_reduction_pct()
+    }
+
+    pub fn edge_reduction_pct(&self) -> f64 {
+        self.report.edge_reduction_pct()
+    }
+}
+
+fn report_from_ws(
+    ws: &ReductionWorkspace,
+    g: &Graph,
+    which: Reduction,
+    reduce_secs: f64,
+    compact_secs: f64,
+) -> ReductionReport {
+    ReductionReport {
+        vertices_before: g.n(),
+        edges_before: g.m(),
+        vertices_after: ws.alive_count(),
+        edges_after: ws.edges_alive(),
+        reduce_secs,
+        prunit_secs: ws.prunit_secs(),
+        core_secs: ws.core_secs(),
+        compact_secs,
+        rounds: ws.rounds().to_vec(),
+        which,
+        shard_sizes: Vec::new(),
+    }
+}
+
+/// Apply a reduction targeting `PD_k` on the zero-copy planner, with a
+/// fresh workspace. Hot loops (the coordinator pool, the sharded
+/// pipeline) should hold one [`ReductionWorkspace`] per worker and call
+/// [`combined_with_ws`] instead.
+pub fn combined_with(g: &Graph, f: &Filtration, k: usize, which: Reduction) -> Result<Reduced> {
+    combined_with_ws(&mut ReductionWorkspace::new(), g, f, k, which)
+}
+
+/// [`combined_with`] reusing a caller-held workspace: all stages run in
+/// place on `g`'s CSR; the reduced graph is compacted exactly once.
+pub fn combined_with_ws(
+    ws: &mut ReductionWorkspace,
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+    which: Reduction,
+) -> Result<Reduced> {
+    let total = Timer::start();
+    ws.plan(g, f, k, which)?;
+    let ((graph, filtration, kept_old_ids), compact_secs) = Timer::time(|| ws.compact(g, f));
+    let report = report_from_ws(ws, g, which, total.elapsed().as_secs_f64(), compact_secs);
+    Ok(Reduced {
+        graph,
+        filtration,
+        kept_old_ids,
+        report,
+    })
+}
+
+/// The default full pipeline (PrunIT + CoralTDA) targeting `PD_k`.
+pub fn combined(g: &Graph, f: &Filtration, k: usize) -> Result<Reduced> {
+    combined_with(g, f, k, Reduction::Combined)
+}
+
+/// The pre-planner pipeline: each stage materialises a fresh
+/// `Graph`/`Filtration` (`prunit` → `coral_reduce` → compose id maps).
+/// Kept as the differential reference the planner is property-tested
+/// against, and as the baseline side of `benches/planner_scaling.rs`.
+pub fn combined_with_materializing(
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+    which: Reduction,
+) -> Result<Reduced> {
     let vertices_before = g.n();
     let edges_before = g.m();
-    let ((graph, filtration, kept), secs) = Timer::time(|| match which {
+    let mut rounds = Vec::new();
+    let total = Timer::start();
+    let (graph, filtration, kept) = match which {
         Reduction::None => (g.clone(), f.clone(), (0..g.n() as u32).collect::<Vec<_>>()),
         Reduction::Coral => {
-            let r = coral_reduce(g, f, k);
+            let r = coral_reduce(g, f, k)?;
+            rounds.push(RoundStats {
+                prunit_removed: 0,
+                core_removed: vertices_before - r.graph.n(),
+            });
             (r.graph, r.filtration, r.kept_old_ids)
         }
         Reduction::Prunit => {
-            let r = prunit(g, f);
+            let r = prunit(g, f)?;
+            rounds.push(RoundStats {
+                prunit_removed: r.removed,
+                core_removed: 0,
+            });
             (r.graph, r.filtration, r.kept_old_ids)
         }
         Reduction::Combined => {
-            let p = prunit(g, f);
-            let c = coral_reduce(&p.graph, &p.filtration, k);
-            // compose mappings
+            let p = prunit(g, f)?;
+            let c = coral_reduce(&p.graph, &p.filtration, k)?;
+            rounds.push(RoundStats {
+                prunit_removed: p.removed,
+                core_removed: p.graph.n() - c.graph.n(),
+            });
             let ids = c
                 .kept_old_ids
                 .iter()
@@ -102,60 +243,105 @@ pub fn combined_with(g: &Graph, f: &Filtration, k: usize, which: Reduction) -> R
                 .collect();
             (c.graph, c.filtration, ids)
         }
-    });
-    ReductionReport {
+        Reduction::FixedPoint => {
+            let mut graph = g.clone();
+            let mut filtration = f.clone();
+            let mut ids: Vec<u32> = (0..g.n() as u32).collect();
+            loop {
+                let p = prunit(&graph, &filtration)?;
+                let c = coral_reduce(&p.graph, &p.filtration, k)?;
+                let round = RoundStats {
+                    prunit_removed: p.removed,
+                    core_removed: p.graph.n() - c.graph.n(),
+                };
+                rounds.push(round);
+                ids = c
+                    .kept_old_ids
+                    .iter()
+                    .map(|&mid| ids[p.kept_old_ids[mid as usize] as usize])
+                    .collect();
+                graph = c.graph;
+                filtration = c.filtration;
+                if round.prunit_removed + round.core_removed == 0 {
+                    break;
+                }
+            }
+            (graph, filtration, ids)
+        }
+    };
+    let report = ReductionReport {
+        vertices_before,
+        edges_before,
+        vertices_after: graph.n(),
+        edges_after: graph.m(),
+        reduce_secs: total.elapsed().as_secs_f64(),
+        prunit_secs: 0.0,
+        core_secs: 0.0,
+        compact_secs: 0.0,
+        rounds,
+        which,
+        shard_sizes: Vec::new(),
+    };
+    Ok(Reduced {
         graph,
         filtration,
         kept_old_ids: kept,
-        vertices_before,
-        edges_before,
-        reduce_secs: secs,
-        which,
-        shard_sizes: Vec::new(),
-    }
-}
-
-/// The default full pipeline (PrunIT + CoralTDA) targeting `PD_k`.
-pub fn combined(g: &Graph, f: &Filtration, k: usize) -> ReductionReport {
-    combined_with(g, f, k, Reduction::Combined)
+        report,
+    })
 }
 
 /// End-to-end: reduce then compute diagrams `PD_0..PD_k` on the reduced
-/// instance. For `Coral`/`Combined` only `PD_k` (and above) are exact;
-/// for `Prunit`/`None` every returned diagram is exact.
+/// instance. For `Coral`/`Combined`/`FixedPoint` only `PD_k` (and above)
+/// are exact; for `Prunit`/`None` every returned diagram is exact.
 pub fn pd_with_reduction(
     g: &Graph,
     f: &Filtration,
     k: usize,
     which: Reduction,
-) -> (Vec<Diagram>, ReductionReport) {
-    let report = combined_with(g, f, k, which);
-    let diagrams = persistence_diagrams(&report.graph, &report.filtration, k);
-    (diagrams, report)
+) -> Result<(Vec<Diagram>, ReductionReport)> {
+    let red = combined_with(g, f, k, which)?;
+    let diagrams = persistence_diagrams(&red.graph, &red.filtration, k);
+    Ok((diagrams, red.report))
 }
 
-/// Component-sharded end-to-end pipeline: reduce, split the reduced graph
-/// into connected components, run PH per shard on up to `workers` std
-/// threads, and merge the diagrams exactly (PDs are additive over
+/// Component-sharded end-to-end pipeline: plan the reduction in place,
+/// emit one compacted shard per connected component of the residue (the
+/// only CSR copies on this path), run PH per shard on up to `workers`
+/// std threads, and merge the diagrams exactly (PDs are additive over
 /// disjoint unions — see `homology::sharded`).
 ///
-/// Exactness matches [`pd_with_reduction`]: for `Coral`/`Combined` only
-/// `PD_k` (and above) is exact; for `Prunit`/`None` every returned
-/// diagram is exact. Sharding itself never changes any diagram.
-/// The report records the shard census (`shard_sizes`).
+/// Exactness matches [`pd_with_reduction`]: for
+/// `Coral`/`Combined`/`FixedPoint` only `PD_k` (and above) is exact; for
+/// `Prunit`/`None` every returned diagram is exact. Sharding itself never
+/// changes any diagram. The report records the shard census
+/// (`shard_sizes`).
 pub fn pd_sharded(
     g: &Graph,
     f: &Filtration,
     k: usize,
     which: Reduction,
     workers: usize,
-) -> (Vec<Diagram>, ReductionReport) {
-    let mut report = combined_with(g, f, k, which);
-    let shards = decompose_filtered(&report.graph, &report.filtration);
+) -> Result<(Vec<Diagram>, ReductionReport)> {
+    pd_sharded_with(&mut ReductionWorkspace::new(), g, f, k, which, workers)
+}
+
+/// [`pd_sharded`] reusing a caller-held planner workspace.
+pub fn pd_sharded_with(
+    ws: &mut ReductionWorkspace,
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+    which: Reduction,
+    workers: usize,
+) -> Result<(Vec<Diagram>, ReductionReport)> {
+    let total = Timer::start();
+    ws.plan(g, f, k, which)?;
+    let (shards, emit_secs) = Timer::time(|| ws.emit_shards(g, f));
+    let mut report = report_from_ws(ws, g, which, total.elapsed().as_secs_f64(), emit_secs);
     report.shard_sizes = shards.iter().map(|s| s.graph.n()).collect();
     let per_shard = all_shard_diagrams(&shards, k, workers);
     let diagrams = merge_shard_diagrams(&per_shard, k);
-    (diagrams, report)
+    Ok((diagrams, report))
 }
 
 #[cfg(test)]
@@ -163,23 +349,34 @@ mod tests {
     use super::*;
     use crate::graph::gen;
 
+    const ALL: [Reduction; 5] = [
+        Reduction::None,
+        Reduction::Coral,
+        Reduction::Prunit,
+        Reduction::Combined,
+        Reduction::FixedPoint,
+    ];
+
     #[test]
     fn combined_identity_statement_holds() {
-        // PD_k(G) == PD_k((G')^{k+1}) on random graphs, k = 1.
+        // PD_k(G) == PD_k((G')^{k+1}) on random graphs, k = 1 — and the
+        // fixed-point alternation keeps the same guarantee.
         let mut rng = crate::util::Rng::new(77);
         for _ in 0..8 {
             let n = rng.range(6, 22);
             let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
             let f = Filtration::degree_superlevel(&g);
             let base = persistence_diagrams(&g, &f, 1);
-            let (red, report) = pd_with_reduction(&g, &f, 1, Reduction::Combined);
-            assert!(
-                base[1].same_as(&red[1], 1e-9),
-                "PD_1 mismatch after {}: {} vs {}",
-                report.which.name(),
-                base[1],
-                red[1]
-            );
+            for which in [Reduction::Combined, Reduction::FixedPoint] {
+                let (red, report) = pd_with_reduction(&g, &f, 1, which).unwrap();
+                assert!(
+                    base[1].same_as(&red[1], 1e-9),
+                    "PD_1 mismatch after {}: {} vs {}",
+                    report.which.name(),
+                    base[1],
+                    red[1]
+                );
+            }
         }
     }
 
@@ -187,17 +384,19 @@ mod tests {
     fn reduction_percentages_sane() {
         let g = gen::barabasi_albert(120, 2, 5);
         let f = Filtration::degree_superlevel(&g);
-        let r = combined(&g, &f, 1);
+        let r = combined(&g, &f, 1).unwrap();
         assert!(r.vertex_reduction_pct() >= 0.0 && r.vertex_reduction_pct() <= 100.0);
         assert!(r.edge_reduction_pct() <= 100.0);
         assert!(r.graph.n() <= g.n());
+        assert_eq!(r.report.vertices_after, r.graph.n());
+        assert_eq!(r.report.edges_after, r.graph.m());
     }
 
     #[test]
     fn none_reduction_is_identity() {
         let g = gen::cycle(7);
         let f = Filtration::degree(&g);
-        let r = combined_with(&g, &f, 1, Reduction::None);
+        let r = combined_with(&g, &f, 1, Reduction::None).unwrap();
         assert_eq!(r.graph, g);
         assert_eq!(r.vertex_reduction_pct(), 0.0);
         assert_eq!(r.kept_old_ids, (0..7).collect::<Vec<u32>>());
@@ -207,13 +406,15 @@ mod tests {
     fn mapping_composition_points_to_original() {
         let g = gen::barabasi_albert(60, 2, 8);
         let f = Filtration::degree_superlevel(&g);
-        let r = combined(&g, &f, 1);
-        for (new, &old) in r.kept_old_ids.iter().enumerate() {
-            assert_eq!(
-                r.filtration.value(new as u32),
-                f.value(old),
-                "restricted f must match original values"
-            );
+        for which in [Reduction::Combined, Reduction::FixedPoint] {
+            let r = combined_with(&g, &f, 1, which).unwrap();
+            for (new, &old) in r.kept_old_ids.iter().enumerate() {
+                assert_eq!(
+                    r.filtration.value(new as u32),
+                    f.value(old),
+                    "restricted f must match original values"
+                );
+            }
         }
     }
 
@@ -221,29 +422,76 @@ mod tests {
     fn reduction_names() {
         assert_eq!(Reduction::Combined.name(), "prunit+coral");
         assert_eq!(Reduction::None.name(), "none");
+        assert_eq!(Reduction::FixedPoint.name(), "fixed-point");
+    }
+
+    #[test]
+    fn mismatched_filtration_is_a_typed_error() {
+        let g = gen::cycle(5);
+        let f = Filtration::constant(4);
+        for which in ALL {
+            assert!(
+                matches!(
+                    combined_with(&g, &f, 1, which),
+                    Err(crate::error::Error::FiltrationMismatch { .. })
+                ),
+                "{} must surface FiltrationMismatch",
+                which.name()
+            );
+        }
+        assert!(pd_sharded(&g, &f, 1, Reduction::Combined, 2).is_err());
+    }
+
+    #[test]
+    fn planner_matches_materializing_pipeline() {
+        // the differential property: same reduced instance, same id maps
+        let mut rng = crate::util::Rng::new(501);
+        for _ in 0..10 {
+            let n = rng.range(6, 40);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            for which in ALL {
+                let a = combined_with(&g, &f, 1, which).unwrap();
+                let b = combined_with_materializing(&g, &f, 1, which).unwrap();
+                assert_eq!(a.graph, b.graph, "{}", which.name());
+                assert_eq!(a.kept_old_ids, b.kept_old_ids, "{}", which.name());
+                assert_eq!(a.filtration, b.filtration, "{}", which.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_point_never_keeps_more_than_combined() {
+        let mut rng = crate::util::Rng::new(502);
+        for _ in 0..10 {
+            let n = rng.range(8, 60);
+            let g = gen::erdos_renyi(n, 0.2, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let c = combined_with(&g, &f, 1, Reduction::Combined).unwrap();
+            let fp = combined_with(&g, &f, 1, Reduction::FixedPoint).unwrap();
+            assert!(fp.graph.n() <= c.graph.n());
+            assert!(fp.report.removed() >= c.report.removed());
+            assert!(fp.report.rounds_run() <= fp.report.removed() + 1);
+        }
     }
 
     #[test]
     fn pd_sharded_matches_monolithic_pipeline() {
-        // Full reduction matrix, Coral included: mono and sharded apply
-        // the identical reduction to the identical instance, so their
-        // diagrams must agree in every computed dimension — in particular
-        // PD_1, the dimension Coral's (k+1)-core targets.
+        // Full reduction matrix, FixedPoint included: mono and sharded
+        // apply the identical reduction to the identical instance, so
+        // their diagrams must agree in every computed dimension.
         let mut rng = crate::util::Rng::new(404);
         for _ in 0..6 {
             let n = rng.range(8, 24);
             let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
             let f = Filtration::degree_superlevel(&g);
-            for which in [
-                Reduction::None,
-                Reduction::Coral,
-                Reduction::Prunit,
-                Reduction::Combined,
-            ] {
-                let (mono, _) = pd_with_reduction(&g, &f, 1, which);
-                let (shard, report) = pd_sharded(&g, &f, 1, which, 2);
-                assert_eq!(report.shard_count(), report.graph.components());
-                assert_eq!(report.shard_sizes.iter().sum::<usize>(), report.graph.n());
+            for which in ALL {
+                let (mono, _) = pd_with_reduction(&g, &f, 1, which).unwrap();
+                let (shard, report) = pd_sharded(&g, &f, 1, which, 2).unwrap();
+                assert_eq!(
+                    report.shard_sizes.iter().sum::<usize>(),
+                    report.vertices_after
+                );
                 for k in 0..=1 {
                     assert!(
                         mono[k].same_as(&shard[k], 1e-12),
@@ -267,7 +515,7 @@ mod tests {
             let g = gen::erdos_renyi(n, 0.3, rng.next_u64());
             let f = Filtration::degree_superlevel(&g);
             let base = persistence_diagrams(&g, &f, 1);
-            let (coral, _) = pd_sharded(&g, &f, 1, Reduction::Coral, 2);
+            let (coral, _) = pd_sharded(&g, &f, 1, Reduction::Coral, 2).unwrap();
             assert!(
                 base[1].same_as(&coral[1], 1e-12),
                 "PD_1: {} vs {}",
@@ -281,8 +529,9 @@ mod tests {
     fn shard_report_defaults_empty_on_monolithic_path() {
         let g = gen::cycle(6);
         let f = Filtration::degree(&g);
-        let r = combined(&g, &f, 1);
-        assert_eq!(r.shard_count(), 0);
-        assert_eq!(r.largest_shard(), 0);
+        let r = combined(&g, &f, 1).unwrap();
+        assert_eq!(r.report.shard_count(), 0);
+        assert_eq!(r.report.largest_shard(), 0);
+        assert_eq!(r.report.rounds_run(), 1);
     }
 }

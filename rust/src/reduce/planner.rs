@@ -1,0 +1,561 @@
+//! Zero-copy reduction planner: PrunIT (Thm 7), Batagelj–Zaveršnik coring
+//! (Thm 2), and component labeling executed **in place on the original
+//! CSR** through a reusable [`ReductionWorkspace`].
+//!
+//! The materializing pipeline pays three full CSR copies before a single
+//! boundary column is reduced: one after PrunIT, one after the (k+1)-core,
+//! and one per component shard. The planner instead shares a single pair
+//! of per-vertex arrays — an `alive` tombstone mask and the residual
+//! degree — across all three stages, and compacts to a concrete [`Graph`]
+//! exactly once, at emission time (whole-graph for the monolithic path,
+//! per shard for the sharded path).
+//!
+//! Two further hot-path fixes live here:
+//!
+//! * **No `Vec::remove` on adjacency lists.** `prune::prunit`'s mutable
+//!   view deletes an edge with an O(deg) memmove, O(deg²) on the hubs
+//!   that dominate real networks. The planner never edits a neighbour
+//!   list — death is a mask bit plus a degree decrement.
+//! * **Hybrid domination checks.** Low-degree dominator candidates use
+//!   the sorted-merge walk; hub candidates (original degree ≥
+//!   [`HUB_DEGREE`]) load a u64-block neighbourhood bitset once and
+//!   answer each probe in O(deg(u)).
+//!
+//! On top of the workspace, [`Reduction::FixedPoint`] alternates PrunIT
+//! and the (k+1)-core peel until neither removes a vertex. Each stage
+//! individually preserves `PD_j` for `j ≥ k` (PrunIT for every dimension,
+//! coring for `j ≥ k`), so any finite composition is exact for `j ≥ k` —
+//! property-tested against unreduced baselines in `rust/tests/`. The
+//! alternation converges because every round but the last removes at
+//! least one vertex; rounds are therefore bounded by the removal count.
+
+use std::collections::VecDeque;
+
+use crate::complex::Filtration;
+use crate::error::Result;
+use crate::graph::decompose::Shard;
+use crate::graph::Graph;
+use crate::prune::domination::{HubBitset, HUB_DEGREE};
+use crate::util::Timer;
+
+use super::pipeline::{Reduction, RoundStats};
+
+/// Reusable in-place reduction state: one allocation set per worker
+/// thread, re-targeted at each graph with [`ReductionWorkspace::plan`].
+#[derive(Clone, Debug, Default)]
+pub struct ReductionWorkspace {
+    /// tombstone mask over original vertex ids
+    alive: Vec<bool>,
+    /// residual degree (alive neighbours only); stale for dead vertices
+    deg: Vec<u32>,
+    /// PrunIT worklist bookkeeping
+    in_queue: Vec<bool>,
+    queue: VecDeque<u32>,
+    /// core-peel stack (scratch for `kcore::peel_residue`)
+    peel: Vec<u32>,
+    /// hub neighbourhood bitset for the hybrid domination check
+    hub: HubBitset,
+    /// component labels over alive vertices (emit_shards scratch)
+    labels: Vec<u32>,
+    /// old id -> compacted id scratch
+    new_id: Vec<u32>,
+    /// BFS stack for component labeling
+    stack: Vec<u32>,
+    // --- telemetry of the latest plan ---
+    rounds: Vec<RoundStats>,
+    prunit_secs: f64,
+    core_secs: f64,
+    checks: usize,
+    alive_count: usize,
+}
+
+impl ReductionWorkspace {
+    pub fn new() -> ReductionWorkspace {
+        ReductionWorkspace::default()
+    }
+
+    /// Re-target the workspace at `g`: everything alive, residual degrees
+    /// = original degrees, telemetry cleared.
+    fn reset(&mut self, g: &Graph) {
+        let n = g.n();
+        self.alive.clear();
+        self.alive.resize(n, true);
+        self.deg.clear();
+        self.deg.extend((0..n as u32).map(|v| g.degree(v) as u32));
+        self.in_queue.clear();
+        self.in_queue.resize(n, false);
+        self.queue.clear();
+        self.peel.clear();
+        self.hub.invalidate();
+        self.rounds.clear();
+        self.prunit_secs = 0.0;
+        self.core_secs = 0.0;
+        self.checks = 0;
+        self.alive_count = n;
+    }
+
+    /// Run `which` on `(g, f)` targeting `PD_k`, entirely in place. After
+    /// this returns, [`compact`](Self::compact) or
+    /// [`emit_shards`](Self::emit_shards) materialise the residue — the
+    /// only CSR copies the planner ever makes.
+    pub fn plan(&mut self, g: &Graph, f: &Filtration, k: usize, which: Reduction) -> Result<()> {
+        f.check(g)?;
+        self.reset(g);
+        let k1 = (k + 1) as u32;
+        match which {
+            Reduction::None => {}
+            Reduction::Coral => {
+                let c = self.timed_core(g, k1);
+                self.rounds.push(RoundStats {
+                    prunit_removed: 0,
+                    core_removed: c,
+                });
+            }
+            Reduction::Prunit => {
+                let p = self.timed_prunit(g, f);
+                self.rounds.push(RoundStats {
+                    prunit_removed: p,
+                    core_removed: 0,
+                });
+            }
+            Reduction::Combined => {
+                let p = self.timed_prunit(g, f);
+                let c = self.timed_core(g, k1);
+                self.rounds.push(RoundStats {
+                    prunit_removed: p,
+                    core_removed: c,
+                });
+            }
+            Reduction::FixedPoint => loop {
+                let p = self.timed_prunit(g, f);
+                let c = self.timed_core(g, k1);
+                self.rounds.push(RoundStats {
+                    prunit_removed: p,
+                    core_removed: c,
+                });
+                if p + c == 0 {
+                    break;
+                }
+            },
+        }
+        Ok(())
+    }
+
+    // ---------- stage passes ----------
+
+    fn timed_prunit(&mut self, g: &Graph, f: &Filtration) -> usize {
+        let (removed, secs) = {
+            let t = Timer::start();
+            let r = self.prunit_pass(g, f);
+            (r, t.elapsed().as_secs_f64())
+        };
+        self.prunit_secs += secs;
+        removed
+    }
+
+    fn timed_core(&mut self, g: &Graph, k1: u32) -> usize {
+        let t = Timer::start();
+        let removed =
+            crate::kcore::peel_residue(g, k1, &mut self.alive, &mut self.deg, &mut self.peel);
+        self.alive_count -= removed;
+        self.core_secs += t.elapsed().as_secs_f64();
+        removed
+    }
+
+    /// One PrunIT worklist run to its fixed point. Every round seeds the
+    /// FIFO with all alive vertices in ascending id order — exactly the
+    /// schedule `prune::prunit` uses — so the planner's removal set is
+    /// bit-identical to the materializing reference's even where twin
+    /// choices depend on processing order. (Seeding only the neighbours
+    /// of core-killed vertices would be set-correct but can reorder twin
+    /// resolution; the O(n) reseed is noise next to the pass itself.)
+    fn prunit_pass(&mut self, g: &Graph, f: &Filtration) -> usize {
+        debug_assert!(self.queue.is_empty());
+        for v in 0..g.n() as u32 {
+            if self.alive[v as usize] {
+                self.in_queue[v as usize] = true;
+                self.queue.push_back(v);
+            }
+        }
+        let mut removed = 0usize;
+        while let Some(u) = self.queue.pop_front() {
+            self.in_queue[u as usize] = false;
+            if !self.alive[u as usize] {
+                continue;
+            }
+            self.checks += 1;
+            let du = self.deg[u as usize];
+            let mut dominated = false;
+            for &v in g.neighbors(u) {
+                if !self.alive[v as usize] || self.deg[v as usize] < du {
+                    continue;
+                }
+                if f.admissible_removal(u, v) && self.dominates(g, u, v) {
+                    dominated = true;
+                    break;
+                }
+            }
+            if dominated {
+                self.alive[u as usize] = false;
+                self.alive_count -= 1;
+                removed += 1;
+                for &w in g.neighbors(u) {
+                    if self.alive[w as usize] {
+                        self.deg[w as usize] -= 1;
+                        if !self.in_queue[w as usize] {
+                            self.in_queue[w as usize] = true;
+                            self.queue.push_back(w);
+                        }
+                    }
+                }
+            }
+        }
+        removed
+    }
+
+    /// Does alive `v` dominate alive `u` in the residue? Caller
+    /// guarantees adjacency and `deg[u] ≤ deg[v]`. Hybrid: sorted merge
+    /// for low-degree `v`, neighbourhood bitset for hubs.
+    fn dominates(&mut self, g: &Graph, u: u32, v: u32) -> bool {
+        if g.degree(v) >= HUB_DEGREE {
+            self.hub.load(g, v);
+            for &x in g.neighbors(u) {
+                if x == v || !self.alive[x as usize] {
+                    continue;
+                }
+                if !self.hub.contains(x) {
+                    return false;
+                }
+            }
+            true
+        } else {
+            let nv = g.neighbors(v);
+            let mut j = 0usize;
+            for &x in g.neighbors(u) {
+                if x == v || !self.alive[x as usize] {
+                    continue;
+                }
+                while j < nv.len() && nv[j] < x {
+                    j += 1;
+                }
+                if j == nv.len() || nv[j] != x {
+                    return false;
+                }
+                j += 1;
+            }
+            true
+        }
+    }
+
+    // ---------- emission (the single compaction) ----------
+
+    /// Materialise the residue as one compacted `(Graph, Filtration,
+    /// new id -> old id)` — the monolithic path's only CSR copy.
+    pub fn compact(&mut self, g: &Graph, f: &Filtration) -> (Graph, Filtration, Vec<u32>) {
+        let kept: Vec<u32> = (0..g.n() as u32)
+            .filter(|&v| self.alive[v as usize])
+            .collect();
+        self.new_id.clear();
+        self.new_id.resize(g.n(), u32::MAX);
+        for (new, &old) in kept.iter().enumerate() {
+            self.new_id[old as usize] = new as u32;
+        }
+        // residual degrees are maintained exactly → exact preallocation
+        let cap: usize = kept.iter().map(|&v| self.deg[v as usize] as usize).sum();
+        let mut offsets = Vec::with_capacity(kept.len() + 1);
+        let mut neighbors = Vec::with_capacity(cap);
+        offsets.push(0);
+        for &old in &kept {
+            for &w in g.neighbors(old) {
+                if self.alive[w as usize] {
+                    neighbors.push(self.new_id[w as usize]);
+                }
+            }
+            offsets.push(neighbors.len());
+        }
+        let graph = Graph::from_csr_parts(offsets, neighbors);
+        let filtration = f.restrict(&kept);
+        (graph, filtration, kept)
+    }
+
+    /// Label the residue's connected components and materialise one
+    /// compacted [`Shard`] per component — the sharded path's only CSR
+    /// copies (exactly one per emitted shard, none in between stages).
+    /// Component ids are ordered by smallest member, and within a shard
+    /// vertex ids ascend with original ids, so mapped neighbour lists
+    /// stay sorted — identical output to `decompose_filtered` applied to
+    /// the compacted residue.
+    pub fn emit_shards(&mut self, g: &Graph, f: &Filtration) -> Vec<Shard> {
+        let n = g.n();
+        self.labels.clear();
+        self.labels.resize(n, u32::MAX);
+        debug_assert!(self.stack.is_empty());
+        let mut count = 0u32;
+        for s in 0..n as u32 {
+            if !self.alive[s as usize] || self.labels[s as usize] != u32::MAX {
+                continue;
+            }
+            self.labels[s as usize] = count;
+            self.stack.push(s);
+            while let Some(v) = self.stack.pop() {
+                for &w in g.neighbors(v) {
+                    if self.alive[w as usize] && self.labels[w as usize] == u32::MAX {
+                        self.labels[w as usize] = count;
+                        self.stack.push(w);
+                    }
+                }
+            }
+            count += 1;
+        }
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); count as usize];
+        for v in 0..n as u32 {
+            if self.alive[v as usize] {
+                members[self.labels[v as usize] as usize].push(v);
+            }
+        }
+        self.new_id.clear();
+        self.new_id.resize(n, u32::MAX);
+        for part in &members {
+            for (i, &v) in part.iter().enumerate() {
+                self.new_id[v as usize] = i as u32;
+            }
+        }
+        members
+            .into_iter()
+            .map(|old_ids| {
+                let cap: usize = old_ids
+                    .iter()
+                    .map(|&v| self.deg[v as usize] as usize)
+                    .sum();
+                let mut offsets = Vec::with_capacity(old_ids.len() + 1);
+                let mut neighbors = Vec::with_capacity(cap);
+                offsets.push(0);
+                for &v in &old_ids {
+                    for &w in g.neighbors(v) {
+                        if self.alive[w as usize] {
+                            neighbors.push(self.new_id[w as usize]);
+                        }
+                    }
+                    offsets.push(neighbors.len());
+                }
+                let filtration = f.restrict(&old_ids);
+                Shard {
+                    graph: Graph::from_csr_parts(offsets, neighbors),
+                    filtration,
+                    kept_old_ids: old_ids,
+                }
+            })
+            .collect()
+    }
+
+    // ---------- telemetry ----------
+
+    /// Alive-vertex count of the residue.
+    pub fn alive_count(&self) -> usize {
+        self.alive_count
+    }
+
+    /// Residual edge count (half the alive degree sum).
+    pub fn edges_alive(&self) -> usize {
+        let twice: usize = self
+            .alive
+            .iter()
+            .zip(&self.deg)
+            .filter(|(&a, _)| a)
+            .map(|(_, &d)| d as usize)
+            .sum();
+        twice / 2
+    }
+
+    /// Alive mask over original vertex ids.
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Per-round removal counts of the latest plan.
+    pub fn rounds(&self) -> &[RoundStats] {
+        &self.rounds
+    }
+
+    /// Seconds spent in PrunIT passes (latest plan).
+    pub fn prunit_secs(&self) -> f64 {
+        self.prunit_secs
+    }
+
+    /// Seconds spent in core peels (latest plan).
+    pub fn core_secs(&self) -> f64 {
+        self.core_secs
+    }
+
+    /// PrunIT worklist pops (latest plan) — the work-done proxy reported
+    /// by `prune::prunit` as `checks`.
+    pub fn checks(&self) -> usize {
+        self.checks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::homology::persistence_diagrams;
+    use crate::prune::prunit;
+    use crate::reduce::coral_reduce;
+
+    fn ws_residue(g: &Graph, f: &Filtration, k: usize, which: Reduction) -> Vec<u32> {
+        let mut ws = ReductionWorkspace::new();
+        ws.plan(g, f, k, which).unwrap();
+        (0..g.n() as u32).filter(|&v| ws.alive()[v as usize]).collect()
+    }
+
+    #[test]
+    fn prunit_plan_matches_materializing_prunit() {
+        let mut rng = crate::util::Rng::new(12);
+        for _ in 0..20 {
+            let n = rng.range(4, 60);
+            let g = gen::erdos_renyi(n, 0.2, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let kept = ws_residue(&g, &f, 1, Reduction::Prunit);
+            let r = prunit(&g, &f).unwrap();
+            assert_eq!(kept, r.kept_old_ids, "n={n}");
+        }
+    }
+
+    #[test]
+    fn coral_plan_matches_materializing_core() {
+        let mut rng = crate::util::Rng::new(13);
+        for _ in 0..20 {
+            let n = rng.range(4, 60);
+            let g = gen::erdos_renyi(n, 0.15, rng.next_u64());
+            let f = Filtration::degree(&g);
+            for k in 1..=2 {
+                let kept = ws_residue(&g, &f, k, Reduction::Coral);
+                let r = coral_reduce(&g, &f, k).unwrap();
+                assert_eq!(kept, r.kept_old_ids, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn hub_path_agrees_with_merge_path_on_a_star_of_stars() {
+        // hub 0 with 200 leaves (degree ≥ HUB_DEGREE forces the bitset
+        // path), plus clique decorations to exercise real subset checks
+        let mut edges: Vec<(u32, u32)> = (1..=200).map(|v| (0u32, v)).collect();
+        edges.extend([(1, 2), (2, 3), (1, 3), (0, 201), (201, 1)]);
+        let g = Graph::from_edges(202, &edges);
+        let f = Filtration::degree_superlevel(&g);
+        let kept = ws_residue(&g, &f, 1, Reduction::Prunit);
+        let r = prunit(&g, &f).unwrap();
+        assert_eq!(kept, r.kept_old_ids);
+        assert!(g.degree(0) as usize >= HUB_DEGREE);
+    }
+
+    #[test]
+    fn fixed_point_leaves_nothing_to_remove() {
+        let mut rng = crate::util::Rng::new(14);
+        for _ in 0..10 {
+            let n = rng.range(6, 50);
+            let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let mut ws = ReductionWorkspace::new();
+            ws.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+            let (h, fh, _) = ws.compact(&g, &f);
+            // no admissible dominated vertex, and min degree ≥ 2
+            for u in 0..h.n() as u32 {
+                assert!(h.degree(u) >= 2, "vertex {u} below core threshold");
+                assert!(
+                    crate::prune::find_dominator(&h, &fh, u).is_none(),
+                    "vertex {u} still prunable"
+                );
+            }
+            // last round removed nothing
+            let last = ws.rounds().last().unwrap();
+            assert_eq!(last.prunit_removed + last.core_removed, 0);
+        }
+    }
+
+    #[test]
+    fn fixed_point_pd1_exact_on_cycle_with_tail() {
+        // cycle 0..6 + pendant path: FixedPoint peels the tail (core) and
+        // whatever domination appears, PD_1 must survive untouched
+        let mut edges: Vec<(u32, u32)> = (0..6).map(|i| (i, (i + 1) % 6)).collect();
+        edges.push((0, 6));
+        edges.push((6, 7));
+        let g = Graph::from_edges(8, &edges);
+        let f = Filtration::degree(&g);
+        let mut ws = ReductionWorkspace::new();
+        ws.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+        let (h, fh, _) = ws.compact(&g, &f);
+        let before = persistence_diagrams(&g, &f, 1);
+        let after = persistence_diagrams(&h, &fh, 1);
+        assert!(before[1].same_as(&after[1], 1e-12));
+    }
+
+    #[test]
+    fn emit_shards_equals_decompose_of_compacted_residue() {
+        let mut rng = crate::util::Rng::new(15);
+        for _ in 0..12 {
+            let n = rng.range(6, 50);
+            let g = gen::erdos_renyi(n, 0.08, rng.next_u64());
+            let f = Filtration::degree_superlevel(&g);
+            let mut ws = ReductionWorkspace::new();
+            ws.plan(&g, &f, 1, Reduction::Combined).unwrap();
+            let shards = ws.emit_shards(&g, &f);
+            let (h, fh, kept) = ws.compact(&g, &f);
+            let reference = crate::graph::decompose::decompose_filtered(&h, &fh);
+            assert_eq!(shards.len(), reference.len());
+            for (s, r) in shards.iter().zip(&reference) {
+                assert_eq!(s.graph, r.graph);
+                assert_eq!(s.filtration, r.filtration);
+                // planner ids are original; reference ids go through `kept`
+                let via_kept: Vec<u32> =
+                    r.kept_old_ids.iter().map(|&m| kept[m as usize]).collect();
+                assert_eq!(s.kept_old_ids, via_kept);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_graphs_is_clean() {
+        let mut ws = ReductionWorkspace::new();
+        let specs: [(usize, f64, u64); 4] =
+            [(40, 0.2, 1), (7, 0.5, 2), (120, 0.05, 3), (40, 0.2, 1)];
+        let mut first_run: Option<Vec<u32>> = None;
+        for (i, &(n, p, seed)) in specs.iter().enumerate() {
+            let g = gen::erdos_renyi(n, p, seed);
+            let f = Filtration::degree_superlevel(&g);
+            ws.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+            let (_, _, kept) = ws.compact(&g, &f);
+            assert_eq!(ws.alive_count(), kept.len());
+            if i == 0 {
+                first_run = Some(kept);
+            } else if i == 3 {
+                assert_eq!(kept, first_run.clone().unwrap(), "reuse must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rejects_mismatched_filtration() {
+        let g = gen::cycle(5);
+        let f = Filtration::constant(3);
+        let mut ws = ReductionWorkspace::new();
+        assert!(ws.plan(&g, &f, 1, Reduction::Combined).is_err());
+    }
+
+    #[test]
+    fn telemetry_accounts_for_all_removals() {
+        let g = gen::barabasi_albert(300, 2, 5);
+        let f = Filtration::degree_superlevel(&g);
+        let mut ws = ReductionWorkspace::new();
+        ws.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+        let removed_by_rounds: usize = ws
+            .rounds()
+            .iter()
+            .map(|r| r.prunit_removed + r.core_removed)
+            .sum();
+        assert_eq!(removed_by_rounds, g.n() - ws.alive_count());
+        assert!(ws.rounds().len() <= removed_by_rounds + 1);
+        assert!(ws.checks() > 0);
+    }
+}

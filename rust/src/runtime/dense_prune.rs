@@ -129,7 +129,7 @@ mod tests {
         let g = gen::star(12);
         let f = Filtration::degree_superlevel(&g);
         let dense = prunit_dense(&rt, &g, &f).unwrap();
-        let sparse = prunit(&g, &f);
+        let sparse = prunit(&g, &f).unwrap();
         assert_eq!(dense.graph.n(), sparse.graph.n());
         assert!(dense.graph.n() <= 2);
     }
@@ -184,7 +184,7 @@ mod tests {
             let f = Filtration::degree(&g);
             for k in 1..=2usize {
                 let (core_d, ids_d, _) = coral_dense(&rt, &g, &f, k).unwrap();
-                let r = crate::reduce::coral_reduce(&g, &f, k);
+                let r = crate::reduce::coral_reduce(&g, &f, k).unwrap();
                 assert_eq!(core_d, r.graph, "n={n} k={k}");
                 assert_eq!(ids_d, r.kept_old_ids);
             }

@@ -19,7 +19,7 @@ fn empty_graph_full_pipeline() {
     let f = Filtration::constant(0);
     let pds = persistence_diagrams(&g, &f, 2);
     assert!(pds.iter().all(|d| d.is_empty()));
-    let r = combined_with(&g, &f, 1, Reduction::Combined);
+    let r = combined_with(&g, &f, 1, Reduction::Combined).unwrap();
     assert_eq!(r.graph.n(), 0);
     assert_eq!(r.vertex_reduction_pct(), 0.0);
 }
@@ -33,7 +33,7 @@ fn single_vertex_pipeline() {
     assert_eq!(pds[0].essential(), vec![7.0]);
     assert!(pds[1].is_empty());
     // nothing dominates in a K1
-    assert_eq!(prunit(&g, &f).removed, 0);
+    assert_eq!(prunit(&g, &f).unwrap().removed, 0);
 }
 
 #[test]
@@ -42,7 +42,7 @@ fn all_isolated_vertices() {
     let f = Filtration::sublevel(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
     let pds = persistence_diagrams(&g, &f, 1);
     assert_eq!(pds[0].betti(), 5, "five essential components");
-    let r = coral_reduce(&g, &f, 1);
+    let r = coral_reduce(&g, &f, 1).unwrap();
     assert_eq!(r.graph.n(), 0, "isolated vertices have coreness 0");
     // and CoralTDA still preserves PD_1 (both trivial)
     let after = persistence_diagrams(&r.graph, &r.filtration, 1);
@@ -58,7 +58,7 @@ fn two_vertices_one_edge() {
     let pts = pds[0].points();
     assert_eq!(pts, vec![(0.0, f64::INFINITY)]);
     // vertex 1 is dominated by 0 and admissible (f(1) ≥ f(0))
-    let r = prunit(&g, &f);
+    let r = prunit(&g, &f).unwrap();
     assert_eq!(r.graph.n(), 1);
     assert_eq!(r.kept_old_ids, vec![0]);
 }
@@ -70,7 +70,7 @@ fn disconnected_components_are_independent() {
     assert_eq!(betti_numbers(&g, 1), vec![3, 0]);
     // prunit collapses the triangle and path but can't merge components
     let f = Filtration::degree_superlevel(&g);
-    let r = prunit(&g, &f);
+    let r = prunit(&g, &f).unwrap();
     let after = persistence_diagrams(&r.graph, &r.filtration, 1);
     assert_eq!(after[0].betti(), 3, "component count is a homotopy invariant");
 }
@@ -84,7 +84,7 @@ fn filtration_with_equal_values_everywhere() {
         let g = gen::erdos_renyi(n, 0.4, rng.next_u64());
         let f = Filtration::constant(n);
         let base = persistence_diagrams(&g, &f, 1);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         let after = persistence_diagrams(&r.graph, &r.filtration, 1);
         for k in 0..=1 {
             if !base[k].same_as(&after[k], 1e-12) {
@@ -141,7 +141,7 @@ fn distance_is_zero_between_reduced_and_unreduced() {
         let g = gen::erdos_renyi(n, 0.35, rng.next_u64());
         let f = Filtration::degree_superlevel(&g);
         let base = persistence_diagrams(&g, &f, 1);
-        let r = prunit(&g, &f);
+        let r = prunit(&g, &f).unwrap();
         let red = persistence_diagrams(&r.graph, &r.filtration, 1);
         let db = bottleneck(&base[1], &red[1]);
         let dw = wasserstein1(&base[1], &red[1]);
@@ -156,8 +156,9 @@ fn distance_is_zero_between_reduced_and_unreduced() {
 
 #[test]
 fn worker_panic_surfaces_as_coordinator_error() {
-    // A filtration/graph mismatch panics inside the worker; the
-    // coordinator must report it as an error, not hang or crash the test.
+    // A filtration/graph mismatch used to panic inside the worker; the
+    // planner now surfaces it as a typed error, and the coordinator must
+    // report it as the batch error, not hang or crash the test.
     let cfg = CoordinatorConfig {
         workers: 2,
         queue_depth: 2,
@@ -230,8 +231,13 @@ fn kept_old_ids_always_strictly_ascending() {
         let n = rng.range(3, 30);
         let g = gen::erdos_renyi(n, 0.25, rng.next_u64());
         let f = Filtration::degree_superlevel(&g);
-        for which in [Reduction::Coral, Reduction::Prunit, Reduction::Combined] {
-            let r = combined_with(&g, &f, 1, which);
+        for which in [
+            Reduction::Coral,
+            Reduction::Prunit,
+            Reduction::Combined,
+            Reduction::FixedPoint,
+        ] {
+            let r = combined_with(&g, &f, 1, which).unwrap();
             if !r.kept_old_ids.windows(2).all(|w| w[0] < w[1]) {
                 return Err(format!("{}: ids not ascending", which.name()));
             }
@@ -252,7 +258,7 @@ fn reduced_graph_is_induced_subgraph() {
         let n = rng.range(4, 25);
         let g = gen::erdos_renyi(n, 0.3, rng.next_u64());
         let f = Filtration::degree_superlevel(&g);
-        let r = combined_with(&g, &f, 1, Reduction::Combined);
+        let r = combined_with(&g, &f, 1, Reduction::Combined).unwrap();
         for (a_new, &a_old) in r.kept_old_ids.iter().enumerate() {
             for (b_new, &b_old) in r.kept_old_ids.iter().enumerate() {
                 let has_new = r.graph.has_edge(a_new as u32, b_new as u32);

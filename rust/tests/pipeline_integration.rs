@@ -21,23 +21,28 @@ fn all_reduction_modes_agree_on_pd_k() {
         let g = &case.graph;
         let f = random_filtration(rng, g);
         let k = 1usize;
-        let (base, _) = pd_with_reduction(g, &f, k, Reduction::None);
-        for which in [Reduction::Coral, Reduction::Prunit, Reduction::Combined] {
-            let (red, report) = pd_with_reduction(g, &f, k, which);
+        let (base, _) = pd_with_reduction(g, &f, k, Reduction::None).unwrap();
+        for which in [
+            Reduction::Coral,
+            Reduction::Prunit,
+            Reduction::Combined,
+            Reduction::FixedPoint,
+        ] {
+            let (red, report) = pd_with_reduction(g, &f, k, which).unwrap();
             if !base[k].same_as(&red[k], 1e-9) {
                 return Err(format!(
                     "{}: PD_{k} via {} ({}→{} vertices): {} vs {}",
                     case.desc,
                     which.name(),
                     report.vertices_before,
-                    report.graph.n(),
+                    report.vertices_after,
                     base[k],
                     red[k]
                 ));
             }
         }
         // PrunIT additionally preserves PD_0
-        let (p, _) = pd_with_reduction(g, &f, k, Reduction::Prunit);
+        let (p, _) = pd_with_reduction(g, &f, k, Reduction::Prunit).unwrap();
         if !base[0].same_as(&p[0], 1e-9) {
             return Err(format!("{}: PrunIT broke PD_0", case.desc));
         }
@@ -52,9 +57,9 @@ fn combined_dominates_either_alone() {
         let case = random_graph_case(rng, 40);
         let g = &case.graph;
         let f = Filtration::degree_superlevel(g);
-        let coral = combined_with(g, &f, 1, Reduction::Coral);
-        let pru = combined_with(g, &f, 1, Reduction::Prunit);
-        let both = combined_with(g, &f, 1, Reduction::Combined);
+        let coral = combined_with(g, &f, 1, Reduction::Coral).unwrap();
+        let pru = combined_with(g, &f, 1, Reduction::Prunit).unwrap();
+        let both = combined_with(g, &f, 1, Reduction::Combined).unwrap();
         if both.graph.n() > coral.graph.n() || both.graph.n() > pru.graph.n() {
             return Err(format!(
                 "{}: combined kept {} vs coral {} / prunit {}",
@@ -76,7 +81,7 @@ fn coordinator_batch_end_to_end() {
     let jobs: Vec<Job> = (0..recipe.instances)
         .map(|i| Job::degree_superlevel(i as u64, recipe.make(7, i), JobSpec::default()))
         .collect();
-    let expected: Vec<_> = jobs.iter().map(|j| Coordinator::execute(j, 0)).collect();
+    let expected: Vec<_> = jobs.iter().map(|j| Coordinator::execute(j, 0).unwrap()).collect();
     let coord = Coordinator::new(CoordinatorConfig {
         workers: 4,
         queue_depth: 2,
@@ -91,7 +96,7 @@ fn coordinator_batch_end_to_end() {
         for k in 0..a.diagrams.len() {
             assert!(a.diagrams[k].same_as(&b.diagrams[k], 1e-12));
         }
-        assert_eq!(a.reduction.graph.n(), b.reduction.graph.n());
+        assert_eq!(a.reduction.vertices_after, b.reduction.vertices_after);
     }
     assert_eq!(coord.metrics().completed() as usize, got.len());
     assert!(coord.metrics().vertex_reduction_pct() > 0.0);
@@ -117,7 +122,7 @@ fn xla_dense_path_equivalent_to_sparse() {
         }
         let f = Filtration::degree_superlevel(g);
         let dense = prunit_dense(&rt, g, &f).map_err(|e| e.to_string())?;
-        let sparse = coral_prunit::prune::prunit(g, &f);
+        let sparse = coral_prunit::prune::prunit(g, &f).unwrap();
         if dense.graph.n() != sparse.graph.n() {
             return Err(format!(
                 "{}: dense kept {} vs sparse {}",
@@ -213,7 +218,7 @@ fn ego_network_pd0_with_prunit() {
         let (ego, _) = g.induced_on(&verts);
         let f = Filtration::degree_superlevel(&ego);
         let base = pd0(&ego, &f);
-        let r = coral_prunit::prune::prunit(&ego, &f);
+        let r = coral_prunit::prune::prunit(&ego, &f).unwrap();
         let red = pd0(&r.graph, &r.filtration);
         assert!(
             base.same_as(&red, 1e-9),

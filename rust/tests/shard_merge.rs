@@ -30,7 +30,7 @@ fn empty_graph_all_paths_empty() {
     let shard = persistence_diagrams_sharded(&g, &f, 2, 4);
     assert_same(&mono, &shard);
     assert!(shard.iter().all(|d| d.is_empty()));
-    let (pds, report) = pd_sharded(&g, &f, 2, Reduction::Combined, 4);
+    let (pds, report) = pd_sharded(&g, &f, 2, Reduction::Combined, 4).unwrap();
     assert_eq!(report.shard_count(), 0);
     assert!(pds.iter().all(|d| d.is_empty()));
 }
@@ -118,17 +118,22 @@ fn pd_sharded_agrees_with_monolithic_for_every_reduction() {
         Reduction::Coral,
         Reduction::Prunit,
         Reduction::Combined,
+        Reduction::FixedPoint,
     ] {
-        let (mono, _) = pd_with_reduction(&g, &f, 1, which);
-        let (shard, report) = pd_sharded(&g, &f, 1, which, 2);
+        let (mono, mono_report) = pd_with_reduction(&g, &f, 1, which).unwrap();
+        let (shard, report) = pd_sharded(&g, &f, 1, which, 2).unwrap();
         assert_same(&mono, &shard);
-        assert_eq!(report.shard_count(), report.graph.components());
+        // shard census covers the reduced residue exactly, and matches
+        // the component count of the monolithically-compacted graph
+        assert_eq!(report.vertices_after, mono_report.vertices_after);
         assert_eq!(
             report.shard_sizes.iter().sum::<usize>(),
-            report.graph.n(),
+            report.vertices_after,
             "{}: shard census must cover the reduced graph",
             which.name()
         );
+        let mono_red = coral_prunit::reduce::combined_with(&g, &f, 1, which).unwrap();
+        assert_eq!(report.shard_count(), mono_red.graph.components());
     }
 }
 
@@ -148,8 +153,8 @@ fn coral_shatters_then_shards_exactly() {
     }
     let g = disjoint_union(&parts);
     let f = Filtration::degree_superlevel(&g);
-    let (mono, _) = pd_with_reduction(&g, &f, 1, Reduction::Coral);
-    let (shard, report) = pd_sharded(&g, &f, 1, Reduction::Coral, 2);
+    let (mono, _) = pd_with_reduction(&g, &f, 1, Reduction::Coral).unwrap();
+    let (shard, report) = pd_sharded(&g, &f, 1, Reduction::Coral, 2).unwrap();
     assert_eq!(report.shard_count(), 4, "2-core = the four bare cycles");
     assert!(report.largest_shard() <= 9);
     assert_same(&mono, &shard);

@@ -69,14 +69,20 @@ fn sharded_reduction_pipeline_equals_monolithic() {
     forall("pd-sharded-vs-pipeline", 25, 0x5AAE, |rng| {
         let (g, desc) = multi_component_graph(rng);
         let f = Filtration::degree_superlevel(&g);
-        for which in [Reduction::None, Reduction::Prunit, Reduction::Combined] {
-            let (mono, _) = pd_with_reduction(&g, &f, 1, which);
-            let (sharded, report) = pd_sharded(&g, &f, 1, which, 2);
+        for which in [
+            Reduction::None,
+            Reduction::Prunit,
+            Reduction::Combined,
+            Reduction::FixedPoint,
+        ] {
+            let (mono, _) = pd_with_reduction(&g, &f, 1, which).map_err(|e| e.to_string())?;
+            let (sharded, report) = pd_sharded(&g, &f, 1, which, 2).map_err(|e| e.to_string())?;
             for k in 0..=1 {
-                // For Combined/Coral only PD_k (k=1) is guaranteed; for
-                // None/Prunit both dimensions must match. Either way the
-                // sharded result must equal the monolithic result on the
-                // SAME reduced graph — sharding itself is always exact.
+                // For Combined/Coral/FixedPoint only PD_k (k=1) is
+                // guaranteed; for None/Prunit both dimensions must match.
+                // Either way the sharded result must equal the monolithic
+                // result on the SAME reduced graph — sharding itself is
+                // always exact.
                 if !mono[k].same_as(&sharded[k], 1e-12) {
                     return Err(format!(
                         "{desc} via {}: PD_{k} mismatch: {} vs {}",
@@ -86,12 +92,12 @@ fn sharded_reduction_pipeline_equals_monolithic() {
                     ));
                 }
             }
-            if report.shard_count() != report.graph.components() {
+            let census: usize = report.shard_sizes.iter().sum();
+            if census != report.vertices_after {
                 return Err(format!(
-                    "{desc} via {}: shard count {} != components {}",
+                    "{desc} via {}: shard census {census} != residue order {}",
                     which.name(),
-                    report.shard_count(),
-                    report.graph.components()
+                    report.vertices_after
                 ));
             }
         }

@@ -6,7 +6,7 @@ use coral_prunit::complex::Filtration;
 use coral_prunit::graph::gen;
 use coral_prunit::homology::persistence_diagrams;
 use coral_prunit::kcore::{degeneracy, kcore_subgraph};
-use coral_prunit::reduce::coral_reduce;
+use coral_prunit::reduce::{coral_reduce, Reduction};
 use coral_prunit::testutil::{forall, random_filtration, random_graph_case};
 
 /// The theorem, quantified over random graphs, filtrations, and k.
@@ -19,7 +19,7 @@ fn theorem2_pd_equality_above_k() {
         let max_j = 2usize;
         let before = persistence_diagrams(g, &f, max_j);
         for k in 1..=max_j {
-            let r = coral_reduce(g, &f, k);
+            let r = coral_reduce(g, &f, k).unwrap();
             let after = persistence_diagrams(&r.graph, &r.filtration, max_j);
             for j in k..=max_j {
                 if !before[j].same_as(&after[j], 1e-9) {
@@ -45,7 +45,7 @@ fn below_k_equality_fails_as_expected() {
     // star: 2-core is empty; PD_0 is decidedly nonempty.
     let g = gen::star(6);
     let f = Filtration::degree(&g);
-    let r = coral_reduce(&g, &f, 1);
+    let r = coral_reduce(&g, &f, 1).unwrap();
     assert_eq!(r.graph.n(), 0);
     let before = persistence_diagrams(&g, &f, 1);
     assert!(before[0].betti() > 0);
@@ -65,7 +65,7 @@ fn theorem2_on_deterministic_families() {
         let f = Filtration::degree(&g);
         let before = persistence_diagrams(&g, &f, 2);
         for k in 1..=2 {
-            let r = coral_reduce(&g, &f, k);
+            let r = coral_reduce(&g, &f, k).unwrap();
             let after = persistence_diagrams(&r.graph, &r.filtration, 2);
             for j in k..=2 {
                 assert!(
@@ -90,11 +90,62 @@ fn theorem2_superlevel() {
         let g = &case.graph;
         let f = Filtration::degree_superlevel(g);
         let before = persistence_diagrams(g, &f, 2);
-        let r = coral_reduce(g, &f, 1);
+        let r = coral_reduce(g, &f, 1).unwrap();
         let after = persistence_diagrams(&r.graph, &r.filtration, 2);
         for j in 1..=2 {
             if !before[j].same_as(&after[j], 1e-9) {
                 return Err(format!("{}: PD_{j} {} vs {}", case.desc, before[j], after[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Theorem 2 extended to the PrunIT⇄core alternation
+/// (`Reduction::FixedPoint`): every core stage preserves `PD_j` for
+/// `j ≥ k` and every PrunIT stage preserves all diagrams, so the full
+/// alternation keeps `PD_j` for `j ≥ k` — quantified over random graphs,
+/// random filtrations, and k, like the single-core statement above. Also
+/// checks the residue really is inside the (k+1)-core (min degree) and
+/// that the alternation never does worse than one coral pass.
+#[test]
+fn theorem2_alternation_pd_equality_above_k() {
+    forall("coral-alternation", 40, 0xC07A2, |rng| {
+        let case = random_graph_case(rng, 22);
+        let g = &case.graph;
+        let f = random_filtration(rng, g);
+        let max_j = 2usize;
+        let before = persistence_diagrams(g, &f, max_j);
+        for k in 1..=max_j {
+            let red = coral_prunit::reduce::combined_with(g, &f, k, Reduction::FixedPoint)
+                .map_err(|e| e.to_string())?;
+            let coral = coral_reduce(g, &f, k).unwrap();
+            if red.graph.n() > coral.graph.n() {
+                return Err(format!(
+                    "{}: alternation kept {} > single core {}",
+                    case.desc,
+                    red.graph.n(),
+                    coral.graph.n()
+                ));
+            }
+            for u in 0..red.graph.n() as u32 {
+                if red.graph.degree(u) < k + 1 {
+                    return Err(format!(
+                        "{}: residue vertex {u} has degree {} < {}",
+                        case.desc,
+                        red.graph.degree(u),
+                        k + 1
+                    ));
+                }
+            }
+            let after = persistence_diagrams(&red.graph, &red.filtration, max_j);
+            for j in k..=max_j {
+                if !before[j].same_as(&after[j], 1e-9) {
+                    return Err(format!(
+                        "{}: PD_{j} differs after alternation at k={k}: {} vs {}",
+                        case.desc, before[j], after[j]
+                    ));
+                }
             }
         }
         Ok(())
@@ -143,7 +194,7 @@ fn coral_reduction_monotone_in_k() {
         let f = Filtration::degree(g);
         let mut prev = usize::MAX;
         for k in 0..5 {
-            let r = coral_reduce(g, &f, k);
+            let r = coral_reduce(g, &f, k).unwrap();
             if r.graph.n() > prev {
                 return Err(format!("{}: core sizes not nested at k={k}", case.desc));
             }
