@@ -6,10 +6,15 @@
 //! original CSR with a single compaction.
 //!
 //! Workloads: ER(20000, 5/n) and BA(20000, 3) (pass `--quick` for a
-//! 2000-vertex CI profile), reductions Combined and FixedPoint. Emits
-//! the wall-time table plus machine-readable `BENCH_planner.json`
-//! (graph, stage, wall seconds, vertices removed per round) for the
-//! cross-PR perf trajectory.
+//! 2000-vertex CI profile), reductions Combined and FixedPoint, plus a
+//! **PrunIT thread sweep**: the frontier check phase at 1/2/4/8 threads
+//! (or the single count given by `--prune-threads T` — CI runs a 1-vs-4
+//! matrix and uploads one artifact per setting). Residues are asserted
+//! bit-identical across the sweep before anything is timed. Emits the
+//! wall-time table plus machine-readable `BENCH_planner.json` (graph,
+//! stage, wall seconds, vertices removed per round) for the cross-PR
+//! perf trajectory; sweep rows carry stage `prunit` and pipeline
+//! `in-place-t{T}`.
 
 use coral_prunit::bench::json::{write_records, JsonRecord};
 use coral_prunit::bench::{bench_auto, sink};
@@ -20,8 +25,37 @@ use coral_prunit::reduce::{
 };
 use coral_prunit::util::Table;
 
+/// Median of the prunit-stage seconds over `runs` fresh plans.
+fn prunit_stage_median(
+    ws: &mut ReductionWorkspace,
+    g: &coral_prunit::graph::Graph,
+    f: &Filtration,
+    runs: usize,
+) -> f64 {
+    let mut samples: Vec<f64> = (0..runs)
+        .map(|_| {
+            let r = combined_with_ws(ws, g, f, 1, Reduction::Prunit).unwrap();
+            sink(r.graph.n());
+            r.report.prunit_secs
+        })
+        .collect();
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2]
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let fixed_threads: Option<usize> = argv.iter().position(|a| a == "--prune-threads").map(|i| {
+        argv.get(i + 1)
+            .expect("--prune-threads: missing value")
+            .parse()
+            .expect("--prune-threads: expected integer")
+    });
+    let sweep: Vec<usize> = match fixed_threads {
+        Some(t) => vec![t],
+        None => vec![1, 2, 4, 8],
+    };
     let n: usize = if quick { 2_000 } else { 20_000 };
     let graphs = [
         (
@@ -82,6 +116,46 @@ fn main() {
                     vertices_after: red.graph.n(),
                 });
             }
+        }
+
+        // PrunIT frontier thread sweep: identical residue, stage wall time
+        // per configured thread count.
+        let mut seq_ws = ReductionWorkspace::with_prune_threads(1);
+        let reference = combined_with_ws(&mut seq_ws, g, &f, 1, Reduction::Prunit).unwrap();
+        let removed_per_round: Vec<usize> = reference
+            .report
+            .rounds
+            .iter()
+            .map(|r| r.prunit_removed + r.core_removed)
+            .collect();
+        for &threads in &sweep {
+            let mut tws = ReductionWorkspace::with_prune_threads(threads);
+            let check = combined_with_ws(&mut tws, g, &f, 1, Reduction::Prunit).unwrap();
+            assert_eq!(
+                check.graph, reference.graph,
+                "prunit residue must be bit-identical at {threads} threads"
+            );
+            assert_eq!(check.kept_old_ids, reference.kept_old_ids);
+            let runs = if quick { 7 } else { 9 };
+            let median = prunit_stage_median(&mut tws, g, &f, runs);
+            t.row(&[
+                label.clone(),
+                "prunit".into(),
+                format!("in-place-t{threads}"),
+                reference.graph.n().to_string(),
+                reference.report.prunit_rounds.to_string(),
+                format!("{:.3}ms", median * 1e3),
+            ]);
+            records.push(JsonRecord {
+                bench: "planner_scaling".into(),
+                graph: label.clone(),
+                pipeline: format!("in-place-t{threads}"),
+                reduction: "prunit".into(),
+                stage: "prunit".into(),
+                wall_secs: median,
+                removed_per_round: removed_per_round.clone(),
+                vertices_after: reference.graph.n(),
+            });
         }
     }
     t.emit(Some("bench_results.tsv"));

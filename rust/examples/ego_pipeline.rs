@@ -32,6 +32,7 @@ fn main() {
         max_k: 0,
         reduction: "prunit".into(),
         seed: 42,
+        prune_threads: 1,
     };
     let coordinator = Coordinator::new(cfg.clone());
 

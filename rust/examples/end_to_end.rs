@@ -36,6 +36,7 @@ fn main() {
         max_k: 1,
         reduction: "prunit+coral".into(),
         seed: 42,
+        prune_threads: 1,
     };
 
     let run = |reduction: Reduction| {

@@ -9,7 +9,9 @@ use crate::coordinator::{Coordinator, Job, JobSpec};
 use crate::datasets;
 use crate::error::{Error, Result};
 use crate::homology::{legacy, persistence_diagrams, Algorithm};
-use crate::reduce::{combined_with, pd_sharded, pd_with_reduction, Reduction};
+use crate::reduce::{
+    combined_with_ws, pd_sharded_with, pd_with_reduction_ws, Reduction, ReductionWorkspace,
+};
 use crate::runtime::XlaRuntime;
 use crate::util::Table;
 
@@ -93,16 +95,21 @@ COMMANDS:
   reduce   --dataset NAME      reduction stats for a dataset
            [--k K] [--seed S]
            [--reduction none|coral|prunit|combined|fixed-point]
+           [--prune-threads T]       parallel PrunIT frontier checks
+                                     (bit-identical at any T; default 1)
   pd       --dataset NAME      persistence diagrams of instance 0
            [--k K] [--seed S] [--instance I]
            [--reduction none|coral|prunit|combined|fixed-point]
                                      fixed-point alternates PrunIT and the
                                      (k+1)-core on the in-place planner
+           [--prune-threads T]       parallel PrunIT frontier checks
            [--shard] [--workers W]   component-sharded parallel PH
            [--engine flat|legacy]    columnar engine (default) or the
                                      AoS reference engine (cross-check)
   batch    --dataset NAME      run the batch coordinator over all instances
            [--config FILE] [--workers W] [--k K] [--seed S]
+           [--prune-threads T]       per-job PrunIT threads (default 1:
+                                     the worker pool owns the cores)
   dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
            [--seed S]          (needs the `xla` build feature + artifacts)
   help                         this text
@@ -177,16 +184,17 @@ fn cmd_reduce(args: &Args) -> Result<i32> {
     let recipe = dataset_flag(args)?;
     let k = args.flag_usize("k", 1)?;
     let seed = args.flag_u64("seed", 42)?;
+    let prune_threads = args.flag_usize("prune-threads", 1)?;
     let which = parse_reduction(args.flag("reduction").unwrap_or("combined"))?;
     let mut t = Table::new(
         &format!("{} reduction on {} (k={k})", which.name(), recipe.name),
         &["instance", "|V|", "|V'|", "V-red", "|E|", "|E'|", "E-red", "rounds", "secs"],
     );
-    let mut ws = crate::reduce::ReductionWorkspace::new();
+    let mut ws = ReductionWorkspace::with_prune_threads(prune_threads);
     for i in 0..recipe.instances {
         let g = recipe.make(seed, i);
         let f = Filtration::degree_superlevel(&g);
-        let r = crate::reduce::combined_with_ws(&mut ws, &g, &f, k, which)?;
+        let r = combined_with_ws(&mut ws, &g, &f, k, which)?;
         t.row(&[
             i.to_string(),
             r.report.vertices_before.to_string(),
@@ -225,6 +233,7 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         .map(|c| c.get())
         .unwrap_or(2);
     let workers = args.flag_usize("workers", default_workers)?;
+    let prune_threads = args.flag_usize("prune-threads", 1)?;
     let g = recipe.make(seed, idx);
     let f = Filtration::degree_superlevel(&g);
     println!(
@@ -233,8 +242,9 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         g.n(),
         g.m()
     );
+    let mut rws = ReductionWorkspace::with_prune_threads(prune_threads);
     let pds = if engine == "legacy" {
-        let red = combined_with(&g, &f, k, which)?;
+        let red = combined_with_ws(&mut rws, &g, &f, k, which)?;
         let c = CliqueComplex::build(&red.graph, &red.filtration, k + 1);
         let pds = legacy::diagrams_of_complex(&c, k, Algorithm::Twist)?;
         println!(
@@ -246,7 +256,7 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         );
         pds
     } else if shard {
-        let (pds, report) = pd_sharded(&g, &f, k, which, workers)?;
+        let (pds, report) = pd_sharded_with(&mut rws, &g, &f, k, which, workers)?;
         println!(
             "sharded: reduction={} {}->{} vertices in {} round(s), {} shards (largest {}), {workers} workers",
             report.which.name(),
@@ -258,15 +268,16 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         );
         pds
     } else if which != Reduction::None {
-        let (pds, report) = pd_with_reduction(&g, &f, k, which)?;
+        let (pds, report) = pd_with_reduction_ws(&mut rws, &g, &f, k, which)?;
         println!(
-            "reduced: {} {}->{} vertices ({:.1}%) in {} round(s) \
-             [prunit {:.4}s, core {:.4}s, compact {:.4}s]",
+            "reduced: {} {}->{} vertices ({:.1}%) in {} round(s), {} frontier round(s) \
+             [prunit {:.4}s x{prune_threads}t, core {:.4}s, compact {:.4}s]",
             report.which.name(),
             report.vertices_before,
             report.vertices_after,
             report.vertex_reduction_pct(),
             report.rounds_run(),
+            report.prunit_rounds,
             report.prunit_secs,
             report.core_secs,
             report.compact_secs,
@@ -294,6 +305,7 @@ fn cmd_batch(args: &Args) -> Result<i32> {
             .map_err(|_| Error::Parse(format!("--workers: {w:?}")))?;
     }
     cfg.max_k = args.flag_usize("k", cfg.max_k)?;
+    cfg.prune_threads = args.flag_usize("prune-threads", cfg.prune_threads)?;
     let reduction = parse_reduction(&cfg.reduction.clone())?;
     let coordinator = Coordinator::new(cfg.clone());
     let jobs: Vec<Job> = (0..recipe.instances)
@@ -312,14 +324,16 @@ fn cmd_batch(args: &Args) -> Result<i32> {
     let results = coordinator.run(jobs)?;
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "{}: {} jobs in {:.3}s ({:.1} jobs/s, {} workers)",
+        "{}: {} jobs in {:.3}s ({:.1} jobs/s, {} workers, {} prune thread(s)/job)",
         recipe.name,
         results.len(),
         secs,
         results.len() as f64 / secs.max(1e-12),
-        cfg.workers
+        cfg.workers,
+        cfg.prune_threads.max(1),
     );
     println!("{}", coordinator.metrics().summary());
+    println!("{}", coordinator.scratch_pool().summary());
     Ok(0)
 }
 
@@ -446,6 +460,23 @@ mod tests {
                 .unwrap(),
             0
         );
+    }
+
+    #[test]
+    fn pd_prune_threads_flag_runs() {
+        assert_eq!(
+            run(&argv(
+                "pd --dataset DHFR --reduction combined --prune-threads 4 --k 1"
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv("reduce --dataset DHFR --prune-threads 2 --k 1")).unwrap(),
+            0
+        );
+        // non-integer thread counts are a parse error
+        assert!(run(&argv("pd --dataset DHFR --prune-threads lots")).is_err());
     }
 
     #[test]

@@ -142,6 +142,11 @@ pub struct CoordinatorConfig {
     pub max_k: usize,
     pub reduction: String,
     pub seed: u64,
+    /// PrunIT frontier check-phase threads per job (`--prune-threads`).
+    /// Results are bit-identical at every setting; 1 disables fan-out.
+    /// Inner parallelism multiplies with `workers`, so the default keeps
+    /// jobs single-threaded and lets the pool own the cores.
+    pub prune_threads: usize,
 }
 
 impl CoordinatorConfig {
@@ -155,6 +160,7 @@ impl CoordinatorConfig {
             max_k: cfg.get_usize("coordinator.max_k", 1)?,
             reduction: cfg.get_str("coordinator.reduction", "prunit+coral"),
             seed: cfg.get_u64("coordinator.seed", 42)?,
+            prune_threads: cfg.get_usize("coordinator.prune_threads", 1)?,
         })
     }
 }
@@ -209,7 +215,7 @@ mod tests {
     #[test]
     fn coordinator_config_from_toml() {
         let cfg = Config::parse(
-            "[coordinator]\nworkers = 3\nqueue_depth = 16\nmax_k = 2\nseed = 9\n",
+            "[coordinator]\nworkers = 3\nqueue_depth = 16\nmax_k = 2\nseed = 9\nprune_threads = 4\n",
         )
         .unwrap();
         let cc = CoordinatorConfig::from_config(&cfg).unwrap();
@@ -218,5 +224,12 @@ mod tests {
         assert_eq!(cc.max_k, 2);
         assert_eq!(cc.seed, 9);
         assert_eq!(cc.reduction, "prunit+coral");
+        assert_eq!(cc.prune_threads, 4);
+    }
+
+    #[test]
+    fn prune_threads_defaults_to_sequential() {
+        let cc = CoordinatorConfig::default();
+        assert_eq!(cc.prune_threads, 1);
     }
 }

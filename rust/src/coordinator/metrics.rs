@@ -33,6 +33,11 @@ impl Metrics {
         self.jobs_completed.load(Ordering::Relaxed)
     }
 
+    /// Jobs whose execution returned an error (also on the summary line).
+    pub fn failed(&self) -> u64 {
+        self.jobs_failed.load(Ordering::Relaxed)
+    }
+
     /// Aggregate vertex reduction across the batch, percent.
     pub fn vertex_reduction_pct(&self) -> f64 {
         let vin = self.vertices_in.load(Ordering::Relaxed) as f64;
@@ -70,6 +75,15 @@ mod tests {
         assert_eq!(m.vertices_in.load(Ordering::Relaxed), 200);
         assert!((m.vertex_reduction_pct() - 50.0).abs() < 1e-9);
         assert!(m.summary().contains("jobs=2"));
+    }
+
+    #[test]
+    fn summary_reports_failures() {
+        let m = Metrics::default();
+        m.record(0.1, 0.1, 10, 5, 20, 9);
+        m.jobs_failed.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(m.failed(), 3);
+        assert!(m.summary().contains("failed=3"), "{}", m.summary());
     }
 
     #[test]

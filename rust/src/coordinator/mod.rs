@@ -3,16 +3,30 @@
 //! diagrams for *each vertex's* ego network in a 100k+ graph") is exactly
 //! a large batch of small independent PH jobs.
 //!
-//! std-only implementation (tokio is not in the offline registry): a
-//! bounded `sync_channel` job queue provides backpressure against the
-//! producer, a `Mutex<Receiver>` fans jobs out to `workers` OS threads,
-//! and results stream back over an unbounded channel. Metrics are atomic
-//! counters suitable for live scraping.
+//! Three layers, three modules:
+//!
+//! * [`scheduler`] — queueing and result streaming: a bounded
+//!   `sync_channel` job queue provides backpressure against the producer,
+//!   a `Mutex<Receiver>` fans jobs out to `workers` OS threads, and
+//!   results stream back over an unbounded channel (std-only; tokio is
+//!   not in the offline registry).
+//! * [`worker`] — pure job execution: one [`Job`] in, one [`JobResult`]
+//!   out, all allocation through a [`WorkerScratch`].
+//! * [`scratch`] — the size-tiered [`ScratchPool`]: scratches are
+//!   bucketed by graph-order tier and checked out per job, so a
+//!   100-vertex job never inherits (and re-initialises) the arenas a
+//!   multi-million-vertex job grew.
+//!
+//! Metrics are atomic counters suitable for live scraping.
 
 pub mod job;
 pub mod metrics;
-pub mod pool;
+pub mod scheduler;
+pub mod scratch;
+pub mod worker;
 
 pub use job::{Job, JobResult, JobSpec};
 pub use metrics::Metrics;
-pub use pool::{Coordinator, WorkerScratch};
+pub use scheduler::Coordinator;
+pub use scratch::{PooledScratch, ScratchPool};
+pub use worker::WorkerScratch;

@@ -1,45 +1,36 @@
-//! Worker pool: bounded job queue (backpressure) + result stream.
+//! The batch scheduler: bounded job queue (backpressure) + result
+//! stream. Job execution lives in [`super::worker`], scratch reuse in
+//! [`super::scratch`] — this module only moves jobs and results.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 
-use crate::complex::ComplexWorkspace;
 use crate::config::CoordinatorConfig;
 use crate::error::{Error, Result};
-use crate::homology::persistence_diagrams_with;
-use crate::reduce::{combined_with_ws, ReductionWorkspace};
-use crate::util::Timer;
 
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
+use super::scratch::ScratchPool;
+use super::worker::{execute_job, WorkerScratch};
 
-/// Per-worker reusable state: complex arenas for PH plus the zero-copy
-/// reduction planner's masks/degree arrays. One of each per thread —
-/// every job the thread picks up plans and builds into the same buffers.
-#[derive(Default)]
-pub struct WorkerScratch {
-    pub complex: ComplexWorkspace,
-    pub reduce: ReductionWorkspace,
-}
-
-impl WorkerScratch {
-    pub fn new() -> WorkerScratch {
-        WorkerScratch::default()
-    }
-}
-
-/// The batch coordinator: owns config + metrics; `run` executes a batch.
+/// The batch coordinator: owns config, metrics, and the size-tiered
+/// scratch pool; `run` executes a batch.
 pub struct Coordinator {
     config: CoordinatorConfig,
     metrics: Arc<Metrics>,
+    scratch: Arc<ScratchPool>,
 }
 
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Coordinator {
+        // every worker can hold one scratch per tier in flight, so the
+        // pool never needs to cache more than `workers` per tier
+        let scratch = Arc::new(ScratchPool::new(config.workers.max(1)));
         Coordinator {
             config,
             metrics: Arc::new(Metrics::default()),
+            scratch,
         }
     }
 
@@ -51,60 +42,40 @@ impl Coordinator {
         Arc::clone(&self.metrics)
     }
 
+    /// The shared scratch pool (stats: hits/misses/cached).
+    pub fn scratch_pool(&self) -> Arc<ScratchPool> {
+        Arc::clone(&self.scratch)
+    }
+
     /// Execute one job inline (public for testing and for single-threaded
-    /// callers). Allocates fresh scratch; the pool's worker threads go
-    /// through [`Coordinator::execute_with`] instead.
+    /// callers). Allocates fresh scratch; the pool's worker threads check
+    /// tiered scratch out of [`Coordinator::scratch_pool`] instead.
     pub fn execute(job: &Job, worker: usize) -> Result<JobResult> {
         Coordinator::execute_with(&mut WorkerScratch::new(), job, worker)
     }
 
-    /// The worker body: execute one job, planning the reduction and
-    /// building the complex in the caller's reusable scratch (one per
-    /// worker thread — amortises both the planner's mask/degree arrays
-    /// and the complex arenas across every job the thread picks up).
-    ///
-    /// A filtration/graph mismatch surfaces as a typed error instead of
-    /// the pre-planner panic.
+    /// Execute one job into a caller-held scratch — see
+    /// [`super::worker::execute_job`].
     pub fn execute_with(
         scratch: &mut WorkerScratch,
         job: &Job,
         worker: usize,
     ) -> Result<JobResult> {
-        let total = Timer::start();
-        let red = combined_with_ws(
-            &mut scratch.reduce,
-            &job.graph,
-            &job.filtration,
-            job.spec.max_k,
-            job.spec.reduction,
-        )?;
-        let (diagrams, ph_secs) = Timer::time(|| {
-            persistence_diagrams_with(
-                &mut scratch.complex,
-                &red.graph,
-                &red.filtration,
-                job.spec.max_k,
-            )
-        });
-        Ok(JobResult {
-            id: job.id,
-            diagrams,
-            reduction: red.report,
-            ph_secs,
-            total_secs: total.elapsed().as_secs_f64(),
-            worker,
-        })
+        execute_job(scratch, job, worker)
     }
 
     /// Run a batch of jobs from an iterator, streaming results to `sink`
     /// as they complete (out of order). The job queue is bounded at
     /// `queue_depth`, so a slow pool backpressures the producer iterator.
+    /// Each worker checks a size-tiered scratch out of the shared pool
+    /// per job and configures it with the scheduler's `prune_threads`.
     pub fn run_streaming<I, F>(&self, jobs: I, mut sink: F) -> Result<usize>
     where
         I: Iterator<Item = Job>,
         F: FnMut(JobResult),
     {
         let workers = self.config.workers.max(1);
+        let prune_threads = self.config.prune_threads.max(1);
         let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) =
             sync_channel(self.config.queue_depth.max(1));
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -115,32 +86,33 @@ impl Coordinator {
                 let job_rx = Arc::clone(&job_rx);
                 let res_tx = res_tx.clone();
                 let metrics = Arc::clone(&self.metrics);
-                std::thread::spawn(move || {
-                    let mut scratch = WorkerScratch::new();
-                    loop {
-                        let job = {
-                            let guard = job_rx.lock().expect("job queue poisoned");
-                            guard.recv()
-                        };
-                        let Ok(job) = job else { break };
-                        let (v_in, e_in) = (job.graph.n(), job.graph.m());
-                        let result = Coordinator::execute_with(&mut scratch, &job, w);
-                        match &result {
-                            Ok(r) => metrics.record(
-                                r.reduction.reduce_secs,
-                                r.ph_secs,
-                                v_in,
-                                r.reduction.vertices_after,
-                                e_in,
-                                r.reduction.edges_after,
-                            ),
-                            Err(_) => {
-                                metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                            }
+                let pool = Arc::clone(&self.scratch);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = job_rx.lock().expect("job queue poisoned");
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    let (v_in, e_in) = (job.graph.n(), job.graph.m());
+                    let mut scratch = pool.checkout(job.graph.n());
+                    scratch.reduce.set_prune_threads(prune_threads);
+                    let result = execute_job(&mut scratch, &job, w);
+                    drop(scratch); // back to its tier
+                    match &result {
+                        Ok(r) => metrics.record(
+                            r.reduction.reduce_secs,
+                            r.ph_secs,
+                            v_in,
+                            r.reduction.vertices_after,
+                            e_in,
+                            r.reduction.edges_after,
+                        ),
+                        Err(_) => {
+                            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                         }
-                        if res_tx.send(result).is_err() {
-                            break;
-                        }
+                    }
+                    if res_tx.send(result).is_err() {
+                        break;
                     }
                 })
             })
@@ -211,6 +183,7 @@ mod tests {
             max_k: 1,
             reduction: "prunit+coral".into(),
             seed: 1,
+            prune_threads: 1,
         }
     }
 
@@ -263,6 +236,37 @@ mod tests {
     }
 
     #[test]
+    fn scratch_pool_reuses_across_a_batch() {
+        // 20 same-tier jobs on 3 workers: at most `workers` fresh
+        // allocations in that tier, everything else a cache hit
+        let c = Coordinator::new(cfg(3, 4));
+        c.run(jobs(20)).unwrap();
+        let pool = c.scratch_pool();
+        assert_eq!(pool.hits() + pool.misses(), 20);
+        assert!(pool.misses() <= 3, "misses={}", pool.misses());
+        assert!(pool.cached() >= 1);
+    }
+
+    #[test]
+    fn parallel_prunit_config_matches_sequential_results() {
+        // the batch outcome is thread-count invariant by construction
+        let seq = Coordinator::new(cfg(2, 2));
+        let mut par_cfg = cfg(2, 2);
+        par_cfg.prune_threads = 4;
+        let par = Coordinator::new(par_cfg);
+        let a = seq.run(jobs(6)).unwrap();
+        let b = par.run(jobs(6)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.reduction.vertices_after, y.reduction.vertices_after);
+            assert_eq!(x.reduction.prunit_rounds, y.reduction.prunit_rounds);
+            for k in 0..x.diagrams.len() {
+                assert!(x.diagrams[k].same_as(&y.diagrams[k], 0.0));
+            }
+        }
+    }
+
+    #[test]
     fn reduction_spec_respected() {
         let c = Coordinator::new(cfg(2, 4));
         let g = gen::star(30);
@@ -310,7 +314,7 @@ mod tests {
             err,
             crate::error::Error::FiltrationMismatch { .. }
         ));
-        assert_eq!(c.metrics().jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics().failed(), 1);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Size-tiered scratch pool: reusable [`WorkerScratch`] arenas bucketed
+//! by graph-order tier.
+//!
+//! The batch workload mixes jobs of wildly different orders (ego networks
+//! of a hundred vertices next to multi-million-vertex networks). A
+//! per-thread scratch that once served a huge job keeps huge arrays; a
+//! small job checking it out then pays cache pollution and O(big-n)
+//! re-initialisation for an O(small-n) plan. Tiering fixes the mismatch:
+//! scratches live in buckets of geometrically growing order ranges
+//! (factor [`TIER_GROWTH`] between tiers, starting at
+//! [`TIER_BASE_ORDER`]), a job checks out from the tier matching its own
+//! order, and the guard returns the scratch to that same tier on drop —
+//! so arenas stay within a small constant factor of the jobs they serve.
+//!
+//! Each tier holds at most `max_per_tier` scratches (the scheduler sizes
+//! this to its worker count); surplus check-ins are dropped, bounding
+//! pool memory at `TIER_COUNT × max_per_tier` arena sets.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::worker::WorkerScratch;
+
+/// Number of size tiers. The last tier is unbounded above.
+pub const TIER_COUNT: usize = 8;
+
+/// Upper order bound of tier 0.
+pub const TIER_BASE_ORDER: usize = 256;
+
+/// Order growth factor between consecutive tiers.
+pub const TIER_GROWTH: usize = 4;
+
+/// Map a graph order to its pool tier: tier 0 covers orders up to
+/// [`TIER_BASE_ORDER`], each further tier covers [`TIER_GROWTH`]× more,
+/// and the last tier is unbounded.
+pub fn tier_of(order: usize) -> usize {
+    let mut tier = 0usize;
+    let mut cap = TIER_BASE_ORDER;
+    while tier + 1 < TIER_COUNT && order > cap {
+        tier += 1;
+        cap = cap.saturating_mul(TIER_GROWTH);
+    }
+    tier
+}
+
+/// A bounded, size-tiered pool of [`WorkerScratch`] shared by the
+/// scheduler's workers. All operations are lock-per-tier; tiers never
+/// block each other.
+#[derive(Debug)]
+pub struct ScratchPool {
+    tiers: Vec<Mutex<Vec<WorkerScratch>>>,
+    max_per_tier: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScratchPool {
+    /// A pool retaining at most `max_per_tier` scratches per tier
+    /// (clamped to ≥ 1).
+    pub fn new(max_per_tier: usize) -> ScratchPool {
+        ScratchPool {
+            tiers: (0..TIER_COUNT).map(|_| Mutex::new(Vec::new())).collect(),
+            max_per_tier: max_per_tier.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Check out a scratch sized for a graph of `order` vertices: reuse
+    /// one from the matching tier, or allocate fresh when the tier is
+    /// empty. The returned guard checks the scratch back in on drop.
+    pub fn checkout(&self, order: usize) -> PooledScratch<'_> {
+        let tier = tier_of(order);
+        let reused = self.tiers[tier]
+            .lock()
+            .expect("scratch tier poisoned")
+            .pop();
+        let scratch = match reused {
+            Some(s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                WorkerScratch::default()
+            }
+        };
+        PooledScratch {
+            pool: self,
+            tier,
+            scratch: Some(scratch),
+        }
+    }
+
+    fn check_in(&self, tier: usize, scratch: WorkerScratch) {
+        let mut bucket = self.tiers[tier].lock().expect("scratch tier poisoned");
+        if bucket.len() < self.max_per_tier {
+            bucket.push(scratch);
+        }
+        // else: drop the scratch — the pool is bounded per tier
+    }
+
+    /// Checkouts served from a tier's cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that had to allocate a fresh scratch.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Scratches currently cached across all tiers.
+    pub fn cached(&self) -> usize {
+        self.tiers
+            .iter()
+            .map(|t| t.lock().expect("scratch tier poisoned").len())
+            .sum()
+    }
+
+    /// One-line reuse summary for batch drivers.
+    pub fn summary(&self) -> String {
+        format!(
+            "scratch_pool: cached={} hits={} misses={}",
+            self.cached(),
+            self.hits(),
+            self.misses()
+        )
+    }
+}
+
+/// RAII checkout of one [`WorkerScratch`]: derefs to the scratch and
+/// returns it to its tier when dropped.
+pub struct PooledScratch<'a> {
+    pool: &'a ScratchPool,
+    tier: usize,
+    scratch: Option<WorkerScratch>,
+}
+
+impl PooledScratch<'_> {
+    /// The tier this scratch was checked out from (and returns to).
+    pub fn tier(&self) -> usize {
+        self.tier
+    }
+}
+
+impl Deref for PooledScratch<'_> {
+    type Target = WorkerScratch;
+
+    fn deref(&self) -> &WorkerScratch {
+        self.scratch.as_ref().expect("scratch present until drop")
+    }
+}
+
+impl DerefMut for PooledScratch<'_> {
+    fn deref_mut(&mut self) -> &mut WorkerScratch {
+        self.scratch.as_mut().expect("scratch present until drop")
+    }
+}
+
+impl Drop for PooledScratch<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.scratch.take() {
+            self.pool.check_in(self.tier, s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_boundaries_are_geometric() {
+        assert_eq!(tier_of(0), 0);
+        assert_eq!(tier_of(TIER_BASE_ORDER), 0);
+        assert_eq!(tier_of(TIER_BASE_ORDER + 1), 1);
+        assert_eq!(tier_of(TIER_BASE_ORDER * TIER_GROWTH), 1);
+        assert_eq!(tier_of(TIER_BASE_ORDER * TIER_GROWTH + 1), 2);
+        // far past the last boundary everything lands in the top tier
+        assert_eq!(tier_of(usize::MAX), TIER_COUNT - 1);
+    }
+
+    #[test]
+    fn checkout_reuses_within_a_tier_only() {
+        let pool = ScratchPool::new(4);
+        {
+            let _small = pool.checkout(100);
+            let _big = pool.checkout(2_000_000);
+        } // both returned
+        assert_eq!(pool.cached(), 2);
+        assert_eq!(pool.misses(), 2);
+        // a small job must NOT receive the big job's scratch
+        let small = pool.checkout(80);
+        assert_eq!(small.tier(), tier_of(80));
+        assert_eq!(pool.hits(), 1);
+        drop(small);
+        let big = pool.checkout(1_900_000);
+        assert_eq!(big.tier(), tier_of(1_900_000));
+        assert_ne!(big.tier(), tier_of(80));
+        assert_eq!(pool.hits(), 2);
+    }
+
+    #[test]
+    fn pool_is_bounded_per_tier() {
+        let pool = ScratchPool::new(2);
+        {
+            let a = pool.checkout(10);
+            let b = pool.checkout(10);
+            let c = pool.checkout(10);
+            drop(a);
+            drop(b);
+            drop(c); // third check-in of tier 0 is dropped
+        }
+        assert_eq!(pool.cached(), 2);
+        assert_eq!(pool.misses(), 3);
+    }
+
+    #[test]
+    fn scratch_state_survives_the_round_trip() {
+        let pool = ScratchPool::new(1);
+        {
+            let mut s = pool.checkout(50);
+            s.reduce.set_prune_threads(4);
+        }
+        let s = pool.checkout(50);
+        // configuration is per-checkout state: the scheduler re-applies
+        // its prune_threads on every checkout, so whatever persisted here
+        // is simply whatever the last user set
+        assert_eq!(s.reduce.prune_threads(), 4);
+        assert!(pool.summary().contains("hits=1"));
+    }
+}

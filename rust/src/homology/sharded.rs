@@ -12,9 +12,11 @@
 //! Cost: the monolithic boundary-matrix reduction is cubic in total
 //! simplices, `O((Σ nᵢ)³)`; sharding pays `Σ O(nᵢ³)` and the shards run
 //! in parallel on std threads — the same worker-pool shape as
-//! `coordinator::pool`, specialised to pre-materialised shards (an
+//! `coordinator::scheduler`, specialised to pre-materialised shards (an
 //! atomic work index replaces the bounded job queue because there is no
-//! producer to backpressure).
+//! producer to backpressure, and per-thread `ComplexWorkspace`s replace
+//! the size-tiered `coordinator::scratch` pool because every shard of
+//! one batch shares a fate — see that module for the mixed-size case).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -148,8 +150,10 @@ pub fn persistence_diagrams_sharded(
 /// workspace for the component labeling + shard emission (an identity
 /// plan: nothing is reduced, but the labeling buffers and per-shard CSR
 /// assembly run through the same in-place machinery as `pd_sharded`,
-/// one compaction per shard). Batch drivers hold one
-/// [`ReductionWorkspace`] per worker alongside the [`ComplexWorkspace`].
+/// one compaction per shard). Batch drivers check a
+/// `coordinator::WorkerScratch` (a [`ReductionWorkspace`] paired with a
+/// [`ComplexWorkspace`]) out of the coordinator's size-tiered scratch
+/// pool per job.
 ///
 /// Errors with `Error::FiltrationMismatch` (like every planner entry
 /// point) when `f` does not match `g`'s order.

@@ -80,6 +80,49 @@ impl HubBitset {
     }
 }
 
+/// Does alive `v` dominate alive `u` in the residue selected by `alive`,
+/// i.e. is `N[u] ∩ alive ⊆ N[v] ∩ alive`? The caller guarantees `u ~ v`
+/// in `g`, that both are alive, and (as a cheap pre-filter) that the
+/// residual degree of `u` does not exceed `v`'s.
+///
+/// This is the hybrid check shared by the sequential planner pass and the
+/// parallel frontier workers: low-degree dominator candidates walk both
+/// sorted adjacency lists; hubs (original degree ≥ [`HUB_DEGREE`]) load
+/// their neighbourhood into the caller's [`HubBitset`] once and answer
+/// each probe in `O(deg(u))`. Read-only on `g`/`alive`, so any number of
+/// workers can run it concurrently against the same residue, each with
+/// its own bitset.
+pub fn residue_dominates(g: &Graph, alive: &[bool], u: u32, v: u32, hub: &mut HubBitset) -> bool {
+    if g.degree(v) >= HUB_DEGREE {
+        hub.load(g, v);
+        for &x in g.neighbors(u) {
+            if x == v || !alive[x as usize] {
+                continue;
+            }
+            if !hub.contains(x) {
+                return false;
+            }
+        }
+        true
+    } else {
+        let nv = g.neighbors(v);
+        let mut j = 0usize;
+        for &x in g.neighbors(u) {
+            if x == v || !alive[x as usize] {
+                continue;
+            }
+            while j < nv.len() && nv[j] < x {
+                j += 1;
+            }
+            if j == nv.len() || nv[j] != x {
+                return false;
+            }
+            j += 1;
+        }
+        true
+    }
+}
+
 /// Does `v` dominate `u` in `g`? (Checked on immutable CSR.)
 pub fn dominates(g: &Graph, u: u32, v: u32) -> bool {
     if u == v || !g.has_edge(u, v) {
@@ -216,6 +259,46 @@ mod tests {
         for x in 0..h.n() as u32 {
             assert_eq!(bits.contains(x), h.has_edge(0, x));
         }
+    }
+
+    #[test]
+    fn residue_domination_matches_induced_subgraph() {
+        // killing vertices and re-checking on the mask must agree with
+        // materializing the induced residue and running the plain check
+        let g = gen::erdos_renyi(40, 0.25, 11);
+        let mut rng = crate::util::Rng::new(11);
+        let alive: Vec<bool> = (0..g.n()).map(|_| rng.chance(0.7)).collect();
+        let (h, ids) = g.induced(&alive);
+        let mut hub = HubBitset::new();
+        for (hu, &gu) in ids.iter().enumerate() {
+            for (hv, &gv) in ids.iter().enumerate() {
+                if hu == hv || !g.has_edge(gu, gv) {
+                    continue;
+                }
+                assert_eq!(
+                    residue_dominates(&g, &alive, gu, gv, &mut hub),
+                    dominates(&h, hu as u32, hv as u32),
+                    "residue pair ({gu},{gv})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residue_domination_hub_path_matches_merge_path() {
+        // a 150-leaf star forces the bitset branch for the hub dominator
+        let mut edges: Vec<(u32, u32)> = (1..=150).map(|v| (0u32, v)).collect();
+        edges.push((1, 2));
+        let g = Graph::from_edges(151, &edges);
+        assert!(g.degree(0) >= HUB_DEGREE);
+        let mut alive = vec![true; g.n()];
+        alive[3] = false;
+        let mut hub = HubBitset::new();
+        // every leaf is dominated by the hub in the residue
+        assert!(residue_dominates(&g, &alive, 5, 0, &mut hub));
+        assert!(residue_dominates(&g, &alive, 1, 0, &mut hub));
+        // the hub is not dominated by a leaf
+        assert!(!residue_dominates(&g, &alive, 0, 1, &mut hub));
     }
 
     #[test]

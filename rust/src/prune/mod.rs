@@ -4,6 +4,8 @@ pub mod domination;
 pub mod prunit;
 pub mod strong_collapse;
 
-pub use domination::{dominated_pairs_dense, dominates, find_dominator, HubBitset, HUB_DEGREE};
+pub use domination::{
+    dominated_pairs_dense, dominates, find_dominator, HubBitset, HUB_DEGREE, residue_dominates,
+};
 pub use prunit::{prunit, PruneResult};
 pub use strong_collapse::{strong_collapse_core, StrongCollapseStats};

@@ -1,15 +1,28 @@
 //! PrunIT (paper Algorithm 2 + Theorem 7): iteratively remove dominated
 //! vertices whose filtration value admits removal, to a fixed point.
 //!
-//! Soundness of sequential removal: domination is preserved under removal
-//! of *other* vertices (`N[u]\{w} ⊆ N[v]\{w}`), and the admissibility
-//! condition only references `f`, which never changes — so each removal
-//! is individually justified by Theorem 7 in the current graph, and the
-//! final graph has all the original persistence diagrams.
+//! The schedule is a **round-synchronous frontier sweep** (the strong-
+//! collapse formulation of Boissonnat–Pritam): each round checks every
+//! frontier vertex against the *round-start* residue, collects dominated
+//! candidates with their witness dominator, then resolves in ascending
+//! vertex order — a candidate is removed iff its witness is still alive
+//! ("lowest index dominated-by-alive wins"); candidates whose witness
+//! died this round are deferred to the next frontier for a re-check. The
+//! next frontier is the deferred set plus the alive former neighbours of
+//! everything removed.
 //!
-//! The worklist keeps the pass near-linear in practice: removing `u` can
-//! only create new dominations for pairs `(x, y)` whose violation witness
-//! was `u`, i.e. `x ∈ N(u)` — only former neighbours of `u` are re-queued.
+//! Soundness: domination of `u` by `v` survives the removal of any third
+//! vertex (`N[u]\{w} ⊆ N[v]\{w}`), and admissibility only references
+//! `f`, which never changes — so every removal in the resolution pass is
+//! individually justified by Theorem 7 in the graph state at its own
+//! moment, making the whole round a valid removal chain. Termination: a
+//! deferral requires a same-round witness death, so a round that removes
+//! nothing had no candidates at all and the frontier empties.
+//!
+//! The round-start snapshot makes the candidate checks of one round
+//! mutually independent — this is exactly what lets the planner
+//! (`reduce::planner`) partition the frontier across threads while
+//! staying bit-identical to this sequential reference.
 
 use crate::complex::Filtration;
 use crate::error::Result;
@@ -26,8 +39,22 @@ pub struct PruneResult {
     pub filtration: Filtration,
     /// Number of vertices removed.
     pub removed: usize,
-    /// Worklist pops — a proxy for work done (perf metric).
+    /// Frontier vertices checked — a proxy for work done (perf metric).
     pub checks: usize,
+    /// Frontier sweep rounds until the fixed point.
+    pub rounds: usize,
+}
+
+/// Everything `collapse_with` reports about one collapse to fixed point.
+pub(crate) struct CollapseOutcome {
+    /// Survivor mask over original vertex ids.
+    pub alive: Vec<bool>,
+    /// Vertices removed.
+    pub removed: usize,
+    /// Frontier vertices checked across all rounds.
+    pub checks: usize,
+    /// Frontier rounds executed.
+    pub rounds: usize,
 }
 
 /// Mutable adjacency view used during pruning.
@@ -68,7 +95,7 @@ impl View {
     }
 
     /// Remove vertex u, updating neighbour lists exactly. The removed
-    /// vertex's list is left in place so callers can re-queue its former
+    /// vertex's list is left in place so callers can walk its former
     /// neighbours.
     fn remove(&mut self, u: u32) {
         self.alive[u as usize] = false;
@@ -83,60 +110,95 @@ impl View {
     }
 }
 
-/// Core worklist collapse: remove vertices `u` that have a current-graph
-/// dominator `v` with `admissible(u, v)`, until a fixed point.
-/// Returns (alive mask, removed count, worklist pops).
-pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(
-    g: &Graph,
-    admissible: F,
-) -> (Vec<bool>, usize, usize) {
+/// Core round-synchronous collapse: remove vertices `u` that have a
+/// round-start dominator `v` with `admissible(u, v)`, resolving conflicts
+/// in ascending vertex order, until a fixed point.
+///
+/// Deterministic: the initial frontier is all vertices ascending, each
+/// round's candidate set is a pure function of the round-start residue,
+/// and resolution order is ascending — the exact schedule
+/// `reduce::planner::ReductionWorkspace` reproduces (at any thread
+/// count) on its tombstone masks.
+pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(g: &Graph, admissible: F) -> CollapseOutcome {
     let n = g.n();
     let mut view = View::new(g);
-    let mut in_queue = vec![true; n];
-    let mut queue: std::collections::VecDeque<u32> = (0..n as u32).collect();
+    let mut frontier: Vec<u32> = (0..n as u32).collect();
+    let mut next_frontier: Vec<u32> = Vec::new();
+    let mut in_next = vec![false; n];
+    let mut cands: Vec<(u32, u32)> = Vec::new();
     let mut removed = 0usize;
     let mut checks = 0usize;
+    let mut rounds = 0usize;
 
-    while let Some(u) = queue.pop_front() {
-        in_queue[u as usize] = false;
-        if !view.alive[u as usize] {
-            continue;
-        }
-        checks += 1;
-        let dominator = view.adj[u as usize]
-            .iter()
-            .copied()
-            .find(|&v| admissible(u, v) && view.dominates(u, v));
-        if dominator.is_some() {
-            view.remove(u);
-            removed += 1;
-            for &w in &view.adj[u as usize] {
-                if view.alive[w as usize] && !in_queue[w as usize] {
-                    in_queue[w as usize] = true;
-                    queue.push_back(w);
-                }
+    while !frontier.is_empty() {
+        rounds += 1;
+        // Check phase: every alive frontier vertex against the round-start
+        // residue. The witness is the first admissible dominator in
+        // ascending (sorted alive-neighbour) order.
+        cands.clear();
+        for &u in &frontier {
+            if !view.alive[u as usize] {
+                continue;
+            }
+            checks += 1;
+            let witness = view.adj[u as usize]
+                .iter()
+                .copied()
+                .find(|&v| admissible(u, v) && view.dominates(u, v));
+            if let Some(v) = witness {
+                cands.push((u, v));
             }
         }
+        // Resolution phase, ascending: remove a candidate iff its witness
+        // is still alive; defer it otherwise. Neighbour lists are edited
+        // as removals land, so the next round's checks see the new
+        // residue.
+        next_frontier.clear();
+        for &(u, w) in &cands {
+            if view.alive[w as usize] {
+                view.remove(u);
+                removed += 1;
+                for &x in &view.adj[u as usize] {
+                    if view.alive[x as usize] && !in_next[x as usize] {
+                        in_next[x as usize] = true;
+                        next_frontier.push(x);
+                    }
+                }
+            } else if !in_next[u as usize] {
+                in_next[u as usize] = true;
+                next_frontier.push(u);
+            }
+        }
+        next_frontier.sort_unstable();
+        for &x in &next_frontier {
+            in_next[x as usize] = false;
+        }
+        std::mem::swap(&mut frontier, &mut next_frontier);
     }
-    (view.alive, removed, checks)
+    CollapseOutcome {
+        alive: view.alive,
+        removed,
+        checks,
+        rounds,
+    }
 }
 
-/// Run PrunIT to a fixed point. Deterministic: the worklist is processed
-/// in FIFO order seeded with ascending vertex ids.
+/// Run PrunIT to a fixed point on the round-synchronous schedule.
 ///
 /// Errors with [`crate::error::Error::FiltrationMismatch`] when `f` does
 /// not match `g`'s order (the pre-planner `expect` panic is gone).
 pub fn prunit(g: &Graph, f: &Filtration) -> Result<PruneResult> {
     f.check(g)?;
-    let (alive, removed, checks) = collapse_with(g, |u, v| f.admissible_removal(u, v));
-    let (graph, kept_old_ids) = g.induced(&alive);
+    let out = collapse_with(g, |u, v| f.admissible_removal(u, v));
+    let (graph, kept_old_ids) = g.induced(&out.alive);
     let filtration = f.restrict(&kept_old_ids);
     Ok(PruneResult {
         graph,
         kept_old_ids,
         filtration,
-        removed,
-        checks,
+        removed: out.removed,
+        checks: out.checks,
+        rounds: out.rounds,
     })
 }
 
@@ -162,6 +224,9 @@ mod tests {
         let f = Filtration::degree_superlevel(&g);
         let r = prunit(&g, &f).unwrap();
         assert_eq!(r.graph.n(), 1);
+        // mutual-domination conflicts resolve one per round: 0 removed in
+        // round 1 (witness 1 alive), everyone else defers to its witness 0
+        assert_eq!(r.rounds, 6, "K6 defers a twin chain");
     }
 
     #[test]
@@ -171,6 +236,7 @@ mod tests {
         let r = prunit(&g, &f).unwrap();
         assert_eq!(r.graph.n(), 6);
         assert_eq!(r.removed, 0);
+        assert_eq!(r.rounds, 1, "one sweep finds no candidates");
     }
 
     #[test]
@@ -258,12 +324,27 @@ mod tests {
     }
 
     #[test]
+    fn adjacent_twin_conflict_keeps_exactly_one() {
+        // 0 and 1 are adjacent twins (each dominates the other): the
+        // resolution rule removes 0 (lowest index, witness 1 alive) and
+        // must then DEFER 1 (its witness 0 died this round) rather than
+        // remove both — killing both would delete the K2 component.
+        let g = Graph::from_edges(2, &[(0, 1)]);
+        let f = Filtration::constant(2);
+        let r = prunit(&g, &f).unwrap();
+        assert_eq!(r.kept_old_ids, vec![1]);
+        assert_eq!(r.removed, 1);
+        assert_eq!(r.rounds, 2, "round 1 removes 0, round 2 re-checks 1");
+    }
+
+    #[test]
     fn checks_bounded_reasonably() {
         let g = gen::barabasi_albert(300, 2, 3);
         let f = Filtration::degree_superlevel(&g);
         let r = prunit(&g, &f).unwrap();
-        // worklist discipline: far fewer pops than n * rounds of full sweeps
+        // frontier discipline: far fewer checks than n * rounds full sweeps
         assert!(r.checks < 20 * g.n(), "checks={} n={}", r.checks, g.n());
         assert!(r.removed > 0, "BA graphs have dominated leaves");
+        assert!(r.rounds >= 1 && r.rounds <= r.removed + 1);
     }
 }

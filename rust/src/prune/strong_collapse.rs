@@ -16,9 +16,9 @@ use super::prunit::{collapse_with, prunit};
 /// dominated vertex is collapsible) until none remain. This is the
 /// per-step primitive of Strong Collapse.
 pub fn strong_collapse_core(g: &Graph) -> (Graph, Vec<u32>, usize) {
-    let (alive, removed, _) = collapse_with(g, |_, _| true);
-    let (h, ids) = g.induced(&alive);
-    (h, ids, removed)
+    let out = collapse_with(g, |_, _| true);
+    let (h, ids) = g.induced(&out.alive);
+    (h, ids, out.removed)
 }
 
 /// Stats from a filtration sweep (the Table 3 measurement).

@@ -10,6 +10,7 @@ pub mod planner;
 pub use coral::{coral_reduce, CoralResult};
 pub use pipeline::{
     combined, combined_with, combined_with_materializing, combined_with_ws, pd_sharded,
-    pd_sharded_with, pd_with_reduction, Reduced, Reduction, ReductionReport, RoundStats,
+    pd_sharded_with, pd_with_reduction, pd_with_reduction_ws, Reduced, Reduction,
+    ReductionReport, RoundStats,
 };
-pub use planner::ReductionWorkspace;
+pub use planner::{ReductionWorkspace, PAR_FRONTIER_MIN};

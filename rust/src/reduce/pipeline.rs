@@ -80,6 +80,9 @@ pub struct ReductionReport {
     /// removal counts per PrunIT⇄core round (single round for
     /// Coral/Prunit/Combined; one entry per alternation for FixedPoint)
     pub rounds: Vec<RoundStats>,
+    /// PrunIT frontier sweep rounds summed over all passes — schedule
+    /// telemetry, identical at every `--prune-threads` setting
+    pub prunit_rounds: usize,
     pub which: Reduction,
     /// Vertex count per connected component of the reduced graph, filled
     /// by the sharded pipeline ([`pd_sharded`]); empty when the monolithic
@@ -158,6 +161,7 @@ fn report_from_ws(
         core_secs: ws.core_secs(),
         compact_secs,
         rounds: ws.rounds().to_vec(),
+        prunit_rounds: ws.frontier_rounds(),
         which,
         shard_sizes: Vec::new(),
     }
@@ -210,6 +214,7 @@ pub fn combined_with_materializing(
     let vertices_before = g.n();
     let edges_before = g.m();
     let mut rounds = Vec::new();
+    let mut prunit_rounds = 0usize;
     let total = Timer::start();
     let (graph, filtration, kept) = match which {
         Reduction::None => (g.clone(), f.clone(), (0..g.n() as u32).collect::<Vec<_>>()),
@@ -227,6 +232,7 @@ pub fn combined_with_materializing(
                 prunit_removed: r.removed,
                 core_removed: 0,
             });
+            prunit_rounds += r.rounds;
             (r.graph, r.filtration, r.kept_old_ids)
         }
         Reduction::Combined => {
@@ -236,6 +242,7 @@ pub fn combined_with_materializing(
                 prunit_removed: p.removed,
                 core_removed: p.graph.n() - c.graph.n(),
             });
+            prunit_rounds += p.rounds;
             let ids = c
                 .kept_old_ids
                 .iter()
@@ -255,6 +262,7 @@ pub fn combined_with_materializing(
                     core_removed: p.graph.n() - c.graph.n(),
                 };
                 rounds.push(round);
+                prunit_rounds += p.rounds;
                 ids = c
                     .kept_old_ids
                     .iter()
@@ -279,6 +287,7 @@ pub fn combined_with_materializing(
         core_secs: 0.0,
         compact_secs: 0.0,
         rounds,
+        prunit_rounds,
         which,
         shard_sizes: Vec::new(),
     };
@@ -299,7 +308,21 @@ pub fn pd_with_reduction(
     k: usize,
     which: Reduction,
 ) -> Result<(Vec<Diagram>, ReductionReport)> {
-    let red = combined_with(g, f, k, which)?;
+    pd_with_reduction_ws(&mut ReductionWorkspace::new(), g, f, k, which)
+}
+
+/// [`pd_with_reduction`] reusing a caller-held planner workspace — the
+/// entry point that honours a configured
+/// [`ReductionWorkspace::set_prune_threads`] (the CLI's
+/// `--prune-threads`).
+pub fn pd_with_reduction_ws(
+    ws: &mut ReductionWorkspace,
+    g: &Graph,
+    f: &Filtration,
+    k: usize,
+    which: Reduction,
+) -> Result<(Vec<Diagram>, ReductionReport)> {
+    let red = combined_with_ws(ws, g, f, k, which)?;
     let diagrams = persistence_diagrams(&red.graph, &red.filtration, k);
     Ok((diagrams, red.report))
 }
@@ -456,6 +479,11 @@ mod tests {
                 assert_eq!(a.graph, b.graph, "{}", which.name());
                 assert_eq!(a.kept_old_ids, b.kept_old_ids, "{}", which.name());
                 assert_eq!(a.filtration, b.filtration, "{}", which.name());
+                assert_eq!(
+                    a.report.prunit_rounds, b.report.prunit_rounds,
+                    "{}: frontier schedule must agree",
+                    which.name()
+                );
             }
         }
     }

@@ -10,16 +10,36 @@
 //! exactly once, at emission time (whole-graph for the monolithic path,
 //! per shard for the sharded path).
 //!
+//! # Round-synchronous parallel PrunIT
+//!
+//! The PrunIT stage is a **frontier sweep**: each round checks every
+//! frontier vertex for an admissible dominator against the *round-start*
+//! residue, then resolves the collected `(vertex, witness)` candidates in
+//! ascending vertex order — a candidate is removed iff its witness is
+//! still alive; a candidate whose witness died earlier in the same round
+//! is deferred into the next frontier for a re-check. The next frontier
+//! is the deferred set plus the alive former neighbours of everything
+//! removed.
+//!
+//! Because the check phase is read-only against the shared `alive`/`deg`
+//! arrays, a round's checks commute: [`ReductionWorkspace::set_prune_threads`]
+//! partitions the frontier across that many scoped worker threads, each
+//! with its own [`HubBitset`], and concatenates the per-worker candidate
+//! sets in chunk order. The candidate list — and therefore the residue —
+//! is **bit-identical at every thread count**, and identical to the
+//! sequential reference `prune::prunit` (differential suite:
+//! `rust/tests/parallel_prunit.rs`). Frontiers shorter than
+//! [`PAR_FRONTIER_MIN`] are swept inline: on the small rounds that
+//! dominate late convergence, a thread spawn costs more than the sweep.
+//!
 //! Two further hot-path fixes live here:
 //!
-//! * **No `Vec::remove` on adjacency lists.** `prune::prunit`'s mutable
-//!   view deletes an edge with an O(deg) memmove, O(deg²) on the hubs
-//!   that dominate real networks. The planner never edits a neighbour
-//!   list — death is a mask bit plus a degree decrement.
+//! * **No `Vec::remove` on adjacency lists.** Death is a mask bit plus a
+//!   degree decrement; neighbour lists are never edited.
 //! * **Hybrid domination checks.** Low-degree dominator candidates use
 //!   the sorted-merge walk; hub candidates (original degree ≥
 //!   [`HUB_DEGREE`]) load a u64-block neighbourhood bitset once and
-//!   answer each probe in O(deg(u)).
+//!   answer each probe in O(deg(u)) — see `prune::residue_dominates`.
 //!
 //! On top of the workspace, [`Reduction::FixedPoint`] alternates PrunIT
 //! and the (k+1)-core peel until neither removes a vertex. Each stage
@@ -29,16 +49,99 @@
 //! alternation converges because every round but the last removes at
 //! least one vertex; rounds are therefore bounded by the removal count.
 
-use std::collections::VecDeque;
-
 use crate::complex::Filtration;
 use crate::error::Result;
 use crate::graph::decompose::Shard;
 use crate::graph::Graph;
-use crate::prune::domination::{HubBitset, HUB_DEGREE};
+use crate::prune::domination::{residue_dominates, HubBitset};
 use crate::util::Timer;
 
 use super::pipeline::{Reduction, RoundStats};
+
+/// Frontier length below which a round is swept inline even when
+/// [`ReductionWorkspace::set_prune_threads`] asked for more threads: the
+/// scoped-thread spawn overhead exceeds the cost of a few hundred
+/// domination checks. Purely a performance threshold — the candidate set
+/// of a round is the same either way.
+pub const PAR_FRONTIER_MIN: usize = 512;
+
+/// Minimum frontier chunk handed to one worker; the effective thread
+/// count is capped so no worker receives less than this.
+const PAR_CHUNK_MIN: usize = 256;
+
+/// How many threads a round actually uses for `requested` configured
+/// threads and a frontier of `frontier_len` vertices.
+fn effective_threads(requested: usize, frontier_len: usize) -> usize {
+    let requested = requested.max(1);
+    if requested == 1 || frontier_len < PAR_FRONTIER_MIN {
+        1
+    } else {
+        requested.min(frontier_len / PAR_CHUNK_MIN).max(1)
+    }
+}
+
+/// Find the frontier vertex `u`'s witness dominator in the residue, or
+/// None: the first alive neighbour `v` (ascending CSR order) with
+/// residual degree ≥ `u`'s that admissibly dominates `u`. Read-only on
+/// everything but the caller's hub bitset — safe to run from any number
+/// of frontier workers concurrently.
+fn find_witness(
+    g: &Graph,
+    f: &Filtration,
+    alive: &[bool],
+    deg: &[u32],
+    u: u32,
+    hub: &mut HubBitset,
+) -> Option<u32> {
+    let du = deg[u as usize];
+    for &v in g.neighbors(u) {
+        if !alive[v as usize] || deg[v as usize] < du {
+            continue;
+        }
+        if f.admissible_removal(u, v) && residue_dominates(g, alive, u, v, hub) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// Sweep one frontier chunk against the round-start residue: push each
+/// alive vertex's `(vertex, witness)` candidate onto `out` and return
+/// the number of vertices checked. The single body behind both the
+/// inline and the scoped-thread check phases — keeping it shared is what
+/// guarantees the two paths can never diverge.
+fn sweep_chunk(
+    g: &Graph,
+    f: &Filtration,
+    alive: &[bool],
+    deg: &[u32],
+    chunk: &[u32],
+    hub: &mut HubBitset,
+    out: &mut Vec<(u32, u32)>,
+) -> usize {
+    let mut checks = 0usize;
+    for &u in chunk {
+        if !alive[u as usize] {
+            continue;
+        }
+        checks += 1;
+        if let Some(v) = find_witness(g, f, alive, deg, u, hub) {
+            out.push((u, v));
+        }
+    }
+    checks
+}
+
+/// Per-thread scratch for the parallel check phase: a candidate output
+/// buffer plus a private hub bitset (the bitset caches one loaded
+/// neighbourhood, so sharing it across threads would both race and
+/// thrash).
+#[derive(Clone, Debug, Default)]
+struct FrontierWorker {
+    hub: HubBitset,
+    out: Vec<(u32, u32)>,
+    checks: usize,
+}
 
 /// Reusable in-place reduction state: one allocation set per worker
 /// thread, re-targeted at each graph with [`ReductionWorkspace::plan`].
@@ -48,12 +151,22 @@ pub struct ReductionWorkspace {
     alive: Vec<bool>,
     /// residual degree (alive neighbours only); stale for dead vertices
     deg: Vec<u32>,
-    /// PrunIT worklist bookkeeping
-    in_queue: Vec<bool>,
-    queue: VecDeque<u32>,
+    /// current round's frontier, ascending vertex ids
+    frontier: Vec<u32>,
+    /// next round's frontier accumulator (sorted at round end)
+    next_frontier: Vec<u32>,
+    /// membership mask deduplicating `next_frontier` pushes
+    in_frontier: Vec<bool>,
+    /// this round's `(vertex, witness)` candidates, frontier order
+    cands: Vec<(u32, u32)>,
+    /// per-thread scratch for parallel check phases
+    workers: Vec<FrontierWorker>,
+    /// configured PrunIT check-phase threads (0 and 1 both mean inline);
+    /// survives `plan`/`reset` — it is configuration, not per-plan state
+    prune_threads: usize,
     /// core-peel stack (scratch for `kcore::peel_residue`)
     peel: Vec<u32>,
-    /// hub neighbourhood bitset for the hybrid domination check
+    /// hub neighbourhood bitset for inline (single-thread) check phases
     hub: HubBitset,
     /// component labels over alive vertices (emit_shards scratch)
     labels: Vec<u32>,
@@ -66,12 +179,32 @@ pub struct ReductionWorkspace {
     prunit_secs: f64,
     core_secs: f64,
     checks: usize,
+    frontier_rounds: usize,
     alive_count: usize,
 }
 
 impl ReductionWorkspace {
     pub fn new() -> ReductionWorkspace {
         ReductionWorkspace::default()
+    }
+
+    /// A workspace whose PrunIT check phases fan out across `threads`
+    /// scoped worker threads (see module docs; 0 and 1 both mean inline).
+    pub fn with_prune_threads(threads: usize) -> ReductionWorkspace {
+        let mut ws = ReductionWorkspace::default();
+        ws.set_prune_threads(threads);
+        ws
+    }
+
+    /// Configure the PrunIT check-phase thread count. The residue is
+    /// bit-identical at every setting; only wall time changes.
+    pub fn set_prune_threads(&mut self, threads: usize) {
+        self.prune_threads = threads;
+    }
+
+    /// Configured PrunIT check-phase threads (≥ 1).
+    pub fn prune_threads(&self) -> usize {
+        self.prune_threads.max(1)
     }
 
     /// Re-target the workspace at `g`: everything alive, residual degrees
@@ -82,15 +215,23 @@ impl ReductionWorkspace {
         self.alive.resize(n, true);
         self.deg.clear();
         self.deg.extend((0..n as u32).map(|v| g.degree(v) as u32));
-        self.in_queue.clear();
-        self.in_queue.resize(n, false);
-        self.queue.clear();
+        self.frontier.clear();
+        self.next_frontier.clear();
+        self.in_frontier.clear();
+        self.in_frontier.resize(n, false);
+        self.cands.clear();
         self.peel.clear();
         self.hub.invalidate();
+        for w in &mut self.workers {
+            w.hub.invalidate();
+            w.out.clear();
+            w.checks = 0;
+        }
         self.rounds.clear();
         self.prunit_secs = 0.0;
         self.core_secs = 0.0;
         self.checks = 0;
+        self.frontier_rounds = 0;
         self.alive_count = n;
     }
 
@@ -162,89 +303,114 @@ impl ReductionWorkspace {
         removed
     }
 
-    /// One PrunIT worklist run to its fixed point. Every round seeds the
-    /// FIFO with all alive vertices in ascending id order — exactly the
-    /// schedule `prune::prunit` uses — so the planner's removal set is
-    /// bit-identical to the materializing reference's even where twin
-    /// choices depend on processing order. (Seeding only the neighbours
-    /// of core-killed vertices would be set-correct but can reorder twin
-    /// resolution; the O(n) reseed is noise next to the pass itself.)
+    /// One PrunIT frontier sweep to its fixed point (see module docs).
+    /// Every pass seeds the frontier with all alive vertices in ascending
+    /// id order — exactly the schedule `prune::prunit` uses on the
+    /// materialized residue — so the planner's removal set is bit-identical
+    /// to the sequential reference's even where twin choices depend on
+    /// processing order.
     fn prunit_pass(&mut self, g: &Graph, f: &Filtration) -> usize {
-        debug_assert!(self.queue.is_empty());
-        for v in 0..g.n() as u32 {
-            if self.alive[v as usize] {
-                self.in_queue[v as usize] = true;
-                self.queue.push_back(v);
-            }
+        debug_assert!(self.frontier.is_empty());
+        {
+            let alive = &self.alive;
+            let frontier = &mut self.frontier;
+            frontier.extend((0..g.n() as u32).filter(|&v| alive[v as usize]));
         }
+        let mut removed_total = 0usize;
+        while !self.frontier.is_empty() {
+            self.frontier_rounds += 1;
+            self.collect_candidates(g, f);
+            removed_total += self.resolve_round(g);
+        }
+        removed_total
+    }
+
+    /// Check phase: fill `self.cands` with this round's `(vertex,
+    /// witness)` pairs in frontier (ascending) order, reading the
+    /// round-start `alive`/`deg` state. Runs inline or fanned out over
+    /// scoped threads — the output is identical either way, because every
+    /// check is a pure function of the shared round-start arrays and the
+    /// frontier chunks are concatenated back in order.
+    fn collect_candidates(&mut self, g: &Graph, f: &Filtration) {
+        self.cands.clear();
+        let threads = effective_threads(self.prune_threads, self.frontier.len());
+        if threads <= 1 {
+            self.checks += sweep_chunk(
+                g,
+                f,
+                &self.alive,
+                &self.deg,
+                &self.frontier,
+                &mut self.hub,
+                &mut self.cands,
+            );
+            return;
+        }
+        if self.workers.len() < threads {
+            self.workers.resize_with(threads, FrontierWorker::default);
+        }
+        for w in &mut self.workers[..threads] {
+            w.out.clear();
+            w.checks = 0;
+        }
+        let chunk = self.frontier.len().div_ceil(threads);
+        {
+            let alive: &[bool] = &self.alive;
+            let deg: &[u32] = &self.deg;
+            let frontier: &[u32] = &self.frontier;
+            let workers = &mut self.workers[..threads];
+            std::thread::scope(|scope| {
+                for (w, slice) in workers.iter_mut().zip(frontier.chunks(chunk)) {
+                    scope.spawn(move || {
+                        w.checks = sweep_chunk(g, f, alive, deg, slice, &mut w.hub, &mut w.out);
+                    });
+                }
+            });
+        }
+        for w in &self.workers[..threads] {
+            self.cands.extend_from_slice(&w.out);
+            self.checks += w.checks;
+        }
+    }
+
+    /// Resolution phase, always sequential and ascending: apply
+    /// tombstones for every candidate whose witness is still alive, defer
+    /// the rest, and rebuild the frontier (deferred candidates + alive
+    /// former neighbours of the removed). Returns the removal count.
+    fn resolve_round(&mut self, g: &Graph) -> usize {
+        self.next_frontier.clear();
         let mut removed = 0usize;
-        while let Some(u) = self.queue.pop_front() {
-            self.in_queue[u as usize] = false;
-            if !self.alive[u as usize] {
-                continue;
-            }
-            self.checks += 1;
-            let du = self.deg[u as usize];
-            let mut dominated = false;
-            for &v in g.neighbors(u) {
-                if !self.alive[v as usize] || self.deg[v as usize] < du {
-                    continue;
-                }
-                if f.admissible_removal(u, v) && self.dominates(g, u, v) {
-                    dominated = true;
-                    break;
-                }
-            }
-            if dominated {
+        for &(u, w) in &self.cands {
+            if self.alive[w as usize] {
                 self.alive[u as usize] = false;
                 self.alive_count -= 1;
                 removed += 1;
-                for &w in g.neighbors(u) {
-                    if self.alive[w as usize] {
-                        self.deg[w as usize] -= 1;
-                        if !self.in_queue[w as usize] {
-                            self.in_queue[w as usize] = true;
-                            self.queue.push_back(w);
+                for &x in g.neighbors(u) {
+                    if self.alive[x as usize] {
+                        self.deg[x as usize] -= 1;
+                        if !self.in_frontier[x as usize] {
+                            self.in_frontier[x as usize] = true;
+                            self.next_frontier.push(x);
                         }
                     }
                 }
+            } else if !self.in_frontier[u as usize] {
+                // witness died this round: defer u — it may still have
+                // another dominator in the new residue
+                self.in_frontier[u as usize] = true;
+                self.next_frontier.push(u);
             }
         }
+        self.next_frontier.sort_unstable();
+        {
+            let next = &self.next_frontier;
+            let in_frontier = &mut self.in_frontier;
+            for &x in next {
+                in_frontier[x as usize] = false;
+            }
+        }
+        std::mem::swap(&mut self.frontier, &mut self.next_frontier);
         removed
-    }
-
-    /// Does alive `v` dominate alive `u` in the residue? Caller
-    /// guarantees adjacency and `deg[u] ≤ deg[v]`. Hybrid: sorted merge
-    /// for low-degree `v`, neighbourhood bitset for hubs.
-    fn dominates(&mut self, g: &Graph, u: u32, v: u32) -> bool {
-        if g.degree(v) >= HUB_DEGREE {
-            self.hub.load(g, v);
-            for &x in g.neighbors(u) {
-                if x == v || !self.alive[x as usize] {
-                    continue;
-                }
-                if !self.hub.contains(x) {
-                    return false;
-                }
-            }
-            true
-        } else {
-            let nv = g.neighbors(v);
-            let mut j = 0usize;
-            for &x in g.neighbors(u) {
-                if x == v || !self.alive[x as usize] {
-                    continue;
-                }
-                while j < nv.len() && nv[j] < x {
-                    j += 1;
-                }
-                if j == nv.len() || nv[j] != x {
-                    return false;
-                }
-                j += 1;
-            }
-            true
-        }
     }
 
     // ---------- emission (the single compaction) ----------
@@ -387,10 +553,18 @@ impl ReductionWorkspace {
         self.core_secs
     }
 
-    /// PrunIT worklist pops (latest plan) — the work-done proxy reported
-    /// by `prune::prunit` as `checks`.
+    /// Frontier vertices checked for domination (latest plan) — the
+    /// work-done proxy reported by `prune::prunit` as `checks`.
     pub fn checks(&self) -> usize {
         self.checks
+    }
+
+    /// PrunIT frontier sweep rounds summed over all passes of the latest
+    /// plan. Schedule-deterministic: equal at every thread count, and
+    /// equal to the sum of `PruneResult::rounds` over the materializing
+    /// reference's passes.
+    pub fn frontier_rounds(&self) -> usize {
+        self.frontier_rounds
     }
 }
 
@@ -399,6 +573,7 @@ mod tests {
     use super::*;
     use crate::graph::gen;
     use crate::homology::persistence_diagrams;
+    use crate::prune::domination::HUB_DEGREE;
     use crate::prune::prunit;
     use crate::reduce::coral_reduce;
 
@@ -447,7 +622,30 @@ mod tests {
         let kept = ws_residue(&g, &f, 1, Reduction::Prunit);
         let r = prunit(&g, &f).unwrap();
         assert_eq!(kept, r.kept_old_ids);
-        assert!(g.degree(0) as usize >= HUB_DEGREE);
+        assert!(g.degree(0) >= HUB_DEGREE);
+    }
+
+    #[test]
+    fn parallel_frontier_is_bit_identical_and_counts_match() {
+        // large enough that round 1 (n ≥ PAR_FRONTIER_MIN) takes the
+        // scoped-thread path for every threads > 1 setting
+        let g = gen::erdos_renyi(3000, 5.0 / 3000.0, 23);
+        let f = Filtration::degree_superlevel(&g);
+        let mut seq = ReductionWorkspace::new();
+        seq.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        let seq_alive: Vec<bool> = seq.alive().to_vec();
+        let r = prunit(&g, &f).unwrap();
+        assert_eq!(seq.checks(), r.checks, "planner checks == reference checks");
+        assert_eq!(seq.frontier_rounds(), r.rounds);
+        for threads in [2usize, 4, 8] {
+            let mut par = ReductionWorkspace::with_prune_threads(threads);
+            par.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+            assert_eq!(par.alive(), &seq_alive[..], "threads={threads}");
+            assert_eq!(par.checks(), seq.checks(), "threads={threads}");
+            assert_eq!(par.frontier_rounds(), seq.frontier_rounds(), "threads={threads}");
+            assert_eq!(par.prune_threads(), threads);
+        }
+        assert!(g.n() >= PAR_FRONTIER_MIN);
     }
 
     #[test]
@@ -517,9 +715,9 @@ mod tests {
 
     #[test]
     fn workspace_reuse_across_graphs_is_clean() {
-        let mut ws = ReductionWorkspace::new();
+        let mut ws = ReductionWorkspace::with_prune_threads(4);
         let specs: [(usize, f64, u64); 4] =
-            [(40, 0.2, 1), (7, 0.5, 2), (120, 0.05, 3), (40, 0.2, 1)];
+            [(40, 0.2, 1), (7, 0.5, 2), (2000, 0.002, 3), (40, 0.2, 1)];
         let mut first_run: Option<Vec<u32>> = None;
         for (i, &(n, p, seed)) in specs.iter().enumerate() {
             let g = gen::erdos_renyi(n, p, seed);
@@ -557,5 +755,15 @@ mod tests {
         assert_eq!(removed_by_rounds, g.n() - ws.alive_count());
         assert!(ws.rounds().len() <= removed_by_rounds + 1);
         assert!(ws.checks() > 0);
+        assert!(ws.frontier_rounds() >= ws.rounds().len());
+    }
+
+    #[test]
+    fn effective_threads_respects_thresholds() {
+        assert_eq!(effective_threads(1, 100_000), 1);
+        assert_eq!(effective_threads(8, PAR_FRONTIER_MIN - 1), 1);
+        assert_eq!(effective_threads(8, PAR_FRONTIER_MIN), 2);
+        assert_eq!(effective_threads(4, 100_000), 4);
+        assert_eq!(effective_threads(0, 100_000), 1);
     }
 }

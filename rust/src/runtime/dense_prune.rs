@@ -107,6 +107,7 @@ pub fn prunit_dense(rt: &XlaRuntime, g: &Graph, f: &Filtration) -> Result<PruneR
         filtration,
         removed: removed_total,
         checks: sweeps,
+        rounds: sweeps,
     })
 }
 

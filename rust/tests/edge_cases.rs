@@ -165,6 +165,7 @@ fn worker_panic_surfaces_as_coordinator_error() {
         max_k: 1,
         reduction: "prunit".into(),
         seed: 1,
+        prune_threads: 1,
     };
     let coord = Coordinator::new(cfg);
     let bad = Job::new(
@@ -185,6 +186,7 @@ fn coordinator_survives_mixed_good_and_tiny_jobs() {
         max_k: 1,
         reduction: "prunit+coral".into(),
         seed: 2,
+        prune_threads: 2,
     };
     let coord = Coordinator::new(cfg);
     let jobs: Vec<Job> = vec![

@@ -1,0 +1,228 @@
+//! Differential suite for the round-synchronous parallel PrunIT frontier
+//! (ISSUE 5 tentpole): at every thread count the planner must produce the
+//! **bit-identical** residue, frontier-round count, and check count as
+//! the sequential reference `prune::prunit`, on a seeded ER/BA/structured
+//! corpus — including graphs large enough that the scoped-thread check
+//! phase actually engages (round-1 frontier ≥ `PAR_FRONTIER_MIN`) and
+//! crafted adjacent-domination conflict cases where naive simultaneous
+//! removal would destroy homology.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::persistence_diagrams;
+use coral_prunit::prune::prunit;
+use coral_prunit::reduce::{
+    combined_with_materializing, combined_with_ws, pd_sharded_with, Reduction,
+    ReductionWorkspace, PAR_FRONTIER_MIN,
+};
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// The corpus: (description, graph). Mixes small graphs (inline sweep),
+/// large sparse graphs (parallel sweep), hubs (bitset domination path),
+/// and conflict-heavy structures (twin classes).
+fn corpus() -> Vec<(String, Graph)> {
+    let mut out: Vec<(String, Graph)> = Vec::new();
+    for (n, p, seed) in [
+        (30usize, 0.3f64, 1u64),
+        (120, 0.08, 2),
+        (800, 0.01, 3),
+        (2048, 0.003, 4),
+        (3000, 5.0 / 3000.0, 5),
+    ] {
+        out.push((format!("ER({n},{p})"), gen::erdos_renyi(n, p, seed)));
+    }
+    for (n, m, seed) in [(100usize, 2usize, 6u64), (3000, 3, 7)] {
+        out.push((format!("BA({n},{m})"), gen::barabasi_albert(n, m, seed)));
+    }
+    // cycle with a pendant tail: coring fodder with PD_1 that must survive
+    let mut edges: Vec<(u32, u32)> = (0..6).map(|i| (i, (i + 1) % 6)).collect();
+    edges.push((0, 6));
+    edges.push((6, 7));
+    out.push(("cycle+tail".into(), Graph::from_edges(8, &edges)));
+    out.push(("star(50)".into(), gen::star(50)));
+    out.push(("complete(12)".into(), gen::complete(12)));
+    out
+}
+
+/// A crafted adjacent-domination conflict graph: two twin pairs wired so
+/// round 1 is all conflicts and the resolution cascades. {0,1} are
+/// adjacent twins, {2,3} are adjacent twins, every twin sees both members
+/// of the other pair — so all four vertices are dominated candidates in
+/// round 1 and witness deaths force deferrals.
+fn conflict_graph() -> Graph {
+    Graph::from_edges(
+        5,
+        &[
+            (0, 1), // twins A
+            (2, 3), // twins B
+            (0, 2),
+            (0, 3),
+            (1, 2),
+            (1, 3),
+            (2, 4),
+            (3, 4), // 4 hangs off pair B, dominated by either
+        ],
+    )
+}
+
+#[test]
+fn parallel_alive_sets_rounds_and_checks_match_sequential() {
+    for (desc, g) in corpus() {
+        let f = Filtration::degree_superlevel(&g);
+        let reference = prunit(&g, &f).unwrap();
+        for threads in THREAD_SWEEP {
+            let mut ws = ReductionWorkspace::with_prune_threads(threads);
+            ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+            let kept: Vec<u32> = (0..g.n() as u32)
+                .filter(|&v| ws.alive()[v as usize])
+                .collect();
+            assert_eq!(
+                kept, reference.kept_old_ids,
+                "{desc} threads={threads}: alive set"
+            );
+            assert_eq!(
+                ws.frontier_rounds(),
+                reference.rounds,
+                "{desc} threads={threads}: rounds"
+            );
+            assert_eq!(
+                ws.checks(),
+                reference.checks,
+                "{desc} threads={threads}: checks"
+            );
+        }
+    }
+}
+
+#[test]
+fn corpus_includes_genuinely_parallel_rounds() {
+    // the differential result is only meaningful if some corpus members
+    // take the scoped-thread path: their round-1 frontier is all of V
+    let big = corpus()
+        .into_iter()
+        .filter(|(_, g)| g.n() >= PAR_FRONTIER_MIN)
+        .count();
+    assert!(big >= 3, "corpus must keep several super-threshold graphs");
+}
+
+#[test]
+fn fixed_point_alternation_is_thread_invariant() {
+    for (desc, g) in corpus() {
+        let f = Filtration::degree_superlevel(&g);
+        let reference = combined_with_materializing(&g, &f, 1, Reduction::FixedPoint).unwrap();
+        for threads in THREAD_SWEEP {
+            let mut ws = ReductionWorkspace::with_prune_threads(threads);
+            let red = combined_with_ws(&mut ws, &g, &f, 1, Reduction::FixedPoint).unwrap();
+            assert_eq!(red.graph, reference.graph, "{desc} threads={threads}");
+            assert_eq!(red.kept_old_ids, reference.kept_old_ids, "{desc} threads={threads}");
+            assert_eq!(
+                red.report.prunit_rounds, reference.report.prunit_rounds,
+                "{desc} threads={threads}: frontier schedule"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_prunit_preserves_diagrams_on_small_corpus() {
+    // Theorem 7 end-to-end at every thread count (PD computation bounds
+    // this to the small corpus members)
+    for (desc, g) in corpus().into_iter().filter(|(_, g)| g.n() <= 150) {
+        let f = Filtration::degree_superlevel(&g);
+        let before = persistence_diagrams(&g, &f, 1);
+        for threads in THREAD_SWEEP {
+            let mut ws = ReductionWorkspace::with_prune_threads(threads);
+            let red = combined_with_ws(&mut ws, &g, &f, 1, Reduction::Prunit).unwrap();
+            let after = persistence_diagrams(&red.graph, &red.filtration, 1);
+            for k in 0..=1 {
+                assert!(
+                    before[k].same_as(&after[k], 1e-9),
+                    "{desc} threads={threads} PD_{k}: {} vs {}",
+                    before[k],
+                    after[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn crafted_conflict_case_resolves_deterministically() {
+    let g = conflict_graph();
+    for f in [
+        Filtration::constant(g.n()),
+        Filtration::degree_superlevel(&g),
+    ] {
+        let reference = prunit(&g, &f).unwrap();
+        // the collapse must not delete whole twin classes: the graph is
+        // connected and contractible-ish, one component must survive
+        assert!(!reference.kept_old_ids.is_empty());
+        let before = persistence_diagrams(&g, &f, 1);
+        let after = persistence_diagrams(&reference.graph, &reference.filtration, 1);
+        assert!(before[0].same_as(&after[0], 1e-12), "conflict case PD_0");
+        assert!(before[1].same_as(&after[1], 1e-12), "conflict case PD_1");
+        for threads in THREAD_SWEEP {
+            let mut ws = ReductionWorkspace::with_prune_threads(threads);
+            ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+            let kept: Vec<u32> = (0..g.n() as u32)
+                .filter(|&v| ws.alive()[v as usize])
+                .collect();
+            assert_eq!(kept, reference.kept_old_ids, "threads={threads}");
+            assert_eq!(ws.frontier_rounds(), reference.rounds, "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn adjacent_twins_lowest_index_dominated_by_alive_wins() {
+    // pure twin pair: both candidates in round 1 with each other as
+    // witness. The rule removes 0 (witness 1 alive) and defers 1 (witness
+    // 0 dead); 1 survives the re-check. Removing both would change PD_0.
+    let g = Graph::from_edges(2, &[(0, 1)]);
+    let f = Filtration::constant(2);
+    for threads in THREAD_SWEEP {
+        let mut ws = ReductionWorkspace::with_prune_threads(threads);
+        ws.plan(&g, &f, 0, Reduction::Prunit).unwrap();
+        assert_eq!(ws.alive(), &[false, true], "threads={threads}");
+    }
+}
+
+#[test]
+fn sharded_pipeline_is_thread_invariant_end_to_end() {
+    let g = gen::erdos_renyi(600, 0.004, 9);
+    let f = Filtration::degree_superlevel(&g);
+    let mut seq = ReductionWorkspace::with_prune_threads(1);
+    let (pds_seq, rep_seq) = pd_sharded_with(&mut seq, &g, &f, 1, Reduction::FixedPoint, 2).unwrap();
+    for threads in [2usize, 4, 8] {
+        let mut par = ReductionWorkspace::with_prune_threads(threads);
+        let (pds_par, rep_par) =
+            pd_sharded_with(&mut par, &g, &f, 1, Reduction::FixedPoint, 2).unwrap();
+        assert_eq!(rep_par.shard_sizes, rep_seq.shard_sizes, "threads={threads}");
+        assert_eq!(rep_par.prunit_rounds, rep_seq.prunit_rounds);
+        for k in 0..=1 {
+            assert!(
+                pds_seq[k].same_as(&pds_par[k], 0.0),
+                "threads={threads} PD_{k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn workspace_thread_reconfiguration_is_stateless() {
+    // one workspace, thread count flipped between plans: every plan must
+    // match a fresh sequential run
+    let g = gen::barabasi_albert(2500, 3, 13);
+    let f = Filtration::degree_superlevel(&g);
+    let reference = prunit(&g, &f).unwrap();
+    let mut ws = ReductionWorkspace::new();
+    for &threads in &[4usize, 1, 8, 2, 1, 4] {
+        ws.set_prune_threads(threads);
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        let kept: Vec<u32> = (0..g.n() as u32)
+            .filter(|&v| ws.alive()[v as usize])
+            .collect();
+        assert_eq!(kept, reference.kept_old_ids, "threads={threads}");
+    }
+}

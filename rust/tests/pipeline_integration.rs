@@ -88,6 +88,7 @@ fn coordinator_batch_end_to_end() {
         max_k: 1,
         reduction: "prunit+coral".into(),
         seed: 7,
+        prune_threads: 1,
     });
     let got = coord.run(jobs).unwrap();
     assert_eq!(got.len(), expected.len());
