@@ -55,6 +55,7 @@ fn main() {
                 pipeline: "in-place".into(),
                 reduction: which.name().into(),
                 stage: "reduce".into(),
+                kernel: "auto".into(),
                 wall_secs: m.median_secs,
                 removed_per_round: red
                     .report
@@ -64,6 +65,70 @@ fn main() {
                     .collect(),
                 vertices_after: red.graph.n(),
             });
+        }
+    }
+
+    // 2c. domination-kernel matrix: the in-place PrunIT stage pinned to
+    //     each kernel, on the sparse social workload (merge territory)
+    //     and a dense ER core (bitset territory). Each pinned run is
+    //     asserted bit-identical to the merge reference before timing.
+    {
+        use coral_prunit::prune::DominationKernel;
+        use coral_prunit::reduce::{combined_with_ws, Reduction, ReductionWorkspace};
+        let dense = gen::erdos_renyi(1_200, 0.15, 6);
+        let f_dense = Filtration::degree_superlevel(&dense);
+        for (wl, g, f) in [
+            ("social n=50k", &social, &f_social),
+            ("ER(1200,0.15)", &dense, &f_dense),
+        ] {
+            let mut mws = ReductionWorkspace::new();
+            mws.set_domination_kernel(DominationKernel::Merge);
+            let reference = combined_with_ws(&mut mws, g, f, 1, Reduction::Prunit).unwrap();
+            for kern in [
+                DominationKernel::Merge,
+                DominationKernel::Bitset,
+                DominationKernel::Auto,
+            ] {
+                let mut kws = ReductionWorkspace::new();
+                kws.set_domination_kernel(kern);
+                let red = combined_with_ws(&mut kws, g, f, 1, Reduction::Prunit).unwrap();
+                assert_eq!(
+                    red.graph,
+                    reference.graph,
+                    "prunit residue must be bit-identical under the {} kernel",
+                    kern.name()
+                );
+                let mut samples: Vec<f64> = (0..9)
+                    .map(|_| {
+                        let r = combined_with_ws(&mut kws, g, f, 1, Reduction::Prunit).unwrap();
+                        sink(r.graph.n());
+                        r.report.prunit_secs
+                    })
+                    .collect();
+                samples.sort_by(|a, b| a.total_cmp(b));
+                let median = samples[samples.len() / 2];
+                t.row(&[
+                    format!("prunit/kernel-{}", kern.name()),
+                    wl.into(),
+                    format!("{:.3}ms", median * 1e3),
+                ]);
+                planner_records.push(JsonRecord {
+                    bench: "perf_hotpaths".into(),
+                    graph: wl.into(),
+                    pipeline: "in-place".into(),
+                    reduction: "prunit".into(),
+                    stage: "prunit".into(),
+                    kernel: kern.name().into(),
+                    wall_secs: median,
+                    removed_per_round: red
+                        .report
+                        .rounds
+                        .iter()
+                        .map(|r| r.prunit_removed + r.core_removed)
+                        .collect(),
+                    vertices_after: red.graph.n(),
+                });
+            }
         }
     }
 

@@ -15,11 +15,18 @@
 //! stage, wall seconds, vertices removed per round) for the cross-PR
 //! perf trajectory; sweep rows carry stage `prunit` and pipeline
 //! `in-place-t{T}`.
+//!
+//! A **domination-kernel sweep** mirrors the thread sweep: the prunit
+//! stage pinned to each kernel (`--domination-kernel K` restricts to
+//! one — CI runs a merge-vs-bitset matrix), rows carry pipeline
+//! `in-place-k{K}`, and every pinned run is asserted bit-identical to
+//! the sequential merge-kernel reference before it is timed.
 
 use coral_prunit::bench::json::{write_records, JsonRecord};
 use coral_prunit::bench::{bench_auto, sink};
 use coral_prunit::complex::Filtration;
 use coral_prunit::graph::gen;
+use coral_prunit::prune::DominationKernel;
 use coral_prunit::reduce::{
     combined_with_materializing, combined_with_ws, Reduction, ReductionWorkspace,
 };
@@ -56,6 +63,20 @@ fn main() {
         Some(t) => vec![t],
         None => vec![1, 2, 4, 8],
     };
+    let fixed_kernel: Option<DominationKernel> =
+        argv.iter().position(|a| a == "--domination-kernel").map(|i| {
+            DominationKernel::parse(argv.get(i + 1).expect("--domination-kernel: missing value"))
+                .expect("--domination-kernel: auto|merge|bitset")
+        });
+    let requested = fixed_kernel.unwrap_or_default();
+    let kernel_sweep: Vec<DominationKernel> = match fixed_kernel {
+        Some(k) => vec![k],
+        None => vec![
+            DominationKernel::Merge,
+            DominationKernel::Bitset,
+            DominationKernel::Auto,
+        ],
+    };
     let n: usize = if quick { 2_000 } else { 20_000 };
     let graphs = [
         (
@@ -70,6 +91,7 @@ fn main() {
     );
     let mut records: Vec<JsonRecord> = Vec::new();
     let mut ws = ReductionWorkspace::new();
+    ws.set_domination_kernel(requested);
     for (label, g) in &graphs {
         let f = Filtration::degree_superlevel(g);
         for which in [Reduction::Combined, Reduction::FixedPoint] {
@@ -111,6 +133,13 @@ fn main() {
                     pipeline: pipeline.into(),
                     reduction: which.name().into(),
                     stage: "reduce".into(),
+                    // the materializing reference runs the sequential
+                    // merge-walk prunit; the planner honours the flag
+                    kernel: if pipeline == "materializing" {
+                        "merge".into()
+                    } else {
+                        requested.name().into()
+                    },
                     wall_secs: m.median_secs,
                     removed_per_round: removed_per_round.clone(),
                     vertices_after: red.graph.n(),
@@ -119,8 +148,11 @@ fn main() {
         }
 
         // PrunIT frontier thread sweep: identical residue, stage wall time
-        // per configured thread count.
+        // per configured thread count. The reference pins the sequential
+        // merge kernel so every sweep row below is asserted against an
+        // independent kernel/thread configuration.
         let mut seq_ws = ReductionWorkspace::with_prune_threads(1);
+        seq_ws.set_domination_kernel(DominationKernel::Merge);
         let reference = combined_with_ws(&mut seq_ws, g, &f, 1, Reduction::Prunit).unwrap();
         let removed_per_round: Vec<usize> = reference
             .report
@@ -130,6 +162,7 @@ fn main() {
             .collect();
         for &threads in &sweep {
             let mut tws = ReductionWorkspace::with_prune_threads(threads);
+            tws.set_domination_kernel(requested);
             let check = combined_with_ws(&mut tws, g, &f, 1, Reduction::Prunit).unwrap();
             assert_eq!(
                 check.graph, reference.graph,
@@ -152,6 +185,44 @@ fn main() {
                 pipeline: format!("in-place-t{threads}"),
                 reduction: "prunit".into(),
                 stage: "prunit".into(),
+                kernel: requested.name().into(),
+                wall_secs: median,
+                removed_per_round: removed_per_round.clone(),
+                vertices_after: reference.graph.n(),
+            });
+        }
+
+        // Domination-kernel sweep: the same prunit stage pinned to each
+        // kernel, asserted bit-identical to the merge reference above.
+        for &kern in &kernel_sweep {
+            let mut kws = ReductionWorkspace::with_prune_threads(1);
+            kws.set_domination_kernel(kern);
+            let check = combined_with_ws(&mut kws, g, &f, 1, Reduction::Prunit).unwrap();
+            assert_eq!(
+                check.graph,
+                reference.graph,
+                "prunit residue must be bit-identical under the {} kernel",
+                kern.name()
+            );
+            assert_eq!(check.kept_old_ids, reference.kept_old_ids);
+            assert_eq!(check.report.prunit_rounds, reference.report.prunit_rounds);
+            let runs = if quick { 7 } else { 9 };
+            let median = prunit_stage_median(&mut kws, g, &f, runs);
+            t.row(&[
+                label.clone(),
+                "prunit".into(),
+                format!("in-place-k{}", kern.name()),
+                reference.graph.n().to_string(),
+                reference.report.prunit_rounds.to_string(),
+                format!("{:.3}ms", median * 1e3),
+            ]);
+            records.push(JsonRecord {
+                bench: "planner_scaling".into(),
+                graph: label.clone(),
+                pipeline: format!("in-place-k{}", kern.name()),
+                reduction: "prunit".into(),
+                stage: "prunit".into(),
+                kernel: kern.name().into(),
                 wall_secs: median,
                 removed_per_round: removed_per_round.clone(),
                 vertices_after: reference.graph.n(),

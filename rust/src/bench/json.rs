@@ -21,6 +21,9 @@ pub struct JsonRecord {
     pub reduction: String,
     /// measured stage, e.g. `reduce`
     pub stage: String,
+    /// domination-kernel policy the run was pinned to (`auto`, `merge`,
+    /// or `bitset`) — lets CI compare the forced-kernel bench legs
+    pub kernel: String,
     /// median wall seconds of the stage
     pub wall_secs: f64,
     /// vertices removed per PrunIT⇄core round (prunit + core per entry)
@@ -69,6 +72,8 @@ pub fn to_json(records: &[JsonRecord]) -> String {
         push_json_str(&mut out, &r.reduction);
         out.push_str(", \"stage\": ");
         push_json_str(&mut out, &r.stage);
+        out.push_str(", \"kernel\": ");
+        push_json_str(&mut out, &r.kernel);
         out.push_str(", \"wall_secs\": ");
         push_json_f64(&mut out, r.wall_secs);
         out.push_str(", \"removed_per_round\": [");
@@ -111,6 +116,7 @@ mod tests {
             pipeline: "in-place".into(),
             reduction: "fixed-point".into(),
             stage: "reduce".into(),
+            kernel: "auto".into(),
             wall_secs: 0.125,
             removed_per_round: vec![10, 3, 0],
             vertices_after: 42,
@@ -118,6 +124,7 @@ mod tests {
         let s = to_json(std::slice::from_ref(&rec));
         assert!(s.starts_with("[\n"));
         assert!(s.contains("\\\"n\\\""), "quotes escaped: {s}");
+        assert!(s.contains("\"kernel\": \"auto\""));
         assert!(s.contains("\"wall_secs\": 0.125"));
         assert!(s.contains("\"removed_per_round\": [10, 3, 0]"));
         assert!(s.contains("\"vertices_after\": 42"));
@@ -132,6 +139,7 @@ mod tests {
             pipeline: "p".into(),
             reduction: "r".into(),
             stage: "s".into(),
+            kernel: "merge".into(),
             wall_secs: f64::NAN,
             removed_per_round: vec![],
             vertices_after: 0,

@@ -9,6 +9,7 @@ use crate::coordinator::{Coordinator, Job, JobSpec};
 use crate::datasets;
 use crate::error::{Error, Result};
 use crate::homology::{legacy, persistence_diagrams, Algorithm};
+use crate::prune::DominationKernel;
 use crate::reduce::{
     combined_with_ws, pd_sharded_with, pd_with_reduction_ws, Reduction, ReductionWorkspace,
 };
@@ -97,12 +98,16 @@ COMMANDS:
            [--reduction none|coral|prunit|combined|fixed-point]
            [--prune-threads T]       parallel PrunIT frontier checks
                                      (bit-identical at any T; default 1)
+           [--domination-kernel auto|merge|bitset]
+                                     pin the residue-domination kernel
+                                     (auto picks per round by density)
   pd       --dataset NAME      persistence diagrams of instance 0
            [--k K] [--seed S] [--instance I]
            [--reduction none|coral|prunit|combined|fixed-point]
                                      fixed-point alternates PrunIT and the
                                      (k+1)-core on the in-place planner
            [--prune-threads T]       parallel PrunIT frontier checks
+           [--domination-kernel auto|merge|bitset]
            [--shard] [--workers W]   component-sharded parallel PH
            [--engine flat|legacy]    columnar engine (default) or the
                                      AoS reference engine (cross-check)
@@ -110,6 +115,7 @@ COMMANDS:
            [--config FILE] [--workers W] [--k K] [--seed S]
            [--prune-threads T]       per-job PrunIT threads (default 1:
                                      the worker pool owns the cores)
+           [--domination-kernel auto|merge|bitset]
   dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
            [--seed S]          (needs the `xla` build feature + artifacts)
   help                         this text
@@ -185,12 +191,14 @@ fn cmd_reduce(args: &Args) -> Result<i32> {
     let k = args.flag_usize("k", 1)?;
     let seed = args.flag_u64("seed", 42)?;
     let prune_threads = args.flag_usize("prune-threads", 1)?;
+    let kernel = DominationKernel::parse(args.flag("domination-kernel").unwrap_or("auto"))?;
     let which = parse_reduction(args.flag("reduction").unwrap_or("combined"))?;
     let mut t = Table::new(
         &format!("{} reduction on {} (k={k})", which.name(), recipe.name),
         &["instance", "|V|", "|V'|", "V-red", "|E|", "|E'|", "E-red", "rounds", "secs"],
     );
     let mut ws = ReductionWorkspace::with_prune_threads(prune_threads);
+    ws.set_domination_kernel(kernel);
     for i in 0..recipe.instances {
         let g = recipe.make(seed, i);
         let f = Filtration::degree_superlevel(&g);
@@ -234,6 +242,7 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         .unwrap_or(2);
     let workers = args.flag_usize("workers", default_workers)?;
     let prune_threads = args.flag_usize("prune-threads", 1)?;
+    let kernel = DominationKernel::parse(args.flag("domination-kernel").unwrap_or("auto"))?;
     let g = recipe.make(seed, idx);
     let f = Filtration::degree_superlevel(&g);
     println!(
@@ -243,6 +252,7 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         g.m()
     );
     let mut rws = ReductionWorkspace::with_prune_threads(prune_threads);
+    rws.set_domination_kernel(kernel);
     let pds = if engine == "legacy" {
         let red = combined_with_ws(&mut rws, &g, &f, k, which)?;
         let c = CliqueComplex::build(&red.graph, &red.filtration, k + 1);
@@ -306,6 +316,11 @@ fn cmd_batch(args: &Args) -> Result<i32> {
     }
     cfg.max_k = args.flag_usize("k", cfg.max_k)?;
     cfg.prune_threads = args.flag_usize("prune-threads", cfg.prune_threads)?;
+    if let Some(kern) = args.flag("domination-kernel") {
+        cfg.domination_kernel = kern.to_string();
+    }
+    // validate up front so a bad value fails before any worker spawns
+    DominationKernel::parse(&cfg.domination_kernel)?;
     let reduction = parse_reduction(&cfg.reduction.clone())?;
     let coordinator = Coordinator::new(cfg.clone());
     let jobs: Vec<Job> = (0..recipe.instances)
@@ -477,6 +492,23 @@ mod tests {
         );
         // non-integer thread counts are a parse error
         assert!(run(&argv("pd --dataset DHFR --prune-threads lots")).is_err());
+    }
+
+    #[test]
+    fn domination_kernel_flag_runs_and_validates() {
+        assert_eq!(
+            run(&argv(
+                "pd --dataset DHFR --reduction combined --domination-kernel bitset --k 1"
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv("reduce --dataset DHFR --domination-kernel merge --k 1")).unwrap(),
+            0
+        );
+        // unknown kernel names are a parse error, not a silent fallback
+        assert!(run(&argv("pd --dataset DHFR --domination-kernel simd")).is_err());
     }
 
     #[test]

@@ -147,6 +147,10 @@ pub struct CoordinatorConfig {
     /// Inner parallelism multiplies with `workers`, so the default keeps
     /// jobs single-threaded and lets the pool own the cores.
     pub prune_threads: usize,
+    /// Domination-kernel policy per job (`--domination-kernel`):
+    /// `auto` (per-round density choice), `merge`, or `bitset`. Residues
+    /// are bit-identical at every setting; only wall time changes.
+    pub domination_kernel: String,
 }
 
 impl CoordinatorConfig {
@@ -161,6 +165,7 @@ impl CoordinatorConfig {
             reduction: cfg.get_str("coordinator.reduction", "prunit+coral"),
             seed: cfg.get_u64("coordinator.seed", 42)?,
             prune_threads: cfg.get_usize("coordinator.prune_threads", 1)?,
+            domination_kernel: cfg.get_str("coordinator.domination_kernel", "auto"),
         })
     }
 }
@@ -225,11 +230,20 @@ mod tests {
         assert_eq!(cc.seed, 9);
         assert_eq!(cc.reduction, "prunit+coral");
         assert_eq!(cc.prune_threads, 4);
+        assert_eq!(cc.domination_kernel, "auto");
     }
 
     #[test]
     fn prune_threads_defaults_to_sequential() {
         let cc = CoordinatorConfig::default();
         assert_eq!(cc.prune_threads, 1);
+    }
+
+    #[test]
+    fn domination_kernel_key_is_read() {
+        let cfg = Config::parse("[coordinator]\ndomination_kernel = \"bitset\"\n").unwrap();
+        let cc = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(cc.domination_kernel, "bitset");
+        assert_eq!(CoordinatorConfig::default().domination_kernel, "auto");
     }
 }

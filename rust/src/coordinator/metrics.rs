@@ -15,6 +15,12 @@ pub struct Metrics {
     pub vertices_out: AtomicU64,
     pub edges_in: AtomicU64,
     pub edges_out: AtomicU64,
+    /// poisoned locks recovered instead of panicking (scratch-pool tiers,
+    /// the job queue, the XLA executable cache) — nonzero means some
+    /// worker panicked mid-batch but the coordinator kept going
+    pub lock_recoveries: AtomicU64,
+    /// worker threads that panicked during a batch
+    pub workers_panicked: AtomicU64,
 }
 
 impl Metrics {
@@ -49,15 +55,28 @@ impl Metrics {
         }
     }
 
+    /// Poisoned-lock recoveries observed so far.
+    pub fn lock_recoveries(&self) -> u64 {
+        self.lock_recoveries.load(Ordering::Relaxed)
+    }
+
+    /// Worker threads that panicked.
+    pub fn workers_panicked(&self) -> u64 {
+        self.workers_panicked.load(Ordering::Relaxed)
+    }
+
     /// Human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} failed={} reduce={:.3}s ph={:.3}s vertex_reduction={:.1}%",
+            "jobs={} failed={} reduce={:.3}s ph={:.3}s vertex_reduction={:.1}% \
+             lock_recoveries={} worker_panics={}",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.reduce_us.load(Ordering::Relaxed) as f64 / 1e6,
             self.ph_us.load(Ordering::Relaxed) as f64 / 1e6,
             self.vertex_reduction_pct(),
+            self.lock_recoveries(),
+            self.workers_panicked(),
         )
     }
 }
@@ -90,5 +109,17 @@ mod tests {
     fn empty_metrics_no_div_by_zero() {
         let m = Metrics::default();
         assert_eq!(m.vertex_reduction_pct(), 0.0);
+    }
+
+    #[test]
+    fn summary_reports_recoveries_and_panics() {
+        let m = Metrics::default();
+        assert!(m.summary().contains("lock_recoveries=0"));
+        m.lock_recoveries.fetch_add(2, Ordering::Relaxed);
+        m.workers_panicked.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.lock_recoveries(), 2);
+        assert_eq!(m.workers_panicked(), 1);
+        assert!(m.summary().contains("lock_recoveries=2"), "{}", m.summary());
+        assert!(m.summary().contains("worker_panics=1"));
     }
 }

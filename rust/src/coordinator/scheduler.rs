@@ -8,6 +8,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::CoordinatorConfig;
 use crate::error::{Error, Result};
+use crate::prune::DominationKernel;
 
 use super::job::{Job, JobResult};
 use super::metrics::Metrics;
@@ -24,12 +25,18 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Coordinator {
+        let metrics = Arc::new(Metrics::default());
         // every worker can hold one scratch per tier in flight, so the
-        // pool never needs to cache more than `workers` per tier
-        let scratch = Arc::new(ScratchPool::new(config.workers.max(1)));
+        // pool never needs to cache more than `workers` per tier; wire
+        // the metrics in so pool-level lock recoveries are visible on
+        // the coordinator's summary line
+        let scratch = Arc::new(ScratchPool::with_metrics(
+            config.workers.max(1),
+            Some(Arc::clone(&metrics)),
+        ));
         Coordinator {
             config,
-            metrics: Arc::new(Metrics::default()),
+            metrics,
             scratch,
         }
     }
@@ -76,6 +83,7 @@ impl Coordinator {
     {
         let workers = self.config.workers.max(1);
         let prune_threads = self.config.prune_threads.max(1);
+        let kernel = DominationKernel::parse(&self.config.domination_kernel)?;
         let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) =
             sync_channel(self.config.queue_depth.max(1));
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -89,13 +97,19 @@ impl Coordinator {
                 let pool = Arc::clone(&self.scratch);
                 std::thread::spawn(move || loop {
                     let job = {
-                        let guard = job_rx.lock().expect("job queue poisoned");
+                        // a peer panicking mid-recv leaves the Receiver
+                        // fully usable — recover instead of cascading
+                        let guard = job_rx.lock().unwrap_or_else(|e| {
+                            metrics.lock_recoveries.fetch_add(1, Ordering::Relaxed);
+                            e.into_inner()
+                        });
                         guard.recv()
                     };
                     let Ok(job) = job else { break };
                     let (v_in, e_in) = (job.graph.n(), job.graph.m());
                     let mut scratch = pool.checkout(job.graph.n());
                     scratch.reduce.set_prune_threads(prune_threads);
+                    scratch.reduce.set_domination_kernel(kernel);
                     let result = execute_job(&mut scratch, &job, w);
                     drop(scratch); // back to its tier
                     match &result {
@@ -149,14 +163,32 @@ impl Coordinator {
             received += 1;
             consume(r, &mut first_err);
         }
+        // A panicking worker must not abort the batch: surviving workers
+        // have already drained the queue by this point. Count the panics,
+        // and only error if jobs were actually lost (a worker died between
+        // receiving a job and sending its result) with nothing else to
+        // report.
+        let mut panicked = 0u64;
         for h in handles {
-            h.join()
-                .map_err(|_| Error::Coordinator("worker panicked".into()))?;
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        if panicked > 0 {
+            self.metrics
+                .workers_panicked
+                .fetch_add(panicked, Ordering::Relaxed);
+            if first_err.is_none() && received < submitted {
+                first_err = Some(Error::Coordinator(format!(
+                    "{panicked} worker(s) panicked; {} job(s) produced no result",
+                    submitted - received
+                )));
+            }
         }
         if let Some(e) = first_err {
             return Err(e);
         }
-        debug_assert_eq!(submitted, received);
+        debug_assert!(panicked > 0 || submitted == received);
         Ok(received)
     }
 
@@ -184,6 +216,7 @@ mod tests {
             reduction: "prunit+coral".into(),
             seed: 1,
             prune_threads: 1,
+            domination_kernel: "auto".into(),
         }
     }
 
@@ -315,6 +348,57 @@ mod tests {
             crate::error::Error::FiltrationMismatch { .. }
         ));
         assert_eq!(c.metrics().failed(), 1);
+    }
+
+    #[test]
+    fn poisoned_scratch_tier_does_not_abort_the_batch() {
+        let c = Coordinator::new(cfg(2, 2));
+        let pool = c.scratch_pool();
+        // poison tier 0 — every `jobs()` graph is small enough to land
+        // there — by panicking while holding its lock
+        let poisoner = std::thread::scope(|scope| {
+            scope
+                .spawn(|| {
+                    let _guard = pool.tier_lock_for_test(0).lock().unwrap();
+                    panic!("poison tier 0");
+                })
+                .join()
+        });
+        assert!(poisoner.is_err(), "the poisoning thread must panic");
+        // the batch still runs to completion on the recovered pool
+        let res = c.run(jobs(8)).unwrap();
+        assert_eq!(res.len(), 8);
+        assert!(pool.poison_recoveries() >= 1);
+        assert!(c.metrics().lock_recoveries() >= 1);
+        assert!(c.metrics().summary().contains("lock_recoveries="));
+    }
+
+    #[test]
+    fn domination_kernel_config_is_threaded_and_invariant() {
+        let a = Coordinator::new(cfg(2, 2)).run(jobs(6)).unwrap();
+        for pin in ["merge", "bitset"] {
+            let mut pinned = cfg(2, 2);
+            pinned.domination_kernel = pin.into();
+            let b = Coordinator::new(pinned).run(jobs(6)).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(
+                    x.reduction.vertices_after, y.reduction.vertices_after,
+                    "kernel={pin}"
+                );
+                assert_eq!(x.reduction.prunit_rounds, y.reduction.prunit_rounds);
+                for k in 0..x.diagrams.len() {
+                    assert!(x.diagrams[k].same_as(&y.diagrams[k], 0.0), "kernel={pin}");
+                }
+            }
+        }
+        // a bogus kernel value is a typed error before any worker spawns
+        let mut bad = cfg(1, 1);
+        bad.domination_kernel = "simd".into();
+        assert!(matches!(
+            Coordinator::new(bad).run(jobs(1)),
+            Err(crate::error::Error::Parse(_))
+        ));
     }
 
     #[test]

@@ -18,8 +18,9 @@
 
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, MutexGuard};
 
+use super::metrics::Metrics;
 use super::worker::WorkerScratch;
 
 /// Number of size tiers. The last tier is unbounded above.
@@ -53,18 +54,46 @@ pub struct ScratchPool {
     max_per_tier: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// tier locks found poisoned and recovered (a worker panicked while
+    /// holding one; the guarded Vec is valid regardless, so we reuse it)
+    poison_recovered: AtomicU64,
+    /// optional sink mirroring recoveries into the coordinator's metrics
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl ScratchPool {
     /// A pool retaining at most `max_per_tier` scratches per tier
     /// (clamped to ≥ 1).
     pub fn new(max_per_tier: usize) -> ScratchPool {
+        ScratchPool::with_metrics(max_per_tier, None)
+    }
+
+    /// [`ScratchPool::new`] with a metrics sink: poisoned-lock recoveries
+    /// are mirrored into `Metrics::lock_recoveries`.
+    pub fn with_metrics(max_per_tier: usize, metrics: Option<Arc<Metrics>>) -> ScratchPool {
         ScratchPool {
             tiers: (0..TIER_COUNT).map(|_| Mutex::new(Vec::new())).collect(),
             max_per_tier: max_per_tier.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            poison_recovered: AtomicU64::new(0),
+            metrics,
         }
+    }
+
+    /// Lock one tier, recovering from poisoning: a panic in a worker that
+    /// held the lock leaves the guarded `Vec<WorkerScratch>` fully valid
+    /// (scratches are plain arenas, re-targeted on every checkout), so
+    /// the pool keeps serving instead of cascading the panic into every
+    /// subsequent job.
+    fn lock_tier(&self, tier: usize) -> MutexGuard<'_, Vec<WorkerScratch>> {
+        self.tiers[tier].lock().unwrap_or_else(|e| {
+            self.poison_recovered.fetch_add(1, Ordering::Relaxed);
+            if let Some(m) = &self.metrics {
+                m.lock_recoveries.fetch_add(1, Ordering::Relaxed);
+            }
+            e.into_inner()
+        })
     }
 
     /// Check out a scratch sized for a graph of `order` vertices: reuse
@@ -72,10 +101,7 @@ impl ScratchPool {
     /// empty. The returned guard checks the scratch back in on drop.
     pub fn checkout(&self, order: usize) -> PooledScratch<'_> {
         let tier = tier_of(order);
-        let reused = self.tiers[tier]
-            .lock()
-            .expect("scratch tier poisoned")
-            .pop();
+        let reused = self.lock_tier(tier).pop();
         let scratch = match reused {
             Some(s) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -94,7 +120,7 @@ impl ScratchPool {
     }
 
     fn check_in(&self, tier: usize, scratch: WorkerScratch) {
-        let mut bucket = self.tiers[tier].lock().expect("scratch tier poisoned");
+        let mut bucket = self.lock_tier(tier);
         if bucket.len() < self.max_per_tier {
             bucket.push(scratch);
         }
@@ -113,20 +139,30 @@ impl ScratchPool {
 
     /// Scratches currently cached across all tiers.
     pub fn cached(&self) -> usize {
-        self.tiers
-            .iter()
-            .map(|t| t.lock().expect("scratch tier poisoned").len())
-            .sum()
+        (0..TIER_COUNT).map(|t| self.lock_tier(t).len()).sum()
+    }
+
+    /// Tier locks found poisoned and recovered.
+    pub fn poison_recoveries(&self) -> u64 {
+        self.poison_recovered.load(Ordering::Relaxed)
     }
 
     /// One-line reuse summary for batch drivers.
     pub fn summary(&self) -> String {
         format!(
-            "scratch_pool: cached={} hits={} misses={}",
+            "scratch_pool: cached={} hits={} misses={} poison_recovered={}",
             self.cached(),
             self.hits(),
-            self.misses()
+            self.misses(),
+            self.poison_recoveries()
         )
+    }
+
+    /// Raw tier lock for poisoning tests: lets a test thread take a tier
+    /// guard and panic while holding it.
+    #[cfg(test)]
+    pub(crate) fn tier_lock_for_test(&self, tier: usize) -> &Mutex<Vec<WorkerScratch>> {
+        &self.tiers[tier]
     }
 }
 
@@ -230,5 +266,32 @@ mod tests {
         // is simply whatever the last user set
         assert_eq!(s.reduce.prune_threads(), 4);
         assert!(pool.summary().contains("hits=1"));
+    }
+
+    #[test]
+    fn poisoned_tier_lock_recovers_and_counts() {
+        let metrics = Arc::new(Metrics::default());
+        let pool = ScratchPool::with_metrics(2, Some(Arc::clone(&metrics)));
+        {
+            let _warm = pool.checkout(50);
+        } // tier 0 now caches one scratch
+        // poison tier 0: panic while holding its lock
+        let poisoner = std::thread::scope(|scope| {
+            scope
+                .spawn(|| {
+                    let _guard = pool.tier_lock_for_test(0).lock().unwrap();
+                    panic!("poison tier 0");
+                })
+                .join()
+        });
+        assert!(poisoner.is_err(), "the poisoning thread must panic");
+        // the pool keeps serving: the cached scratch is still reusable
+        let s = pool.checkout(50);
+        assert_eq!(s.tier(), 0);
+        drop(s);
+        assert_eq!(pool.hits(), 1);
+        assert!(pool.poison_recoveries() >= 1);
+        assert!(metrics.lock_recoveries() >= 1);
+        assert!(pool.summary().contains("poison_recovered="), "{}", pool.summary());
     }
 }

@@ -8,9 +8,12 @@ use std::path::Path;
 use super::Graph;
 use crate::error::{Error, Result};
 
-/// Parse an edge list from a string. Vertex ids may be arbitrary u32s;
-/// they are compacted to `0..n` preserving order of first appearance? No —
-/// ids are used verbatim, with `n = max id + 1`, matching SNAP semantics.
+/// Parse an edge list from a string. Vertex ids are used verbatim, with
+/// `n = max id + 1`, matching SNAP semantics (no compaction). Undirected
+/// edges are normalised to `(min, max)` and deduplicated, so a file that
+/// lists both `u v` and `v u` (or repeats a pair) yields each edge once.
+/// Self-loops and ids of `u32::MAX` (which would overflow `n`) are
+/// rejected with a located [`Error::Parse`].
 pub fn parse_edge_list(text: &str) -> Result<Graph> {
     let mut edges = Vec::new();
     let mut max_id: u32 = 0;
@@ -33,10 +36,26 @@ pub fn parse_edge_list(text: &str) -> Result<Graph> {
         let b: u32 = b
             .parse()
             .map_err(|_| Error::Parse(format!("line {}: bad vertex id {b:?}", lineno + 1)))?;
+        if a == u32::MAX || b == u32::MAX {
+            return Err(Error::Parse(format!(
+                "line {}: vertex id {} overflows the u32 order (max id is {})",
+                lineno + 1,
+                u32::MAX,
+                u32::MAX - 1
+            )));
+        }
+        if a == b {
+            return Err(Error::Parse(format!(
+                "line {}: self-loop {a} {b} (simple graphs only)",
+                lineno + 1
+            )));
+        }
         max_id = max_id.max(a).max(b);
-        edges.push((a, b));
+        edges.push((a.min(b), a.max(b)));
         any = true;
     }
+    edges.sort_unstable();
+    edges.dedup();
     let n = if any { max_id as usize + 1 } else { 0 };
     Ok(Graph::from_edges(n, &edges))
 }
@@ -88,6 +107,34 @@ mod tests {
         assert!(err.to_string().contains("line 2"));
         let err = parse_edge_list("7").unwrap_err();
         assert!(err.to_string().contains("missing target"));
+    }
+
+    #[test]
+    fn max_u32_vertex_id_is_rejected() {
+        let err = parse_edge_list(&format!("0 {}\n", u32::MAX)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 1"), "{msg}");
+        assert!(msg.contains("overflow"), "{msg}");
+        // rejected on either endpoint
+        assert!(parse_edge_list(&format!("{} 3\n", u32::MAX)).is_err());
+    }
+
+    #[test]
+    fn self_loops_are_rejected_with_location() {
+        let err = parse_edge_list("0 1\n2 2\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("self-loop"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_and_reversed_edges_dedup() {
+        let g = parse_edge_list("0 1\n1 0\n0 1\n1 2\n2 1\n").unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 2));
+        assert_eq!(g.degree(1), 2);
     }
 
     #[test]

@@ -1,127 +1,14 @@
 //! Domination queries (paper Definition 4 + Remark 9).
 //!
 //! `u` is dominated by `v` iff `N[u] ⊆ N[v]` (closed neighbourhoods) —
-//! which forces `u ~ v`. The sparse path walks sorted adjacency lists;
-//! the dense reference mirrors the XLA/Pallas kernel's matrix semantics
-//! and is the cross-check for `runtime::dense_prune`.
+//! which forces `u ~ v`. This module holds the plain immutable-graph
+//! queries; the residue-aware checks (tombstone masks, hub bitsets, the
+//! u64-block kernel) live in [`crate::prune::kernel`]. The dense
+//! reference here mirrors the XLA/Pallas kernel's matrix semantics and
+//! is the cross-check for `runtime::dense_prune`.
 
 use crate::complex::Filtration;
 use crate::graph::Graph;
-
-/// Original-CSR degree above which the planner's domination checks switch
-/// from the sorted-merge walk to the [`HubBitset`] membership path. A merge
-/// pays `O(deg(u) + deg(v))` per check — quadratic in the hub degree when a
-/// hub's many low-degree neighbours each probe it — while the bitset pays
-/// `O(deg(v)/64)` once per hub and `O(deg(u))` per check thereafter.
-pub const HUB_DEGREE: usize = 64;
-
-/// Reusable one-vertex neighbourhood bitset (`n` bits in u64 blocks) for
-/// domination checks against hubs. Loading vertex `v` clears the previous
-/// owner's bits neighbour-by-neighbour (O(deg) — never a full O(n/64)
-/// rescan), so repeated probes against the same hub are near-free.
-///
-/// The bits always encode the ORIGINAL adjacency of the owner; callers
-/// that operate on a tombstoned residue (the reduction planner) must skip
-/// dead vertices themselves before testing membership.
-#[derive(Clone, Debug)]
-pub struct HubBitset {
-    bits: Vec<u64>,
-    owner: u32,
-}
-
-impl Default for HubBitset {
-    fn default() -> HubBitset {
-        HubBitset::new()
-    }
-}
-
-impl HubBitset {
-    pub fn new() -> HubBitset {
-        HubBitset {
-            bits: Vec::new(),
-            owner: u32::MAX,
-        }
-    }
-
-    /// Forget the cached owner and zero every block. Required when the
-    /// workspace is re-targeted at a different graph: the stale owner id
-    /// is meaningless there and must not be used to clear bits.
-    pub fn invalidate(&mut self) {
-        self.bits.iter_mut().for_each(|b| *b = 0);
-        self.owner = u32::MAX;
-    }
-
-    /// Make the bitset hold `N(v)` of `g`, reusing the allocation.
-    pub fn load(&mut self, g: &Graph, v: u32) {
-        let words = g.n().div_ceil(64);
-        if self.bits.len() != words {
-            self.bits.clear();
-            self.bits.resize(words, 0);
-            self.owner = u32::MAX;
-        }
-        if self.owner == v {
-            return;
-        }
-        if self.owner != u32::MAX {
-            for &w in g.neighbors(self.owner) {
-                self.bits[w as usize / 64] &= !(1u64 << (w % 64));
-            }
-        }
-        for &w in g.neighbors(v) {
-            self.bits[w as usize / 64] |= 1u64 << (w % 64);
-        }
-        self.owner = v;
-    }
-
-    /// Is `x` a neighbour of the loaded owner?
-    #[inline]
-    pub fn contains(&self, x: u32) -> bool {
-        self.bits[x as usize / 64] & (1u64 << (x % 64)) != 0
-    }
-}
-
-/// Does alive `v` dominate alive `u` in the residue selected by `alive`,
-/// i.e. is `N[u] ∩ alive ⊆ N[v] ∩ alive`? The caller guarantees `u ~ v`
-/// in `g`, that both are alive, and (as a cheap pre-filter) that the
-/// residual degree of `u` does not exceed `v`'s.
-///
-/// This is the hybrid check shared by the sequential planner pass and the
-/// parallel frontier workers: low-degree dominator candidates walk both
-/// sorted adjacency lists; hubs (original degree ≥ [`HUB_DEGREE`]) load
-/// their neighbourhood into the caller's [`HubBitset`] once and answer
-/// each probe in `O(deg(u))`. Read-only on `g`/`alive`, so any number of
-/// workers can run it concurrently against the same residue, each with
-/// its own bitset.
-pub fn residue_dominates(g: &Graph, alive: &[bool], u: u32, v: u32, hub: &mut HubBitset) -> bool {
-    if g.degree(v) >= HUB_DEGREE {
-        hub.load(g, v);
-        for &x in g.neighbors(u) {
-            if x == v || !alive[x as usize] {
-                continue;
-            }
-            if !hub.contains(x) {
-                return false;
-            }
-        }
-        true
-    } else {
-        let nv = g.neighbors(v);
-        let mut j = 0usize;
-        for &x in g.neighbors(u) {
-            if x == v || !alive[x as usize] {
-                continue;
-            }
-            while j < nv.len() && nv[j] < x {
-                j += 1;
-            }
-            if j == nv.len() || nv[j] != x {
-                return false;
-            }
-            j += 1;
-        }
-        true
-    }
-}
 
 /// Does `v` dominate `u` in `g`? (Checked on immutable CSR.)
 pub fn dominates(g: &Graph, u: u32, v: u32) -> bool {
@@ -235,70 +122,11 @@ mod tests {
     }
 
     #[test]
-    fn degree_superlevel_always_admits(){
+    fn degree_superlevel_always_admits() {
         let g = figure3_graph();
         let f = Filtration::degree_superlevel(&g);
         assert_eq!(find_dominator(&g, &f, 3), Some(2));
         assert!(find_dominator(&g, &f, 0).is_some());
-    }
-
-    #[test]
-    fn hub_bitset_tracks_neighbourhoods_across_loads() {
-        let g = gen::erdos_renyi(130, 0.1, 3);
-        let mut bits = HubBitset::new();
-        for v in [0u32, 7, 7, 99, 0] {
-            bits.load(&g, v);
-            for x in 0..g.n() as u32 {
-                assert_eq!(bits.contains(x), g.has_edge(v, x), "owner {v} bit {x}");
-            }
-        }
-        bits.invalidate();
-        // retarget to a different graph with the same word count
-        let h = gen::star(70);
-        bits.load(&h, 0);
-        for x in 0..h.n() as u32 {
-            assert_eq!(bits.contains(x), h.has_edge(0, x));
-        }
-    }
-
-    #[test]
-    fn residue_domination_matches_induced_subgraph() {
-        // killing vertices and re-checking on the mask must agree with
-        // materializing the induced residue and running the plain check
-        let g = gen::erdos_renyi(40, 0.25, 11);
-        let mut rng = crate::util::Rng::new(11);
-        let alive: Vec<bool> = (0..g.n()).map(|_| rng.chance(0.7)).collect();
-        let (h, ids) = g.induced(&alive);
-        let mut hub = HubBitset::new();
-        for (hu, &gu) in ids.iter().enumerate() {
-            for (hv, &gv) in ids.iter().enumerate() {
-                if hu == hv || !g.has_edge(gu, gv) {
-                    continue;
-                }
-                assert_eq!(
-                    residue_dominates(&g, &alive, gu, gv, &mut hub),
-                    dominates(&h, hu as u32, hv as u32),
-                    "residue pair ({gu},{gv})"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn residue_domination_hub_path_matches_merge_path() {
-        // a 150-leaf star forces the bitset branch for the hub dominator
-        let mut edges: Vec<(u32, u32)> = (1..=150).map(|v| (0u32, v)).collect();
-        edges.push((1, 2));
-        let g = Graph::from_edges(151, &edges);
-        assert!(g.degree(0) >= HUB_DEGREE);
-        let mut alive = vec![true; g.n()];
-        alive[3] = false;
-        let mut hub = HubBitset::new();
-        // every leaf is dominated by the hub in the residue
-        assert!(residue_dominates(&g, &alive, 5, 0, &mut hub));
-        assert!(residue_dominates(&g, &alive, 1, 0, &mut hub));
-        // the hub is not dominated by a leaf
-        assert!(!residue_dominates(&g, &alive, 0, 1, &mut hub));
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! PrunIT domination pruning (S4) and the Strong Collapse baseline (S5).
 
 pub mod domination;
+pub mod kernel;
 pub mod prunit;
 pub mod strong_collapse;
 
-pub use domination::{
-    dominated_pairs_dense, dominates, find_dominator, HubBitset, HUB_DEGREE, residue_dominates,
+pub use domination::{dominated_pairs_dense, dominates, find_dominator};
+pub use kernel::{
+    residue_dominates, DominationKernel, HubBitset, KernelChoice, KernelState, HUB_DEGREE,
 };
 pub use prunit::{prunit, PruneResult};
 pub use strong_collapse::{strong_collapse_core, StrongCollapseStats};

@@ -23,6 +23,11 @@
 //! mutually independent — this is exactly what lets the planner
 //! (`reduce::planner`) partition the frontier across threads while
 //! staying bit-identical to this sequential reference.
+//!
+//! This module deliberately stays on the naive sorted-merge residue
+//! check: it is the independent reference the fast kernels in
+//! [`crate::prune::kernel`] (merge walk, chunked u64 bitset) are
+//! differentially tested against.
 
 use crate::complex::Filtration;
 use crate::error::Result;

@@ -51,11 +51,16 @@ impl Reduction {
     }
 }
 
-/// Removal counts of one PrunIT⇄core round of the planner.
+/// Removal counts of one PrunIT⇄core round of the planner, plus the
+/// domination-kernel census of that round's frontier sweeps.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RoundStats {
     pub prunit_removed: usize,
     pub core_removed: usize,
+    /// frontier sweep rounds this pass ran on the sorted-merge kernel
+    pub merge_rounds: usize,
+    /// frontier sweep rounds this pass ran on the u64-block kernel
+    pub bitset_rounds: usize,
 }
 
 /// Bookkeeping for the paper's reduction-percentage metrics plus planner
@@ -109,6 +114,18 @@ impl ReductionReport {
     /// Number of PrunIT⇄core rounds the planner ran.
     pub fn rounds_run(&self) -> usize {
         self.rounds.len()
+    }
+
+    /// Frontier sweep rounds that ran on the sorted-merge kernel, summed
+    /// over all PrunIT passes.
+    pub fn merge_kernel_rounds(&self) -> usize {
+        self.rounds.iter().map(|r| r.merge_rounds).sum()
+    }
+
+    /// Frontier sweep rounds that ran on the u64-block kernel, summed
+    /// over all PrunIT passes.
+    pub fn bitset_kernel_rounds(&self) -> usize {
+        self.rounds.iter().map(|r| r.bitset_rounds).sum()
     }
 
     /// Number of shards the reduced graph split into (0 = not sharded).
@@ -223,14 +240,20 @@ pub fn combined_with_materializing(
             rounds.push(RoundStats {
                 prunit_removed: 0,
                 core_removed: vertices_before - r.graph.n(),
+                merge_rounds: 0,
+                bitset_rounds: 0,
             });
             (r.graph, r.filtration, r.kept_old_ids)
         }
         Reduction::Prunit => {
             let r = prunit(g, f)?;
+            // the materializing reference runs the sequential merge-walk
+            // prunit, so every frontier round counts as a merge round
             rounds.push(RoundStats {
                 prunit_removed: r.removed,
                 core_removed: 0,
+                merge_rounds: r.rounds,
+                bitset_rounds: 0,
             });
             prunit_rounds += r.rounds;
             (r.graph, r.filtration, r.kept_old_ids)
@@ -241,6 +264,8 @@ pub fn combined_with_materializing(
             rounds.push(RoundStats {
                 prunit_removed: p.removed,
                 core_removed: p.graph.n() - c.graph.n(),
+                merge_rounds: p.rounds,
+                bitset_rounds: 0,
             });
             prunit_rounds += p.rounds;
             let ids = c
@@ -260,6 +285,8 @@ pub fn combined_with_materializing(
                 let round = RoundStats {
                     prunit_removed: p.removed,
                     core_removed: p.graph.n() - c.graph.n(),
+                    merge_rounds: p.rounds,
+                    bitset_rounds: 0,
                 };
                 rounds.push(round);
                 prunit_rounds += p.rounds;

@@ -24,7 +24,7 @@
 //! Because the check phase is read-only against the shared `alive`/`deg`
 //! arrays, a round's checks commute: [`ReductionWorkspace::set_prune_threads`]
 //! partitions the frontier across that many scoped worker threads, each
-//! with its own [`HubBitset`], and concatenates the per-worker candidate
+//! with its own [`KernelState`], and concatenates the per-worker candidate
 //! sets in chunk order. The candidate list — and therefore the residue —
 //! is **bit-identical at every thread count**, and identical to the
 //! sequential reference `prune::prunit` (differential suite:
@@ -36,10 +36,17 @@
 //!
 //! * **No `Vec::remove` on adjacency lists.** Death is a mask bit plus a
 //!   degree decrement; neighbour lists are never edited.
-//! * **Hybrid domination checks.** Low-degree dominator candidates use
-//!   the sorted-merge walk; hub candidates (original degree ≥
-//!   [`HUB_DEGREE`]) load a u64-block neighbourhood bitset once and
-//!   answer each probe in O(deg(u)) — see `prune::residue_dominates`.
+//! * **Adaptive domination kernel.** Every round picks its check kernel
+//!   from the measured round-start residue density
+//!   (`prune::kernel::choose`): the sorted-merge walk (+ hub bitset for
+//!   dominators of original degree ≥ `HUB_DEGREE`) on sparse fringes, the
+//!   u64-block subset kernel on dense cores. Both kernels compute the
+//!   identical predicate, so the choice — and the
+//!   `--domination-kernel merge|bitset` pins exposed through
+//!   [`ReductionWorkspace::set_domination_kernel`] — never changes the
+//!   residue, only wall time. The per-round choice is recorded in
+//!   [`RoundStats`] (`merge_rounds`/`bitset_rounds`) and
+//!   [`ReductionWorkspace::kernel_rounds`].
 //!
 //! On top of the workspace, [`Reduction::FixedPoint`] alternates PrunIT
 //! and the (k+1)-core peel until neither removes a vertex. Each stage
@@ -53,7 +60,7 @@ use crate::complex::Filtration;
 use crate::error::Result;
 use crate::graph::decompose::Shard;
 use crate::graph::Graph;
-use crate::prune::domination::{residue_dominates, HubBitset};
+use crate::prune::kernel::{self, DominationKernel, KernelChoice, KernelState};
 use crate::util::Timer;
 
 use super::pipeline::{Reduction, RoundStats};
@@ -82,23 +89,30 @@ fn effective_threads(requested: usize, frontier_len: usize) -> usize {
 
 /// Find the frontier vertex `u`'s witness dominator in the residue, or
 /// None: the first alive neighbour `v` (ascending CSR order) with
-/// residual degree ≥ `u`'s that admissibly dominates `u`. Read-only on
-/// everything but the caller's hub bitset — safe to run from any number
-/// of frontier workers concurrently.
+/// residual degree ≥ `u`'s that admissibly dominates `u`, checked under
+/// the round's domination kernel. Read-only on everything but the
+/// caller's kernel state — safe to run from any number of frontier
+/// workers concurrently.
 fn find_witness(
     g: &Graph,
     f: &Filtration,
     alive: &[bool],
     deg: &[u32],
     u: u32,
-    hub: &mut HubBitset,
+    choice: KernelChoice,
+    state: &mut KernelState,
 ) -> Option<u32> {
+    if choice == KernelChoice::Bitset {
+        // one candidate-side load per frontier vertex; every dominator
+        // probe below reuses the bits
+        state.load_candidate(g, alive, u);
+    }
     let du = deg[u as usize];
     for &v in g.neighbors(u) {
         if !alive[v as usize] || deg[v as usize] < du {
             continue;
         }
-        if f.admissible_removal(u, v) && residue_dominates(g, alive, u, v, hub) {
+        if f.admissible_removal(u, v) && state.residue_dominates(g, alive, u, v, choice) {
             return Some(v);
         }
     }
@@ -116,7 +130,8 @@ fn sweep_chunk(
     alive: &[bool],
     deg: &[u32],
     chunk: &[u32],
-    hub: &mut HubBitset,
+    choice: KernelChoice,
+    state: &mut KernelState,
     out: &mut Vec<(u32, u32)>,
 ) -> usize {
     let mut checks = 0usize;
@@ -125,7 +140,7 @@ fn sweep_chunk(
             continue;
         }
         checks += 1;
-        if let Some(v) = find_witness(g, f, alive, deg, u, hub) {
+        if let Some(v) = find_witness(g, f, alive, deg, u, choice, state) {
             out.push((u, v));
         }
     }
@@ -133,12 +148,12 @@ fn sweep_chunk(
 }
 
 /// Per-thread scratch for the parallel check phase: a candidate output
-/// buffer plus a private hub bitset (the bitset caches one loaded
-/// neighbourhood, so sharing it across threads would both race and
-/// thrash).
+/// buffer plus a private kernel state (the bitsets cache one loaded
+/// neighbourhood each, so sharing them across threads would both race
+/// and thrash).
 #[derive(Clone, Debug, Default)]
 struct FrontierWorker {
-    hub: HubBitset,
+    state: KernelState,
     out: Vec<(u32, u32)>,
     checks: usize,
 }
@@ -164,10 +179,13 @@ pub struct ReductionWorkspace {
     /// configured PrunIT check-phase threads (0 and 1 both mean inline);
     /// survives `plan`/`reset` — it is configuration, not per-plan state
     prune_threads: usize,
+    /// requested domination-kernel policy; survives `plan`/`reset` like
+    /// `prune_threads` — configuration, not per-plan state
+    kernel: DominationKernel,
     /// core-peel stack (scratch for `kcore::peel_residue`)
     peel: Vec<u32>,
-    /// hub neighbourhood bitset for inline (single-thread) check phases
-    hub: HubBitset,
+    /// domination-kernel state for inline (single-thread) check phases
+    kstate: KernelState,
     /// component labels over alive vertices (emit_shards scratch)
     labels: Vec<u32>,
     /// old id -> compacted id scratch
@@ -176,6 +194,12 @@ pub struct ReductionWorkspace {
     stack: Vec<u32>,
     // --- telemetry of the latest plan ---
     rounds: Vec<RoundStats>,
+    /// the kernel each frontier round actually ran, in round order
+    kernel_log: Vec<KernelChoice>,
+    /// frontier rounds run on the merge kernel (latest plan)
+    merge_rounds: usize,
+    /// frontier rounds run on the u64-block kernel (latest plan)
+    bitset_rounds: usize,
     prunit_secs: f64,
     core_secs: f64,
     checks: usize,
@@ -207,6 +231,33 @@ impl ReductionWorkspace {
         self.prune_threads.max(1)
     }
 
+    /// A workspace with a pinned (or explicitly `Auto`) domination-kernel
+    /// policy — the `--domination-kernel` override.
+    pub fn with_domination_kernel(kernel: DominationKernel) -> ReductionWorkspace {
+        let mut ws = ReductionWorkspace::default();
+        ws.set_domination_kernel(kernel);
+        ws
+    }
+
+    /// Configure the domination-kernel policy. Both kernels compute the
+    /// identical predicate, so the residue is bit-identical at every
+    /// setting; only wall time changes.
+    pub fn set_domination_kernel(&mut self, kernel: DominationKernel) {
+        self.kernel = kernel;
+    }
+
+    /// The configured domination-kernel policy.
+    pub fn domination_kernel(&self) -> DominationKernel {
+        self.kernel
+    }
+
+    /// The kernel each frontier round of the latest plan actually ran, in
+    /// round order (`Auto` resolved per round by residue density). Always
+    /// `frontier_rounds()` entries long.
+    pub fn kernel_rounds(&self) -> &[KernelChoice] {
+        &self.kernel_log
+    }
+
     /// Re-target the workspace at `g`: everything alive, residual degrees
     /// = original degrees, telemetry cleared.
     fn reset(&mut self, g: &Graph) {
@@ -221,13 +272,16 @@ impl ReductionWorkspace {
         self.in_frontier.resize(n, false);
         self.cands.clear();
         self.peel.clear();
-        self.hub.invalidate();
+        self.kstate.invalidate();
         for w in &mut self.workers {
-            w.hub.invalidate();
+            w.state.invalidate();
             w.out.clear();
             w.checks = 0;
         }
         self.rounds.clear();
+        self.kernel_log.clear();
+        self.merge_rounds = 0;
+        self.bitset_rounds = 0;
         self.prunit_secs = 0.0;
         self.core_secs = 0.0;
         self.checks = 0;
@@ -250,29 +304,40 @@ impl ReductionWorkspace {
                 self.rounds.push(RoundStats {
                     prunit_removed: 0,
                     core_removed: c,
+                    merge_rounds: 0,
+                    bitset_rounds: 0,
                 });
             }
             Reduction::Prunit => {
+                let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
                 let p = self.timed_prunit(g, f);
                 self.rounds.push(RoundStats {
                     prunit_removed: p,
                     core_removed: 0,
+                    merge_rounds: self.merge_rounds - m0,
+                    bitset_rounds: self.bitset_rounds - b0,
                 });
             }
             Reduction::Combined => {
+                let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
                 let p = self.timed_prunit(g, f);
                 let c = self.timed_core(g, k1);
                 self.rounds.push(RoundStats {
                     prunit_removed: p,
                     core_removed: c,
+                    merge_rounds: self.merge_rounds - m0,
+                    bitset_rounds: self.bitset_rounds - b0,
                 });
             }
             Reduction::FixedPoint => loop {
+                let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
                 let p = self.timed_prunit(g, f);
                 let c = self.timed_core(g, k1);
                 self.rounds.push(RoundStats {
                     prunit_removed: p,
                     core_removed: c,
+                    merge_rounds: self.merge_rounds - m0,
+                    bitset_rounds: self.bitset_rounds - b0,
                 });
                 if p + c == 0 {
                     break;
@@ -325,14 +390,41 @@ impl ReductionWorkspace {
         removed_total
     }
 
+    /// Resolve the domination kernel for the round about to run: pinned
+    /// policies resolve immediately; `Auto` measures the round-start
+    /// residue density (alive count + residual degree sum — the O(n) scan
+    /// is skipped entirely for pinned kernels). Thread-count independent:
+    /// the inputs are round-start aggregates, identical however the
+    /// frontier is chunked.
+    fn round_kernel(&self, g: &Graph) -> KernelChoice {
+        if self.kernel != DominationKernel::Auto {
+            return kernel::choose(self.kernel, g.n(), 0, 0);
+        }
+        let degree_sum: usize = self
+            .alive
+            .iter()
+            .zip(&self.deg)
+            .filter(|(&a, _)| a)
+            .map(|(_, &d)| d as usize)
+            .sum();
+        kernel::choose(self.kernel, g.n(), self.alive_count, degree_sum)
+    }
+
     /// Check phase: fill `self.cands` with this round's `(vertex,
     /// witness)` pairs in frontier (ascending) order, reading the
     /// round-start `alive`/`deg` state. Runs inline or fanned out over
     /// scoped threads — the output is identical either way, because every
-    /// check is a pure function of the shared round-start arrays and the
-    /// frontier chunks are concatenated back in order.
+    /// check is a pure function of the shared round-start arrays (kernel
+    /// choice included) and the frontier chunks are concatenated back in
+    /// order.
     fn collect_candidates(&mut self, g: &Graph, f: &Filtration) {
         self.cands.clear();
+        let choice = self.round_kernel(g);
+        self.kernel_log.push(choice);
+        match choice {
+            KernelChoice::Merge => self.merge_rounds += 1,
+            KernelChoice::Bitset => self.bitset_rounds += 1,
+        }
         let threads = effective_threads(self.prune_threads, self.frontier.len());
         if threads <= 1 {
             self.checks += sweep_chunk(
@@ -341,7 +433,8 @@ impl ReductionWorkspace {
                 &self.alive,
                 &self.deg,
                 &self.frontier,
-                &mut self.hub,
+                choice,
+                &mut self.kstate,
                 &mut self.cands,
             );
             return;
@@ -362,7 +455,8 @@ impl ReductionWorkspace {
             std::thread::scope(|scope| {
                 for (w, slice) in workers.iter_mut().zip(frontier.chunks(chunk)) {
                     scope.spawn(move || {
-                        w.checks = sweep_chunk(g, f, alive, deg, slice, &mut w.hub, &mut w.out);
+                        w.checks =
+                            sweep_chunk(g, f, alive, deg, slice, choice, &mut w.state, &mut w.out);
                     });
                 }
             });
@@ -573,7 +667,7 @@ mod tests {
     use super::*;
     use crate::graph::gen;
     use crate::homology::persistence_diagrams;
-    use crate::prune::domination::HUB_DEGREE;
+    use crate::prune::kernel::HUB_DEGREE;
     use crate::prune::prunit;
     use crate::reduce::coral_reduce;
 
@@ -756,6 +850,68 @@ mod tests {
         assert!(ws.rounds().len() <= removed_by_rounds + 1);
         assert!(ws.checks() > 0);
         assert!(ws.frontier_rounds() >= ws.rounds().len());
+    }
+
+    #[test]
+    fn kernel_choice_is_recorded_per_round() {
+        // complete graph: the residue stays dense, so Auto runs the block
+        // kernel on (at least) the heavy early rounds
+        let g = gen::complete(30);
+        let f = Filtration::degree_superlevel(&g);
+        let mut ws = ReductionWorkspace::new();
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        assert_eq!(ws.kernel_rounds().len(), ws.frontier_rounds());
+        let bitset: usize = ws.rounds().iter().map(|r| r.bitset_rounds).sum();
+        let merge: usize = ws.rounds().iter().map(|r| r.merge_rounds).sum();
+        assert!(bitset > 0, "dense residue must engage the block kernel");
+        assert_eq!(bitset + merge, ws.frontier_rounds());
+        assert_eq!(
+            ws.kernel_rounds()
+                .iter()
+                .filter(|&&k| k == KernelChoice::Bitset)
+                .count(),
+            bitset
+        );
+
+        // pinned kernels: identical residue, census all on one side
+        let pins = [(DominationKernel::Merge, true), (DominationKernel::Bitset, false)];
+        for (pin, want_merge) in pins {
+            let mut pinned = ReductionWorkspace::with_domination_kernel(pin);
+            pinned.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+            assert_eq!(pinned.alive(), ws.alive(), "{}", pin.name());
+            assert_eq!(pinned.domination_kernel(), pin);
+            let m: usize = pinned.rounds().iter().map(|r| r.merge_rounds).sum();
+            let b: usize = pinned.rounds().iter().map(|r| r.bitset_rounds).sum();
+            if want_merge {
+                assert_eq!((m, b), (pinned.frontier_rounds(), 0));
+            } else {
+                assert_eq!((m, b), (0, pinned.frontier_rounds()));
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_fringe_resolves_auto_to_merge() {
+        // avg degree ~2 at n=3000: the crossover needs avg residual
+        // degree ≥ words/8 ≈ 5.9, which this residue never approaches
+        let g = gen::erdos_renyi(3000, 2.0 / 3000.0, 23);
+        let f = Filtration::degree_superlevel(&g);
+        let mut ws = ReductionWorkspace::new();
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        assert!(ws.frontier_rounds() > 0);
+        assert!(ws.kernel_rounds().iter().all(|&k| k == KernelChoice::Merge));
+    }
+
+    #[test]
+    fn kernel_config_survives_reset_like_prune_threads() {
+        let g = gen::complete(12);
+        let f = Filtration::degree_superlevel(&g);
+        let mut ws = ReductionWorkspace::with_domination_kernel(DominationKernel::Bitset);
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        assert_eq!(ws.domination_kernel(), DominationKernel::Bitset);
+        let m: usize = ws.rounds().iter().map(|r| r.merge_rounds).sum();
+        assert_eq!(m, 0, "pin must survive re-planning");
     }
 
     #[test]

@@ -78,7 +78,15 @@ mod live {
             bucket: usize,
         ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
             let key = (kernel.to_string(), bucket);
-            if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            // recover a poisoned cache lock: the map only ever holds
+            // finished Arc'd executables, so it is valid whatever the
+            // panicking holder was doing
+            if let Some(exe) = self
+                .cache
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .get(&key)
+            {
                 return Ok(std::sync::Arc::clone(exe));
             }
             let path = self.manifest.path_for(kernel, bucket)?;
@@ -92,7 +100,7 @@ mod live {
             let exe = std::sync::Arc::new(exe);
             self.cache
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .insert(key, std::sync::Arc::clone(&exe));
             Ok(exe)
         }

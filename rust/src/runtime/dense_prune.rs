@@ -12,10 +12,22 @@
 //! small/dense graphs of the paper's graph-classification datasets; the
 //! sparse CPU path (`prune::prunit`) covers large networks. Both paths
 //! are cross-checked for PD equality in `rust/tests/`.
+//!
+//! The host-side greedy resolution shares the sparse planner's u64-block
+//! layout: device mask rows are packed into block vectors and the
+//! live-dominator test is `prune::kernel::blocks_subset` — one
+//! representation for both execution paths (ROADMAP item 4).
+//!
+//! `PruneResult::checks` counts what the sparse path counts: domination
+//! checks per candidate. The device kernel evaluates every current
+//! vertex each sweep, so the dense path charges the sweep's vertex count
+//! — previously it misreported the sweep count itself, making `checks`
+//! mean different things per backend.
 
 use crate::complex::Filtration;
 use crate::error::Result;
 use crate::graph::Graph;
+use crate::prune::kernel;
 use crate::prune::PruneResult;
 
 use super::client::XlaRuntime;
@@ -62,24 +74,17 @@ pub fn prunit_dense(rt: &XlaRuntime, g: &Graph, f: &Filtration) -> Result<PruneR
     let mut cur_ids: Vec<u32> = (0..g.n() as u32).collect();
     let mut removed_total = 0usize;
     let mut sweeps = 0usize;
+    let mut checks = 0usize;
 
     loop {
         sweeps += 1;
+        // the device kernel checks every current vertex against every
+        // candidate dominator — charge one check per vertex, the same
+        // accounting unit as the sparse frontier sweep
+        checks += cur.n();
         let out = rt.domination_sweep(&cur, &cur_f)?;
-        // Greedy ascending selection within the sweep.
         let n = cur.n();
-        let mut removed_now = vec![false; n];
-        let mut any = false;
-        for u in 0..n {
-            if !out.dominated[u] {
-                continue;
-            }
-            let has_live_dominator = (0..n).any(|v| out.mask[u][v] && !removed_now[v]);
-            if has_live_dominator {
-                removed_now[u] = true;
-                any = true;
-            }
-        }
+        let (removed_now, any) = greedy_select(&out.mask, &out.dominated);
         if !any {
             break;
         }
@@ -106,9 +111,96 @@ pub fn prunit_dense(rt: &XlaRuntime, g: &Graph, f: &Filtration) -> Result<PruneR
         kept_old_ids,
         filtration,
         removed: removed_total,
-        checks: sweeps,
+        checks,
         rounds: sweeps,
     })
+}
+
+/// One sweep's greedy-ascending selection over the device's dominated
+/// mask: vertex `u` is removed iff it is dominated and some dominator
+/// survives the removals made earlier in this sweep. Each row is packed
+/// into u64 blocks so the survivor test is the shared block primitive —
+/// a live dominator exists ⟺ the row is NOT a subset of the removed set
+/// (`!blocks_subset`) — instead of the old O(n) bool scan per vertex.
+///
+/// Soundness is unchanged from the scan (see module docs): each removal
+/// is justified against the removals made strictly before it.
+fn greedy_select(mask: &[Vec<bool>], dominated: &[bool]) -> (Vec<bool>, bool) {
+    let n = dominated.len();
+    let words = n.div_ceil(64).max(1);
+    let mut removed_bits = vec![0u64; words];
+    let mut row = vec![0u64; words];
+    let mut removed_now = vec![false; n];
+    let mut any = false;
+    for u in 0..n {
+        if !dominated[u] {
+            continue;
+        }
+        row.iter_mut().for_each(|w| *w = 0);
+        for (v, &m) in mask[u].iter().enumerate() {
+            if m {
+                kernel::set_block_bit(&mut row, v);
+            }
+        }
+        if !kernel::blocks_subset(&row, &removed_bits) {
+            removed_now[u] = true;
+            kernel::set_block_bit(&mut removed_bits, u);
+            any = true;
+        }
+    }
+    (removed_now, any)
+}
+
+// greedy_select is pure host code: test it without the xla feature, as a
+// differential against the per-vertex scan it replaced.
+#[cfg(test)]
+mod select_tests {
+    use super::greedy_select;
+    use crate::util::Rng;
+
+    fn reference(mask: &[Vec<bool>], dominated: &[bool]) -> (Vec<bool>, bool) {
+        let n = dominated.len();
+        let mut removed_now = vec![false; n];
+        let mut any = false;
+        for u in 0..n {
+            if !dominated[u] {
+                continue;
+            }
+            let has_live_dominator = (0..n).any(|v| mask[u][v] && !removed_now[v]);
+            if has_live_dominator {
+                removed_now[u] = true;
+                any = true;
+            }
+        }
+        (removed_now, any)
+    }
+
+    #[test]
+    fn packed_selection_matches_scan_reference() {
+        let mut rng = Rng::new(321);
+        for n in [0usize, 1, 5, 17, 63, 64, 65, 130] {
+            for density in [0.02f64, 0.15, 0.6] {
+                let mask: Vec<Vec<bool>> = (0..n)
+                    .map(|_| (0..n).map(|_| rng.chance(density)).collect())
+                    .collect();
+                let dominated: Vec<bool> = mask.iter().map(|row| row.iter().any(|&m| m)).collect();
+                let got = greedy_select(&mask, &dominated);
+                let want = reference(&mask, &dominated);
+                assert_eq!(got, want, "n={n} density={density}");
+            }
+        }
+    }
+
+    #[test]
+    fn twin_cycle_keeps_first_survivor() {
+        // 0 and 1 mutually dominate: greedy ascending removes 0 (1 still
+        // live), then 1 survives (its only dominator is now removed)
+        let mask = vec![vec![false, true], vec![true, false]];
+        let dominated = vec![true, true];
+        let (removed, any) = greedy_select(&mask, &dominated);
+        assert!(any);
+        assert_eq!(removed, vec![true, false]);
+    }
 }
 
 // These tests exercise the live PJRT path: they need the `xla` feature
@@ -133,6 +225,11 @@ mod tests {
         let sparse = prunit(&g, &f).unwrap();
         assert_eq!(dense.graph.n(), sparse.graph.n());
         assert!(dense.graph.n() <= 2);
+        // checks are per-candidate on both backends: at least one full
+        // pass over the original vertices each (schedules differ, so
+        // exact equality is not expected)
+        assert!(dense.checks >= g.n(), "dense checks undercounted");
+        assert!(sparse.checks >= g.n());
     }
 
     #[test]
@@ -147,6 +244,9 @@ mod tests {
             let f = Filtration::degree_superlevel(&g);
             let base = persistence_diagrams(&g, &f, 1);
             let dense = prunit_dense(&rt, &g, &f).unwrap();
+            let sparse = prunit(&g, &f).unwrap();
+            // same accounting unit on both backends (per-candidate checks)
+            assert!(dense.checks >= g.n() && sparse.checks >= g.n());
             let dd = persistence_diagrams(&dense.graph, &dense.filtration, 1);
             for k in 0..=1 {
                 assert!(
@@ -172,7 +272,10 @@ mod tests {
                 "vertex {u} still prunable after dense fixed point"
             );
         }
-        assert!(r.checks >= 1, "at least one sweep");
+        // every sweep charges the vertex count it evaluated, so the total
+        // is at least the original order (first sweep checks everything)
+        assert!(r.checks >= g.n(), "checks must count per-vertex work");
+        assert!(r.rounds >= 1, "at least one sweep");
     }
 
     #[test]

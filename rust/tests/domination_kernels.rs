@@ -1,0 +1,204 @@
+//! Differential suite for the unified residue-domination kernel
+//! (ISSUE 6 tentpole): every kernel policy (merge walk, chunked-u64
+//! bitset, per-round auto) at every thread count must produce the
+//! **bit-identical** residue, frontier-round count, and check count as
+//! the sequential reference `prune::prunit` — on a corpus spanning
+//! sparse fringes (merge territory), dense cores and hubs (bitset
+//! territory), and graphs large enough to engage the scoped-thread
+//! frontier sweep. Persistence diagrams and the per-round kernel census
+//! recorded in `RoundStats` are checked on top.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::persistence_diagrams;
+use coral_prunit::prune::{prunit, DominationKernel, KernelChoice};
+use coral_prunit::reduce::{combined_with_ws, Reduction, ReductionWorkspace, PAR_FRONTIER_MIN};
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+const KERNELS: [DominationKernel; 3] = [
+    DominationKernel::Merge,
+    DominationKernel::Bitset,
+    DominationKernel::Auto,
+];
+
+/// The corpus: (description, graph). Spans both sides of the auto
+/// crossover — sparse ER/BA fringes resolve to the merge walk, dense
+/// blocks and cliques to the bitset — plus structured cases (stars,
+/// twins) where domination cascades.
+fn corpus() -> Vec<(String, Graph)> {
+    let mut out: Vec<(String, Graph)> = Vec::new();
+    for (n, p, seed) in [
+        (30usize, 0.3f64, 1u64),
+        (120, 0.08, 2),
+        (700, 0.15, 3),
+        (2048, 0.003, 4),
+        (3000, 5.0 / 3000.0, 5),
+    ] {
+        out.push((format!("ER({n},{p})"), gen::erdos_renyi(n, p, seed)));
+    }
+    for (n, m, seed) in [(100usize, 2usize, 6u64), (3000, 3, 7)] {
+        out.push((format!("BA({n},{m})"), gen::barabasi_albert(n, m, seed)));
+    }
+    let mut edges: Vec<(u32, u32)> = (0..6).map(|i| (i, (i + 1) % 6)).collect();
+    edges.push((0, 6));
+    edges.push((6, 7));
+    out.push(("cycle+tail".into(), Graph::from_edges(8, &edges)));
+    out.push(("star(80)".into(), gen::star(80)));
+    out.push(("complete(24)".into(), gen::complete(24)));
+    out
+}
+
+#[test]
+fn every_kernel_and_thread_count_matches_the_sequential_reference() {
+    for (desc, g) in corpus() {
+        let f = Filtration::degree_superlevel(&g);
+        let reference = prunit(&g, &f).unwrap();
+        for kernel in KERNELS {
+            for threads in THREAD_SWEEP {
+                let mut ws = ReductionWorkspace::with_prune_threads(threads);
+                ws.set_domination_kernel(kernel);
+                ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+                let kept: Vec<u32> = (0..g.n() as u32)
+                    .filter(|&v| ws.alive()[v as usize])
+                    .collect();
+                let tag = format!("{desc} kernel={} threads={threads}", kernel.name());
+                assert_eq!(kept, reference.kept_old_ids, "{tag}: alive set");
+                assert_eq!(ws.frontier_rounds(), reference.rounds, "{tag}: rounds");
+                assert_eq!(ws.checks(), reference.checks, "{tag}: checks");
+            }
+        }
+    }
+}
+
+#[test]
+fn corpus_engages_both_kernels_and_the_parallel_sweep() {
+    let graphs = corpus();
+    let big = graphs.iter().filter(|(_, g)| g.n() >= PAR_FRONTIER_MIN).count();
+    assert!(big >= 3, "corpus must keep several super-threshold graphs");
+    // under Auto, at least one corpus member must resolve some round to
+    // each kernel — otherwise the differential covers only one code path
+    let mut merge = 0usize;
+    let mut bitset = 0usize;
+    for (_, g) in &graphs {
+        let f = Filtration::degree_superlevel(g);
+        let mut ws = ReductionWorkspace::new();
+        ws.plan(g, &f, 1, Reduction::Prunit).unwrap();
+        merge += ws
+            .kernel_rounds()
+            .iter()
+            .filter(|&&k| k == KernelChoice::Merge)
+            .count();
+        bitset += ws
+            .kernel_rounds()
+            .iter()
+            .filter(|&&k| k == KernelChoice::Bitset)
+            .count();
+    }
+    assert!(merge > 0, "auto never picked the merge walk on the corpus");
+    assert!(bitset > 0, "auto never picked the bitset kernel on the corpus");
+}
+
+#[test]
+fn diagrams_are_identical_across_kernels() {
+    for (desc, g) in corpus().into_iter().filter(|(_, g)| g.n() <= 150) {
+        let f = Filtration::degree_superlevel(&g);
+        let before = persistence_diagrams(&g, &f, 1);
+        let mut reduced: Vec<Vec<coral_prunit::homology::Diagram>> = Vec::new();
+        for kernel in KERNELS {
+            let mut ws = ReductionWorkspace::with_domination_kernel(kernel);
+            let red = combined_with_ws(&mut ws, &g, &f, 1, Reduction::Prunit).unwrap();
+            let after = persistence_diagrams(&red.graph, &red.filtration, 1);
+            for k in 0..=1 {
+                assert!(
+                    before[k].same_as(&after[k], 1e-9),
+                    "{desc} kernel={} PD_{k}",
+                    kernel.name()
+                );
+            }
+            reduced.push(after);
+        }
+        // across kernels the reduced diagrams must agree exactly, not
+        // merely within tolerance of the unreduced ones
+        for pds in &reduced[1..] {
+            for k in 0..=1 {
+                assert!(reduced[0][k].same_as(&pds[k], 0.0), "{desc} PD_{k} drifted");
+            }
+        }
+    }
+}
+
+#[test]
+fn round_stats_record_the_kernel_census() {
+    let g = gen::complete(30);
+    let f = Filtration::degree_superlevel(&g);
+    let mut ws = ReductionWorkspace::new();
+    let red = combined_with_ws(&mut ws, &g, &f, 1, Reduction::Prunit).unwrap();
+    let merge = red.report.merge_kernel_rounds();
+    let bitset = red.report.bitset_kernel_rounds();
+    assert_eq!(
+        merge + bitset,
+        ws.frontier_rounds(),
+        "every frontier round must be attributed to exactly one kernel"
+    );
+    assert_eq!(ws.kernel_rounds().len(), ws.frontier_rounds());
+    assert!(bitset > 0, "K30 rounds are dense; auto must pick the bitset");
+
+    // pinned runs report a one-sided census
+    let mut mws = ReductionWorkspace::with_domination_kernel(DominationKernel::Merge);
+    let mred = combined_with_ws(&mut mws, &g, &f, 1, Reduction::Prunit).unwrap();
+    assert_eq!(mred.report.bitset_kernel_rounds(), 0);
+    assert_eq!(mred.report.merge_kernel_rounds(), mws.frontier_rounds());
+    let mut bws = ReductionWorkspace::with_domination_kernel(DominationKernel::Bitset);
+    let bred = combined_with_ws(&mut bws, &g, &f, 1, Reduction::Prunit).unwrap();
+    assert_eq!(bred.report.merge_kernel_rounds(), 0);
+    assert_eq!(bred.report.bitset_kernel_rounds(), bws.frontier_rounds());
+    // and the pinned residues agree with each other
+    assert_eq!(mred.graph, bred.graph);
+    assert_eq!(mred.kept_old_ids, bred.kept_old_ids);
+}
+
+#[test]
+fn fixed_point_alternation_is_kernel_invariant() {
+    let g = gen::barabasi_albert(2500, 3, 13);
+    let f = Filtration::degree_superlevel(&g);
+    let mut mws = ReductionWorkspace::with_domination_kernel(DominationKernel::Merge);
+    let reference = combined_with_ws(&mut mws, &g, &f, 1, Reduction::FixedPoint).unwrap();
+    for kernel in [DominationKernel::Bitset, DominationKernel::Auto] {
+        for threads in [1usize, 4] {
+            let mut ws = ReductionWorkspace::with_prune_threads(threads);
+            ws.set_domination_kernel(kernel);
+            let red = combined_with_ws(&mut ws, &g, &f, 1, Reduction::FixedPoint).unwrap();
+            let tag = format!("kernel={} threads={threads}", kernel.name());
+            assert_eq!(red.graph, reference.graph, "{tag}");
+            assert_eq!(red.kept_old_ids, reference.kept_old_ids, "{tag}");
+            assert_eq!(
+                red.report.prunit_rounds, reference.report.prunit_rounds,
+                "{tag}: frontier schedule"
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_reconfiguration_between_plans_is_stateless() {
+    let g = gen::erdos_renyi(700, 0.15, 3);
+    let f = Filtration::degree_superlevel(&g);
+    let reference = prunit(&g, &f).unwrap();
+    let mut ws = ReductionWorkspace::new();
+    for kernel in [
+        DominationKernel::Bitset,
+        DominationKernel::Merge,
+        DominationKernel::Auto,
+        DominationKernel::Bitset,
+        DominationKernel::Merge,
+    ] {
+        ws.set_domination_kernel(kernel);
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        let kept: Vec<u32> = (0..g.n() as u32)
+            .filter(|&v| ws.alive()[v as usize])
+            .collect();
+        assert_eq!(kept, reference.kept_old_ids, "kernel={}", kernel.name());
+        assert_eq!(ws.checks(), reference.checks, "kernel={}", kernel.name());
+    }
+}
