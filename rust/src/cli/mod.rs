@@ -69,6 +69,15 @@ impl Args {
                 .map_err(|_| Error::Parse(format!("--{key}: expected integer, got {v:?}"))),
         }
     }
+
+    pub fn flag_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{key}: expected number, got {v:?}"))),
+        }
+    }
 }
 
 /// Parse a `--reduction` flag value.
@@ -116,6 +125,15 @@ COMMANDS:
            [--prune-threads T]       per-job PrunIT threads (default 1:
                                      the worker pool owns the cores)
            [--domination-kernel auto|merge|bitset]
+           [--job-deadline-secs S]   per-job wall deadline (0 disables);
+                                     a miss enters the retry ladder
+           [--max-retries N]         retries per job, each escalating the
+                                     reduction (default 2)
+           [--retry-backoff-ms MS]   base backoff, doubled per retry
+           [--journal PATH]          persistent JSONL job journal; re-run
+                                     with the same path to resume a killed
+                                     batch, skipping completed jobs
+                                     (exit code 1 if any job still fails)
   dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
            [--seed S]          (needs the `xla` build feature + artifacts)
   help                         this text
@@ -319,6 +337,9 @@ fn cmd_batch(args: &Args) -> Result<i32> {
     if let Some(kern) = args.flag("domination-kernel") {
         cfg.domination_kernel = kern.to_string();
     }
+    cfg.job_deadline_secs = args.flag_f64("job-deadline-secs", cfg.job_deadline_secs)?;
+    cfg.max_retries = args.flag_usize("max-retries", cfg.max_retries)?;
+    cfg.retry_backoff_ms = args.flag_u64("retry-backoff-ms", cfg.retry_backoff_ms)?;
     // validate up front so a bad value fails before any worker spawns
     DominationKernel::parse(&cfg.domination_kernel)?;
     let reduction = parse_reduction(&cfg.reduction.clone())?;
@@ -336,19 +357,44 @@ fn cmd_batch(args: &Args) -> Result<i32> {
         })
         .collect();
     let t0 = std::time::Instant::now();
-    let results = coordinator.run(jobs)?;
+    let (outcome, skipped) = match args.flag("journal") {
+        Some(path) => coordinator.run_resumable(jobs, path)?,
+        None => (coordinator.run_with_failures(jobs, None)?, 0),
+    };
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "{}: {} jobs in {:.3}s ({:.1} jobs/s, {} workers, {} prune thread(s)/job)",
         recipe.name,
-        results.len(),
+        outcome.results.len(),
         secs,
-        results.len() as f64 / secs.max(1e-12),
+        outcome.results.len() as f64 / secs.max(1e-12),
         cfg.workers,
         cfg.prune_threads.max(1),
     );
+    if skipped > 0 {
+        println!("journal: skipped {skipped} job(s) already completed by an earlier run");
+    }
+    let degraded = outcome
+        .results
+        .iter()
+        .filter(|r| r.outcome.is_degraded())
+        .count();
+    if degraded > 0 {
+        println!("degraded: {degraded} job(s) succeeded only after spec escalation");
+    }
     println!("{}", coordinator.metrics().summary());
     println!("{}", coordinator.scratch_pool().summary());
+    if !outcome.failures.is_empty() {
+        for f in &outcome.failures {
+            eprintln!("FAILED: {f}");
+        }
+        eprintln!(
+            "batch: {} of {} job(s) failed after retries",
+            outcome.failures.len(),
+            outcome.results.len() + outcome.failures.len(),
+        );
+        return Ok(1);
+    }
     Ok(0)
 }
 
@@ -523,5 +569,49 @@ mod tests {
     fn pd_engine_flag_validated() {
         assert!(run(&argv("pd --dataset DHFR --engine bogus")).is_err());
         assert!(run(&argv("pd --dataset DHFR --engine legacy --shard")).is_err());
+    }
+
+    #[test]
+    fn flag_f64_parses_and_rejects() {
+        let a = Args::parse(&argv("batch --job-deadline-secs 1.5")).unwrap();
+        assert_eq!(a.flag_f64("job-deadline-secs", 0.0).unwrap(), 1.5);
+        assert_eq!(a.flag_f64("missing", 2.5).unwrap(), 2.5);
+        let bad = Args::parse(&argv("batch --job-deadline-secs soon")).unwrap();
+        assert!(bad.flag_f64("job-deadline-secs", 0.0).is_err());
+    }
+
+    #[test]
+    fn batch_fault_tolerance_flags_run() {
+        assert_eq!(
+            run(&argv(
+                "batch --dataset DHFR --workers 2 --max-retries 1 \
+                 --retry-backoff-ms 1 --job-deadline-secs 30"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run(&argv("batch --dataset DHFR --job-deadline-secs soon")).is_err());
+    }
+
+    #[test]
+    fn batch_journal_flag_resumes_without_recompute() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("coraltda-cli-journal-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        let cmd = format!("batch --dataset DHFR --workers 2 --journal {}", p.display());
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let replay = crate::coordinator::JournalReplay::load(&p).unwrap();
+        let completed_first = replay.completed.len();
+        assert!(completed_first > 0);
+        // second invocation replays the journal and skips everything
+        assert_eq!(run(&argv(&cmd)).unwrap(), 0);
+        let replay = crate::coordinator::JournalReplay::load(&p).unwrap();
+        assert_eq!(
+            replay.completed.len(),
+            completed_first,
+            "resume must not re-run (or duplicate) completed jobs"
+        );
+        assert!(replay.orphaned().is_empty());
+        let _ = std::fs::remove_file(&p);
     }
 }

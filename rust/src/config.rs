@@ -151,6 +151,18 @@ pub struct CoordinatorConfig {
     /// `auto` (per-round density choice), `merge`, or `bitset`. Residues
     /// are bit-identical at every setting; only wall time changes.
     pub domination_kernel: String,
+    /// Per-job wall-clock deadline in seconds (`--job-deadline-secs`).
+    /// `0` (the default) disables deadlines. A job past its deadline
+    /// unwinds at the next cancellation checkpoint with
+    /// `Error::DeadlineExceeded` and enters the retry ladder.
+    pub job_deadline_secs: f64,
+    /// Retries after a transient failure (`--max-retries`); attempts =
+    /// `max_retries + 1`. Each retry escalates the reduction (see
+    /// `coordinator::worker::degraded_spec`) so the job gets cheaper
+    /// before it is dropped. Permanent errors are never retried.
+    pub max_retries: usize,
+    /// Base backoff between attempts in milliseconds, doubled per retry.
+    pub retry_backoff_ms: u64,
 }
 
 impl CoordinatorConfig {
@@ -166,6 +178,9 @@ impl CoordinatorConfig {
             seed: cfg.get_u64("coordinator.seed", 42)?,
             prune_threads: cfg.get_usize("coordinator.prune_threads", 1)?,
             domination_kernel: cfg.get_str("coordinator.domination_kernel", "auto"),
+            job_deadline_secs: cfg.get_f64("coordinator.job_deadline_secs", 0.0)?,
+            max_retries: cfg.get_usize("coordinator.max_retries", 2)?,
+            retry_backoff_ms: cfg.get_u64("coordinator.retry_backoff_ms", 25)?,
         })
     }
 }
@@ -245,5 +260,21 @@ mod tests {
         let cc = CoordinatorConfig::from_config(&cfg).unwrap();
         assert_eq!(cc.domination_kernel, "bitset");
         assert_eq!(CoordinatorConfig::default().domination_kernel, "auto");
+    }
+
+    #[test]
+    fn fault_tolerance_keys_are_read_with_defaults() {
+        let dflt = CoordinatorConfig::default();
+        assert_eq!(dflt.job_deadline_secs, 0.0, "deadlines off by default");
+        assert_eq!(dflt.max_retries, 2);
+        assert_eq!(dflt.retry_backoff_ms, 25);
+        let cfg = Config::parse(
+            "[coordinator]\njob_deadline_secs = 1.5\nmax_retries = 5\nretry_backoff_ms = 100\n",
+        )
+        .unwrap();
+        let cc = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(cc.job_deadline_secs, 1.5);
+        assert_eq!(cc.max_retries, 5);
+        assert_eq!(cc.retry_backoff_ms, 100);
     }
 }

@@ -1,0 +1,133 @@
+//! Deterministic fault injection for the chaos suite. Compiled only
+//! under `cfg(test)` or the `faults` cargo feature — release builds
+//! carry zero injection branches.
+//!
+//! A [`FaultPlan`] is a static script keyed on `(job id, attempt)`: it
+//! can panic an attempt, fail it with a typed [`Error::Injected`], or
+//! slow every PrunIT/fixed-point round of a job by a fixed delay (which,
+//! combined with a short deadline, deterministically forces
+//! `Error::DeadlineExceeded` at a round checkpoint). Because triggers
+//! are exact-match on ids and attempts, a chaos test's outcome is fully
+//! reproducible: no randomness, no timing races in the trigger logic.
+
+use std::time::Duration;
+
+use crate::error::Error;
+
+/// Sentinel attempt index meaning "every attempt".
+const ANY_ATTEMPT: u32 = u32::MAX;
+
+/// A deterministic script of faults to inject into a batch.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// (job id, attempt) pairs whose attempt panics mid-execution.
+    panics: Vec<(u64, u32)>,
+    /// (job id, attempt) pairs whose attempt fails with `Error::Injected`.
+    errors: Vec<(u64, u32)>,
+    /// per-round delays installed into the planner for a job id.
+    delays: Vec<(u64, Duration)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Panic the given attempt (0-based) of job `id`.
+    pub fn panic_on(mut self, id: u64, attempt: u32) -> FaultPlan {
+        self.panics.push((id, attempt));
+        self
+    }
+
+    /// Panic every attempt of job `id` — the job can only fail.
+    pub fn panic_always(mut self, id: u64) -> FaultPlan {
+        self.panics.push((id, ANY_ATTEMPT));
+        self
+    }
+
+    /// Fail the given attempt (0-based) of job `id` with a typed
+    /// transient error.
+    pub fn error_on(mut self, id: u64, attempt: u32) -> FaultPlan {
+        self.errors.push((id, attempt));
+        self
+    }
+
+    /// Fail every attempt of job `id`.
+    pub fn error_always(mut self, id: u64) -> FaultPlan {
+        self.errors.push((id, ANY_ATTEMPT));
+        self
+    }
+
+    /// Sleep `delay` at every PrunIT frontier round / fixed-point
+    /// alternation of job `id` (all attempts). With a deadline shorter
+    /// than one delay this forces a deterministic deadline miss.
+    pub fn delay_rounds(mut self, id: u64, delay: Duration) -> FaultPlan {
+        self.delays.push((id, delay));
+        self
+    }
+
+    fn matches(list: &[(u64, u32)], id: u64, attempt: u32) -> bool {
+        list.iter()
+            .any(|&(j, a)| j == id && (a == attempt || a == ANY_ATTEMPT))
+    }
+
+    /// Should this attempt panic?
+    pub fn should_panic(&self, id: u64, attempt: u32) -> bool {
+        FaultPlan::matches(&self.panics, id, attempt)
+    }
+
+    /// The injected error for this attempt, if scripted.
+    pub fn injected_error(&self, id: u64, attempt: u32) -> Option<Error> {
+        if FaultPlan::matches(&self.errors, id, attempt) {
+            Some(Error::Injected(format!(
+                "scripted failure: job {id} attempt {attempt}"
+            )))
+        } else {
+            None
+        }
+    }
+
+    /// The per-round delay scripted for this job, if any.
+    pub fn round_delay(&self, id: u64) -> Option<Duration> {
+        self.delays
+            .iter()
+            .find(|&&(j, _)| j == id)
+            .map(|&(_, d)| d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triggers_are_exact_match() {
+        let plan = FaultPlan::new()
+            .panic_on(3, 0)
+            .error_on(5, 1)
+            .delay_rounds(7, Duration::from_millis(10));
+        assert!(plan.should_panic(3, 0));
+        assert!(!plan.should_panic(3, 1), "retry of job 3 must run clean");
+        assert!(!plan.should_panic(4, 0));
+        assert!(plan.injected_error(5, 1).is_some());
+        assert!(plan.injected_error(5, 0).is_none());
+        assert_eq!(plan.round_delay(7), Some(Duration::from_millis(10)));
+        assert_eq!(plan.round_delay(3), None);
+    }
+
+    #[test]
+    fn always_variants_hit_every_attempt() {
+        let plan = FaultPlan::new().panic_always(1).error_always(2);
+        for attempt in 0..8 {
+            assert!(plan.should_panic(1, attempt));
+            assert!(plan.injected_error(2, attempt).is_some());
+        }
+    }
+
+    #[test]
+    fn injected_error_is_transient() {
+        let plan = FaultPlan::new().error_on(0, 0);
+        let e = plan.injected_error(0, 0).unwrap();
+        assert!(e.is_transient(), "injected faults must enter the retry ladder");
+    }
+}

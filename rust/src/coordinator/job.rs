@@ -1,6 +1,9 @@
 //! Job and result types for the batch coordinator.
 
+use std::fmt;
+
 use crate::complex::Filtration;
+use crate::error::Error;
 use crate::graph::Graph;
 use crate::homology::Diagram;
 use crate::reduce::{Reduction, ReductionReport};
@@ -54,6 +57,32 @@ impl Job {
     }
 }
 
+/// How a successful job result was obtained — first try, or after the
+/// retry ladder escalated the reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// The requested spec succeeded on the first attempt.
+    Success,
+    /// A retry succeeded after escalating the reduction (and, on the last
+    /// attempt, forcing sharded execution). The diagrams are exact for
+    /// `PD_j`, `j ≥ max_k` — stronger exactness the original spec may have
+    /// carried (e.g. `Prunit` is exact in every dimension) is traded away
+    /// for termination.
+    Degraded {
+        /// The reduction that actually ran.
+        reduction: Reduction,
+        /// Whether execution was forced through the component-sharded path.
+        sharded: bool,
+    },
+}
+
+impl JobOutcome {
+    /// Whether this outcome is a degraded success.
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, JobOutcome::Degraded { .. })
+    }
+}
+
 /// Result of one job.
 #[derive(Clone, Debug)]
 pub struct JobResult {
@@ -62,10 +91,36 @@ pub struct JobResult {
     pub reduction: ReductionReport,
     /// seconds spent in PH (excluding reduction, which is in `reduction`)
     pub ph_secs: f64,
-    /// total wall seconds for the job on the worker
+    /// total wall seconds for the job on the worker (last attempt only)
     pub total_secs: f64,
     /// worker thread index that executed the job
     pub worker: usize,
+    /// attempts consumed (1 = no retries were needed)
+    pub attempts: u32,
+    /// how the result was obtained (success vs degraded success)
+    pub outcome: JobOutcome,
+}
+
+/// A job that exhausted its retry budget (or failed permanently): the
+/// identity the scheduler routes to the caller and the journal, instead
+/// of an anonymous `jobs_failed` increment.
+#[derive(Debug)]
+pub struct JobFailure {
+    pub id: u64,
+    /// attempts consumed before giving up
+    pub attempts: u32,
+    /// the final attempt's error
+    pub error: Error,
+}
+
+impl fmt::Display for JobFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "job {} failed after {} attempt(s): {}",
+            self.id, self.attempts, self.error
+        )
+    }
 }
 
 #[cfg(test)]

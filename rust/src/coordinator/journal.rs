@@ -1,0 +1,347 @@
+//! Persistent batch journal: one JSONL record per job event, flushed on
+//! every write, so a killed batch can be resumed without recomputing
+//! (or double-computing) anything.
+//!
+//! Three event kinds, hand-rolled JSON (serde is not in the offline
+//! registry):
+//!
+//! ```text
+//! {"event":"submitted","id":3,"n":40,"m":76,"max_k":1,"reduction":"prunit+coral"}
+//! {"event":"completed","id":3,"attempts":1,"outcome":"success","reduction":"prunit+coral","sharded":false,"total_secs":0.012300}
+//! {"event":"failed","id":4,"attempts":3,"error":"injected fault: ..."}
+//! ```
+//!
+//! Resume contract: a job id with a `completed` record is skipped on
+//! replay; anything merely `submitted` (the process died mid-flight) or
+//! `failed` is re-run. The journal is append-only — a resumed batch
+//! appends to the same file, so the full history of a job (including
+//! earlier failed incarnations) survives.
+
+use std::collections::BTreeSet;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+use super::job::{Job, JobFailure, JobOutcome, JobResult};
+
+/// Append-only JSONL writer for batch job events.
+#[derive(Debug)]
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+}
+
+impl Journal {
+    /// Open (creating if absent) a journal at `path` for appending.
+    pub fn open(path: impl AsRef<Path>) -> Result<Journal> {
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| Error::Io(format!("journal {}: {e}", path.display())))?;
+        Ok(Journal { path, file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn write_line(&mut self, line: &str) -> Result<()> {
+        // flush per record: a SIGKILL between batches of buffered writes
+        // must not lose completed-job records, or resume would recompute
+        writeln!(self.file, "{line}")
+            .and_then(|_| self.file.flush())
+            .map_err(|e| Error::Io(format!("journal {}: {e}", self.path.display())))
+    }
+
+    /// Record a job entering the queue.
+    pub fn record_submitted(&mut self, job: &Job) -> Result<()> {
+        self.write_line(&format!(
+            "{{\"event\":\"submitted\",\"id\":{},\"n\":{},\"m\":{},\"max_k\":{},\"reduction\":\"{}\"}}",
+            job.id,
+            job.graph.n(),
+            job.graph.m(),
+            job.spec.max_k,
+            json_escape(job.spec.reduction.name()),
+        ))
+    }
+
+    /// Record a job finishing successfully (possibly degraded).
+    pub fn record_completed(&mut self, r: &JobResult) -> Result<()> {
+        let (outcome, reduction, sharded) = match r.outcome {
+            JobOutcome::Success => ("success", r.reduction.which, false),
+            JobOutcome::Degraded { reduction, sharded } => ("degraded", reduction, sharded),
+        };
+        self.write_line(&format!(
+            "{{\"event\":\"completed\",\"id\":{},\"attempts\":{},\"outcome\":\"{outcome}\",\
+             \"reduction\":\"{}\",\"sharded\":{sharded},\"total_secs\":{:.6}}}",
+            r.id,
+            r.attempts,
+            json_escape(reduction.name()),
+            r.total_secs,
+        ))
+    }
+
+    /// Record a job exhausting its retry budget.
+    pub fn record_failed(&mut self, f: &JobFailure) -> Result<()> {
+        self.write_line(&format!(
+            "{{\"event\":\"failed\",\"id\":{},\"attempts\":{},\"error\":\"{}\"}}",
+            f.id,
+            f.attempts,
+            json_escape(&f.error.to_string()),
+        ))
+    }
+}
+
+/// The replayed state of a journal: which ids reached which terminal
+/// state. Loaded before a resumed batch to decide what to skip.
+#[derive(Clone, Debug, Default)]
+pub struct JournalReplay {
+    /// every id with a `submitted` record
+    pub submitted: BTreeSet<u64>,
+    /// ids with a `completed` record — skipped on resume
+    pub completed: BTreeSet<u64>,
+    /// ids whose LAST terminal record is `failed` (a later completed
+    /// record, e.g. from a previous resume, clears the failure)
+    pub failed: BTreeSet<u64>,
+    /// malformed lines skipped (torn final write after a kill is normal)
+    pub skipped_lines: usize,
+}
+
+impl JournalReplay {
+    /// Replay a journal file. A missing file is an empty replay (first
+    /// run), not an error.
+    pub fn load(path: impl AsRef<Path>) -> Result<JournalReplay> {
+        let path = path.as_ref();
+        let file = match File::open(path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(JournalReplay::default())
+            }
+            Err(e) => return Err(Error::Io(format!("journal {}: {e}", path.display()))),
+        };
+        let mut replay = JournalReplay::default();
+        for line in BufReader::new(file).lines() {
+            let line = line.map_err(|e| Error::Io(format!("journal {}: {e}", path.display())))?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (Some(event), Some(id)) = (
+                json_str_field(&line, "event"),
+                json_u64_field(&line, "id"),
+            ) else {
+                replay.skipped_lines += 1;
+                continue;
+            };
+            match event {
+                "submitted" => {
+                    replay.submitted.insert(id);
+                }
+                "completed" => {
+                    replay.completed.insert(id);
+                    replay.failed.remove(&id);
+                }
+                "failed" => {
+                    if !replay.completed.contains(&id) {
+                        replay.failed.insert(id);
+                    }
+                }
+                _ => replay.skipped_lines += 1,
+            }
+        }
+        Ok(replay)
+    }
+
+    /// Whether a job id already completed and can be skipped on resume.
+    pub fn is_done(&self, id: u64) -> bool {
+        self.completed.contains(&id)
+    }
+
+    /// Ids that were submitted but never reached a terminal record — the
+    /// in-flight jobs a kill orphaned.
+    pub fn orphaned(&self) -> BTreeSet<u64> {
+        self.submitted
+            .iter()
+            .filter(|id| !self.completed.contains(id) && !self.failed.contains(id))
+            .copied()
+            .collect()
+    }
+}
+
+/// Minimal JSON string escaping for the fields we write.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Extract a string field's raw value from one flat JSON object line.
+/// Only used on fields we write without escapes (event names).
+fn json_str_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find('"')?;
+    Some(&rest[..end])
+}
+
+/// Extract an unsigned integer field from one flat JSON object line.
+fn json_u64_field(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let digits: String = line[start..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobSpec;
+    use crate::error::Error;
+    use crate::graph::gen;
+    use crate::reduce::Reduction;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("coraltda-journal-{tag}-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample_result(id: u64, outcome: JobOutcome) -> JobResult {
+        JobResult {
+            id,
+            diagrams: vec![],
+            reduction: crate::reduce::ReductionReport {
+                vertices_before: 10,
+                edges_before: 10,
+                vertices_after: 5,
+                edges_after: 5,
+                reduce_secs: 0.0,
+                prunit_secs: 0.0,
+                core_secs: 0.0,
+                compact_secs: 0.0,
+                rounds: vec![],
+                prunit_rounds: 0,
+                which: Reduction::Combined,
+                shard_sizes: vec![],
+            },
+            ph_secs: 0.0,
+            total_secs: 0.25,
+            worker: 0,
+            attempts: 1,
+            outcome,
+        }
+    }
+
+    #[test]
+    fn round_trip_submitted_completed_failed() {
+        let path = tmp_path("roundtrip");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            let job = Job::degree_superlevel(1, gen::cycle(6), JobSpec::default());
+            j.record_submitted(&job).unwrap();
+            j.record_completed(&sample_result(1, JobOutcome::Success))
+                .unwrap();
+            let job2 = Job::degree_superlevel(2, gen::cycle(6), JobSpec::default());
+            j.record_submitted(&job2).unwrap();
+            j.record_failed(&JobFailure {
+                id: 2,
+                attempts: 3,
+                error: Error::Injected("scripted \"quoted\" failure".into()),
+            })
+            .unwrap();
+        }
+        let replay = JournalReplay::load(&path).unwrap();
+        assert_eq!(replay.submitted.len(), 2);
+        assert!(replay.is_done(1));
+        assert!(!replay.is_done(2));
+        assert!(replay.failed.contains(&2));
+        assert_eq!(replay.skipped_lines, 0);
+        assert!(replay.orphaned().is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_journal_is_empty_replay() {
+        let replay = JournalReplay::load("/nonexistent/journal.jsonl".to_string());
+        // missing parent dir still maps to NotFound on open
+        assert!(replay.unwrap().submitted.is_empty());
+    }
+
+    #[test]
+    fn torn_final_line_is_skipped_not_fatal() {
+        let path = tmp_path("torn");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            let job = Job::degree_superlevel(4, gen::cycle(6), JobSpec::default());
+            j.record_submitted(&job).unwrap();
+        }
+        // simulate a SIGKILL mid-write: a truncated record at the tail
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"event\":\"comple").unwrap();
+        }
+        let replay = JournalReplay::load(&path).unwrap();
+        assert!(replay.submitted.contains(&4));
+        assert_eq!(replay.skipped_lines, 1);
+        assert_eq!(replay.orphaned(), BTreeSet::from([4]));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_clears_earlier_failures_and_finds_orphans() {
+        let path = tmp_path("resume");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            for id in [1u64, 2, 3] {
+                let job = Job::degree_superlevel(id, gen::cycle(6), JobSpec::default());
+                j.record_submitted(&job).unwrap();
+            }
+            j.record_failed(&JobFailure {
+                id: 1,
+                attempts: 2,
+                error: Error::Cancelled,
+            })
+            .unwrap();
+            // id 2 completes; id 3 stays orphaned (killed in flight)
+            j.record_completed(&sample_result(2, JobOutcome::Success))
+                .unwrap();
+        }
+        // second incarnation of the batch: id 1 retried and now succeeds
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.record_completed(&sample_result(
+                1,
+                JobOutcome::Degraded {
+                    reduction: Reduction::FixedPoint,
+                    sharded: true,
+                },
+            ))
+            .unwrap();
+        }
+        let replay = JournalReplay::load(&path).unwrap();
+        assert!(replay.is_done(1), "later completion clears the failure");
+        assert!(!replay.failed.contains(&1));
+        assert!(replay.is_done(2));
+        assert_eq!(replay.orphaned(), BTreeSet::from([3]));
+        let _ = std::fs::remove_file(&path);
+    }
+}

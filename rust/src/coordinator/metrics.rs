@@ -21,6 +21,15 @@ pub struct Metrics {
     pub lock_recoveries: AtomicU64,
     /// worker threads that panicked during a batch
     pub workers_panicked: AtomicU64,
+    /// job attempts re-run after a transient failure
+    pub jobs_retried: AtomicU64,
+    /// attempts aborted by `Error::DeadlineExceeded`
+    pub deadline_misses: AtomicU64,
+    /// job panics caught by the attempt harness (the worker thread
+    /// survives; contrast `workers_panicked`, which counts thread deaths)
+    pub jobs_panicked: AtomicU64,
+    /// jobs that ultimately succeeded with an escalated (degraded) spec
+    pub jobs_degraded: AtomicU64,
 }
 
 impl Metrics {
@@ -65,11 +74,32 @@ impl Metrics {
         self.workers_panicked.load(Ordering::Relaxed)
     }
 
+    /// Attempts re-run after a transient failure.
+    pub fn jobs_retried(&self) -> u64 {
+        self.jobs_retried.load(Ordering::Relaxed)
+    }
+
+    /// Attempts aborted at a cancellation checkpoint by their deadline.
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_misses.load(Ordering::Relaxed)
+    }
+
+    /// Job panics caught by the attempt harness.
+    pub fn jobs_panicked(&self) -> u64 {
+        self.jobs_panicked.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that succeeded only after spec escalation.
+    pub fn jobs_degraded(&self) -> u64 {
+        self.jobs_degraded.load(Ordering::Relaxed)
+    }
+
     /// Human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
             "jobs={} failed={} reduce={:.3}s ph={:.3}s vertex_reduction={:.1}% \
-             lock_recoveries={} worker_panics={}",
+             lock_recoveries={} worker_panics={} retries={} deadline_misses={} \
+             degraded={} job_panics={}",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.reduce_us.load(Ordering::Relaxed) as f64 / 1e6,
@@ -77,6 +107,10 @@ impl Metrics {
             self.vertex_reduction_pct(),
             self.lock_recoveries(),
             self.workers_panicked(),
+            self.jobs_retried(),
+            self.deadline_misses(),
+            self.jobs_degraded(),
+            self.jobs_panicked(),
         )
     }
 }
@@ -121,5 +155,25 @@ mod tests {
         assert_eq!(m.workers_panicked(), 1);
         assert!(m.summary().contains("lock_recoveries=2"), "{}", m.summary());
         assert!(m.summary().contains("worker_panics=1"));
+    }
+
+    #[test]
+    fn summary_reports_fault_tolerance_counters() {
+        let m = Metrics::default();
+        assert!(m.summary().contains("retries=0"), "{}", m.summary());
+        assert!(m.summary().contains("deadline_misses=0"));
+        m.jobs_retried.fetch_add(4, Ordering::Relaxed);
+        m.deadline_misses.fetch_add(2, Ordering::Relaxed);
+        m.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+        m.jobs_degraded.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(m.jobs_retried(), 4);
+        assert_eq!(m.deadline_misses(), 2);
+        assert_eq!(m.jobs_panicked(), 1);
+        assert_eq!(m.jobs_degraded(), 3);
+        let s = m.summary();
+        assert!(s.contains("retries=4"), "{s}");
+        assert!(s.contains("deadline_misses=2"), "{s}");
+        assert!(s.contains("degraded=3"), "{s}");
+        assert!(s.contains("job_panics=1"), "{s}");
     }
 }

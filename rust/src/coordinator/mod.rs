@@ -3,30 +3,45 @@
 //! diagrams for *each vertex's* ego network in a 100k+ graph") is exactly
 //! a large batch of small independent PH jobs.
 //!
-//! Three layers, three modules:
+//! Five layers, five modules:
 //!
 //! * [`scheduler`] — queueing and result streaming: a bounded
 //!   `sync_channel` job queue provides backpressure against the producer,
 //!   a `Mutex<Receiver>` fans jobs out to `workers` OS threads, and
 //!   results stream back over an unbounded channel (std-only; tokio is
 //!   not in the offline registry).
-//! * [`worker`] — pure job execution: one [`Job`] in, one [`JobResult`]
-//!   out, all allocation through a [`WorkerScratch`].
+//! * [`worker`] — job execution: one [`Job`] in, one [`JobResult`] out,
+//!   all allocation through a [`WorkerScratch`] — plus the fault
+//!   tolerance harness: per-attempt deadlines ([`crate::util::CancelToken`]),
+//!   panic isolation (`catch_unwind` per attempt), and retry with
+//!   graceful degradation (each retry escalates the reduction, the last
+//!   attempt shards).
 //! * [`scratch`] — the size-tiered [`ScratchPool`]: scratches are
 //!   bucketed by graph-order tier and checked out per job, so a
 //!   100-vertex job never inherits (and re-initialises) the arenas a
 //!   multi-million-vertex job grew.
+//! * [`journal`] — the persistent batch journal: one flushed JSONL
+//!   record per job event, replayed on restart so a killed batch resumes
+//!   without recomputing completed jobs.
+//! * [`faults`] (tests / `--features faults` only) — deterministic fault
+//!   injection scripts driving the chaos suite.
 //!
 //! Metrics are atomic counters suitable for live scraping.
 
+#[cfg(any(test, feature = "faults"))]
+pub mod faults;
 pub mod job;
+pub mod journal;
 pub mod metrics;
 pub mod scheduler;
 pub mod scratch;
 pub mod worker;
 
-pub use job::{Job, JobResult, JobSpec};
+#[cfg(any(test, feature = "faults"))]
+pub use faults::FaultPlan;
+pub use job::{Job, JobFailure, JobOutcome, JobResult, JobSpec};
+pub use journal::{Journal, JournalReplay};
 pub use metrics::Metrics;
-pub use scheduler::Coordinator;
+pub use scheduler::{BatchOutcome, Coordinator};
 pub use scratch::{PooledScratch, ScratchPool};
-pub use worker::WorkerScratch;
+pub use worker::{degraded_spec, escalate, WorkerScratch};

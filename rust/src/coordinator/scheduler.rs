@@ -1,7 +1,10 @@
 //! The batch scheduler: bounded job queue (backpressure) + result
-//! stream. Job execution lives in [`super::worker`], scratch reuse in
-//! [`super::scratch`] — this module only moves jobs and results.
+//! stream. Job execution and the retry/degradation harness live in
+//! [`super::worker`], scratch reuse in [`super::scratch`], journaling in
+//! [`super::journal`] — this module only moves jobs, results, and
+//! failures.
 
+use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -10,10 +13,22 @@ use crate::config::CoordinatorConfig;
 use crate::error::{Error, Result};
 use crate::prune::DominationKernel;
 
-use super::job::{Job, JobResult};
+#[cfg(any(test, feature = "faults"))]
+use super::faults::FaultPlan;
+use super::job::{Job, JobFailure, JobResult};
+use super::journal::{Journal, JournalReplay};
 use super::metrics::Metrics;
 use super::scratch::ScratchPool;
-use super::worker::{execute_job, WorkerScratch};
+use super::worker::{execute_job, run_job_with_retries, AttemptPolicy, WorkerScratch};
+
+/// Everything a fault-tolerant batch produced: successful results
+/// (sorted by id) plus the identity, attempt count, and final error of
+/// every job that exhausted its retry budget.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    pub results: Vec<JobResult>,
+    pub failures: Vec<JobFailure>,
+}
 
 /// The batch coordinator: owns config, metrics, and the size-tiered
 /// scratch pool; `run` executes a batch.
@@ -21,6 +36,9 @@ pub struct Coordinator {
     config: CoordinatorConfig,
     metrics: Arc<Metrics>,
     scratch: Arc<ScratchPool>,
+    /// scripted faults injected into every batch (chaos tests only)
+    #[cfg(any(test, feature = "faults"))]
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Coordinator {
@@ -38,6 +56,8 @@ impl Coordinator {
             config,
             metrics,
             scratch,
+            #[cfg(any(test, feature = "faults"))]
+            faults: None,
         }
     }
 
@@ -52,6 +72,12 @@ impl Coordinator {
     /// The shared scratch pool (stats: hits/misses/cached).
     pub fn scratch_pool(&self) -> Arc<ScratchPool> {
         Arc::clone(&self.scratch)
+    }
+
+    /// Install a scripted fault plan for the next batches (chaos tests).
+    #[cfg(any(test, feature = "faults"))]
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = Some(Arc::new(plan));
     }
 
     /// Execute one job inline (public for testing and for single-threaded
@@ -71,23 +97,43 @@ impl Coordinator {
         execute_job(scratch, job, worker)
     }
 
-    /// Run a batch of jobs from an iterator, streaming results to `sink`
-    /// as they complete (out of order). The job queue is bounded at
-    /// `queue_depth`, so a slow pool backpressures the producer iterator.
-    /// Each worker checks a size-tiered scratch out of the shared pool
-    /// per job and configures it with the scheduler's `prune_threads`.
-    pub fn run_streaming<I, F>(&self, jobs: I, mut sink: F) -> Result<usize>
+    /// The shared engine behind every batch entry point: a bounded
+    /// `sync_channel` job queue (backpressure against the producer), a
+    /// `Mutex<Receiver>` fanning jobs out to `workers` threads, and each
+    /// job run through the retry/degradation harness
+    /// ([`super::worker::run_job_with_retries`]) — so a failed, timed-out,
+    /// or panicking job consumes its retry budget and then surfaces as a
+    /// [`JobFailure`] instead of poisoning the batch. Journal records
+    /// (submitted/completed/failed) are written on the calling thread.
+    ///
+    /// Returns the number of jobs that reached a terminal state. An `Err`
+    /// means the batch infrastructure itself failed (bad config, journal
+    /// I/O, lost workers) — per-job failures go to `on_failure`.
+    fn run_core<I>(
+        &self,
+        jobs: I,
+        on_result: &mut dyn FnMut(JobResult),
+        on_failure: &mut dyn FnMut(JobFailure),
+        mut journal: Option<&mut Journal>,
+    ) -> Result<usize>
     where
         I: Iterator<Item = Job>,
-        F: FnMut(JobResult),
     {
         let workers = self.config.workers.max(1);
         let prune_threads = self.config.prune_threads.max(1);
         let kernel = DominationKernel::parse(&self.config.domination_kernel)?;
+        let policy = AttemptPolicy {
+            max_retries: self.config.max_retries,
+            backoff_ms: self.config.retry_backoff_ms,
+            deadline_secs: self.config.job_deadline_secs,
+            #[cfg(any(test, feature = "faults"))]
+            faults: self.faults.clone(),
+        };
         let (job_tx, job_rx): (SyncSender<Job>, Receiver<Job>) =
             sync_channel(self.config.queue_depth.max(1));
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (res_tx, res_rx) = std::sync::mpsc::channel::<Result<JobResult>>();
+        let (res_tx, res_rx) =
+            std::sync::mpsc::channel::<std::result::Result<JobResult, JobFailure>>();
 
         let handles: Vec<_> = (0..workers)
             .map(|w| {
@@ -95,6 +141,7 @@ impl Coordinator {
                 let res_tx = res_tx.clone();
                 let metrics = Arc::clone(&self.metrics);
                 let pool = Arc::clone(&self.scratch);
+                let policy = policy.clone();
                 std::thread::spawn(move || loop {
                     let job = {
                         // a peer panicking mid-recv leaves the Receiver
@@ -107,11 +154,15 @@ impl Coordinator {
                     };
                     let Ok(job) = job else { break };
                     let (v_in, e_in) = (job.graph.n(), job.graph.m());
-                    let mut scratch = pool.checkout(job.graph.n());
-                    scratch.reduce.set_prune_threads(prune_threads);
-                    scratch.reduce.set_domination_kernel(kernel);
-                    let result = execute_job(&mut scratch, &job, w);
-                    drop(scratch); // back to its tier
+                    let result = run_job_with_retries(
+                        &pool,
+                        prune_threads,
+                        kernel,
+                        &policy,
+                        &metrics,
+                        &job,
+                        w,
+                    );
                     match &result {
                         Ok(r) => metrics.record(
                             r.reduction.reduce_secs,
@@ -134,40 +185,59 @@ impl Coordinator {
         drop(res_tx);
 
         // Producer on the current thread; consume results opportunistically
-        // to keep the result channel drained. A failed job surfaces as the
-        // batch's error after the pool drains — remaining jobs still run.
+        // to keep the result channel drained. Journal writes stay on this
+        // thread so the file needs no locking.
         let mut submitted = 0usize;
         let mut received = 0usize;
-        let mut first_err: Option<Error> = None;
-        let mut consume = |r: Result<JobResult>, first_err: &mut Option<Error>| match r {
-            Ok(r) => sink(r),
-            Err(e) => {
-                if first_err.is_none() {
-                    *first_err = Some(e);
+        let mut journal_err: Option<Error> = None;
+        let mut submit_err: Option<Error> = None;
+        let mut handle = |r: std::result::Result<JobResult, JobFailure>,
+                          journal: &mut Option<&mut Journal>,
+                          journal_err: &mut Option<Error>| {
+            match r {
+                Ok(res) => {
+                    if let Some(j) = journal.as_deref_mut() {
+                        if let Err(e) = j.record_completed(&res) {
+                            journal_err.get_or_insert(e);
+                        }
+                    }
+                    on_result(res);
+                }
+                Err(fail) => {
+                    if let Some(j) = journal.as_deref_mut() {
+                        if let Err(e) = j.record_failed(&fail) {
+                            journal_err.get_or_insert(e);
+                        }
+                    }
+                    on_failure(fail);
                 }
             }
         };
         for job in jobs {
+            if let Some(j) = journal.as_deref_mut() {
+                // journal the submission BEFORE the job can run: a job
+                // killed in flight must be visible as orphaned on replay
+                if let Err(e) = j.record_submitted(&job) {
+                    submit_err = Some(e);
+                    break;
+                }
+            }
+            if job_tx.send(job).is_err() {
+                submit_err = Some(Error::Coordinator("all workers exited early".into()));
+                break;
+            }
             self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
-            job_tx
-                .send(job)
-                .map_err(|_| Error::Coordinator("all workers exited early".into()))?;
             submitted += 1;
             while let Ok(r) = res_rx.try_recv() {
                 received += 1;
-                consume(r, &mut first_err);
+                handle(r, &mut journal, &mut journal_err);
             }
         }
         drop(job_tx);
         while let Ok(r) = res_rx.recv() {
             received += 1;
-            consume(r, &mut first_err);
+            handle(r, &mut journal, &mut journal_err);
         }
-        // A panicking worker must not abort the batch: surviving workers
-        // have already drained the queue by this point. Count the panics,
-        // and only error if jobs were actually lost (a worker died between
-        // receiving a job and sending its result) with nothing else to
-        // report.
         let mut panicked = 0u64;
         for h in handles {
             if h.join().is_err() {
@@ -178,17 +248,54 @@ impl Coordinator {
             self.metrics
                 .workers_panicked
                 .fetch_add(panicked, Ordering::Relaxed);
-            if first_err.is_none() && received < submitted {
-                first_err = Some(Error::Coordinator(format!(
-                    "{panicked} worker(s) panicked; {} job(s) produced no result",
-                    submitted - received
-                )));
-            }
         }
-        if let Some(e) = first_err {
+        if let Some(e) = submit_err {
             return Err(e);
         }
-        debug_assert!(panicked > 0 || submitted == received);
+        if let Some(e) = journal_err {
+            return Err(e);
+        }
+        // Every submitted job must come back as exactly one result or
+        // failure. The attempt harness catches job panics, so worker
+        // threads no longer die with their jobs — any imbalance here is a
+        // scheduler bug, and the old escape hatch
+        // (`debug_assert!(panicked > 0 || ...)`) would have hidden it.
+        assert!(
+            submitted == received,
+            "scheduler lost {} job(s): submitted={submitted} received={received} \
+             worker_threads_died={panicked}",
+            submitted - received,
+        );
+        Ok(received)
+    }
+
+    /// Run a batch of jobs from an iterator, streaming results to `sink`
+    /// as they complete (out of order). The job queue is bounded at
+    /// `queue_depth`, so a slow pool backpressures the producer iterator.
+    /// Each worker checks a size-tiered scratch out of the shared pool
+    /// per job; failed or timed-out jobs are retried with escalating
+    /// reductions up to `max_retries` times. A job that still fails
+    /// surfaces as the batch's error after everything else ran — use
+    /// [`Coordinator::run_with_failures`] to keep partial results.
+    pub fn run_streaming<I, F>(&self, jobs: I, mut sink: F) -> Result<usize>
+    where
+        I: Iterator<Item = Job>,
+        F: FnMut(JobResult),
+    {
+        let mut first_fail: Option<JobFailure> = None;
+        let received = self.run_core(
+            jobs,
+            &mut |r| sink(r),
+            &mut |f| {
+                if first_fail.is_none() {
+                    first_fail = Some(f);
+                }
+            },
+            None,
+        )?;
+        if let Some(f) = first_fail {
+            return Err(f.error);
+        }
         Ok(received)
     }
 
@@ -199,6 +306,46 @@ impl Coordinator {
         out.sort_by_key(|r| r.id);
         Ok(out)
     }
+
+    /// Run a batch keeping partial results: failed jobs are returned by
+    /// identity in [`BatchOutcome::failures`] instead of aborting the
+    /// batch. With a journal, every submission/completion/failure is
+    /// persisted as it happens.
+    pub fn run_with_failures(
+        &self,
+        jobs: Vec<Job>,
+        mut journal: Option<&mut Journal>,
+    ) -> Result<BatchOutcome> {
+        let mut results = Vec::with_capacity(jobs.len());
+        let mut failures = Vec::new();
+        self.run_core(
+            jobs.into_iter(),
+            &mut |r| results.push(r),
+            &mut |f| failures.push(f),
+            journal.as_deref_mut(),
+        )?;
+        results.sort_by_key(|r| r.id);
+        failures.sort_by_key(|f| f.id);
+        Ok(BatchOutcome { results, failures })
+    }
+
+    /// [`Coordinator::run_with_failures`] against a persistent journal at
+    /// `path`: replay it first, skip jobs already completed by an earlier
+    /// incarnation of this batch, and append this run's records to the
+    /// same file. Returns the outcome plus how many jobs were skipped.
+    pub fn run_resumable(
+        &self,
+        jobs: Vec<Job>,
+        path: impl AsRef<Path>,
+    ) -> Result<(BatchOutcome, usize)> {
+        let replay = JournalReplay::load(&path)?;
+        let mut journal = Journal::open(&path)?;
+        let before = jobs.len();
+        let todo: Vec<Job> = jobs.into_iter().filter(|j| !replay.is_done(j.id)).collect();
+        let skipped = before - todo.len();
+        let outcome = self.run_with_failures(todo, Some(&mut journal))?;
+        Ok((outcome, skipped))
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +354,7 @@ mod tests {
     use crate::coordinator::job::JobSpec;
     use crate::graph::gen;
     use crate::reduce::Reduction;
+    use std::time::Duration;
 
     fn cfg(workers: usize, depth: usize) -> CoordinatorConfig {
         CoordinatorConfig {
@@ -217,6 +365,9 @@ mod tests {
             seed: 1,
             prune_threads: 1,
             domination_kernel: "auto".into(),
+            job_deadline_secs: 0.0,
+            max_retries: 2,
+            retry_backoff_ms: 0,
         }
     }
 
@@ -232,6 +383,16 @@ mod tests {
             .collect()
     }
 
+    fn tmp_journal(tag: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "coraltda-sched-{tag}-{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
     #[test]
     fn runs_all_jobs_and_sorts() {
         let c = Coordinator::new(cfg(3, 4));
@@ -240,8 +401,10 @@ mod tests {
         for (i, r) in res.iter().enumerate() {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.diagrams.len(), 2);
+            assert_eq!(r.attempts, 1);
         }
         assert_eq!(c.metrics().completed(), 20);
+        assert_eq!(c.metrics().jobs_retried(), 0);
     }
 
     #[test]
@@ -249,6 +412,36 @@ mod tests {
         let c = Coordinator::new(cfg(1, 1));
         let res = c.run(jobs(8)).unwrap();
         assert_eq!(res.len(), 8);
+    }
+
+    #[test]
+    fn bounded_queue_backpressures_the_producer() {
+        // queue_depth=1, workers=1: when the iterator yields job i, at
+        // most 3 earlier jobs can be unaccounted for (one queued, one in
+        // the worker, one completed-but-undrained is impossible since
+        // metrics.record precedes the result send). Slow the worker down
+        // with an injected per-round delay to make any backpressure bug
+        // (e.g. an unbounded queue) actually observable.
+        let mut c = Coordinator::new(cfg(1, 1));
+        let mut plan = FaultPlan::new();
+        for id in 0..10u64 {
+            plan = plan.delay_rounds(id, Duration::from_millis(2));
+        }
+        c.set_fault_plan(plan);
+        let metrics = c.metrics();
+        let pulled = std::cell::Cell::new(0usize);
+        let producer = (0..10u64).map(|i| {
+            pulled.set(pulled.get() + 1);
+            let in_flight = pulled.get() - metrics.completed() as usize;
+            assert!(
+                in_flight <= 3,
+                "bounded queue must throttle the producer: in_flight={in_flight}"
+            );
+            Job::degree_superlevel(i, gen::barabasi_albert(40, 2, i), JobSpec::default())
+        });
+        let n = c.run_streaming(producer, |_r| {}).unwrap();
+        assert_eq!(n, 10);
+        assert_eq!(pulled.get(), 10);
     }
 
     #[test]
@@ -348,6 +541,104 @@ mod tests {
             crate::error::Error::FiltrationMismatch { .. }
         ));
         assert_eq!(c.metrics().failed(), 1);
+        // structural errors are permanent: the retry budget is untouched
+        assert_eq!(c.metrics().jobs_retried(), 0);
+    }
+
+    #[test]
+    fn injected_faults_retry_to_success_in_a_batch() {
+        let mut c = Coordinator::new(cfg(2, 2));
+        c.set_fault_plan(FaultPlan::new().panic_on(3, 0).error_on(5, 0));
+        let res = c.run(jobs(8)).unwrap();
+        assert_eq!(res.len(), 8);
+        let m = c.metrics();
+        assert_eq!(m.completed(), 8);
+        assert_eq!(m.failed(), 0);
+        assert_eq!(m.jobs_retried(), 2);
+        assert_eq!(m.jobs_panicked(), 1);
+        assert_eq!(m.jobs_degraded(), 2);
+        assert_eq!(
+            m.workers_panicked(),
+            0,
+            "a job panic must not kill its worker thread"
+        );
+        let r3 = res.iter().find(|r| r.id == 3).unwrap();
+        assert_eq!(r3.attempts, 2);
+        assert!(r3.outcome.is_degraded());
+        let summary = m.summary();
+        assert!(summary.contains("retries=2"), "{summary}");
+        assert!(summary.contains("job_panics=1"), "{summary}");
+    }
+
+    #[test]
+    fn run_with_failures_surfaces_failed_job_identity() {
+        let mut c = Coordinator::new(cfg(2, 2));
+        c.set_fault_plan(FaultPlan::new().error_always(4));
+        let out = c.run_with_failures(jobs(8), None).unwrap();
+        assert_eq!(out.results.len(), 7);
+        assert!(out.results.iter().all(|r| r.id != 4));
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].id, 4);
+        assert_eq!(out.failures[0].attempts, 3, "max_retries=2 → 3 attempts");
+        assert!(matches!(
+            out.failures[0].error,
+            crate::error::Error::Injected(_)
+        ));
+        assert_eq!(c.metrics().failed(), 1);
+        assert_eq!(c.metrics().completed(), 7);
+    }
+
+    #[test]
+    fn deadline_misses_are_counted_and_surfaced() {
+        let mut config = cfg(1, 2);
+        config.job_deadline_secs = 0.005;
+        config.max_retries = 1;
+        let mut c = Coordinator::new(config);
+        // every PrunIT round of job 0 sleeps 40ms — both attempts blow
+        // the 5ms deadline at their first round checkpoint
+        c.set_fault_plan(FaultPlan::new().delay_rounds(0, Duration::from_millis(40)));
+        let out = c.run_with_failures(jobs(1), None).unwrap();
+        assert!(out.results.is_empty());
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].id, 0);
+        assert_eq!(out.failures[0].attempts, 2);
+        assert!(matches!(
+            out.failures[0].error,
+            crate::error::Error::DeadlineExceeded { .. }
+        ));
+        let m = c.metrics();
+        assert_eq!(m.deadline_misses(), 2);
+        assert_eq!(m.jobs_retried(), 1);
+        assert!(m.summary().contains("deadline_misses=2"), "{}", m.summary());
+    }
+
+    #[test]
+    fn journaled_batch_resumes_without_recompute() {
+        let path = tmp_journal("resume");
+        {
+            let mut c = Coordinator::new(cfg(2, 2));
+            c.set_fault_plan(FaultPlan::new().error_always(2));
+            let (out, skipped) = c.run_resumable(jobs(6), &path).unwrap();
+            assert_eq!(skipped, 0);
+            assert_eq!(out.results.len(), 5);
+            assert_eq!(out.failures.len(), 1);
+            assert_eq!(out.failures[0].id, 2);
+        }
+        // resume with the fault gone: completed ids are skipped, only
+        // the failed id re-runs — no duplicates, no recompute
+        {
+            let c = Coordinator::new(cfg(2, 2));
+            let (out, skipped) = c.run_resumable(jobs(6), &path).unwrap();
+            assert_eq!(skipped, 5);
+            assert_eq!(out.results.len(), 1);
+            assert_eq!(out.results[0].id, 2);
+            assert!(out.failures.is_empty());
+        }
+        let replay = JournalReplay::load(&path).unwrap();
+        assert_eq!(replay.completed.len(), 6);
+        assert!(replay.failed.is_empty(), "resume cleared the failure");
+        assert!(replay.orphaned().is_empty());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

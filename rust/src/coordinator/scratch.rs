@@ -179,6 +179,15 @@ impl PooledScratch<'_> {
     pub fn tier(&self) -> usize {
         self.tier
     }
+
+    /// Consume the checkout WITHOUT returning the scratch to its tier.
+    /// Used after a caught job panic: the unwound arenas may hold
+    /// arbitrary intermediate state, so re-pooling them would hand a
+    /// possibly-inconsistent scratch to an innocent later job.
+    pub fn discard(mut self) {
+        self.scratch = None;
+        // Drop sees no scratch and skips check_in.
+    }
 }
 
 impl Deref for PooledScratch<'_> {

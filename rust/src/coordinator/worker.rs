@@ -1,15 +1,29 @@
-//! Worker-side execution: the reusable per-job scratch state and the
-//! body that turns one [`Job`] into one [`JobResult`]. Pure computation —
-//! queueing, backpressure, and result streaming live in
-//! [`super::scheduler`], scratch reuse policy in [`super::scratch`].
+//! Worker-side execution: the reusable per-job scratch state, the body
+//! that turns one [`Job`] into one [`JobResult`], and the fault-tolerant
+//! attempt harness (deadline install, panic isolation, retry with
+//! graceful degradation). Pure computation — queueing, backpressure, and
+//! result streaming live in [`super::scheduler`], scratch reuse policy
+//! in [`super::scratch`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
 
 use crate::complex::ComplexWorkspace;
-use crate::error::Result;
-use crate::homology::persistence_diagrams_with;
-use crate::reduce::{combined_with_ws, ReductionWorkspace};
-use crate::util::Timer;
+use crate::error::{Error, Result};
+use crate::homology::persistence_diagrams_cancellable;
+use crate::prune::DominationKernel;
+use crate::reduce::{combined_with_ws, pd_sharded_with, Reduction, ReductionWorkspace};
+use crate::util::{CancelToken, Timer};
 
-use super::job::{Job, JobResult};
+#[cfg(any(test, feature = "faults"))]
+use std::sync::Arc;
+
+#[cfg(any(test, feature = "faults"))]
+use super::faults::FaultPlan;
+use super::job::{Job, JobFailure, JobOutcome, JobResult};
+use super::metrics::Metrics;
+use super::scratch::ScratchPool;
 
 /// Reusable execution state for one job at a time: complex arenas for PH
 /// plus the zero-copy reduction planner's masks/degree arrays. The
@@ -28,29 +42,93 @@ impl WorkerScratch {
     }
 }
 
+/// Escalate a reduction one rung on the degradation ladder: anything
+/// short of the combined pipeline becomes `Combined`, and `Combined`
+/// becomes the `FixedPoint` alternation (the strongest reduction the
+/// planner offers, hence the cheapest downstream PH).
+pub fn escalate(which: Reduction) -> Reduction {
+    match which {
+        Reduction::None | Reduction::Coral | Reduction::Prunit => Reduction::Combined,
+        Reduction::Combined | Reduction::FixedPoint => Reduction::FixedPoint,
+    }
+}
+
+/// The spec actually run for a given retry attempt (0-based): the base
+/// reduction escalated once per prior failure, plus — on the final
+/// attempt of a job that has already failed at least once — forced
+/// component-sharded execution, which bounds peak complex size by the
+/// largest component instead of the whole graph.
+pub fn degraded_spec(base: Reduction, attempt: u32, last: bool) -> (Reduction, bool) {
+    let mut which = base;
+    for _ in 0..attempt {
+        which = escalate(which);
+    }
+    (which, last && attempt > 0)
+}
+
 /// Execute one job: plan + compact the reduction and run PH, both into
 /// the caller's scratch. `worker` is the executing thread's index,
 /// recorded in the result for telemetry.
 ///
 /// A filtration/graph mismatch surfaces as a typed error instead of the
-/// pre-planner panic.
+/// pre-planner panic. Honors whatever [`CancelToken`] is installed in
+/// `scratch.reduce` (none by default). The result reports one attempt
+/// and [`JobOutcome::Success`]; the retry harness overwrites both.
 pub fn execute_job(scratch: &mut WorkerScratch, job: &Job, worker: usize) -> Result<JobResult> {
+    execute_attempt(scratch, job, worker, job.spec.reduction, false)
+}
+
+/// One attempt of a job with an explicit (possibly degraded) reduction
+/// and an optional forced-sharded execution path.
+pub(crate) fn execute_attempt(
+    scratch: &mut WorkerScratch,
+    job: &Job,
+    worker: usize,
+    which: Reduction,
+    sharded: bool,
+) -> Result<JobResult> {
     let total = Timer::start();
+    if sharded {
+        // Forced degraded path: per-component complexes bound peak memory
+        // and each shard polls the same token, so deadlines still bite.
+        let (diagrams, report) = pd_sharded_with(
+            &mut scratch.reduce,
+            &job.graph,
+            &job.filtration,
+            job.spec.max_k,
+            which,
+            1,
+        )?;
+        let total_secs = total.elapsed().as_secs_f64();
+        let ph_secs = (total_secs - report.reduce_secs).max(0.0);
+        return Ok(JobResult {
+            id: job.id,
+            diagrams,
+            reduction: report,
+            ph_secs,
+            total_secs,
+            worker,
+            attempts: 1,
+            outcome: JobOutcome::Success,
+        });
+    }
     let red = combined_with_ws(
         &mut scratch.reduce,
         &job.graph,
         &job.filtration,
         job.spec.max_k,
-        job.spec.reduction,
+        which,
     )?;
-    let (diagrams, ph_secs) = Timer::time(|| {
-        persistence_diagrams_with(
-            &mut scratch.complex,
-            &red.graph,
-            &red.filtration,
-            job.spec.max_k,
-        )
-    });
+    let cancel = scratch.reduce.cancel_token().clone();
+    let ph = Timer::start();
+    let diagrams = persistence_diagrams_cancellable(
+        &mut scratch.complex,
+        &red.graph,
+        &red.filtration,
+        job.spec.max_k,
+        &cancel,
+    )?;
+    let ph_secs = ph.elapsed().as_secs_f64();
     Ok(JobResult {
         id: job.id,
         diagrams,
@@ -58,7 +136,129 @@ pub fn execute_job(scratch: &mut WorkerScratch, job: &Job, worker: usize) -> Res
         ph_secs,
         total_secs: total.elapsed().as_secs_f64(),
         worker,
+        attempts: 1,
+        outcome: JobOutcome::Success,
     })
+}
+
+/// Per-worker retry policy, derived from the coordinator config once per
+/// batch.
+#[derive(Clone, Debug)]
+pub(crate) struct AttemptPolicy {
+    /// retries after the first failure; attempts = `max_retries + 1`
+    pub max_retries: usize,
+    /// base backoff between attempts, doubled per retry (0 disables)
+    pub backoff_ms: u64,
+    /// per-attempt wall-clock deadline (≤ 0 disables)
+    pub deadline_secs: f64,
+    /// scripted faults for the chaos suite
+    #[cfg(any(test, feature = "faults"))]
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run one job to a final verdict: attempt, and on transient failure
+/// back off, escalate the spec one rung, and re-attempt — up to
+/// `policy.max_retries` retries. Every attempt gets a fresh pool
+/// checkout with a fresh deadline token; a panicking attempt is caught
+/// here (the worker thread survives) and its scratch is discarded rather
+/// than re-pooled. Permanent errors (e.g. a filtration/graph mismatch)
+/// short-circuit the ladder — retrying cannot fix them.
+pub(crate) fn run_job_with_retries(
+    pool: &ScratchPool,
+    prune_threads: usize,
+    kernel: DominationKernel,
+    policy: &AttemptPolicy,
+    metrics: &Metrics,
+    job: &Job,
+    worker: usize,
+) -> std::result::Result<JobResult, JobFailure> {
+    let attempts_max = (policy.max_retries as u32).saturating_add(1);
+    let mut attempt = 0u32;
+    loop {
+        let last = attempt + 1 >= attempts_max;
+        let (which, sharded) = degraded_spec(job.spec.reduction, attempt, last);
+        let mut scratch = pool.checkout(job.graph.n());
+        scratch.reduce.set_prune_threads(prune_threads);
+        scratch.reduce.set_domination_kernel(kernel);
+        scratch
+            .reduce
+            .set_cancel_token(CancelToken::from_secs(policy.deadline_secs));
+        #[cfg(any(test, feature = "faults"))]
+        scratch.reduce.set_fault_round_delay(
+            policy
+                .faults
+                .as_ref()
+                .and_then(|plan| plan.round_delay(job.id)),
+        );
+
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            #[cfg(any(test, feature = "faults"))]
+            if let Some(plan) = &policy.faults {
+                if plan.should_panic(job.id, attempt) {
+                    panic!("injected panic: job {} attempt {}", job.id, attempt);
+                }
+                if let Some(e) = plan.injected_error(job.id, attempt) {
+                    return Err(e);
+                }
+            }
+            execute_attempt(&mut scratch, job, worker, which, sharded)
+        }));
+        let result = match caught {
+            Ok(res) => {
+                drop(scratch); // clean attempt: scratch returns to its tier
+                res
+            }
+            Err(payload) => {
+                // the unwound arenas may be inconsistent — never re-pool
+                scratch.discard();
+                metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+                Err(Error::JobPanicked(panic_message(payload)))
+            }
+        };
+        match result {
+            Ok(mut r) => {
+                r.attempts = attempt + 1;
+                if attempt > 0 {
+                    metrics.jobs_degraded.fetch_add(1, Ordering::Relaxed);
+                    r.outcome = JobOutcome::Degraded {
+                        reduction: which,
+                        sharded,
+                    };
+                }
+                return Ok(r);
+            }
+            Err(e) => {
+                if matches!(e, Error::DeadlineExceeded { .. }) {
+                    metrics.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                if e.is_transient() && !last {
+                    metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
+                    if policy.backoff_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(
+                            policy.backoff_ms << attempt.min(6),
+                        ));
+                    }
+                    attempt += 1;
+                    continue;
+                }
+                return Err(JobFailure {
+                    id: job.id,
+                    attempts: attempt + 1,
+                    error: e,
+                });
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -74,6 +274,8 @@ mod tests {
         let first = execute_job(&mut scratch, &a, 3).unwrap();
         assert_eq!(first.worker, 3);
         assert_eq!(first.diagrams.len(), 2);
+        assert_eq!(first.attempts, 1);
+        assert_eq!(first.outcome, JobOutcome::Success);
         // same job through the warmed scratch must give identical output
         let again = execute_job(&mut scratch, &a, 3).unwrap();
         for k in 0..first.diagrams.len() {
@@ -94,5 +296,196 @@ mod tests {
             execute_job(&mut scratch, &bad, 0),
             Err(crate::error::Error::FiltrationMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn degradation_ladder_escalates_and_shards_last() {
+        // attempt 0 always runs the requested spec unsharded
+        assert_eq!(degraded_spec(Reduction::Prunit, 0, false), (Reduction::Prunit, false));
+        assert_eq!(degraded_spec(Reduction::Prunit, 0, true), (Reduction::Prunit, false));
+        // each retry escalates one rung
+        assert_eq!(degraded_spec(Reduction::None, 1, false), (Reduction::Combined, false));
+        assert_eq!(degraded_spec(Reduction::None, 2, false), (Reduction::FixedPoint, false));
+        // the last attempt of a failing job is sharded on top
+        assert_eq!(degraded_spec(Reduction::Combined, 2, true), (Reduction::FixedPoint, true));
+        // FixedPoint saturates
+        assert_eq!(escalate(Reduction::FixedPoint), Reduction::FixedPoint);
+    }
+
+    #[test]
+    fn sharded_attempt_matches_unsharded_diagrams() {
+        let mut scratch = WorkerScratch::new();
+        let job = Job::degree_superlevel(9, gen::barabasi_albert(60, 2, 4), JobSpec::default());
+        let plain = execute_attempt(&mut scratch, &job, 0, Reduction::Combined, false).unwrap();
+        let shard = execute_attempt(&mut scratch, &job, 0, Reduction::Combined, true).unwrap();
+        assert_eq!(plain.diagrams.len(), shard.diagrams.len());
+        for k in 0..plain.diagrams.len() {
+            assert!(
+                plain.diagrams[k].same_as(&shard.diagrams[k], 0.0),
+                "degraded sharded execution must not change PD_{k}"
+            );
+        }
+    }
+
+    fn policy(max_retries: usize, deadline_secs: f64, faults: FaultPlan) -> AttemptPolicy {
+        AttemptPolicy {
+            max_retries,
+            backoff_ms: 0,
+            deadline_secs,
+            faults: Some(Arc::new(faults)),
+        }
+    }
+
+    #[test]
+    fn injected_panic_is_caught_and_retried_to_success() {
+        let pool = ScratchPool::new(2);
+        let metrics = Metrics::default();
+        let job = Job::degree_superlevel(5, gen::barabasi_albert(50, 2, 2), JobSpec::default());
+        let plan = FaultPlan::new().panic_on(5, 0);
+        let r = run_job_with_retries(
+            &pool,
+            1,
+            DominationKernel::Auto,
+            &policy(2, 0.0, plan),
+            &metrics,
+            &job,
+            0,
+        )
+        .unwrap();
+        assert_eq!(r.attempts, 2);
+        assert!(r.outcome.is_degraded());
+        assert_eq!(metrics.jobs_panicked(), 1);
+        assert_eq!(metrics.jobs_retried(), 1);
+        assert_eq!(metrics.jobs_degraded(), 1);
+        // the panicked attempt's scratch was discarded, not re-pooled
+        assert_eq!(pool.cached(), 1);
+    }
+
+    #[test]
+    fn exhausted_retries_surface_identity_and_attempts() {
+        let pool = ScratchPool::new(2);
+        let metrics = Metrics::default();
+        let job = Job::degree_superlevel(11, gen::cycle(20), JobSpec::default());
+        let plan = FaultPlan::new().error_always(11);
+        let fail = run_job_with_retries(
+            &pool,
+            1,
+            DominationKernel::Auto,
+            &policy(2, 0.0, plan),
+            &metrics,
+            &job,
+            0,
+        )
+        .unwrap_err();
+        assert_eq!(fail.id, 11);
+        assert_eq!(fail.attempts, 3, "max_retries=2 → 3 attempts");
+        assert!(matches!(fail.error, Error::Injected(_)));
+        assert_eq!(metrics.jobs_retried(), 2);
+        assert!(fail.to_string().contains("job 11 failed after 3 attempt(s)"));
+    }
+
+    #[test]
+    fn permanent_errors_do_not_burn_retries() {
+        let pool = ScratchPool::new(2);
+        let metrics = Metrics::default();
+        let bad = Job::new(
+            3,
+            gen::cycle(5),
+            crate::complex::Filtration::constant(3),
+            JobSpec::default(),
+        );
+        let fail = run_job_with_retries(
+            &pool,
+            1,
+            DominationKernel::Auto,
+            &policy(4, 0.0, FaultPlan::new()),
+            &metrics,
+            &bad,
+            0,
+        )
+        .unwrap_err();
+        assert_eq!(fail.attempts, 1, "structural errors must not be retried");
+        assert!(matches!(fail.error, Error::FiltrationMismatch { .. }));
+        assert_eq!(metrics.jobs_retried(), 0);
+    }
+
+    #[test]
+    fn round_delay_plus_deadline_forces_miss_then_recovers() {
+        let pool = ScratchPool::new(2);
+        let metrics = Metrics::default();
+        // FixedPoint alternation polls the token between rounds, so a
+        // 50ms injected round delay blows a 5ms deadline deterministically
+        let job = Job::degree_superlevel(
+            2,
+            gen::erdos_renyi(120, 0.1, 9),
+            JobSpec {
+                max_k: 1,
+                reduction: Reduction::FixedPoint,
+            },
+        );
+        let plan = FaultPlan::new().delay_rounds(2, Duration::from_millis(50));
+        // no retries: the deadline miss is the final verdict
+        let fail = run_job_with_retries(
+            &pool,
+            1,
+            DominationKernel::Auto,
+            &policy(0, 0.005, plan.clone()),
+            &metrics,
+            &job,
+            0,
+        )
+        .unwrap_err();
+        assert!(matches!(fail.error, Error::DeadlineExceeded { .. }));
+        assert!(metrics.deadline_misses() >= 1);
+        // with no deadline the same faulted job completes (slowly)
+        let ok = run_job_with_retries(
+            &pool,
+            1,
+            DominationKernel::Auto,
+            &policy(0, 0.0, plan),
+            &metrics,
+            &job,
+            0,
+        )
+        .unwrap();
+        assert_eq!(ok.attempts, 1);
+    }
+
+    #[test]
+    fn degraded_results_stay_correct() {
+        // a twice-failed job must produce, on its degraded last attempt,
+        // exactly the diagrams a clean run produces in every guaranteed
+        // dimension: escalation changes the route, never the answer for
+        // PD_j, j ≥ max_k (Thms 2 & 7 compose; dimensions below max_k
+        // are best-effort under a stronger core and may differ)
+        let pool = ScratchPool::new(2);
+        let metrics = Metrics::default();
+        let job = Job::degree_superlevel(6, gen::barabasi_albert(70, 3, 5), JobSpec::default());
+        let clean = execute_job(&mut WorkerScratch::new(), &job, 0).unwrap();
+        let plan = FaultPlan::new().error_on(6, 0).error_on(6, 1);
+        let degraded = run_job_with_retries(
+            &pool,
+            1,
+            DominationKernel::Auto,
+            &policy(2, 0.0, plan),
+            &metrics,
+            &job,
+            0,
+        )
+        .unwrap();
+        assert_eq!(degraded.attempts, 3);
+        assert_eq!(
+            degraded.outcome,
+            JobOutcome::Degraded {
+                reduction: Reduction::FixedPoint,
+                sharded: true
+            }
+        );
+        for k in job.spec.max_k..clean.diagrams.len() {
+            assert!(
+                clean.diagrams[k].same_as(&degraded.diagrams[k], 1e-9),
+                "degradation changed guaranteed PD_{k}"
+            );
+        }
     }
 }

@@ -34,6 +34,34 @@ pub enum Error {
     Coordinator(String),
     /// I/O error with context.
     Io(String),
+    /// A job ran past its configured deadline and unwound at a
+    /// cancellation checkpoint.
+    DeadlineExceeded { limit_secs: f64 },
+    /// A cancellation token was tripped explicitly.
+    Cancelled,
+    /// A job panicked; `catch_unwind` isolation converted the payload.
+    JobPanicked(String),
+    /// A deterministic fault-injection plan raised this error on purpose
+    /// (test / chaos-suite only).
+    Injected(String),
+}
+
+impl Error {
+    /// Whether a retry could plausibly succeed. Structural errors
+    /// (mismatched filtration, out-of-range vertex, bad config) are
+    /// permanent: retrying burns attempts on a deterministic failure.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Error::DeadlineExceeded { .. }
+                | Error::Cancelled
+                | Error::JobPanicked(_)
+                | Error::Injected(_)
+                | Error::Io(_)
+                | Error::Xla(_)
+                | Error::Coordinator(_)
+        )
+    }
 }
 
 impl fmt::Display for Error {
@@ -65,6 +93,12 @@ impl fmt::Display for Error {
             Error::Parse(msg) => write!(f, "parse error: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             Error::Io(msg) => write!(f, "io error: {msg}"),
+            Error::DeadlineExceeded { limit_secs } => {
+                write!(f, "job exceeded its {limit_secs}s deadline")
+            }
+            Error::Cancelled => write!(f, "job cancelled"),
+            Error::JobPanicked(msg) => write!(f, "job panicked: {msg}"),
+            Error::Injected(msg) => write!(f, "injected fault: {msg}"),
         }
     }
 }

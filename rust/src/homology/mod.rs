@@ -15,14 +15,19 @@ pub mod vectorize;
 
 pub use diagram::Diagram;
 pub use distance::{bottleneck, wasserstein1};
-pub use reduction::{diagrams_of_complex, reduce, Algorithm, ReductionResult};
+pub use reduction::{
+    diagrams_of_complex, diagrams_of_complex_cancellable, reduce, reduce_cancellable, Algorithm,
+    ReductionResult,
+};
 pub use sharded::{
     merge_shard_diagrams, persistence_diagrams_sharded, persistence_diagrams_sharded_with,
 };
 pub use union_find::pd0;
 
 use crate::complex::{ComplexWorkspace, Filtration};
+use crate::error::Result;
 use crate::graph::Graph;
+use crate::util::CancelToken;
 
 /// Persistence diagrams `PD_0 .. PD_max_k` of `(G, f)` over the clique-
 /// complex sublevel/superlevel filtration (§3). Uses the union-find fast
@@ -41,11 +46,28 @@ pub fn persistence_diagrams_with(
     f: &Filtration,
     max_k: usize,
 ) -> Vec<Diagram> {
+    persistence_diagrams_cancellable(ws, g, f, max_k, &CancelToken::none())
+        .expect("persistence with a none token cannot be cancelled")
+}
+
+/// [`persistence_diagrams_with`] with cooperative cancellation: polls the
+/// token before and after complex construction and threads it into the
+/// column reduction, so a job past its deadline unwinds with
+/// `Error::DeadlineExceeded` instead of finishing the cubic loop.
+pub fn persistence_diagrams_cancellable(
+    ws: &mut ComplexWorkspace,
+    g: &Graph,
+    f: &Filtration,
+    max_k: usize,
+    cancel: &CancelToken,
+) -> Result<Vec<Diagram>> {
+    cancel.check()?;
     if max_k == 0 {
-        return vec![pd0(g, f)];
+        return Ok(vec![pd0(g, f)]);
     }
     let complex = ws.build_clique(g, f, max_k + 1);
-    diagrams_of_complex(&complex, max_k, Algorithm::Twist)
+    cancel.check()?;
+    diagrams_of_complex_cancellable(&complex, max_k, Algorithm::Twist, cancel)
 }
 
 /// Betti numbers β₀..β_max_k of the clique complex of `G` (constant

@@ -15,6 +15,15 @@
 
 use super::diagram::Diagram;
 use crate::complex::flat::FlatComplex;
+use crate::error::Result;
+use crate::util::CancelToken;
+
+/// Cancellation-poll granularity: one deadline check per this many
+/// processed columns. 1024 columns is far above the cost of an atomic
+/// load + `Instant::now()`, so the overhead is unmeasurable, while a
+/// runaway cubic reduction still observes its deadline within
+/// milliseconds.
+pub(crate) const CANCEL_CHECK_COLS: usize = 1024;
 
 /// Which reduction algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -167,6 +176,19 @@ fn process(
 /// Run the reduction and extract index pairs. Columns are consumed from
 /// the complex's boundary CSR; nothing is cloned up front.
 pub fn reduce(c: &FlatComplex, algorithm: Algorithm) -> ReductionResult {
+    reduce_cancellable(c, algorithm, &CancelToken::none())
+        .expect("reduction with a none token cannot be cancelled")
+}
+
+/// [`reduce`] with cooperative cancellation: polls `cancel` every
+/// [`CANCEL_CHECK_COLS`] processed columns and unwinds with
+/// `Error::DeadlineExceeded` / `Error::Cancelled` instead of running the
+/// cubic loop to completion.
+pub fn reduce_cancellable(
+    c: &FlatComplex,
+    algorithm: Algorithm,
+    cancel: &CancelToken,
+) -> Result<ReductionResult> {
     let n = c.len();
     // Lazily materialised reduced columns: work[j] is meaningful only
     // when touched[j]; untouched columns read from the arena.
@@ -175,10 +197,16 @@ pub fn reduce(c: &FlatComplex, algorithm: Algorithm) -> ReductionResult {
     // pivot_of_row[r] = column whose low is r.
     let mut pivot_of_row: Vec<Option<usize>> = vec![None; n];
     let mut dense = DenseColumn::new(n);
+    let mut since_check = 0usize;
 
     match algorithm {
         Algorithm::Standard => {
             for j in 0..n {
+                since_check += 1;
+                if since_check >= CANCEL_CHECK_COLS {
+                    since_check = 0;
+                    cancel.check()?;
+                }
                 process(j, c, &mut work, &mut touched, &mut pivot_of_row, &mut dense);
             }
         }
@@ -189,6 +217,11 @@ pub fn reduce(c: &FlatComplex, algorithm: Algorithm) -> ReductionResult {
                 for j in 0..n {
                     if c.dim_of(j) != d || cleared[j] {
                         continue;
+                    }
+                    since_check += 1;
+                    if since_check >= CANCEL_CHECK_COLS {
+                        since_check = 0;
+                        cancel.check()?;
                     }
                     process(j, c, &mut work, &mut touched, &mut pivot_of_row, &mut dense);
                     if let Some(&low) = col(c, &work, &touched, j).last() {
@@ -218,7 +251,7 @@ pub fn reduce(c: &FlatComplex, algorithm: Algorithm) -> ReductionResult {
     let essential = (0..n)
         .filter(|&i| !paired_birth[i] && !is_negative[i])
         .collect();
-    ReductionResult { pairs, essential }
+    Ok(ReductionResult { pairs, essential })
 }
 
 /// Persistence diagrams PD_0..PD_max_k from a filtered complex.
@@ -226,7 +259,19 @@ pub fn reduce(c: &FlatComplex, algorithm: Algorithm) -> ReductionResult {
 /// The complex must contain simplices up to dimension `max_k + 1`,
 /// otherwise deaths of k-classes are missed and PD_k is wrong.
 pub fn diagrams_of_complex(c: &FlatComplex, max_k: usize, algorithm: Algorithm) -> Vec<Diagram> {
-    let red = reduce(c, algorithm);
+    diagrams_of_complex_cancellable(c, max_k, algorithm, &CancelToken::none())
+        .expect("reduction with a none token cannot be cancelled")
+}
+
+/// [`diagrams_of_complex`] with cooperative cancellation threaded into
+/// the column reduction.
+pub fn diagrams_of_complex_cancellable(
+    c: &FlatComplex,
+    max_k: usize,
+    algorithm: Algorithm,
+    cancel: &CancelToken,
+) -> Result<Vec<Diagram>> {
+    let red = reduce_cancellable(c, algorithm, cancel)?;
     let mut per_dim: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_k + 1];
     for &(b, d) in &red.pairs {
         let k = c.dim_of(b);
@@ -240,11 +285,11 @@ pub fn diagrams_of_complex(c: &FlatComplex, max_k: usize, algorithm: Algorithm) 
             per_dim[k].push((c.key_of(i), f64::INFINITY));
         }
     }
-    per_dim
+    Ok(per_dim
         .into_iter()
         .enumerate()
         .map(|(k, pairs)| Diagram::new(k, pairs))
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
@@ -372,6 +417,25 @@ mod tests {
         let c = FlatComplex::build(&g, &f, 3);
         let r = reduce(&c, Algorithm::Twist);
         assert_eq!(2 * r.pairs.len() + r.essential.len(), c.len());
+    }
+
+    #[test]
+    fn pre_cancelled_token_aborts_reduction() {
+        // Enough columns to cross the CANCEL_CHECK_COLS checkpoint.
+        let g = gen::erdos_renyi(120, 0.25, 11);
+        let f = Filtration::degree(&g);
+        let c = FlatComplex::build(&g, &f, 2);
+        assert!(c.len() > CANCEL_CHECK_COLS, "need a checkpoint to fire");
+        let t = crate::util::CancelToken::cancellable();
+        t.cancel();
+        for alg in [Algorithm::Standard, Algorithm::Twist] {
+            match reduce_cancellable(&c, alg, &t) {
+                Err(crate::error::Error::Cancelled) => {}
+                other => panic!("expected Cancelled, got {:?}", other.map(|_| ())),
+            }
+        }
+        // A none token reduces normally on the same complex.
+        assert!(reduce_cancellable(&c, Algorithm::Twist, &CancelToken::none()).is_ok());
     }
 
     #[test]

@@ -22,13 +22,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use crate::complex::{ComplexWorkspace, Filtration};
+use crate::error::Result;
 use crate::graph::decompose::{decompose_filtered, Shard};
 use crate::graph::Graph;
 use crate::reduce::planner::ReductionWorkspace;
 use crate::reduce::Reduction;
+use crate::util::CancelToken;
 
 use super::diagram::Diagram;
-use super::persistence_diagrams_with;
+use super::persistence_diagrams_cancellable;
 
 /// Diagrams `PD_0..PD_max_k` of a single shard. Singleton shards (the
 /// isolated-vertex fringe that PrunIT and coral leave behind in bulk)
@@ -47,6 +49,19 @@ pub fn shard_diagrams_with(
     shard: &Shard,
     max_k: usize,
 ) -> Vec<Diagram> {
+    shard_diagrams_cancellable(ws, shard, max_k, &CancelToken::none())
+        .expect("shard persistence with a none token cannot be cancelled")
+}
+
+/// [`shard_diagrams_with`] with cooperative cancellation threaded into
+/// the per-shard persistence computation. The singleton fast path never
+/// polls: it is O(1).
+pub fn shard_diagrams_cancellable(
+    ws: &mut ComplexWorkspace,
+    shard: &Shard,
+    max_k: usize,
+    cancel: &CancelToken,
+) -> Result<Vec<Diagram>> {
     if shard.graph.n() == 1 {
         let mut out = Vec::with_capacity(max_k + 1);
         out.push(Diagram::new(
@@ -56,9 +71,9 @@ pub fn shard_diagrams_with(
         for k in 1..=max_k {
             out.push(Diagram::new(k, Vec::new()));
         }
-        return out;
+        return Ok(out);
     }
-    persistence_diagrams_with(ws, &shard.graph, &shard.filtration, max_k)
+    persistence_diagrams_cancellable(ws, &shard.graph, &shard.filtration, max_k, cancel)
 }
 
 /// Per-shard diagrams for a whole shard set, computed on up to `workers`
@@ -69,20 +84,35 @@ pub fn shard_diagrams_with(
 /// regardless of scheduling, and each shard's computation is itself
 /// deterministic.
 pub fn all_shard_diagrams(shards: &[Shard], max_k: usize, workers: usize) -> Vec<Vec<Diagram>> {
+    all_shard_diagrams_cancellable(shards, max_k, workers, &CancelToken::none())
+        .expect("shard persistence with a none token cannot be cancelled")
+}
+
+/// [`all_shard_diagrams`] with cooperative cancellation: the token is
+/// shared by every worker thread, so one shard hitting the deadline stops
+/// the whole dispatch (remaining shards observe expiry before starting)
+/// and the first error is returned after the scope joins.
+pub fn all_shard_diagrams_cancellable(
+    shards: &[Shard],
+    max_k: usize,
+    workers: usize,
+    cancel: &CancelToken,
+) -> Result<Vec<Vec<Diagram>>> {
     let workers = workers.max(1).min(shards.len().max(1));
     if workers == 1 {
         let mut ws = ComplexWorkspace::new();
         return shards
             .iter()
-            .map(|s| shard_diagrams_with(&mut ws, s, max_k))
+            .map(|s| shard_diagrams_cancellable(&mut ws, s, max_k, cancel))
             .collect();
     }
     let mut order: Vec<usize> = (0..shards.len()).collect();
     order.sort_by_key(|&i| std::cmp::Reverse(shards[i].graph.n()));
     let next = AtomicUsize::new(0);
     let mut out: Vec<Vec<Diagram>> = vec![Vec::new(); shards.len()];
+    let mut first_err = None;
     std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::channel::<(usize, Vec<Diagram>)>();
+        let (tx, rx) = mpsc::channel::<(usize, Result<Vec<Diagram>>)>();
         for _ in 0..workers {
             let tx = tx.clone();
             let next = &next;
@@ -97,10 +127,11 @@ pub fn all_shard_diagrams(shards: &[Shard], max_k: usize, workers: usize) -> Vec
                         break;
                     }
                     let i = order[slot];
-                    if tx
-                        .send((i, shard_diagrams_with(&mut ws, &shards[i], max_k)))
-                        .is_err()
-                    {
+                    let res = shard_diagrams_cancellable(&mut ws, &shards[i], max_k, cancel);
+                    let errored = res.is_err();
+                    if tx.send((i, res)).is_err() || errored {
+                        // receiver gone, or this shard failed (deadline /
+                        // cancellation): stop claiming work
                         break;
                     }
                 }
@@ -108,10 +139,20 @@ pub fn all_shard_diagrams(shards: &[Shard], max_k: usize, workers: usize) -> Vec
         }
         drop(tx);
         for (i, pds) in rx {
-            out[i] = pds;
+            match pds {
+                Ok(pds) => out[i] = pds,
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
         }
     });
-    out
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
 }
 
 /// Exact merge of per-shard diagrams: multiset union per dimension
@@ -166,7 +207,8 @@ pub fn persistence_diagrams_sharded_with(
 ) -> crate::error::Result<Vec<Diagram>> {
     rws.plan(g, f, 0, Reduction::None)?;
     let shards = rws.emit_shards(g, f);
-    let per = all_shard_diagrams(&shards, max_k, workers);
+    let cancel = rws.cancel_token().clone();
+    let per = all_shard_diagrams_cancellable(&shards, max_k, workers, &cancel)?;
     Ok(merge_shard_diagrams(&per, max_k))
 }
 

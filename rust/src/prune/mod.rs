@@ -9,5 +9,5 @@ pub use domination::{dominated_pairs_dense, dominates, find_dominator};
 pub use kernel::{
     residue_dominates, DominationKernel, HubBitset, KernelChoice, KernelState, HUB_DEGREE,
 };
-pub use prunit::{prunit, PruneResult};
+pub use prunit::{prunit, prunit_cancellable, PruneResult};
 pub use strong_collapse::{strong_collapse_core, StrongCollapseStats};

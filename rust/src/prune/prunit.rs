@@ -32,6 +32,7 @@
 use crate::complex::Filtration;
 use crate::error::Result;
 use crate::graph::Graph;
+use crate::util::CancelToken;
 
 /// Result of a pruning pass.
 #[derive(Clone, Debug)]
@@ -125,6 +126,19 @@ impl View {
 /// `reduce::planner::ReductionWorkspace` reproduces (at any thread
 /// count) on its tombstone masks.
 pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(g: &Graph, admissible: F) -> CollapseOutcome {
+    collapse_with_cancel(g, admissible, &CancelToken::none())
+        .expect("collapse with a none token cannot be cancelled")
+}
+
+/// [`collapse_with`] with cooperative cancellation, polled once per
+/// frontier round — the same checkpoint cadence as the planner's
+/// `prunit_pass`, so reference and planner observe a shared deadline at
+/// equivalent points.
+pub(crate) fn collapse_with_cancel<F: Fn(u32, u32) -> bool>(
+    g: &Graph,
+    admissible: F,
+    cancel: &CancelToken,
+) -> Result<CollapseOutcome> {
     let n = g.n();
     let mut view = View::new(g);
     let mut frontier: Vec<u32> = (0..n as u32).collect();
@@ -136,6 +150,7 @@ pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(g: &Graph, admissible: F) -
     let mut rounds = 0usize;
 
     while !frontier.is_empty() {
+        cancel.check()?;
         rounds += 1;
         // Check phase: every alive frontier vertex against the round-start
         // residue. The witness is the first admissible dominator in
@@ -180,12 +195,12 @@ pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(g: &Graph, admissible: F) -
         }
         std::mem::swap(&mut frontier, &mut next_frontier);
     }
-    CollapseOutcome {
+    Ok(CollapseOutcome {
         alive: view.alive,
         removed,
         checks,
         rounds,
-    }
+    })
 }
 
 /// Run PrunIT to a fixed point on the round-synchronous schedule.
@@ -193,8 +208,15 @@ pub(crate) fn collapse_with<F: Fn(u32, u32) -> bool>(g: &Graph, admissible: F) -
 /// Errors with [`crate::error::Error::FiltrationMismatch`] when `f` does
 /// not match `g`'s order (the pre-planner `expect` panic is gone).
 pub fn prunit(g: &Graph, f: &Filtration) -> Result<PruneResult> {
+    prunit_cancellable(g, f, &CancelToken::none())
+}
+
+/// [`prunit`] with cooperative cancellation polled at frontier-round
+/// boundaries. Additionally errors with `Error::DeadlineExceeded` /
+/// `Error::Cancelled` once the token expires.
+pub fn prunit_cancellable(g: &Graph, f: &Filtration, cancel: &CancelToken) -> Result<PruneResult> {
     f.check(g)?;
-    let out = collapse_with(g, |u, v| f.admissible_removal(u, v));
+    let out = collapse_with_cancel(g, |u, v| f.admissible_removal(u, v), cancel)?;
     let (graph, kept_old_ids) = g.induced(&out.alive);
     let filtration = f.restrict(&kept_old_ids);
     Ok(PruneResult {

@@ -12,11 +12,12 @@
 //! [`combined_with_materializing`], the differential reference for tests
 //! and the `planner_scaling` bench.
 
+use crate::complex::ComplexWorkspace;
 use crate::complex::Filtration;
 use crate::error::Result;
 use crate::graph::Graph;
-use crate::homology::sharded::{all_shard_diagrams, merge_shard_diagrams};
-use crate::homology::{persistence_diagrams, Diagram};
+use crate::homology::sharded::{all_shard_diagrams_cancellable, merge_shard_diagrams};
+use crate::homology::{persistence_diagrams_cancellable, Diagram};
 use crate::prune::prunit;
 use crate::util::Timer;
 
@@ -350,7 +351,16 @@ pub fn pd_with_reduction_ws(
     which: Reduction,
 ) -> Result<(Vec<Diagram>, ReductionReport)> {
     let red = combined_with_ws(ws, g, f, k, which)?;
-    let diagrams = persistence_diagrams(&red.graph, &red.filtration, k);
+    // the planner's token (a none token unless the coordinator installed
+    // a deadline) carries into the cubic PH stage
+    let cancel = ws.cancel_token().clone();
+    let diagrams = persistence_diagrams_cancellable(
+        &mut ComplexWorkspace::new(),
+        &red.graph,
+        &red.filtration,
+        k,
+        &cancel,
+    )?;
     Ok((diagrams, red.report))
 }
 
@@ -389,7 +399,8 @@ pub fn pd_sharded_with(
     let (shards, emit_secs) = Timer::time(|| ws.emit_shards(g, f));
     let mut report = report_from_ws(ws, g, which, total.elapsed().as_secs_f64(), emit_secs);
     report.shard_sizes = shards.iter().map(|s| s.graph.n()).collect();
-    let per_shard = all_shard_diagrams(&shards, k, workers);
+    let cancel = ws.cancel_token().clone();
+    let per_shard = all_shard_diagrams_cancellable(&shards, k, workers, &cancel)?;
     let diagrams = merge_shard_diagrams(&per_shard, k);
     Ok((diagrams, report))
 }
@@ -398,6 +409,7 @@ pub fn pd_sharded_with(
 mod tests {
     use super::*;
     use crate::graph::gen;
+    use crate::homology::persistence_diagrams;
 
     const ALL: [Reduction; 5] = [
         Reduction::None,

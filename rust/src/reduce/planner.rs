@@ -61,7 +61,7 @@ use crate::error::Result;
 use crate::graph::decompose::Shard;
 use crate::graph::Graph;
 use crate::prune::kernel::{self, DominationKernel, KernelChoice, KernelState};
-use crate::util::Timer;
+use crate::util::{CancelToken, Timer};
 
 use super::pipeline::{Reduction, RoundStats};
 
@@ -182,6 +182,15 @@ pub struct ReductionWorkspace {
     /// requested domination-kernel policy; survives `plan`/`reset` like
     /// `prune_threads` — configuration, not per-plan state
     kernel: DominationKernel,
+    /// cooperative cancellation / deadline token, polled at PrunIT round
+    /// boundaries and between FixedPoint alternations; survives
+    /// `plan`/`reset` like `prune_threads` — the coordinator worker sets
+    /// it once per job attempt
+    cancel: CancelToken,
+    /// fault injection: sleep this long at every frontier-round boundary
+    /// (chaos suite only — forces a deadline miss deterministically)
+    #[cfg(any(test, feature = "faults"))]
+    fault_round_delay: Option<std::time::Duration>,
     /// core-peel stack (scratch for `kcore::peel_residue`)
     peel: Vec<u32>,
     /// domination-kernel state for inline (single-thread) check phases
@@ -251,6 +260,28 @@ impl ReductionWorkspace {
         self.kernel
     }
 
+    /// Install a cooperative cancellation / deadline token. It is polled
+    /// at every PrunIT frontier-round boundary and between FixedPoint
+    /// alternations, and downstream persistence entry points clone it
+    /// into the column reduction. Survives re-planning; install
+    /// `CancelToken::none()` to clear.
+    pub fn set_cancel_token(&mut self, cancel: CancelToken) {
+        self.cancel = cancel;
+    }
+
+    /// The installed cancellation token (a none token by default).
+    pub fn cancel_token(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    /// Fault injection (chaos suite only): sleep `delay` at every
+    /// frontier-round boundary, turning any graph into a deterministic
+    /// deadline miss.
+    #[cfg(any(test, feature = "faults"))]
+    pub fn set_fault_round_delay(&mut self, delay: Option<std::time::Duration>) {
+        self.fault_round_delay = delay;
+    }
+
     /// The kernel each frontier round of the latest plan actually ran, in
     /// round order (`Auto` resolved per round by residue density). Always
     /// `frontier_rounds()` entries long.
@@ -295,6 +326,7 @@ impl ReductionWorkspace {
     /// only CSR copies the planner ever makes.
     pub fn plan(&mut self, g: &Graph, f: &Filtration, k: usize, which: Reduction) -> Result<()> {
         f.check(g)?;
+        self.cancel.check()?;
         self.reset(g);
         let k1 = (k + 1) as u32;
         match which {
@@ -310,7 +342,7 @@ impl ReductionWorkspace {
             }
             Reduction::Prunit => {
                 let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
-                let p = self.timed_prunit(g, f);
+                let p = self.timed_prunit(g, f)?;
                 self.rounds.push(RoundStats {
                     prunit_removed: p,
                     core_removed: 0,
@@ -320,7 +352,7 @@ impl ReductionWorkspace {
             }
             Reduction::Combined => {
                 let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
-                let p = self.timed_prunit(g, f);
+                let p = self.timed_prunit(g, f)?;
                 let c = self.timed_core(g, k1);
                 self.rounds.push(RoundStats {
                     prunit_removed: p,
@@ -330,8 +362,9 @@ impl ReductionWorkspace {
                 });
             }
             Reduction::FixedPoint => loop {
+                self.cancel.check()?;
                 let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
-                let p = self.timed_prunit(g, f);
+                let p = self.timed_prunit(g, f)?;
                 let c = self.timed_core(g, k1);
                 self.rounds.push(RoundStats {
                     prunit_removed: p,
@@ -349,14 +382,11 @@ impl ReductionWorkspace {
 
     // ---------- stage passes ----------
 
-    fn timed_prunit(&mut self, g: &Graph, f: &Filtration) -> usize {
-        let (removed, secs) = {
-            let t = Timer::start();
-            let r = self.prunit_pass(g, f);
-            (r, t.elapsed().as_secs_f64())
-        };
-        self.prunit_secs += secs;
-        removed
+    fn timed_prunit(&mut self, g: &Graph, f: &Filtration) -> Result<usize> {
+        let t = Timer::start();
+        let r = self.prunit_pass(g, f);
+        self.prunit_secs += t.elapsed().as_secs_f64();
+        r
     }
 
     fn timed_core(&mut self, g: &Graph, k1: u32) -> usize {
@@ -374,7 +404,7 @@ impl ReductionWorkspace {
     /// materialized residue — so the planner's removal set is bit-identical
     /// to the sequential reference's even where twin choices depend on
     /// processing order.
-    fn prunit_pass(&mut self, g: &Graph, f: &Filtration) -> usize {
+    fn prunit_pass(&mut self, g: &Graph, f: &Filtration) -> Result<usize> {
         debug_assert!(self.frontier.is_empty());
         {
             let alive = &self.alive;
@@ -383,11 +413,22 @@ impl ReductionWorkspace {
         }
         let mut removed_total = 0usize;
         while !self.frontier.is_empty() {
+            #[cfg(any(test, feature = "faults"))]
+            if let Some(delay) = self.fault_round_delay {
+                std::thread::sleep(delay);
+            }
+            // deadline checkpoint: one poll per frontier round — between
+            // rounds the alive/deg arrays are consistent, so unwinding
+            // here leaves the workspace reusable (the next plan resets it)
+            if let Err(e) = self.cancel.check() {
+                self.frontier.clear();
+                return Err(e);
+            }
             self.frontier_rounds += 1;
             self.collect_candidates(g, f);
             removed_total += self.resolve_round(g);
         }
-        removed_total
+        Ok(removed_total)
     }
 
     /// Resolve the domination kernel for the round about to run: pinned
@@ -912,6 +953,43 @@ mod tests {
         assert_eq!(ws.domination_kernel(), DominationKernel::Bitset);
         let m: usize = ws.rounds().iter().map(|r| r.merge_rounds).sum();
         assert_eq!(m, 0, "pin must survive re-planning");
+    }
+
+    #[test]
+    fn cancelled_token_unwinds_plan_between_rounds() {
+        let g = gen::erdos_renyi(200, 0.1, 7);
+        let f = Filtration::degree_superlevel(&g);
+        let mut ws = ReductionWorkspace::new();
+        let t = CancelToken::cancellable();
+        ws.set_cancel_token(t.clone());
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap(); // live token: fine
+        t.cancel();
+        assert!(matches!(
+            ws.plan(&g, &f, 1, Reduction::Prunit),
+            Err(crate::error::Error::Cancelled)
+        ));
+        // clearing the token restores normal operation on the same ws
+        ws.set_cancel_token(CancelToken::none());
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+    }
+
+    #[test]
+    fn fault_round_delay_forces_deadline_miss() {
+        let g = gen::erdos_renyi(120, 0.1, 9);
+        let f = Filtration::degree_superlevel(&g);
+        let mut ws = ReductionWorkspace::new();
+        ws.set_fault_round_delay(Some(std::time::Duration::from_millis(40)));
+        ws.set_cancel_token(CancelToken::with_deadline(std::time::Duration::from_millis(5)));
+        match ws.plan(&g, &f, 1, Reduction::FixedPoint) {
+            Err(crate::error::Error::DeadlineExceeded { limit_secs }) => {
+                assert!(limit_secs > 0.0);
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        // same workspace, fault cleared, fresh token: plans normally
+        ws.set_fault_round_delay(None);
+        ws.set_cancel_token(CancelToken::none());
+        ws.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Cooperative cancellation token for long-running reductions.
+//!
+//! A [`CancelToken`] is threaded from the coordinator's per-job deadline
+//! through `ReductionWorkspace` into the PrunIT round loop and the Z/2
+//! column reduction, which poll it at round boundaries / every N columns.
+//! The token is cooperative: nothing is interrupted, the hot loops simply
+//! observe expiry at their next checkpoint and unwind with a typed error,
+//! so a pathological graph can time out without wedging its worker.
+//!
+//! `CancelToken::none()` is the default everywhere and its `check()` is a
+//! single `Option` test — the hot paths pay nothing when no deadline is
+//! configured.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+#[derive(Debug)]
+struct Inner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+    limit_secs: f64,
+}
+
+/// Shared cancellation + deadline flag. Cloning shares the flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Option<Arc<Inner>>,
+}
+
+impl CancelToken {
+    /// A token that never fires; `check()` is free.
+    pub fn none() -> CancelToken {
+        CancelToken { inner: None }
+    }
+
+    /// A cancellable token with no deadline (fires only via `cancel()`).
+    pub fn cancellable() -> CancelToken {
+        CancelToken {
+            inner: Some(Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: None,
+                limit_secs: 0.0,
+            })),
+        }
+    }
+
+    /// A token that expires `limit` from now (and can also be cancelled).
+    pub fn with_deadline(limit: Duration) -> CancelToken {
+        CancelToken {
+            inner: Some(Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(Instant::now() + limit),
+                limit_secs: limit.as_secs_f64(),
+            })),
+        }
+    }
+
+    /// Build from a config-style seconds value; `secs <= 0` means no
+    /// deadline (a plain cancellable token is still returned so explicit
+    /// `cancel()` works).
+    pub fn from_secs(secs: f64) -> CancelToken {
+        if secs > 0.0 {
+            CancelToken::with_deadline(Duration::from_secs_f64(secs))
+        } else {
+            CancelToken::none()
+        }
+    }
+
+    /// Trip the flag; every clone observes it at its next `check()`.
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.inner {
+            inner.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// True once cancelled or past the deadline.
+    pub fn is_expired(&self) -> bool {
+        match &self.inner {
+            None => false,
+            Some(inner) => {
+                inner.cancelled.load(Ordering::Acquire)
+                    || inner.deadline.is_some_and(|d| Instant::now() >= d)
+            }
+        }
+    }
+
+    /// Checkpoint: `Ok(())` while live, a typed error once expired.
+    #[inline]
+    pub fn check(&self) -> Result<()> {
+        let Some(inner) = &self.inner else {
+            return Ok(());
+        };
+        if inner.cancelled.load(Ordering::Acquire) {
+            return Err(Error::Cancelled);
+        }
+        if let Some(deadline) = inner.deadline {
+            if Instant::now() >= deadline {
+                return Err(Error::DeadlineExceeded {
+                    limit_secs: inner.limit_secs,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fires() {
+        let t = CancelToken::none();
+        assert!(t.check().is_ok());
+        t.cancel(); // no-op on the none token
+        assert!(t.check().is_ok());
+        assert!(!t.is_expired());
+    }
+
+    #[test]
+    fn default_is_none() {
+        assert!(CancelToken::default().check().is_ok());
+    }
+
+    #[test]
+    fn cancel_is_observed_by_clones() {
+        let t = CancelToken::cancellable();
+        let clone = t.clone();
+        assert!(clone.check().is_ok());
+        t.cancel();
+        assert!(matches!(clone.check(), Err(Error::Cancelled)));
+        assert!(clone.is_expired());
+    }
+
+    #[test]
+    fn deadline_fires_with_limit_in_error() {
+        let t = CancelToken::with_deadline(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        match t.check() {
+            Err(Error::DeadlineExceeded { limit_secs }) => {
+                assert!((limit_secs - 0.001).abs() < 1e-9);
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn generous_deadline_does_not_fire() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(t.check().is_ok());
+        assert!(!t.is_expired());
+    }
+
+    #[test]
+    fn from_secs_zero_is_none() {
+        let t = CancelToken::from_secs(0.0);
+        assert!(t.check().is_ok());
+        let t = CancelToken::from_secs(-1.0);
+        assert!(t.check().is_ok());
+    }
+}

@@ -1,9 +1,11 @@
 //! Small shared utilities: deterministic RNG, timing, table formatting.
 
+pub mod cancel;
 pub mod rng;
 pub mod table;
 pub mod timer;
 
+pub use cancel::CancelToken;
 pub use rng::Rng;
 pub use table::Table;
 pub use timer::Timer;

@@ -1,0 +1,173 @@
+//! Chaos differential suite: every scripted fault must resolve to one of
+//! three observable outcomes — a retried success, a degraded success
+//! whose diagrams are IDENTICAL in every guaranteed dimension (PD_j,
+//! j ≥ max_k; escalated reductions stay exact there by Thms 2 & 7), or a
+//! journaled failure with identity — and never a hang, a lost job, or a
+//! wrong diagram.
+//!
+//! Runs only with `cargo test --features faults` (the fault hooks are
+//! compiled out of default builds; integration tests link the library
+//! without `cfg(test)`).
+
+#![cfg(feature = "faults")]
+
+use std::time::Duration;
+
+use coral_prunit::config::CoordinatorConfig;
+use coral_prunit::coordinator::{Coordinator, FaultPlan, Job, JobSpec, JournalReplay};
+use coral_prunit::error::Error;
+use coral_prunit::graph::gen;
+
+fn cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        queue_depth: 4,
+        max_retries: 2,
+        retry_backoff_ms: 0,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn jobs(n: usize) -> Vec<Job> {
+    (0..n)
+        .map(|i| {
+            Job::degree_superlevel(
+                i as u64,
+                gen::barabasi_albert(40 + i, 2, i as u64),
+                JobSpec::default(),
+            )
+        })
+        .collect()
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("coraltda-chaos-{tag}-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Reference run with no faults: the ground truth every chaos outcome is
+/// compared against.
+fn clean_results(n: usize) -> Vec<coral_prunit::coordinator::JobResult> {
+    Coordinator::new(cfg(2)).run(jobs(n)).unwrap()
+}
+
+#[test]
+fn chaos_every_fault_resolves_and_diagrams_match_clean_run() {
+    let n = 10;
+    let clean = clean_results(n);
+    // one of each fault kind, all recoverable within the retry budget
+    let plan = FaultPlan::new()
+        .panic_on(1, 0) // first attempt panics
+        .error_on(3, 0) // first attempt errors
+        .error_on(3, 1) // ...and so does the second
+        .panic_on(6, 0)
+        .error_on(6, 1) // mixed panic-then-error
+        .delay_rounds(8, Duration::from_millis(1)); // slow but no deadline
+    let mut c = Coordinator::new(cfg(3));
+    c.set_fault_plan(plan);
+    let out = c.run_with_failures(jobs(n), None).unwrap();
+    assert_eq!(out.results.len(), n, "every fault must resolve to success");
+    assert!(out.failures.is_empty());
+    let m = c.metrics();
+    assert_eq!(m.completed() as usize, n);
+    assert_eq!(m.workers_panicked(), 0, "panics stay inside the harness");
+    assert!(m.jobs_retried() >= 4, "retries={}", m.jobs_retried());
+    // the differential core: faulted jobs produce exactly the diagrams
+    // the clean run produced — in every dimension when the route didn't
+    // change, and in every guaranteed dimension (PD_j, j ≥ max_k) when a
+    // retry escalated the reduction (a stronger core is still exact
+    // there; below max_k it is best-effort by design)
+    for (a, b) in clean.iter().zip(&out.results) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.diagrams.len(), b.diagrams.len());
+        let first_guaranteed = if b.outcome.is_degraded() {
+            JobSpec::default().max_k
+        } else {
+            0
+        };
+        for k in first_guaranteed..a.diagrams.len() {
+            assert!(
+                a.diagrams[k].same_as(&b.diagrams[k], 1e-9),
+                "job {} PD_{k} changed under fault injection",
+                a.id
+            );
+        }
+    }
+    // degraded outcomes are flagged as such
+    for id in [1u64, 3, 6] {
+        let r = out.results.iter().find(|r| r.id == id).unwrap();
+        assert!(r.attempts > 1, "job {id} must have retried");
+        assert!(r.outcome.is_degraded());
+    }
+}
+
+#[test]
+fn chaos_unrecoverable_job_fails_alone_with_identity() {
+    let n = 8;
+    let mut c = Coordinator::new(cfg(2));
+    c.set_fault_plan(FaultPlan::new().panic_always(4));
+    let path = tmp("lone-failure");
+    let (out, skipped) = c.run_resumable(jobs(n), &path).unwrap();
+    assert_eq!(skipped, 0);
+    assert_eq!(out.results.len(), n - 1, "only the doomed job fails");
+    assert_eq!(out.failures.len(), 1);
+    assert_eq!(out.failures[0].id, 4);
+    assert_eq!(out.failures[0].attempts, 3);
+    assert!(matches!(out.failures[0].error, Error::JobPanicked(_)));
+    // the journal recorded the failure with identity
+    let replay = JournalReplay::load(&path).unwrap();
+    assert_eq!(replay.completed.len(), n - 1);
+    assert!(replay.failed.contains(&4));
+    assert!(replay.orphaned().is_empty(), "no job may vanish");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn chaos_deadline_misses_degrade_or_fail_but_never_hang() {
+    // job 0's rounds each sleep 40ms against a 5ms deadline: every
+    // attempt times out, so it must fail cleanly (not hang) while the
+    // rest of the batch completes
+    let mut config = cfg(2);
+    config.job_deadline_secs = 0.005;
+    config.max_retries = 1;
+    let mut c = Coordinator::new(config);
+    c.set_fault_plan(FaultPlan::new().delay_rounds(0, Duration::from_millis(40)));
+    let out = c.run_with_failures(jobs(6), None).unwrap();
+    assert_eq!(out.results.len(), 5);
+    assert_eq!(out.failures.len(), 1);
+    assert_eq!(out.failures[0].id, 0);
+    assert!(matches!(
+        out.failures[0].error,
+        Error::DeadlineExceeded { .. }
+    ));
+    let m = c.metrics();
+    assert!(m.deadline_misses() >= 2);
+    assert!(m.summary().contains("deadline_misses="), "{}", m.summary());
+}
+
+#[test]
+fn chaos_faulted_batch_journal_resumes_to_full_completion() {
+    let n = 8;
+    let path = tmp("resume");
+    // incarnation 1: job 5 always fails
+    {
+        let mut c = Coordinator::new(cfg(2));
+        c.set_fault_plan(FaultPlan::new().error_always(5));
+        let (out, _) = c.run_resumable(jobs(n), &path).unwrap();
+        assert_eq!(out.failures.len(), 1);
+    }
+    // incarnation 2: fault gone — only job 5 re-runs, ids never duplicate
+    {
+        let c = Coordinator::new(cfg(2));
+        let (out, skipped) = c.run_resumable(jobs(n), &path).unwrap();
+        assert_eq!(skipped, n - 1);
+        assert_eq!(out.results.len(), 1);
+        assert_eq!(out.results[0].id, 5);
+    }
+    let replay = JournalReplay::load(&path).unwrap();
+    assert_eq!(replay.completed.len(), n, "all ids completed exactly once");
+    assert!(replay.failed.is_empty());
+    let _ = std::fs::remove_file(&path);
+}
