@@ -68,6 +68,64 @@ fn main() {
         }
     }
 
+    // 2b'. team-vs-scope dispatch: the multi-round FixedPoint alternation
+    //     at 4 prune threads under the persistent thread team vs the
+    //     spawn-per-round scoped reference — same residue (asserted),
+    //     only the dispatch mechanism differs, so the row pair isolates
+    //     thread-standup cost on the hot path.
+    {
+        use coral_prunit::reduce::{
+            combined_with_ws, ParallelBackend, Reduction, ReductionWorkspace,
+        };
+        let mut reference: Option<coral_prunit::reduce::Reduced> = None;
+        for (tag, backend) in [
+            ("team-t4", ParallelBackend::Team),
+            ("scoped-t4", ParallelBackend::Scoped),
+        ] {
+            let mut ws = ReductionWorkspace::with_prune_threads(4);
+            ws.set_parallel_backend(backend);
+            let red = combined_with_ws(&mut ws, &social, &f_social, 1, Reduction::FixedPoint)
+                .unwrap();
+            if let Some(r) = &reference {
+                assert_eq!(red.graph, r.graph, "dispatch must not change the residue");
+                assert_eq!(red.kept_old_ids, r.kept_old_ids);
+            }
+            let mut samples: Vec<f64> = (0..9)
+                .map(|_| {
+                    let r =
+                        combined_with_ws(&mut ws, &social, &f_social, 1, Reduction::FixedPoint)
+                            .unwrap();
+                    sink(r.graph.n());
+                    r.report.prunit_secs
+                })
+                .collect();
+            samples.sort_by(|a, b| a.total_cmp(b));
+            let median = samples[samples.len() / 2];
+            t.row(&[
+                "prunit/team-vs-scope".into(),
+                format!("social n=50k {tag}"),
+                format!("{:.3}ms", median * 1e3),
+            ]);
+            planner_records.push(JsonRecord {
+                bench: "perf_hotpaths".into(),
+                graph: format!("social({},{})", social.n(), social.m()),
+                pipeline: tag.into(),
+                reduction: "fixed-point".into(),
+                stage: "prunit".into(),
+                kernel: "auto".into(),
+                wall_secs: median,
+                removed_per_round: red
+                    .report
+                    .rounds
+                    .iter()
+                    .map(|r| r.prunit_removed + r.core_removed)
+                    .collect(),
+                vertices_after: red.graph.n(),
+            });
+            reference = Some(red);
+        }
+    }
+
     // 2c. domination-kernel matrix: the in-place PrunIT stage pinned to
     //     each kernel, on the sparse social workload (merge territory)
     //     and a dense ER core (bitset territory). Each pinned run is

@@ -8,13 +8,20 @@
 //! Workloads: ER(20000, 5/n) and BA(20000, 3) (pass `--quick` for a
 //! 2000-vertex CI profile), reductions Combined and FixedPoint, plus a
 //! **PrunIT thread sweep**: the frontier check phase at 1/2/4/8 threads
-//! (or the single count given by `--prune-threads T` — CI runs a 1-vs-4
-//! matrix and uploads one artifact per setting). Residues are asserted
-//! bit-identical across the sweep before anything is timed. Emits the
-//! wall-time table plus machine-readable `BENCH_planner.json` (graph,
-//! stage, wall seconds, vertices removed per round) for the cross-PR
-//! perf trajectory; sweep rows carry stage `prunit` and pipeline
-//! `in-place-t{T}`.
+//! (or the single count given by `--prune-threads T` — CI runs a
+//! 1-vs-adaptive matrix and uploads one artifact per setting; `T = 0`
+//! runs the adaptive per-round ramp and labels its rows
+//! `in-place-adaptive`). Residues are asserted bit-identical across the
+//! sweep before anything is timed. Emits the wall-time table plus
+//! machine-readable `BENCH_planner.json` (graph, stage, wall seconds,
+//! vertices removed per round) for the cross-PR perf trajectory; sweep
+//! rows carry stage `prunit` and pipeline `in-place-t{T}`.
+//!
+//! A **team-vs-scoped FixedPoint sweep** times the multi-round
+//! PrunIT⇄core alternation under the persistent thread team against the
+//! spawn-per-round `ParallelBackend::Scoped` reference (rows
+//! `in-place-scoped-t{T}`) — the acceptance comparison for the
+//! persistent-team dispatch.
 //!
 //! A **domination-kernel sweep** mirrors the thread sweep: the prunit
 //! stage pinned to each kernel (`--domination-kernel K` restricts to
@@ -28,26 +35,38 @@ use coral_prunit::complex::Filtration;
 use coral_prunit::graph::gen;
 use coral_prunit::prune::DominationKernel;
 use coral_prunit::reduce::{
-    combined_with_materializing, combined_with_ws, Reduction, ReductionWorkspace,
+    combined_with_materializing, combined_with_ws, ParallelBackend, Reduction,
+    ReductionWorkspace,
 };
 use coral_prunit::util::Table;
 
-/// Median of the prunit-stage seconds over `runs` fresh plans.
+/// Median of the prunit-stage seconds over `runs` fresh plans of `which`.
 fn prunit_stage_median(
     ws: &mut ReductionWorkspace,
     g: &coral_prunit::graph::Graph,
     f: &Filtration,
     runs: usize,
+    which: Reduction,
 ) -> f64 {
     let mut samples: Vec<f64> = (0..runs)
         .map(|_| {
-            let r = combined_with_ws(ws, g, f, 1, Reduction::Prunit).unwrap();
+            let r = combined_with_ws(ws, g, f, 1, which).unwrap();
             sink(r.graph.n());
             r.report.prunit_secs
         })
         .collect();
     samples.sort_by(|a, b| a.total_cmp(b));
     samples[samples.len() / 2]
+}
+
+/// Sweep row label: `in-place-adaptive` for the ramp, `in-place-t{T}`
+/// for a pinned thread count.
+fn pipeline_label(threads: usize) -> String {
+    if threads == 0 {
+        "in-place-adaptive".into()
+    } else {
+        format!("in-place-t{threads}")
+    }
 }
 
 fn main() {
@@ -170,11 +189,11 @@ fn main() {
             );
             assert_eq!(check.kept_old_ids, reference.kept_old_ids);
             let runs = if quick { 7 } else { 9 };
-            let median = prunit_stage_median(&mut tws, g, &f, runs);
+            let median = prunit_stage_median(&mut tws, g, &f, runs, Reduction::Prunit);
             t.row(&[
                 label.clone(),
                 "prunit".into(),
-                format!("in-place-t{threads}"),
+                pipeline_label(threads),
                 reference.graph.n().to_string(),
                 reference.report.prunit_rounds.to_string(),
                 format!("{:.3}ms", median * 1e3),
@@ -182,7 +201,7 @@ fn main() {
             records.push(JsonRecord {
                 bench: "planner_scaling".into(),
                 graph: label.clone(),
-                pipeline: format!("in-place-t{threads}"),
+                pipeline: pipeline_label(threads),
                 reduction: "prunit".into(),
                 stage: "prunit".into(),
                 kernel: requested.name().into(),
@@ -190,6 +209,63 @@ fn main() {
                 removed_per_round: removed_per_round.clone(),
                 vertices_after: reference.graph.n(),
             });
+        }
+
+        // Team-vs-scoped FixedPoint sweep: the multi-round PrunIT⇄core
+        // alternation is where dispatch overhead accumulates — the
+        // persistent team is measured against the spawn-per-round scoped
+        // reference at the same thread count, residues asserted
+        // bit-identical to the sequential run first.
+        let mut fp_seq = ReductionWorkspace::with_prune_threads(1);
+        fp_seq.set_domination_kernel(DominationKernel::Merge);
+        let fp_ref = combined_with_ws(&mut fp_seq, g, &f, 1, Reduction::FixedPoint).unwrap();
+        let fp_removed: Vec<usize> = fp_ref
+            .report
+            .rounds
+            .iter()
+            .map(|r| r.prunit_removed + r.core_removed)
+            .collect();
+        for &threads in &sweep {
+            let mut configs: Vec<(String, ParallelBackend)> =
+                vec![(pipeline_label(threads), ParallelBackend::Team)];
+            if threads > 1 {
+                configs.push((
+                    format!("in-place-scoped-t{threads}"),
+                    ParallelBackend::Scoped,
+                ));
+            }
+            for (pipeline, backend) in configs {
+                let mut bws = ReductionWorkspace::with_prune_threads(threads);
+                bws.set_domination_kernel(requested);
+                bws.set_parallel_backend(backend);
+                let check = combined_with_ws(&mut bws, g, &f, 1, Reduction::FixedPoint).unwrap();
+                assert_eq!(
+                    check.graph, fp_ref.graph,
+                    "fixed-point residue must be bit-identical ({pipeline})"
+                );
+                assert_eq!(check.kept_old_ids, fp_ref.kept_old_ids);
+                let runs = if quick { 7 } else { 9 };
+                let median = prunit_stage_median(&mut bws, g, &f, runs, Reduction::FixedPoint);
+                t.row(&[
+                    label.clone(),
+                    "fixed-point".into(),
+                    pipeline.clone(),
+                    fp_ref.graph.n().to_string(),
+                    fp_ref.report.rounds_run().to_string(),
+                    format!("{:.3}ms", median * 1e3),
+                ]);
+                records.push(JsonRecord {
+                    bench: "planner_scaling".into(),
+                    graph: label.clone(),
+                    pipeline,
+                    reduction: "fixed-point".into(),
+                    stage: "prunit".into(),
+                    kernel: requested.name().into(),
+                    wall_secs: median,
+                    removed_per_round: fp_removed.clone(),
+                    vertices_after: fp_ref.graph.n(),
+                });
+            }
         }
 
         // Domination-kernel sweep: the same prunit stage pinned to each
@@ -207,7 +283,7 @@ fn main() {
             assert_eq!(check.kept_old_ids, reference.kept_old_ids);
             assert_eq!(check.report.prunit_rounds, reference.report.prunit_rounds);
             let runs = if quick { 7 } else { 9 };
-            let median = prunit_stage_median(&mut kws, g, &f, runs);
+            let median = prunit_stage_median(&mut kws, g, &f, runs, Reduction::Prunit);
             t.row(&[
                 label.clone(),
                 "prunit".into(),

@@ -33,6 +33,7 @@ fn main() {
         reduction: "prunit".into(),
         seed: 42,
         prune_threads: 1,
+        ..CoordinatorConfig::default()
     };
     let coordinator = Coordinator::new(cfg.clone());
 

@@ -37,6 +37,7 @@ fn main() {
         reduction: "prunit+coral".into(),
         seed: 42,
         prune_threads: 1,
+        ..CoordinatorConfig::default()
     };
 
     let run = |reduction: Reduction| {

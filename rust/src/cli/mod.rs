@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 
 use crate::complex::{CliqueComplex, Filtration};
 use crate::config::{Config, CoordinatorConfig};
-use crate::coordinator::{Coordinator, Job, JobSpec};
+use crate::coordinator::{Coordinator, Job, JobSpec, ResumeReport};
 use crate::datasets;
 use crate::error::{Error, Result};
 use crate::homology::{legacy, persistence_diagrams, Algorithm};
@@ -106,7 +106,8 @@ COMMANDS:
            [--k K] [--seed S]
            [--reduction none|coral|prunit|combined|fixed-point]
            [--prune-threads T]       parallel PrunIT frontier checks
-                                     (bit-identical at any T; default 1)
+                                     (bit-identical at any T; default 1;
+                                     0 = adaptive per-round ramp)
            [--domination-kernel auto|merge|bitset]
                                      pin the residue-domination kernel
                                      (auto picks per round by density)
@@ -116,6 +117,7 @@ COMMANDS:
                                      fixed-point alternates PrunIT and the
                                      (k+1)-core on the in-place planner
            [--prune-threads T]       parallel PrunIT frontier checks
+                                     (0 = adaptive, 1 = inline)
            [--domination-kernel auto|merge|bitset]
            [--shard] [--workers W]   component-sharded parallel PH
            [--engine flat|legacy]    columnar engine (default) or the
@@ -123,8 +125,13 @@ COMMANDS:
   batch    --dataset NAME      run the batch coordinator over all instances
            [--config FILE] [--workers W] [--k K] [--seed S]
            [--prune-threads T]       per-job PrunIT threads (default 1:
-                                     the worker pool owns the cores)
+                                     the worker pool owns the cores;
+                                     0 = adaptive per-round ramp)
            [--domination-kernel auto|merge|bitset]
+           [--large-job-order N]     route jobs with >= N vertices to the
+                                     dedicated high-tier worker (0 =
+                                     first order past the top scratch
+                                     tier, the default)
            [--job-deadline-secs S]   per-job wall deadline (0 disables);
                                      a miss enters the retry ladder
            [--max-retries N]         retries per job, each escalating the
@@ -132,8 +139,10 @@ COMMANDS:
            [--retry-backoff-ms MS]   base backoff, doubled per retry
            [--journal PATH]          persistent JSONL job journal; re-run
                                      with the same path to resume a killed
-                                     batch, skipping completed jobs
-                                     (exit code 1 if any job still fails)
+                                     batch, skipping completed jobs and
+                                     re-running orphans (reported as
+                                     `ORPHANED <id>` on stderr; exit code
+                                     1 if any job still fails)
   dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
            [--seed S]          (needs the `xla` build feature + artifacts)
   help                         this text
@@ -340,6 +349,7 @@ fn cmd_batch(args: &Args) -> Result<i32> {
     cfg.job_deadline_secs = args.flag_f64("job-deadline-secs", cfg.job_deadline_secs)?;
     cfg.max_retries = args.flag_usize("max-retries", cfg.max_retries)?;
     cfg.retry_backoff_ms = args.flag_u64("retry-backoff-ms", cfg.retry_backoff_ms)?;
+    cfg.large_job_order = args.flag_usize("large-job-order", cfg.large_job_order)?;
     // validate up front so a bad value fails before any worker spawns
     DominationKernel::parse(&cfg.domination_kernel)?;
     let reduction = parse_reduction(&cfg.reduction.clone())?;
@@ -357,11 +367,18 @@ fn cmd_batch(args: &Args) -> Result<i32> {
         })
         .collect();
     let t0 = std::time::Instant::now();
-    let (outcome, skipped) = match args.flag("journal") {
+    let (outcome, resume) = match args.flag("journal") {
         Some(path) => coordinator.run_resumable(jobs, path)?,
-        None => (coordinator.run_with_failures(jobs, None)?, 0),
+        None => (
+            coordinator.run_with_failures(jobs, None)?,
+            ResumeReport::default(),
+        ),
     };
     let secs = t0.elapsed().as_secs_f64();
+    let prune_desc = match cfg.prune_threads {
+        0 => "adaptive".to_string(),
+        t => t.to_string(),
+    };
     println!(
         "{}: {} jobs in {:.3}s ({:.1} jobs/s, {} workers, {} prune thread(s)/job)",
         recipe.name,
@@ -369,10 +386,24 @@ fn cmd_batch(args: &Args) -> Result<i32> {
         secs,
         outcome.results.len() as f64 / secs.max(1e-12),
         cfg.workers,
-        cfg.prune_threads.max(1),
+        prune_desc,
     );
-    if skipped > 0 {
-        println!("journal: skipped {skipped} job(s) already completed by an earlier run");
+    if resume.skipped > 0 {
+        println!(
+            "journal: skipped {} job(s) already completed by an earlier run",
+            resume.skipped
+        );
+    }
+    // orphans go to stderr: a monitoring wrapper tailing the journal can
+    // pick up exactly which ids a killed incarnation left in flight
+    for id in &resume.orphaned {
+        eprintln!("ORPHANED {id}");
+    }
+    if !resume.orphaned.is_empty() {
+        println!(
+            "journal: re-ran {} orphaned job(s) left in flight by a killed run",
+            resume.orphaned.len()
+        );
     }
     let degraded = outcome
         .results
@@ -538,6 +569,23 @@ mod tests {
         );
         // non-integer thread counts are a parse error
         assert!(run(&argv("pd --dataset DHFR --prune-threads lots")).is_err());
+        // 0 = adaptive: valid everywhere a thread count is accepted
+        assert_eq!(
+            run(&argv("reduce --dataset DHFR --prune-threads 0 --k 1")).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn batch_adaptive_threads_and_routing_flags_run() {
+        assert_eq!(
+            run(&argv(
+                "batch --dataset DHFR --workers 2 --prune-threads 0 --large-job-order 64"
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(run(&argv("batch --dataset DHFR --large-job-order many")).is_err());
     }
 
     #[test]

@@ -143,9 +143,13 @@ pub struct CoordinatorConfig {
     pub reduction: String,
     pub seed: u64,
     /// PrunIT frontier check-phase threads per job (`--prune-threads`).
-    /// Results are bit-identical at every setting; 1 disables fan-out.
-    /// Inner parallelism multiplies with `workers`, so the default keeps
-    /// jobs single-threaded and lets the pool own the cores.
+    /// `0` = adaptive: each round picks its own thread count from a
+    /// measured per-check cost model; `1` (the default) forces the
+    /// inline sequential sweep; `T >= 2` pins `T` threads for rounds
+    /// past the parallel threshold. Results are bit-identical at every
+    /// setting. Inner parallelism multiplies with `workers`, so the
+    /// default keeps jobs single-threaded and lets the pool own the
+    /// cores.
     pub prune_threads: usize,
     /// Domination-kernel policy per job (`--domination-kernel`):
     /// `auto` (per-round density choice), `merge`, or `bitset`. Residues
@@ -163,6 +167,12 @@ pub struct CoordinatorConfig {
     pub max_retries: usize,
     /// Base backoff between attempts in milliseconds, doubled per retry.
     pub retry_backoff_ms: u64,
+    /// Graph order at which a job counts as outsized and routes past the
+    /// scratch pool to the dedicated high-tier worker
+    /// (`--large-job-order`). `0` (the default) resolves to the first
+    /// order in the pool's top tier
+    /// (`coordinator::scratch::top_tier_min_order`).
+    pub large_job_order: usize,
 }
 
 impl CoordinatorConfig {
@@ -181,6 +191,7 @@ impl CoordinatorConfig {
             job_deadline_secs: cfg.get_f64("coordinator.job_deadline_secs", 0.0)?,
             max_retries: cfg.get_usize("coordinator.max_retries", 2)?,
             retry_backoff_ms: cfg.get_u64("coordinator.retry_backoff_ms", 25)?,
+            large_job_order: cfg.get_usize("coordinator.large_job_order", 0)?,
         })
     }
 }
@@ -252,6 +263,14 @@ mod tests {
     fn prune_threads_defaults_to_sequential() {
         let cc = CoordinatorConfig::default();
         assert_eq!(cc.prune_threads, 1);
+    }
+
+    #[test]
+    fn large_job_order_key_is_read_with_zero_default() {
+        assert_eq!(CoordinatorConfig::default().large_job_order, 0);
+        let cfg = Config::parse("[coordinator]\nlarge_job_order = 5000\n").unwrap();
+        let cc = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(cc.large_job_order, 5000);
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub struct Metrics {
     pub jobs_panicked: AtomicU64,
     /// jobs that ultimately succeeded with an escalated (degraded) spec
     pub jobs_degraded: AtomicU64,
+    /// jobs routed past the pool queue to the dedicated high-tier worker
+    /// (order at or above the scheduler's `large_job_order` cutoff)
+    pub jobs_routed_large: AtomicU64,
 }
 
 impl Metrics {
@@ -94,12 +97,17 @@ impl Metrics {
         self.jobs_degraded.load(Ordering::Relaxed)
     }
 
+    /// Jobs routed to the dedicated high-tier worker.
+    pub fn routed_large(&self) -> u64 {
+        self.jobs_routed_large.load(Ordering::Relaxed)
+    }
+
     /// Human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
             "jobs={} failed={} reduce={:.3}s ph={:.3}s vertex_reduction={:.1}% \
              lock_recoveries={} worker_panics={} retries={} deadline_misses={} \
-             degraded={} job_panics={}",
+             degraded={} job_panics={} routed_large={}",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.reduce_us.load(Ordering::Relaxed) as f64 / 1e6,
@@ -111,6 +119,7 @@ impl Metrics {
             self.deadline_misses(),
             self.jobs_degraded(),
             self.jobs_panicked(),
+            self.routed_large(),
         )
     }
 }
@@ -175,5 +184,14 @@ mod tests {
         assert!(s.contains("deadline_misses=2"), "{s}");
         assert!(s.contains("degraded=3"), "{s}");
         assert!(s.contains("job_panics=1"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_large_routing() {
+        let m = Metrics::default();
+        assert!(m.summary().contains("routed_large=0"), "{}", m.summary());
+        m.jobs_routed_large.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(m.routed_large(), 5);
+        assert!(m.summary().contains("routed_large=5"), "{}", m.summary());
     }
 }

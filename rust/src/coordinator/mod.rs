@@ -42,6 +42,6 @@ pub use faults::FaultPlan;
 pub use job::{Job, JobFailure, JobOutcome, JobResult, JobSpec};
 pub use journal::{Journal, JournalReplay};
 pub use metrics::Metrics;
-pub use scheduler::{BatchOutcome, Coordinator};
-pub use scratch::{PooledScratch, ScratchPool};
+pub use scheduler::{BatchOutcome, Coordinator, ResumeReport};
+pub use scratch::{top_tier_min_order, PooledScratch, ScratchPool};
 pub use worker::{degraded_spec, escalate, WorkerScratch};

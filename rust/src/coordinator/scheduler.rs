@@ -18,8 +18,8 @@ use super::faults::FaultPlan;
 use super::job::{Job, JobFailure, JobResult};
 use super::journal::{Journal, JournalReplay};
 use super::metrics::Metrics;
-use super::scratch::ScratchPool;
-use super::worker::{execute_job, run_job_with_retries, AttemptPolicy, WorkerScratch};
+use super::scratch::{top_tier_min_order, ScratchPool};
+use super::worker::{execute_job, run_job_with_retries, AttemptPolicy, ScratchSource, WorkerScratch};
 
 /// Everything a fault-tolerant batch produced: successful results
 /// (sorted by id) plus the identity, attempt count, and final error of
@@ -28,6 +28,40 @@ use super::worker::{execute_job, run_job_with_retries, AttemptPolicy, WorkerScra
 pub struct BatchOutcome {
     pub results: Vec<JobResult>,
     pub failures: Vec<JobFailure>,
+}
+
+/// What [`Coordinator::run_resumable`] learned from the journal before
+/// running: how many jobs were skipped as already terminal, and the ids
+/// of jobs a previous incarnation submitted but never finished
+/// (orphans). Orphans are re-enqueued under their original identity —
+/// they appear here so callers can announce the recompute.
+#[derive(Debug, Default)]
+pub struct ResumeReport {
+    pub skipped: usize,
+    pub orphaned: Vec<u64>,
+}
+
+/// Fold one terminal job verdict into the shared metrics (used by both
+/// the pool workers and the dedicated high-tier worker).
+fn note_result(
+    metrics: &Metrics,
+    v_in: usize,
+    e_in: usize,
+    result: &std::result::Result<JobResult, JobFailure>,
+) {
+    match result {
+        Ok(r) => metrics.record(
+            r.reduction.reduce_secs,
+            r.ph_secs,
+            v_in,
+            r.reduction.vertices_after,
+            e_in,
+            r.reduction.edges_after,
+        ),
+        Err(_) => {
+            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// The batch coordinator: owns config, metrics, and the size-tiered
@@ -106,6 +140,13 @@ impl Coordinator {
     /// [`JobFailure`] instead of poisoning the batch. Journal records
     /// (submitted/completed/failed) are written on the calling thread.
     ///
+    /// Jobs at or above the routing cutoff (`large_job_order`, default:
+    /// the first order past the scratch pool's top tier) bypass the pool
+    /// queue entirely: a dedicated high-tier worker holds one pinned
+    /// [`WorkerScratch`] for the whole batch, so outsized graphs reuse a
+    /// single warm arena instead of churning top-tier pool entries that
+    /// evict everything else.
+    ///
     /// Returns the number of jobs that reached a terminal state. An `Err`
     /// means the batch infrastructure itself failed (bad config, journal
     /// I/O, lost workers) — per-job failures go to `on_failure`.
@@ -120,7 +161,14 @@ impl Coordinator {
         I: Iterator<Item = Job>,
     {
         let workers = self.config.workers.max(1);
-        let prune_threads = self.config.prune_threads.max(1);
+        // 0 = adaptive ramp, 1 = inline, T>=2 = pinned (see
+        // `ReductionWorkspace::set_prune_threads`); threaded through as-is
+        let prune_threads = self.config.prune_threads;
+        let large_cutoff = if self.config.large_job_order == 0 {
+            top_tier_min_order()
+        } else {
+            self.config.large_job_order
+        };
         let kernel = DominationKernel::parse(&self.config.domination_kernel)?;
         let policy = AttemptPolicy {
             max_retries: self.config.max_retries,
@@ -155,7 +203,7 @@ impl Coordinator {
                     let Ok(job) = job else { break };
                     let (v_in, e_in) = (job.graph.n(), job.graph.m());
                     let result = run_job_with_retries(
-                        &pool,
+                        &mut ScratchSource::Pool(&pool),
                         prune_threads,
                         kernel,
                         &policy,
@@ -163,25 +211,44 @@ impl Coordinator {
                         &job,
                         w,
                     );
-                    match &result {
-                        Ok(r) => metrics.record(
-                            r.reduction.reduce_secs,
-                            r.ph_secs,
-                            v_in,
-                            r.reduction.vertices_after,
-                            e_in,
-                            r.reduction.edges_after,
-                        ),
-                        Err(_) => {
-                            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
+                    note_result(&metrics, v_in, e_in, &result);
                     if res_tx.send(result).is_err() {
                         break;
                     }
                 })
             })
             .collect();
+
+        // The high-tier lane: outsized jobs go down their own bounded
+        // channel to one dedicated worker (index `workers`, one past the
+        // pool) that owns its receiver outright — no Mutex — and keeps a
+        // single pinned arena alive across the whole batch.
+        let (big_tx, big_rx): (SyncSender<Job>, Receiver<Job>) =
+            sync_channel(self.config.queue_depth.max(1));
+        let big_handle = {
+            let res_tx = res_tx.clone();
+            let metrics = Arc::clone(&self.metrics);
+            let policy = policy.clone();
+            std::thread::spawn(move || {
+                let mut arena = WorkerScratch::new();
+                while let Ok(job) = big_rx.recv() {
+                    let (v_in, e_in) = (job.graph.n(), job.graph.m());
+                    let result = run_job_with_retries(
+                        &mut ScratchSource::Pinned(&mut arena),
+                        prune_threads,
+                        kernel,
+                        &policy,
+                        &metrics,
+                        &job,
+                        workers,
+                    );
+                    note_result(&metrics, v_in, e_in, &result);
+                    if res_tx.send(result).is_err() {
+                        break;
+                    }
+                }
+            })
+        };
         drop(res_tx);
 
         // Producer on the current thread; consume results opportunistically
@@ -222,9 +289,20 @@ impl Coordinator {
                     break;
                 }
             }
-            if job_tx.send(job).is_err() {
+            let route_large = job.graph.n() >= large_cutoff;
+            let sent = if route_large {
+                big_tx.send(job).is_ok()
+            } else {
+                job_tx.send(job).is_ok()
+            };
+            if !sent {
                 submit_err = Some(Error::Coordinator("all workers exited early".into()));
                 break;
+            }
+            if route_large {
+                self.metrics
+                    .jobs_routed_large
+                    .fetch_add(1, Ordering::Relaxed);
             }
             self.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
             submitted += 1;
@@ -234,12 +312,13 @@ impl Coordinator {
             }
         }
         drop(job_tx);
+        drop(big_tx);
         while let Ok(r) = res_rx.recv() {
             received += 1;
             handle(r, &mut journal, &mut journal_err);
         }
         let mut panicked = 0u64;
-        for h in handles {
+        for h in handles.into_iter().chain(std::iter::once(big_handle)) {
             if h.join().is_err() {
                 panicked += 1;
             }
@@ -332,19 +411,29 @@ impl Coordinator {
     /// [`Coordinator::run_with_failures`] against a persistent journal at
     /// `path`: replay it first, skip jobs already completed by an earlier
     /// incarnation of this batch, and append this run's records to the
-    /// same file. Returns the outcome plus how many jobs were skipped.
+    /// same file. Returns the outcome plus a [`ResumeReport`] with the
+    /// skip count and the ids of orphaned jobs (submitted by the earlier
+    /// incarnation, never finished) that this run re-executes.
     pub fn run_resumable(
         &self,
         jobs: Vec<Job>,
         path: impl AsRef<Path>,
-    ) -> Result<(BatchOutcome, usize)> {
+    ) -> Result<(BatchOutcome, ResumeReport)> {
         let replay = JournalReplay::load(&path)?;
         let mut journal = Journal::open(&path)?;
         let before = jobs.len();
+        let orphan_ids = replay.orphaned();
         let todo: Vec<Job> = jobs.into_iter().filter(|j| !replay.is_done(j.id)).collect();
-        let skipped = before - todo.len();
+        let report = ResumeReport {
+            skipped: before - todo.len(),
+            orphaned: todo
+                .iter()
+                .map(|j| j.id)
+                .filter(|id| orphan_ids.contains(id))
+                .collect(),
+        };
         let outcome = self.run_with_failures(todo, Some(&mut journal))?;
-        Ok((outcome, skipped))
+        Ok((outcome, report))
     }
 }
 
@@ -368,6 +457,7 @@ mod tests {
             job_deadline_secs: 0.0,
             max_retries: 2,
             retry_backoff_ms: 0,
+            large_job_order: 0,
         }
     }
 
@@ -618,8 +708,9 @@ mod tests {
         {
             let mut c = Coordinator::new(cfg(2, 2));
             c.set_fault_plan(FaultPlan::new().error_always(2));
-            let (out, skipped) = c.run_resumable(jobs(6), &path).unwrap();
-            assert_eq!(skipped, 0);
+            let (out, resume) = c.run_resumable(jobs(6), &path).unwrap();
+            assert_eq!(resume.skipped, 0);
+            assert!(resume.orphaned.is_empty());
             assert_eq!(out.results.len(), 5);
             assert_eq!(out.failures.len(), 1);
             assert_eq!(out.failures[0].id, 2);
@@ -628,8 +719,9 @@ mod tests {
         // the failed id re-runs — no duplicates, no recompute
         {
             let c = Coordinator::new(cfg(2, 2));
-            let (out, skipped) = c.run_resumable(jobs(6), &path).unwrap();
-            assert_eq!(skipped, 5);
+            let (out, resume) = c.run_resumable(jobs(6), &path).unwrap();
+            assert_eq!(resume.skipped, 5);
+            assert!(resume.orphaned.is_empty(), "failed ids are terminal, not orphaned");
             assert_eq!(out.results.len(), 1);
             assert_eq!(out.results[0].id, 2);
             assert!(out.failures.is_empty());
@@ -707,5 +799,88 @@ mod tests {
         let res = c.run(vec![job]).unwrap();
         assert_eq!(res[0].reduction.which, Reduction::FixedPoint);
         assert!(res[0].reduction.rounds_run() >= 1);
+    }
+
+    #[test]
+    fn outsized_jobs_route_to_the_dedicated_high_tier_worker() {
+        let mut config = cfg(2, 2);
+        // lower the cutoff so the two largest jobs (50 and 51 vertices)
+        // count as outsized
+        config.large_job_order = 50;
+        let c = Coordinator::new(config);
+        let res = c.run(jobs(12)).unwrap();
+        assert_eq!(res.len(), 12);
+        assert_eq!(c.metrics().routed_large(), 2);
+        // routed jobs never touch the scratch pool...
+        let pool = c.scratch_pool();
+        assert_eq!(pool.hits() + pool.misses(), 10);
+        // ...and run on the dedicated worker, one index past the pool
+        for r in &res {
+            if r.id >= 10 {
+                assert_eq!(r.worker, 2, "id={}", r.id);
+            } else {
+                assert!(r.worker < 2, "id={}", r.id);
+            }
+        }
+        // routing is an execution detail: diagrams match inline execution
+        let inline = Coordinator::execute(&jobs(12)[11], 0).unwrap();
+        let routed = res.iter().find(|r| r.id == 11).unwrap();
+        for k in 0..inline.diagrams.len() {
+            assert!(inline.diagrams[k].same_as(&routed.diagrams[k], 0.0));
+        }
+        assert!(c.metrics().summary().contains("routed_large=2"));
+    }
+
+    #[test]
+    fn default_cutoff_is_the_top_pool_tier() {
+        // large_job_order=0 resolves to the first order past the pool's
+        // top tier — every job in this batch is far below it
+        let c = Coordinator::new(cfg(2, 2));
+        c.run(jobs(4)).unwrap();
+        assert_eq!(c.metrics().routed_large(), 0);
+        assert!(top_tier_min_order() > 1_000_000);
+    }
+
+    #[test]
+    fn adaptive_prune_threads_config_matches_sequential_results() {
+        // prune_threads=0 (adaptive ramp) must be wall-time-only: the
+        // batch outcome is identical to the sequential run
+        let seq = Coordinator::new(cfg(2, 2));
+        let mut auto_cfg = cfg(2, 2);
+        auto_cfg.prune_threads = 0;
+        let auto = Coordinator::new(auto_cfg);
+        let a = seq.run(jobs(6)).unwrap();
+        let b = auto.run(jobs(6)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.reduction.vertices_after, y.reduction.vertices_after);
+            assert_eq!(x.reduction.prunit_rounds, y.reduction.prunit_rounds);
+            for k in 0..x.diagrams.len() {
+                assert!(x.diagrams[k].same_as(&y.diagrams[k], 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn orphaned_jobs_are_reported_and_rerun() {
+        let path = tmp_journal("orphan");
+        let c = Coordinator::new(cfg(2, 2));
+        let (out, resume) = c.run_resumable(jobs(2), &path).unwrap();
+        assert_eq!(out.results.len(), 2);
+        assert!(resume.orphaned.is_empty());
+        // simulate an incarnation killed mid-flight: id 2 journaled as
+        // submitted but with no terminal record
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.record_submitted(&jobs(3)[2]).unwrap();
+        }
+        let (out, resume) = c.run_resumable(jobs(4), &path).unwrap();
+        assert_eq!(resume.skipped, 2);
+        assert_eq!(resume.orphaned, vec![2]);
+        let ids: Vec<u64> = out.results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3], "the orphan re-ran alongside the new job");
+        let replay = JournalReplay::load(&path).unwrap();
+        assert!(replay.orphaned().is_empty(), "resume cleared the orphan");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -32,6 +32,20 @@ pub const TIER_BASE_ORDER: usize = 256;
 /// Order growth factor between consecutive tiers.
 pub const TIER_GROWTH: usize = 4;
 
+/// The smallest graph order that lands in the pool's top (unbounded)
+/// tier: one past the upper bound of tier `TIER_COUNT - 2`. The
+/// scheduler uses this as the default `large_job_order` routing cutoff —
+/// jobs at or above it bypass the pool for the dedicated high-tier
+/// worker, so one outsized graph can't evict the arenas every other tier
+/// is reusing.
+pub fn top_tier_min_order() -> usize {
+    let mut cap = TIER_BASE_ORDER;
+    for _ in 0..TIER_COUNT - 2 {
+        cap = cap.saturating_mul(TIER_GROWTH);
+    }
+    cap + 1
+}
+
 /// Map a graph order to its pool tier: tier 0 covers orders up to
 /// [`TIER_BASE_ORDER`], each further tier covers [`TIER_GROWTH`]× more,
 /// and the last tier is unbounded.
@@ -225,6 +239,15 @@ mod tests {
         assert_eq!(tier_of(TIER_BASE_ORDER * TIER_GROWTH + 1), 2);
         // far past the last boundary everything lands in the top tier
         assert_eq!(tier_of(usize::MAX), TIER_COUNT - 1);
+    }
+
+    #[test]
+    fn top_tier_min_order_is_the_first_top_tier_order() {
+        let boundary = top_tier_min_order();
+        assert_eq!(tier_of(boundary), TIER_COUNT - 1);
+        assert_eq!(tier_of(boundary - 1), TIER_COUNT - 2);
+        // 256 · 4^6 + 1 with the current tiering constants
+        assert_eq!(boundary, 1_048_577);
     }
 
     #[test]

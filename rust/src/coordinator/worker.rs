@@ -166,15 +166,28 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Where a worker's per-attempt scratch comes from: checked out of the
+/// size-tiered pool per attempt (regular workers), or a pinned
+/// long-lived arena owned by the scheduler's dedicated high-tier worker
+/// — outsized jobs would otherwise grow-and-drop top-tier arenas on
+/// every checkout. A panicking attempt discards a pooled scratch; a
+/// pinned one is replaced in place with a fresh default (same rule:
+/// unwound arenas are never reused).
+pub(crate) enum ScratchSource<'a> {
+    Pool(&'a ScratchPool),
+    Pinned(&'a mut WorkerScratch),
+}
+
 /// Run one job to a final verdict: attempt, and on transient failure
 /// back off, escalate the spec one rung, and re-attempt — up to
-/// `policy.max_retries` retries. Every attempt gets a fresh pool
-/// checkout with a fresh deadline token; a panicking attempt is caught
-/// here (the worker thread survives) and its scratch is discarded rather
-/// than re-pooled. Permanent errors (e.g. a filtration/graph mismatch)
-/// short-circuit the ladder — retrying cannot fix them.
+/// `policy.max_retries` retries. Every attempt gets a freshly
+/// configured scratch (from `source`) with a fresh deadline token; a
+/// panicking attempt is caught here (the worker thread survives) and
+/// its scratch is discarded or reset rather than reused. Permanent
+/// errors (e.g. a filtration/graph mismatch) short-circuit the ladder —
+/// retrying cannot fix them.
 pub(crate) fn run_job_with_retries(
-    pool: &ScratchPool,
+    source: &mut ScratchSource<'_>,
     prune_threads: usize,
     kernel: DominationKernel,
     policy: &AttemptPolicy,
@@ -187,42 +200,59 @@ pub(crate) fn run_job_with_retries(
     loop {
         let last = attempt + 1 >= attempts_max;
         let (which, sharded) = degraded_spec(job.spec.reduction, attempt, last);
-        let mut scratch = pool.checkout(job.graph.n());
-        scratch.reduce.set_prune_threads(prune_threads);
-        scratch.reduce.set_domination_kernel(kernel);
-        scratch
-            .reduce
-            .set_cancel_token(CancelToken::from_secs(policy.deadline_secs));
-        #[cfg(any(test, feature = "faults"))]
-        scratch.reduce.set_fault_round_delay(
-            policy
-                .faults
-                .as_ref()
-                .and_then(|plan| plan.round_delay(job.id)),
-        );
-
-        let caught = catch_unwind(AssertUnwindSafe(|| {
+        // configure + guard one attempt; shared by both scratch sources
+        // so they can never diverge. Returns (verdict, panicked).
+        let one_attempt = |scratch: &mut WorkerScratch| -> (Result<JobResult>, bool) {
+            scratch.reduce.set_prune_threads(prune_threads);
+            scratch.reduce.set_domination_kernel(kernel);
+            scratch
+                .reduce
+                .set_cancel_token(CancelToken::from_secs(policy.deadline_secs));
             #[cfg(any(test, feature = "faults"))]
-            if let Some(plan) = &policy.faults {
-                if plan.should_panic(job.id, attempt) {
-                    panic!("injected panic: job {} attempt {}", job.id, attempt);
+            scratch.reduce.set_fault_round_delay(
+                policy
+                    .faults
+                    .as_ref()
+                    .and_then(|plan| plan.round_delay(job.id)),
+            );
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                #[cfg(any(test, feature = "faults"))]
+                if let Some(plan) = &policy.faults {
+                    if plan.should_panic(job.id, attempt) {
+                        panic!("injected panic: job {} attempt {}", job.id, attempt);
+                    }
+                    if let Some(e) = plan.injected_error(job.id, attempt) {
+                        return Err(e);
+                    }
                 }
-                if let Some(e) = plan.injected_error(job.id, attempt) {
-                    return Err(e);
+                execute_attempt(scratch, job, worker, which, sharded)
+            }));
+            match caught {
+                Ok(res) => (res, false),
+                Err(payload) => {
+                    metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+                    (Err(Error::JobPanicked(panic_message(payload))), true)
                 }
             }
-            execute_attempt(&mut scratch, job, worker, which, sharded)
-        }));
-        let result = match caught {
-            Ok(res) => {
-                drop(scratch); // clean attempt: scratch returns to its tier
+        };
+        let result = match source {
+            ScratchSource::Pool(pool) => {
+                let mut scratch = pool.checkout(job.graph.n());
+                let (res, panicked) = one_attempt(&mut scratch);
+                if panicked {
+                    // the unwound arenas may be inconsistent — never
+                    // re-pool (a clean drop returns it to its tier)
+                    scratch.discard();
+                }
                 res
             }
-            Err(payload) => {
-                // the unwound arenas may be inconsistent — never re-pool
-                scratch.discard();
-                metrics.jobs_panicked.fetch_add(1, Ordering::Relaxed);
-                Err(Error::JobPanicked(panic_message(payload)))
+            ScratchSource::Pinned(scratch) => {
+                let (res, panicked) = one_attempt(&mut **scratch);
+                if panicked {
+                    // same rule, pinned flavour: replace in place
+                    **scratch = WorkerScratch::default();
+                }
+                res
             }
         };
         match result {
@@ -343,7 +373,7 @@ mod tests {
         let job = Job::degree_superlevel(5, gen::barabasi_albert(50, 2, 2), JobSpec::default());
         let plan = FaultPlan::new().panic_on(5, 0);
         let r = run_job_with_retries(
-            &pool,
+            &mut ScratchSource::Pool(&pool),
             1,
             DominationKernel::Auto,
             &policy(2, 0.0, plan),
@@ -368,7 +398,7 @@ mod tests {
         let job = Job::degree_superlevel(11, gen::cycle(20), JobSpec::default());
         let plan = FaultPlan::new().error_always(11);
         let fail = run_job_with_retries(
-            &pool,
+            &mut ScratchSource::Pool(&pool),
             1,
             DominationKernel::Auto,
             &policy(2, 0.0, plan),
@@ -395,7 +425,7 @@ mod tests {
             JobSpec::default(),
         );
         let fail = run_job_with_retries(
-            &pool,
+            &mut ScratchSource::Pool(&pool),
             1,
             DominationKernel::Auto,
             &policy(4, 0.0, FaultPlan::new()),
@@ -426,7 +456,7 @@ mod tests {
         let plan = FaultPlan::new().delay_rounds(2, Duration::from_millis(50));
         // no retries: the deadline miss is the final verdict
         let fail = run_job_with_retries(
-            &pool,
+            &mut ScratchSource::Pool(&pool),
             1,
             DominationKernel::Auto,
             &policy(0, 0.005, plan.clone()),
@@ -439,7 +469,7 @@ mod tests {
         assert!(metrics.deadline_misses() >= 1);
         // with no deadline the same faulted job completes (slowly)
         let ok = run_job_with_retries(
-            &pool,
+            &mut ScratchSource::Pool(&pool),
             1,
             DominationKernel::Auto,
             &policy(0, 0.0, plan),
@@ -449,6 +479,56 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ok.attempts, 1);
+    }
+
+    #[test]
+    fn pinned_scratch_runs_jobs_and_replaces_itself_on_panic() {
+        let metrics = Metrics::default();
+        let mut arena = WorkerScratch::new();
+        let job = Job::degree_superlevel(8, gen::barabasi_albert(50, 2, 3), JobSpec::default());
+        // a panicking attempt must reset the pinned arena, then the
+        // retry reuses it: same identity, degraded outcome, nothing pooled
+        let plan = FaultPlan::new().panic_on(8, 0);
+        let r = run_job_with_retries(
+            &mut ScratchSource::Pinned(&mut arena),
+            1,
+            DominationKernel::Auto,
+            &policy(2, 0.0, plan),
+            &metrics,
+            &job,
+            7,
+        )
+        .unwrap();
+        assert_eq!(r.id, 8);
+        assert_eq!(r.attempts, 2);
+        assert_eq!(r.worker, 7);
+        assert_eq!(metrics.jobs_panicked(), 1);
+        // the (replaced) arena stays serviceable for the next job, and
+        // produces output identical to a fresh pooled run
+        let again = run_job_with_retries(
+            &mut ScratchSource::Pinned(&mut arena),
+            1,
+            DominationKernel::Auto,
+            &policy(0, 0.0, FaultPlan::new()),
+            &metrics,
+            &job,
+            7,
+        )
+        .unwrap();
+        let pool = ScratchPool::new(1);
+        let pooled = run_job_with_retries(
+            &mut ScratchSource::Pool(&pool),
+            1,
+            DominationKernel::Auto,
+            &policy(0, 0.0, FaultPlan::new()),
+            &metrics,
+            &job,
+            0,
+        )
+        .unwrap();
+        for k in 0..pooled.diagrams.len() {
+            assert!(again.diagrams[k].same_as(&pooled.diagrams[k], 0.0));
+        }
     }
 
     #[test]
@@ -464,7 +544,7 @@ mod tests {
         let clean = execute_job(&mut WorkerScratch::new(), &job, 0).unwrap();
         let plan = FaultPlan::new().error_on(6, 0).error_on(6, 1);
         let degraded = run_job_with_retries(
-            &pool,
+            &mut ScratchSource::Pool(&pool),
             1,
             DominationKernel::Auto,
             &policy(2, 0.0, plan),

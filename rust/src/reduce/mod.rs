@@ -13,4 +13,4 @@ pub use pipeline::{
     pd_sharded_with, pd_with_reduction, pd_with_reduction_ws, Reduced, Reduction,
     ReductionReport, RoundStats,
 };
-pub use planner::{ReductionWorkspace, PAR_FRONTIER_MIN};
+pub use planner::{ParallelBackend, ReductionWorkspace, PAR_ADAPTIVE_MAX, PAR_FRONTIER_MIN};

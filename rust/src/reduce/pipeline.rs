@@ -53,7 +53,8 @@ impl Reduction {
 }
 
 /// Removal counts of one PrunIT⇄core round of the planner, plus the
-/// domination-kernel census of that round's frontier sweeps.
+/// domination-kernel and parallelism census of that round's frontier
+/// sweeps.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RoundStats {
     pub prunit_removed: usize,
@@ -62,6 +63,10 @@ pub struct RoundStats {
     pub merge_rounds: usize,
     /// frontier sweep rounds this pass ran on the u64-block kernel
     pub bitset_rounds: usize,
+    /// frontier sweep rounds this pass fanned out over > 1 thread.
+    /// Under the adaptive thread policy this is timing-dependent
+    /// telemetry (it may differ between runs; the residue never does)
+    pub par_rounds: usize,
 }
 
 /// Bookkeeping for the paper's reduction-percentage metrics plus planner
@@ -127,6 +132,13 @@ impl ReductionReport {
     /// over all PrunIT passes.
     pub fn bitset_kernel_rounds(&self) -> usize {
         self.rounds.iter().map(|r| r.bitset_rounds).sum()
+    }
+
+    /// Frontier sweep rounds that fanned out over > 1 thread, summed
+    /// over all PrunIT passes (always 0 for the materializing
+    /// reference, whose PrunIT is sequential).
+    pub fn par_kernel_rounds(&self) -> usize {
+        self.rounds.iter().map(|r| r.par_rounds).sum()
     }
 
     /// Number of shards the reduced graph split into (0 = not sharded).
@@ -243,6 +255,7 @@ pub fn combined_with_materializing(
                 core_removed: vertices_before - r.graph.n(),
                 merge_rounds: 0,
                 bitset_rounds: 0,
+                par_rounds: 0,
             });
             (r.graph, r.filtration, r.kept_old_ids)
         }
@@ -255,6 +268,7 @@ pub fn combined_with_materializing(
                 core_removed: 0,
                 merge_rounds: r.rounds,
                 bitset_rounds: 0,
+                par_rounds: 0,
             });
             prunit_rounds += r.rounds;
             (r.graph, r.filtration, r.kept_old_ids)
@@ -267,6 +281,7 @@ pub fn combined_with_materializing(
                 core_removed: p.graph.n() - c.graph.n(),
                 merge_rounds: p.rounds,
                 bitset_rounds: 0,
+                par_rounds: 0,
             });
             prunit_rounds += p.rounds;
             let ids = c
@@ -288,6 +303,7 @@ pub fn combined_with_materializing(
                     core_removed: p.graph.n() - c.graph.n(),
                     merge_rounds: p.rounds,
                     bitset_rounds: 0,
+                    par_rounds: 0,
                 };
                 rounds.push(round);
                 prunit_rounds += p.rounds;

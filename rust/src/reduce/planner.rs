@@ -23,14 +23,30 @@
 //!
 //! Because the check phase is read-only against the shared `alive`/`deg`
 //! arrays, a round's checks commute: [`ReductionWorkspace::set_prune_threads`]
-//! partitions the frontier across that many scoped worker threads, each
-//! with its own [`KernelState`], and concatenates the per-worker candidate
-//! sets in chunk order. The candidate list — and therefore the residue —
-//! is **bit-identical at every thread count**, and identical to the
-//! sequential reference `prune::prunit` (differential suite:
-//! `rust/tests/parallel_prunit.rs`). Frontiers shorter than
-//! [`PAR_FRONTIER_MIN`] are swept inline: on the small rounds that
-//! dominate late convergence, a thread spawn costs more than the sweep.
+//! partitions the frontier across worker threads, each with its own
+//! [`KernelState`], and concatenates the per-worker candidate sets in
+//! chunk order. The candidate list — and therefore the residue — is
+//! **bit-identical at every thread count**, and identical to the
+//! sequential reference `prune::prunit` (differential suites:
+//! `rust/tests/parallel_prunit.rs`, `rust/tests/thread_team.rs`).
+//!
+//! The fan-out runs on a **persistent parking team**
+//! ([`crate::util::ThreadTeam`]): the workers are spawned lazily on the
+//! first parallel round and then parked on a condvar between rounds, so
+//! a multi-round FixedPoint plan pays one spawn per workspace lifetime
+//! instead of one per round. The old per-round `std::thread::scope`
+//! respawn survives as [`ParallelBackend::Scoped`], the differential and
+//! bench reference for the team.
+//!
+//! Thread policy (`set_prune_threads`): `1` forces inline sweeps, `T ≥ 2`
+//! pins `T` threads gated by the static [`PAR_FRONTIER_MIN`] cliff, and
+//! `0` enables the **adaptive ramp** — each round projects its
+//! sequential check cost from an EWMA of the measured per-check cost
+//! (ns/check of previous rounds, recorded alongside the per-round
+//! kernel census in the workspace telemetry and surfaced through
+//! [`RoundStats`] `par_rounds`) and fans out only with as many threads
+//! as the projected work amortizes. The choice is wall-time-only: the
+//! candidate set of a round does not depend on how it is chunked.
 //!
 //! Two further hot-path fixes live here:
 //!
@@ -61,23 +77,42 @@ use crate::error::Result;
 use crate::graph::decompose::Shard;
 use crate::graph::Graph;
 use crate::prune::kernel::{self, DominationKernel, KernelChoice, KernelState};
-use crate::util::{CancelToken, Timer};
+use crate::util::{CancelToken, TeamSlot, Timer};
 
 use super::pipeline::{Reduction, RoundStats};
 
 /// Frontier length below which a round is swept inline even when
-/// [`ReductionWorkspace::set_prune_threads`] asked for more threads: the
-/// scoped-thread spawn overhead exceeds the cost of a few hundred
-/// domination checks. Purely a performance threshold — the candidate set
-/// of a round is the same either way.
+/// [`ReductionWorkspace::set_prune_threads`] pinned more threads: below
+/// it, dispatch overhead exceeds the cost of a few hundred domination
+/// checks. Purely a performance threshold — the candidate set of a
+/// round is the same either way. Adaptive mode (`prune_threads == 0`)
+/// replaces this static cliff with a measured ramp.
 pub const PAR_FRONTIER_MIN: usize = 512;
 
 /// Minimum frontier chunk handed to one worker; the effective thread
 /// count is capped so no worker receives less than this.
 const PAR_CHUNK_MIN: usize = 256;
 
-/// How many threads a round actually uses for `requested` configured
-/// threads and a frontier of `frontier_len` vertices.
+/// Ceiling on the thread count adaptive mode may choose (further capped
+/// by `std::thread::available_parallelism`).
+pub const PAR_ADAPTIVE_MAX: usize = 8;
+
+/// Assumed cost of waking and joining one team round, in nanoseconds —
+/// the dispatch overhead a round's projected work must amortize before
+/// adaptive mode fans it out, and the per-thread work quantum of the
+/// ramp. Deliberately conservative (a parked-condvar wake is cheaper):
+/// mispricing only costs wall time, never correctness.
+const PAR_DISPATCH_NS: f64 = 30_000.0;
+
+/// Per-check cost assumed before the first measurement exists (the
+/// ballpark of a sparse-residue merge walk), so the very first big
+/// frontier still fans out.
+const PAR_FALLBACK_CHECK_NS: f64 = 150.0;
+
+/// How many threads a round actually uses for a **pinned** setting of
+/// `requested ≥ 1` threads and a frontier of `frontier_len` vertices.
+/// The adaptive setting (0) does not come through here — see
+/// [`ReductionWorkspace::set_prune_threads`].
 fn effective_threads(requested: usize, frontier_len: usize) -> usize {
     let requested = requested.max(1);
     if requested == 1 || frontier_len < PAR_FRONTIER_MIN {
@@ -86,6 +121,27 @@ fn effective_threads(requested: usize, frontier_len: usize) -> usize {
         requested.min(frontier_len / PAR_CHUNK_MIN).max(1)
     }
 }
+
+/// Which mechanism fans the check phase out. [`ParallelBackend::Team`]
+/// (the default) dispatches rounds to the workspace's persistent
+/// [`crate::util::ThreadTeam`]; [`ParallelBackend::Scoped`] respawns
+/// `std::thread::scope` threads every round, kept as the differential
+/// and bench reference the team is measured against. The candidate set
+/// — and therefore the residue — is bit-identical either way.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ParallelBackend {
+    #[default]
+    Team,
+    Scoped,
+}
+
+/// Raw pointer to the round's per-thread worker slots, shared with the
+/// team dispatch: each part index is served by exactly one thread per
+/// round, so the slots are accessed disjointly.
+struct WorkerPtr(*mut FrontierWorker);
+// SAFETY: see above — one part, one thread, disjoint `&mut` per round.
+unsafe impl Send for WorkerPtr {}
+unsafe impl Sync for WorkerPtr {}
 
 /// Find the frontier vertex `u`'s witness dominator in the residue, or
 /// None: the first alive neighbour `v` (ascending CSR order) with
@@ -176,9 +232,26 @@ pub struct ReductionWorkspace {
     cands: Vec<(u32, u32)>,
     /// per-thread scratch for parallel check phases
     workers: Vec<FrontierWorker>,
-    /// configured PrunIT check-phase threads (0 and 1 both mean inline);
-    /// survives `plan`/`reset` — it is configuration, not per-plan state
+    /// the persistent parking team behind parallel check phases; spawned
+    /// lazily on the first fanned-out round and reused across rounds,
+    /// passes, and plans. Cloning a workspace clones this as an empty
+    /// slot (threads are not clonable state).
+    team: TeamSlot,
+    /// which fan-out mechanism check phases use; survives `plan`/`reset`
+    /// like `prune_threads` — configuration, not per-plan state
+    backend: ParallelBackend,
+    /// configured PrunIT check-phase thread policy (0 = adaptive, 1 =
+    /// forced inline, T ≥ 2 = pinned fan-out); survives `plan`/`reset` —
+    /// it is configuration, not per-plan state
     prune_threads: usize,
+    /// EWMA of the measured sequential per-check cost in nanoseconds
+    /// (0.0 = no measurement yet); drives the adaptive ramp. Survives
+    /// re-planning like the team — it is measurement state, and carrying
+    /// it across a batch's jobs is exactly what makes the ramp cheap
+    check_ns_est: f64,
+    /// cached `available_parallelism` cap for adaptive mode (0 = not yet
+    /// resolved)
+    adaptive_cap: usize,
     /// requested domination-kernel policy; survives `plan`/`reset` like
     /// `prune_threads` — configuration, not per-plan state
     kernel: DominationKernel,
@@ -213,6 +286,10 @@ pub struct ReductionWorkspace {
     core_secs: f64,
     checks: usize,
     frontier_rounds: usize,
+    /// frontier rounds of the latest plan that fanned out (> 1 thread)
+    par_frontier_rounds: usize,
+    /// threads each frontier round of the latest plan used, round order
+    threads_log: Vec<usize>,
     alive_count: usize,
 }
 
@@ -221,23 +298,45 @@ impl ReductionWorkspace {
         ReductionWorkspace::default()
     }
 
-    /// A workspace whose PrunIT check phases fan out across `threads`
-    /// scoped worker threads (see module docs; 0 and 1 both mean inline).
+    /// A workspace with a configured PrunIT check-phase thread policy
+    /// (see [`set_prune_threads`](Self::set_prune_threads)).
     pub fn with_prune_threads(threads: usize) -> ReductionWorkspace {
         let mut ws = ReductionWorkspace::default();
         ws.set_prune_threads(threads);
         ws
     }
 
-    /// Configure the PrunIT check-phase thread count. The residue is
-    /// bit-identical at every setting; only wall time changes.
+    /// Configure the PrunIT check-phase thread policy: `0` = adaptive
+    /// (per-round thread count from the measured ramp, see module docs),
+    /// `1` = forced inline, `T ≥ 2` = pin `T` threads behind the static
+    /// [`PAR_FRONTIER_MIN`] gate. The residue is bit-identical at every
+    /// setting; only wall time changes.
     pub fn set_prune_threads(&mut self, threads: usize) {
         self.prune_threads = threads;
     }
 
-    /// Configured PrunIT check-phase threads (≥ 1).
+    /// The configured thread policy, verbatim (0 = adaptive, 1 = inline,
+    /// T ≥ 2 = pinned).
     pub fn prune_threads(&self) -> usize {
-        self.prune_threads.max(1)
+        self.prune_threads
+    }
+
+    /// Select the fan-out mechanism for parallel check phases. The
+    /// default [`ParallelBackend::Team`] is the production path;
+    /// [`ParallelBackend::Scoped`] is the per-round respawn reference.
+    pub fn set_parallel_backend(&mut self, backend: ParallelBackend) {
+        self.backend = backend;
+    }
+
+    /// The configured fan-out mechanism.
+    pub fn parallel_backend(&self) -> ParallelBackend {
+        self.backend
+    }
+
+    /// Worker threads currently parked in the persistent team (0 until
+    /// the first fanned-out round; the dispatching thread is extra).
+    pub fn team_workers(&self) -> usize {
+        self.team.workers()
     }
 
     /// A workspace with a pinned (or explicitly `Auto`) domination-kernel
@@ -317,6 +416,8 @@ impl ReductionWorkspace {
         self.core_secs = 0.0;
         self.checks = 0;
         self.frontier_rounds = 0;
+        self.par_frontier_rounds = 0;
+        self.threads_log.clear();
         self.alive_count = n;
     }
 
@@ -338,20 +439,24 @@ impl ReductionWorkspace {
                     core_removed: c,
                     merge_rounds: 0,
                     bitset_rounds: 0,
+                    par_rounds: 0,
                 });
             }
             Reduction::Prunit => {
-                let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
+                let (m0, b0, p0) =
+                    (self.merge_rounds, self.bitset_rounds, self.par_frontier_rounds);
                 let p = self.timed_prunit(g, f)?;
                 self.rounds.push(RoundStats {
                     prunit_removed: p,
                     core_removed: 0,
                     merge_rounds: self.merge_rounds - m0,
                     bitset_rounds: self.bitset_rounds - b0,
+                    par_rounds: self.par_frontier_rounds - p0,
                 });
             }
             Reduction::Combined => {
-                let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
+                let (m0, b0, p0) =
+                    (self.merge_rounds, self.bitset_rounds, self.par_frontier_rounds);
                 let p = self.timed_prunit(g, f)?;
                 let c = self.timed_core(g, k1);
                 self.rounds.push(RoundStats {
@@ -359,11 +464,13 @@ impl ReductionWorkspace {
                     core_removed: c,
                     merge_rounds: self.merge_rounds - m0,
                     bitset_rounds: self.bitset_rounds - b0,
+                    par_rounds: self.par_frontier_rounds - p0,
                 });
             }
             Reduction::FixedPoint => loop {
                 self.cancel.check()?;
-                let (m0, b0) = (self.merge_rounds, self.bitset_rounds);
+                let (m0, b0, p0) =
+                    (self.merge_rounds, self.bitset_rounds, self.par_frontier_rounds);
                 let p = self.timed_prunit(g, f)?;
                 let c = self.timed_core(g, k1);
                 self.rounds.push(RoundStats {
@@ -371,6 +478,7 @@ impl ReductionWorkspace {
                     core_removed: c,
                     merge_rounds: self.merge_rounds - m0,
                     bitset_rounds: self.bitset_rounds - b0,
+                    par_rounds: self.par_frontier_rounds - p0,
                 });
                 if p + c == 0 {
                     break;
@@ -451,10 +559,46 @@ impl ReductionWorkspace {
         kernel::choose(self.kernel, g.n(), self.alive_count, degree_sum)
     }
 
+    /// Thread budget for the round about to run. Pinned policies
+    /// (`prune_threads ≥ 1`) go through [`effective_threads`]; the
+    /// adaptive policy (0) projects the round's sequential check cost
+    /// from the EWMA per-check estimate and ramps up one thread per
+    /// dispatch-cost's worth of projected work. Wall-time-only: the
+    /// candidate set of a round does not depend on the choice.
+    fn round_threads(&mut self) -> usize {
+        let len = self.frontier.len();
+        if self.prune_threads >= 1 {
+            return effective_threads(self.prune_threads, len);
+        }
+        if self.adaptive_cap == 0 {
+            self.adaptive_cap = std::thread::available_parallelism()
+                .map_or(1, |p| p.get())
+                .min(PAR_ADAPTIVE_MAX);
+        }
+        if self.adaptive_cap <= 1 || len < 2 * PAR_CHUNK_MIN {
+            return 1;
+        }
+        let per_check = if self.check_ns_est > 0.0 {
+            self.check_ns_est
+        } else {
+            PAR_FALLBACK_CHECK_NS
+        };
+        let projected_ns = per_check * len as f64;
+        if projected_ns < 2.0 * PAR_DISPATCH_NS {
+            return 1;
+        }
+        let by_work = (projected_ns / PAR_DISPATCH_NS) as usize;
+        by_work
+            .min(self.adaptive_cap)
+            .min(len / PAR_CHUNK_MIN)
+            .max(1)
+    }
+
     /// Check phase: fill `self.cands` with this round's `(vertex,
     /// witness)` pairs in frontier (ascending) order, reading the
     /// round-start `alive`/`deg` state. Runs inline or fanned out over
-    /// scoped threads — the output is identical either way, because every
+    /// the persistent team (or scoped threads, on the reference
+    /// backend) — the output is identical every way, because every
     /// check is a pure function of the shared round-start arrays (kernel
     /// choice included) and the frontier chunks are concatenated back in
     /// order.
@@ -466,7 +610,10 @@ impl ReductionWorkspace {
             KernelChoice::Merge => self.merge_rounds += 1,
             KernelChoice::Bitset => self.bitset_rounds += 1,
         }
-        let threads = effective_threads(self.prune_threads, self.frontier.len());
+        let threads = self.round_threads();
+        self.threads_log.push(threads);
+        let checks_before = self.checks;
+        let t = Timer::start();
         if threads <= 1 {
             self.checks += sweep_chunk(
                 g,
@@ -478,33 +625,92 @@ impl ReductionWorkspace {
                 &mut self.kstate,
                 &mut self.cands,
             );
-            return;
-        }
-        if self.workers.len() < threads {
-            self.workers.resize_with(threads, FrontierWorker::default);
-        }
-        for w in &mut self.workers[..threads] {
-            w.out.clear();
-            w.checks = 0;
-        }
-        let chunk = self.frontier.len().div_ceil(threads);
-        {
-            let alive: &[bool] = &self.alive;
-            let deg: &[u32] = &self.deg;
-            let frontier: &[u32] = &self.frontier;
-            let workers = &mut self.workers[..threads];
-            std::thread::scope(|scope| {
-                for (w, slice) in workers.iter_mut().zip(frontier.chunks(chunk)) {
-                    scope.spawn(move || {
-                        w.checks =
-                            sweep_chunk(g, f, alive, deg, slice, choice, &mut w.state, &mut w.out);
-                    });
+        } else {
+            self.par_frontier_rounds += 1;
+            if self.workers.len() < threads {
+                self.workers.resize_with(threads, FrontierWorker::default);
+            }
+            for w in &mut self.workers[..threads] {
+                w.out.clear();
+                w.checks = 0;
+            }
+            let chunk = self.frontier.len().div_ceil(threads);
+            {
+                let alive: &[bool] = &self.alive;
+                let deg: &[u32] = &self.deg;
+                let frontier: &[u32] = &self.frontier;
+                match self.backend {
+                    ParallelBackend::Scoped => {
+                        let workers = &mut self.workers[..threads];
+                        std::thread::scope(|scope| {
+                            for (w, slice) in workers.iter_mut().zip(frontier.chunks(chunk)) {
+                                scope.spawn(move || {
+                                    w.checks = sweep_chunk(
+                                        g, f, alive, deg, slice, choice, &mut w.state, &mut w.out,
+                                    );
+                                });
+                            }
+                        });
+                    }
+                    ParallelBackend::Team => {
+                        // the dispatching thread sweeps part 0 itself, so
+                        // `threads` parts need `threads - 1` team workers
+                        let team = self.team.get(threads - 1);
+                        let workers = &mut self.workers[..threads];
+                        let wptr = WorkerPtr(workers.as_mut_ptr());
+                        let len = frontier.len();
+                        let body = move |part: usize| {
+                            let lo = part * chunk;
+                            if lo >= len {
+                                return;
+                            }
+                            let hi = (lo + chunk).min(len);
+                            // SAFETY: part indices are distinct per round
+                            // (one per thread, `ThreadTeam::run` barrier),
+                            // so each slot gets exactly one `&mut`; the
+                            // pointer stays valid because `run` does not
+                            // return before every part finished.
+                            let w = unsafe { &mut *wptr.0.add(part) };
+                            w.checks = sweep_chunk(
+                                g,
+                                f,
+                                alive,
+                                deg,
+                                &frontier[lo..hi],
+                                choice,
+                                &mut w.state,
+                                &mut w.out,
+                            );
+                        };
+                        let worker_panics = team.run(threads, &body);
+                        // a panicking check is a poisoned round: escalate
+                        // as a panic so the job harness's catch_unwind
+                        // isolates it like any other job panic
+                        assert_eq!(
+                            worker_panics, 0,
+                            "{worker_panics} PrunIT team worker part(s) panicked"
+                        );
+                    }
                 }
-            });
+            }
+            for w in &self.workers[..threads] {
+                self.cands.extend_from_slice(&w.out);
+                self.checks += w.checks;
+            }
         }
-        for w in &self.workers[..threads] {
-            self.cands.extend_from_slice(&w.out);
-            self.checks += w.checks;
+        // feed the adaptive ramp: fold this round's measured per-check
+        // cost (normalised back to sequential ns/check) into the EWMA
+        let round_checks = self.checks - checks_before;
+        if round_checks > 0 {
+            let secs = t.elapsed().as_secs_f64();
+            let sample = secs * 1e9 * threads as f64 / round_checks as f64;
+            if sample > 0.0 {
+                self.check_ns_est = if self.check_ns_est > 0.0 {
+                    0.5 * (self.check_ns_est + sample)
+                } else {
+                    sample
+                };
+            }
         }
     }
 
@@ -700,6 +906,22 @@ impl ReductionWorkspace {
     /// reference's passes.
     pub fn frontier_rounds(&self) -> usize {
         self.frontier_rounds
+    }
+
+    /// Frontier rounds of the latest plan whose check phase fanned out
+    /// (> 1 thread). Also aggregated per alternation pass in
+    /// [`RoundStats`] `par_rounds`.
+    pub fn par_frontier_rounds(&self) -> usize {
+        self.par_frontier_rounds
+    }
+
+    /// Threads each frontier round of the latest plan used, in round
+    /// order (1 = inline). Always `frontier_rounds()` entries long.
+    /// Under the adaptive policy this is timing-dependent telemetry —
+    /// unlike `checks()`/`frontier_rounds()` it may differ between runs,
+    /// while the residue never does.
+    pub fn round_thread_log(&self) -> &[usize] {
+        &self.threads_log
     }
 }
 
@@ -998,6 +1220,65 @@ mod tests {
         assert_eq!(effective_threads(8, PAR_FRONTIER_MIN - 1), 1);
         assert_eq!(effective_threads(8, PAR_FRONTIER_MIN), 2);
         assert_eq!(effective_threads(4, 100_000), 4);
-        assert_eq!(effective_threads(0, 100_000), 1);
+    }
+
+    #[test]
+    fn scoped_backend_matches_team_backend() {
+        let g = gen::erdos_renyi(3000, 5.0 / 3000.0, 23);
+        let f = Filtration::degree_superlevel(&g);
+        let mut team = ReductionWorkspace::with_prune_threads(4);
+        team.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+        assert_eq!(team.parallel_backend(), ParallelBackend::Team);
+        assert!(team.team_workers() > 0, "team must have spawned");
+        let mut scoped = ReductionWorkspace::with_prune_threads(4);
+        scoped.set_parallel_backend(ParallelBackend::Scoped);
+        scoped.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+        assert_eq!(scoped.team_workers(), 0, "scoped path must not spawn a team");
+        assert_eq!(team.alive(), scoped.alive());
+        assert_eq!(team.checks(), scoped.checks());
+        assert_eq!(team.frontier_rounds(), scoped.frontier_rounds());
+        assert_eq!(team.par_frontier_rounds(), scoped.par_frontier_rounds());
+    }
+
+    #[test]
+    fn adaptive_policy_is_residue_invariant() {
+        let g = gen::erdos_renyi(3000, 5.0 / 3000.0, 29);
+        let f = Filtration::degree_superlevel(&g);
+        let mut seq = ReductionWorkspace::with_prune_threads(1);
+        seq.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+        let mut auto = ReductionWorkspace::with_prune_threads(0);
+        assert_eq!(auto.prune_threads(), 0);
+        for trial in 0..3 {
+            auto.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+            assert_eq!(auto.alive(), seq.alive(), "trial {trial}");
+            assert_eq!(auto.checks(), seq.checks(), "trial {trial}");
+            assert_eq!(auto.frontier_rounds(), seq.frontier_rounds(), "trial {trial}");
+            assert_eq!(auto.round_thread_log().len(), auto.frontier_rounds());
+            let par_by_rounds: usize = auto.rounds().iter().map(|r| r.par_rounds).sum();
+            assert_eq!(par_by_rounds, auto.par_frontier_rounds(), "trial {trial}");
+            assert_eq!(
+                auto.round_thread_log().iter().filter(|&&t| t > 1).count(),
+                auto.par_frontier_rounds(),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn team_persists_across_plans_and_clones_empty() {
+        let g = gen::erdos_renyi(3000, 5.0 / 3000.0, 31);
+        let f = Filtration::degree_superlevel(&g);
+        let mut ws = ReductionWorkspace::with_prune_threads(4);
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        let spawned = ws.team_workers();
+        assert_eq!(spawned, 3, "4 parts = dispatcher + 3 team workers");
+        ws.plan(&g, &f, 1, Reduction::FixedPoint).unwrap();
+        assert_eq!(ws.team_workers(), spawned, "replanning must reuse the team");
+        let cloned = ws.clone();
+        assert_eq!(cloned.team_workers(), 0, "threads are not clonable state");
+        // the clone still plans correctly, spawning its own team lazily
+        let mut cloned = cloned;
+        cloned.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        assert_eq!(cloned.alive(), ws.alive());
     }
 }

@@ -1,13 +1,16 @@
-//! Small shared utilities: deterministic RNG, timing, table formatting.
+//! Small shared utilities: deterministic RNG, timing, table formatting,
+//! and the persistent worker team behind parallel PrunIT.
 
 pub mod cancel;
 pub mod rng;
 pub mod table;
+pub mod team;
 pub mod timer;
 
 pub use cancel::CancelToken;
 pub use rng::Rng;
 pub use table::Table;
+pub use team::{TeamSlot, ThreadTeam};
 pub use timer::Timer;
 
 /// Order-preserving f64 → u64 bit transform (total order, NaN-free

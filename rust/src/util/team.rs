@@ -1,0 +1,382 @@
+//! Persistent parking worker team for round-synchronous fan-out.
+//!
+//! The parallel PrunIT check phase used to spawn fresh scoped threads
+//! every frontier round; on the small rounds that dominate late
+//! convergence a spawn costs more than the sweep, and a multi-round
+//! FixedPoint job pays that latency dozens of times. [`ThreadTeam`]
+//! amortises it: the workers are spawned once, park on a condvar
+//! between rounds, and each [`ThreadTeam::run`] wakes exactly the
+//! workers a round needs with one epoch-stamped dispatch.
+//!
+//! Design points:
+//!
+//! * **Epoch-stamped rounds.** The leader publishes a type-erased task
+//!   pointer plus a bumped epoch under the team mutex and notifies the
+//!   work condvar. A worker runs a round iff the epoch moved past the
+//!   one it last served *and* its index is below the round's `parts`
+//!   budget; everyone else keeps parking, so a 2-way round on an 8-way
+//!   team wakes two threads, not eight.
+//! * **Borrowed closures, no allocation.** `run` erases `&dyn Fn(usize)`
+//!   to a raw pointer for the dispatch. That is sound because `run`
+//!   never returns (or unwinds) before every participating worker has
+//!   finished the epoch — the borrow provably outlives all uses.
+//! * **Panic-safe.** Each worker executes its part under `catch_unwind`
+//!   (the crate's job-isolation convention): a panicking part is
+//!   counted, the round still completes, and the count is returned to
+//!   the leader, which escalates. A leader-side panic in part 0 is
+//!   caught, the barrier is still honoured, and the payload is rethrown
+//!   only after the team is idle — workers never race a stack that is
+//!   unwinding away beneath them.
+//! * **Shutdown on drop.** Dropping the team flips a shutdown flag,
+//!   wakes everyone, and joins the handles.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Type-erased borrowed task: `call(data, part)` invokes the leader's
+/// `&dyn Fn(usize)` for one part index. Only valid for the epoch it was
+/// published under; [`ThreadTeam::run`] keeps the referent alive until
+/// every participant finished that epoch.
+#[derive(Clone, Copy)]
+struct Task {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: the pointer is only dereferenced by workers between dispatch
+// and the leader's barrier, while the leader provably keeps the closure
+// (and everything it borrows) alive on its own stack.
+unsafe impl Send for Task {}
+
+struct State {
+    /// monotone round stamp; workers run a round once per epoch advance
+    epoch: u64,
+    /// worker threads participating in the current epoch (indices
+    /// `0..active` run parts `1..=active`; the leader runs part 0)
+    active: usize,
+    /// participants that have not yet finished the current epoch
+    remaining: usize,
+    /// participants whose part panicked during the current epoch
+    panicked: usize,
+    task: Option<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here between rounds
+    work: Condvar,
+    /// the leader parks here while a round is in flight
+    done: Condvar,
+}
+
+fn lock(shared: &Shared) -> MutexGuard<'_, State> {
+    // the critical sections below never panic, but recover anyway: a
+    // poisoned team must still shut down cleanly
+    shared.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a>(cv: &Condvar, guard: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker_loop(shared: &Shared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = lock(shared);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if index < st.active {
+                        break;
+                    }
+                    // not in this round's budget: wait for the next one
+                }
+                st = wait(&shared.work, st);
+            }
+            st.task.expect("a dispatched epoch always carries a task")
+        };
+        // part 0 is the leader's; worker `index` owns part `index + 1`
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (task.call)(task.data, index + 1)
+        }))
+        .is_ok();
+        let mut st = lock(shared);
+        if !ok {
+            st.panicked += 1;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+unsafe fn invoke_erased(data: *const (), part: usize) {
+    let f = *data.cast::<&(dyn Fn(usize) + Sync)>();
+    f(part);
+}
+
+/// A persistent team of parked worker threads; see module docs.
+pub struct ThreadTeam {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadTeam {
+    /// Spawn a team of `workers` parked threads. Together with the
+    /// calling (leader) thread this supports rounds of up to
+    /// `workers + 1` parts.
+    pub fn new(workers: usize) -> ThreadTeam {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                active: 0,
+                remaining: 0,
+                panicked: 0,
+                task: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("prunit-team-{i}"))
+                    .spawn(move || worker_loop(&shared, i))
+                    .expect("spawn PrunIT team worker")
+            })
+            .collect();
+        ThreadTeam { shared, handles }
+    }
+
+    /// Number of worker threads (the leader is extra).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run one round: `body(part)` for every `part < parts`, part 0 on
+    /// the calling thread and parts `1..parts` on team workers. Blocks
+    /// until every part finished (the round barrier that makes borrowed
+    /// dispatch sound). Returns the number of *worker* parts that
+    /// panicked; a panic in part 0 is rethrown here after the barrier.
+    ///
+    /// `parts` is clamped to `workers() + 1`; callers size their rounds
+    /// to the team.
+    pub fn run(&self, parts: usize, body: &(dyn Fn(usize) + Sync)) -> usize {
+        let dispatch = parts.saturating_sub(1).min(self.workers());
+        if dispatch == 0 {
+            body(0);
+            return 0;
+        }
+        {
+            let mut st = lock(&self.shared);
+            debug_assert_eq!(st.remaining, 0, "round dispatched while one is in flight");
+            st.epoch += 1;
+            st.active = dispatch;
+            st.remaining = dispatch;
+            st.panicked = 0;
+            st.task = Some(Task {
+                data: (&body as *const &(dyn Fn(usize) + Sync)).cast(),
+                call: invoke_erased,
+            });
+            self.shared.work.notify_all();
+        }
+        let leader = catch_unwind(AssertUnwindSafe(|| body(0)));
+        let worker_panics = {
+            let mut st = lock(&self.shared);
+            while st.remaining > 0 {
+                st = wait(&self.shared.done, st);
+            }
+            st.task = None;
+            st.panicked
+        };
+        if let Err(payload) = leader {
+            resume_unwind(payload);
+        }
+        worker_panics
+    }
+}
+
+impl Drop for ThreadTeam {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared);
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadTeam {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadTeam")
+            .field("workers", &self.handles.len())
+            .finish()
+    }
+}
+
+/// A lazily-spawned [`ThreadTeam`] slot designed to live inside
+/// cloneable state (the planner's [`ReductionWorkspace`] derives
+/// `Clone`): cloning yields an empty slot — threads are not clonable —
+/// and the clone respawns its own team on first parallel round. The
+/// slot grows the team when a round needs more workers and never
+/// shrinks it; parked threads are cheap.
+///
+/// [`ReductionWorkspace`]: crate::reduce::ReductionWorkspace
+#[derive(Default)]
+pub struct TeamSlot {
+    team: Option<ThreadTeam>,
+}
+
+impl TeamSlot {
+    /// The slot's team, spawned (or grown) to at least `workers` worker
+    /// threads.
+    pub fn get(&mut self, workers: usize) -> &ThreadTeam {
+        let respawn = match &self.team {
+            Some(t) => t.workers() < workers,
+            None => true,
+        };
+        if respawn {
+            // the old team (if any) drops first: shutdown + join before
+            // the replacement spawns
+            self.team = Some(ThreadTeam::new(workers));
+        }
+        self.team.as_ref().expect("just spawned")
+    }
+
+    /// Worker threads currently spawned (0 until the first parallel
+    /// round).
+    pub fn workers(&self) -> usize {
+        self.team.as_ref().map_or(0, ThreadTeam::workers)
+    }
+
+    /// Shut down and join the team (a fresh one respawns on next use).
+    pub fn clear(&mut self) {
+        self.team = None;
+    }
+}
+
+impl Clone for TeamSlot {
+    fn clone(&self) -> TeamSlot {
+        TeamSlot::default()
+    }
+}
+
+impl std::fmt::Debug for TeamSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TeamSlot").field("workers", &self.workers()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_part_runs_exactly_once_per_round() {
+        let team = ThreadTeam::new(3);
+        for round in 1..=50usize {
+            let parts = 1 + round % 4;
+            let hits: Vec<AtomicUsize> = (0..parts).map(|_| AtomicUsize::new(0)).collect();
+            let panics = team.run(parts, &|p| {
+                hits[p].fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(panics, 0);
+            for (p, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} part {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn leader_runs_part_zero_inline() {
+        let team = ThreadTeam::new(2);
+        let me = std::thread::current().id();
+        let leader_part_thread = std::sync::Mutex::new(None);
+        team.run(3, &|p| {
+            if p == 0 {
+                *leader_part_thread.lock().unwrap() = Some(std::thread::current().id());
+            }
+        });
+        assert_eq!(*leader_part_thread.lock().unwrap(), Some(me));
+    }
+
+    #[test]
+    fn parts_beyond_team_capacity_are_clamped() {
+        let team = ThreadTeam::new(2);
+        let hits = AtomicUsize::new(0);
+        let panics = team.run(100, &|_p| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(panics, 0);
+        // leader + 2 workers
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn worker_panic_is_counted_and_team_survives() {
+        let team = ThreadTeam::new(2);
+        let panics = team.run(3, &|p| {
+            if p == 2 {
+                panic!("scripted part failure");
+            }
+        });
+        assert_eq!(panics, 1);
+        // the team is still serviceable after a panicked round
+        let hits = AtomicUsize::new(0);
+        assert_eq!(
+            team.run(3, &|_p| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }),
+            0
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn leader_panic_is_rethrown_after_the_barrier() {
+        let team = ThreadTeam::new(2);
+        let worker_done = AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            team.run(3, &|p| {
+                if p == 0 {
+                    panic!("leader part failure");
+                }
+                worker_done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(caught.is_err());
+        // the barrier held: both worker parts finished before the rethrow
+        assert_eq!(worker_done.load(Ordering::Relaxed), 2);
+        // and the team still works
+        assert_eq!(team.run(2, &|_p| {}), 0);
+    }
+
+    #[test]
+    fn slot_spawns_lazily_grows_and_clones_empty() {
+        let mut slot = TeamSlot::default();
+        assert_eq!(slot.workers(), 0);
+        slot.get(2);
+        assert_eq!(slot.workers(), 2);
+        slot.get(1); // never shrinks
+        assert_eq!(slot.workers(), 2);
+        slot.get(5);
+        assert_eq!(slot.workers(), 5);
+        let cloned = slot.clone();
+        assert_eq!(cloned.workers(), 0, "threads must not be cloned");
+        slot.clear();
+        assert_eq!(slot.workers(), 0);
+    }
+}

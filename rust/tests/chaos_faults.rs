@@ -109,8 +109,9 @@ fn chaos_unrecoverable_job_fails_alone_with_identity() {
     let mut c = Coordinator::new(cfg(2));
     c.set_fault_plan(FaultPlan::new().panic_always(4));
     let path = tmp("lone-failure");
-    let (out, skipped) = c.run_resumable(jobs(n), &path).unwrap();
-    assert_eq!(skipped, 0);
+    let (out, resume) = c.run_resumable(jobs(n), &path).unwrap();
+    assert_eq!(resume.skipped, 0);
+    assert!(resume.orphaned.is_empty());
     assert_eq!(out.results.len(), n - 1, "only the doomed job fails");
     assert_eq!(out.failures.len(), 1);
     assert_eq!(out.failures[0].id, 4);
@@ -161,8 +162,9 @@ fn chaos_faulted_batch_journal_resumes_to_full_completion() {
     // incarnation 2: fault gone — only job 5 re-runs, ids never duplicate
     {
         let c = Coordinator::new(cfg(2));
-        let (out, skipped) = c.run_resumable(jobs(n), &path).unwrap();
-        assert_eq!(skipped, n - 1);
+        let (out, resume) = c.run_resumable(jobs(n), &path).unwrap();
+        assert_eq!(resume.skipped, n - 1);
+        assert!(resume.orphaned.is_empty(), "the failure was terminal, not orphaned");
         assert_eq!(out.results.len(), 1);
         assert_eq!(out.results[0].id, 5);
     }

@@ -166,6 +166,7 @@ fn worker_panic_surfaces_as_coordinator_error() {
         reduction: "prunit".into(),
         seed: 1,
         prune_threads: 1,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::new(cfg);
     let bad = Job::new(
@@ -187,6 +188,7 @@ fn coordinator_survives_mixed_good_and_tiny_jobs() {
         reduction: "prunit+coral".into(),
         seed: 2,
         prune_threads: 2,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::new(cfg);
     let jobs: Vec<Job> = vec![

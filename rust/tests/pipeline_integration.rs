@@ -89,6 +89,7 @@ fn coordinator_batch_end_to_end() {
         reduction: "prunit+coral".into(),
         seed: 7,
         prune_threads: 1,
+        ..CoordinatorConfig::default()
     });
     let got = coord.run(jobs).unwrap();
     assert_eq!(got.len(), expected.len());

@@ -1,0 +1,198 @@
+//! Differential suite for the persistent thread-team check phase (ISSUE 8
+//! tentpole): at every thread count, the team-dispatched parallel PrunIT
+//! must produce the **bit-identical** residue, frontier-round count, and
+//! check count as both the scoped-thread reference backend
+//! (`ParallelBackend::Scoped`, the pre-team spawn-per-round path) and the
+//! sequential reference `prune::prunit` — and the adaptive ramp
+//! (`prune_threads = 0`) must be wall-time-only: same residues, same
+//! schedule, run after run.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::graph::{gen, Graph};
+use coral_prunit::homology::persistence_diagrams;
+use coral_prunit::prune::prunit;
+use coral_prunit::reduce::{
+    combined_with_ws, ParallelBackend, Reduction, ReductionWorkspace, PAR_FRONTIER_MIN,
+};
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Corpus mixing inline-sized graphs with graphs whose round-1 frontier
+/// clears `PAR_FRONTIER_MIN`, so the team dispatch path actually engages.
+fn corpus() -> Vec<(String, Graph)> {
+    let mut out: Vec<(String, Graph)> = Vec::new();
+    for (n, p, seed) in [
+        (120usize, 0.08f64, 2u64),
+        (800, 0.01, 3),
+        (3000, 5.0 / 3000.0, 5),
+    ] {
+        out.push((format!("ER({n},{p})"), gen::erdos_renyi(n, p, seed)));
+    }
+    out.push(("BA(3000,3)".into(), gen::barabasi_albert(3000, 3, 7)));
+    out.push(("star(50)".into(), gen::star(50)));
+    // cycle with a pendant tail: PD_1 must survive the collapse
+    let mut edges: Vec<(u32, u32)> = (0..6).map(|i| (i, (i + 1) % 6)).collect();
+    edges.push((0, 6));
+    edges.push((6, 7));
+    out.push(("cycle+tail".into(), Graph::from_edges(8, &edges)));
+    out
+}
+
+fn workspace(threads: usize, backend: ParallelBackend) -> ReductionWorkspace {
+    let mut ws = ReductionWorkspace::with_prune_threads(threads);
+    ws.set_parallel_backend(backend);
+    ws
+}
+
+fn kept(ws: &ReductionWorkspace, n: usize) -> Vec<u32> {
+    (0..n as u32).filter(|&v| ws.alive()[v as usize]).collect()
+}
+
+#[test]
+fn corpus_engages_the_team_dispatch_path() {
+    let big = corpus()
+        .into_iter()
+        .filter(|(_, g)| g.n() >= PAR_FRONTIER_MIN)
+        .count();
+    assert!(big >= 2, "corpus must keep several super-threshold graphs");
+}
+
+#[test]
+fn team_matches_scoped_and_sequential_residues() {
+    for (desc, g) in corpus() {
+        let f = Filtration::degree_superlevel(&g);
+        let reference = prunit(&g, &f).unwrap();
+        for threads in THREAD_SWEEP {
+            for backend in [ParallelBackend::Team, ParallelBackend::Scoped] {
+                let mut ws = workspace(threads, backend);
+                ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+                assert_eq!(
+                    kept(&ws, g.n()),
+                    reference.kept_old_ids,
+                    "{desc} threads={threads} {backend:?}: alive set"
+                );
+                assert_eq!(
+                    ws.frontier_rounds(),
+                    reference.rounds,
+                    "{desc} threads={threads} {backend:?}: rounds"
+                );
+                assert_eq!(
+                    ws.checks(),
+                    reference.checks,
+                    "{desc} threads={threads} {backend:?}: checks"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn team_fixed_point_matches_scoped_backend_exactly() {
+    // multi-round FixedPoint is where the persistent team pays off: many
+    // short dispatches per plan. Both backends must agree on everything
+    // observable, including how many rounds went parallel.
+    for (desc, g) in corpus().into_iter().filter(|(_, g)| g.n() >= 500) {
+        let f = Filtration::degree_superlevel(&g);
+        for threads in [2usize, 4, 8] {
+            let mut team_ws = workspace(threads, ParallelBackend::Team);
+            let team = combined_with_ws(&mut team_ws, &g, &f, 1, Reduction::FixedPoint).unwrap();
+            let mut scoped_ws = workspace(threads, ParallelBackend::Scoped);
+            let scoped =
+                combined_with_ws(&mut scoped_ws, &g, &f, 1, Reduction::FixedPoint).unwrap();
+            assert_eq!(team.graph, scoped.graph, "{desc} threads={threads}");
+            assert_eq!(team.kept_old_ids, scoped.kept_old_ids, "{desc} threads={threads}");
+            assert_eq!(
+                team.report.prunit_rounds, scoped.report.prunit_rounds,
+                "{desc} threads={threads}: frontier schedule"
+            );
+            assert_eq!(
+                team_ws.par_frontier_rounds(),
+                scoped_ws.par_frontier_rounds(),
+                "{desc} threads={threads}: parallel-round count"
+            );
+            // the dispatch path really engaged, and only the team backend
+            // spawned workers (at most threads-1: the leader takes part 0,
+            // and the chunk floor can cap fan-out below the request)
+            assert!(team_ws.par_frontier_rounds() > 0, "{desc} threads={threads}");
+            let w = team_ws.team_workers();
+            assert!(
+                (1..threads).contains(&w),
+                "{desc} threads={threads}: team_workers={w}"
+            );
+            assert_eq!(scoped_ws.team_workers(), 0, "{desc}: scoped never spawns a team");
+        }
+    }
+}
+
+#[test]
+fn team_preserves_diagrams_on_small_corpus() {
+    // Theorem 7 end-to-end through the team path (PD computation bounds
+    // this to the small corpus members)
+    for (desc, g) in corpus().into_iter().filter(|(_, g)| g.n() <= 150) {
+        let f = Filtration::degree_superlevel(&g);
+        let before = persistence_diagrams(&g, &f, 1);
+        for threads in THREAD_SWEEP {
+            let mut ws = workspace(threads, ParallelBackend::Team);
+            let red = combined_with_ws(&mut ws, &g, &f, 1, Reduction::Prunit).unwrap();
+            let after = persistence_diagrams(&red.graph, &red.filtration, 1);
+            for k in 0..=1 {
+                assert!(
+                    before[k].same_as(&after[k], 1e-9),
+                    "{desc} threads={threads} PD_{k}: {} vs {}",
+                    before[k],
+                    after[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_mode_is_deterministic_and_residue_invariant() {
+    // prune_threads = 0: the per-round thread count comes from a measured
+    // cost model, so it may differ run to run — everything the caller can
+    // observe besides wall time must not
+    let g = gen::erdos_renyi(3000, 5.0 / 3000.0, 5);
+    let f = Filtration::degree_superlevel(&g);
+    let mut seq = ReductionWorkspace::with_prune_threads(1);
+    let reference = combined_with_ws(&mut seq, &g, &f, 1, Reduction::FixedPoint).unwrap();
+    for trial in 0..3 {
+        let mut ws = ReductionWorkspace::with_prune_threads(0);
+        let red = combined_with_ws(&mut ws, &g, &f, 1, Reduction::FixedPoint).unwrap();
+        assert_eq!(red.graph, reference.graph, "trial={trial}");
+        assert_eq!(red.kept_old_ids, reference.kept_old_ids, "trial={trial}");
+        assert_eq!(
+            red.report.prunit_rounds, reference.report.prunit_rounds,
+            "trial={trial}: the frontier schedule is thread-invariant"
+        );
+        assert_eq!(ws.checks(), seq.checks(), "trial={trial}: check count");
+        // telemetry self-consistency: one log entry per frontier round,
+        // parallel rounds are exactly the entries that fanned out
+        assert_eq!(ws.round_thread_log().len(), ws.frontier_rounds(), "trial={trial}");
+        assert_eq!(
+            ws.par_frontier_rounds(),
+            ws.round_thread_log().iter().filter(|&&t| t > 1).count(),
+            "trial={trial}"
+        );
+    }
+}
+
+#[test]
+fn one_team_serves_the_whole_corpus() {
+    // a single workspace (one team) planning every corpus member must
+    // match fresh sequential runs each time — persistent workers carry no
+    // state between rounds or plans
+    let mut ws = workspace(4, ParallelBackend::Team);
+    for (desc, g) in corpus() {
+        let f = Filtration::degree_superlevel(&g);
+        let reference = prunit(&g, &f).unwrap();
+        ws.plan(&g, &f, 1, Reduction::Prunit).unwrap();
+        assert_eq!(kept(&ws, g.n()), reference.kept_old_ids, "{desc}");
+        assert_eq!(ws.frontier_rounds(), reference.rounds, "{desc}");
+    }
+    assert_eq!(
+        ws.team_workers(),
+        3,
+        "the team spawned once and survived the corpus"
+    );
+}
