@@ -47,7 +47,7 @@ fn main() {
             .cloned()
             .enumerate()
             .map(|(i, g)| {
-                Job::degree_superlevel(i as u64, g, JobSpec { max_k: 1, reduction })
+                Job::degree_superlevel(i as u64, g, JobSpec { max_k: 1, reduction, sharded: false })
             })
             .collect();
         let t = Timer::start();

@@ -4,8 +4,8 @@
 use std::collections::BTreeMap;
 
 use crate::complex::{CliqueComplex, Filtration};
-use crate::config::{Config, CoordinatorConfig};
-use crate::coordinator::{Coordinator, Job, JobSpec, ResumeReport};
+use crate::config::{Config, CoordinatorConfig, ServiceConfig};
+use crate::coordinator::{Coordinator, Job, JobSpec, ResumeReport, ServeOptions};
 use crate::datasets;
 use crate::error::{Error, Result};
 use crate::homology::{legacy, persistence_diagrams, Algorithm};
@@ -143,6 +143,30 @@ COMMANDS:
                                      re-running orphans (reported as
                                      `ORPHANED <id>` on stderr; exit code
                                      1 if any job still fails)
+  serve                        always-on reduction service: newline-
+                               delimited `key=value` requests on stdin
+                               (`id= dataset= instance= seed= k=
+                               reduction= priority=`), one response line
+                               per request on stdout; SIGTERM/SIGINT
+                               drains in-flight work and exits 0
+           [--config FILE]           reads [coordinator] + [service] keys
+           [--http ADDR]             /healthz + /metrics endpoint
+                                     (e.g. 127.0.0.1:9100; port 0 = auto)
+           [--journal PATH]          persistent journal; resuming skips
+                                     completed ids (`already-done`) and
+                                     compacts past journal_compact_bytes
+           [--workers W] [--k K] [--prune-threads T]
+           [--domination-kernel auto|merge|bitset]
+           [--job-deadline-secs S] [--max-retries N]
+           [--retry-backoff-ms MS]
+           [--max-pending N]         admission: hard queue cap
+           [--shed-pending N]        admission: priority ramp start
+           [--memory-budget-bytes B] admission: working-set budget
+           [--cpu-pressure-secs S]   admission: degrade threshold
+           [--cache-budget-bytes B]  result cache size (0 disables)
+           [--idle-evict-secs S]     scratch idle eviction window
+           [--stuck-job-secs S]      watchdog force-cancel limit
+           [--watchdog-poll-ms MS]   watchdog sweep period
   dense-check --dataset NAME   cross-check XLA dense PrunIT vs sparse path
            [--seed S]          (needs the `xla` build feature + artifacts)
   help                         this text
@@ -159,6 +183,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "reduce" => cmd_reduce(&args),
         "pd" => cmd_pd(&args),
         "batch" => cmd_batch(&args),
+        "serve" => cmd_serve(&args),
         "dense-check" => cmd_dense_check(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -362,6 +387,7 @@ fn cmd_batch(args: &Args) -> Result<i32> {
                 JobSpec {
                     max_k: cfg.max_k,
                     reduction,
+                    sharded: false,
                 },
             )
         })
@@ -426,6 +452,56 @@ fn cmd_batch(args: &Args) -> Result<i32> {
         );
         return Ok(1);
     }
+    Ok(0)
+}
+
+fn cmd_serve(args: &Args) -> Result<i32> {
+    let file_cfg = match args.flag("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let mut cfg = CoordinatorConfig::from_config(&file_cfg)?;
+    let mut svc = ServiceConfig::from_config(&file_cfg)?;
+    if let Some(w) = args.flag("workers") {
+        cfg.workers = w
+            .parse()
+            .map_err(|_| Error::Parse(format!("--workers: {w:?}")))?;
+    }
+    cfg.max_k = args.flag_usize("k", cfg.max_k)?;
+    cfg.prune_threads = args.flag_usize("prune-threads", cfg.prune_threads)?;
+    if let Some(kern) = args.flag("domination-kernel") {
+        cfg.domination_kernel = kern.to_string();
+    }
+    cfg.job_deadline_secs = args.flag_f64("job-deadline-secs", cfg.job_deadline_secs)?;
+    cfg.max_retries = args.flag_usize("max-retries", cfg.max_retries)?;
+    cfg.retry_backoff_ms = args.flag_u64("retry-backoff-ms", cfg.retry_backoff_ms)?;
+    if let Some(addr) = args.flag("http") {
+        svc.http_addr = addr.to_string();
+    }
+    svc.max_pending = args.flag_usize("max-pending", svc.max_pending)?;
+    svc.shed_pending = args.flag_usize("shed-pending", svc.shed_pending)?;
+    svc.memory_budget_bytes = args.flag_usize("memory-budget-bytes", svc.memory_budget_bytes)?;
+    svc.cpu_pressure_secs = args.flag_f64("cpu-pressure-secs", svc.cpu_pressure_secs)?;
+    svc.cache_budget_bytes = args.flag_usize("cache-budget-bytes", svc.cache_budget_bytes)?;
+    svc.idle_evict_secs = args.flag_f64("idle-evict-secs", svc.idle_evict_secs)?;
+    svc.stuck_job_secs = args.flag_f64("stuck-job-secs", svc.stuck_job_secs)?;
+    svc.watchdog_poll_ms = args.flag_u64("watchdog-poll-ms", svc.watchdog_poll_ms)?;
+    // validate up front so a bad config fails before any thread spawns
+    DominationKernel::parse(&cfg.domination_kernel)?;
+    parse_reduction(&cfg.reduction)?;
+    crate::coordinator::install_signal_handlers();
+    let opts = ServeOptions {
+        coordinator: cfg,
+        service: svc,
+        journal_path: args.flag("journal").map(std::path::PathBuf::from),
+        shutdown: None,
+        #[cfg(any(test, feature = "faults"))]
+        faults: None,
+    };
+    // Stdin (not StdinLock: the reader thread needs a Send handle);
+    // responses and the final drain summary go straight to stdout.
+    let input = std::io::BufReader::new(std::io::stdin());
+    crate::coordinator::serve::serve(input, opts, |line| println!("{line}"))?;
     Ok(0)
 }
 

@@ -165,14 +165,24 @@ pub struct CoordinatorConfig {
     /// `coordinator::worker::degraded_spec`) so the job gets cheaper
     /// before it is dropped. Permanent errors are never retried.
     pub max_retries: usize,
-    /// Base backoff between attempts in milliseconds, doubled per retry.
+    /// Base backoff between attempts in milliseconds, doubled per retry
+    /// with seeded equal-jitter (see
+    /// `coordinator::worker::jittered_backoff_ms`).
     pub retry_backoff_ms: u64,
+    /// Seed for the retry-backoff jitter, mixed with job id and attempt
+    /// (`coordinator.retry_jitter_seed`). A fixed seed keeps backoff
+    /// schedules reproducible across runs.
+    pub retry_jitter_seed: u64,
     /// Graph order at which a job counts as outsized and routes past the
     /// scratch pool to the dedicated high-tier worker
     /// (`--large-job-order`). `0` (the default) resolves to the first
     /// order in the pool's top tier
     /// (`coordinator::scratch::top_tier_min_order`).
     pub large_job_order: usize,
+    /// Journal size in bytes past which `Coordinator::run_resumable`
+    /// compacts the file (drops superseded per-job history) before
+    /// appending (`coordinator.journal_compact_bytes`; `0` disables).
+    pub journal_compact_bytes: u64,
 }
 
 impl CoordinatorConfig {
@@ -191,7 +201,9 @@ impl CoordinatorConfig {
             job_deadline_secs: cfg.get_f64("coordinator.job_deadline_secs", 0.0)?,
             max_retries: cfg.get_usize("coordinator.max_retries", 2)?,
             retry_backoff_ms: cfg.get_u64("coordinator.retry_backoff_ms", 25)?,
+            retry_jitter_seed: cfg.get_u64("coordinator.retry_jitter_seed", 42)?,
             large_job_order: cfg.get_usize("coordinator.large_job_order", 0)?,
+            journal_compact_bytes: cfg.get_u64("coordinator.journal_compact_bytes", 1 << 20)?,
         })
     }
 }
@@ -199,6 +211,68 @@ impl CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig::from_config(&Config::default()).unwrap()
+    }
+}
+
+/// Typed config for the always-on reduction service (`repro serve`),
+/// read from the `[service]` section. Admission-control limits mirror
+/// `coordinator::admission::AdmissionPolicy`; the rest parameterise the
+/// result cache, the watchdog, and the health endpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceConfig {
+    /// `host:port` for the hand-rolled HTTP health/metrics listener
+    /// (`service.http_addr`); empty disables the endpoint.
+    pub http_addr: String,
+    /// Content-addressed result-cache byte budget
+    /// (`service.cache_budget_bytes`; `0` disables caching).
+    pub cache_budget_bytes: usize,
+    /// Hard cap on queued-but-unfinished jobs (`service.max_pending`).
+    pub max_pending: usize,
+    /// Pending depth where priority-ramped shedding starts
+    /// (`service.shed_pending`).
+    pub shed_pending: usize,
+    /// Estimated-bytes budget for admitted in-flight jobs
+    /// (`service.memory_budget_bytes`).
+    pub memory_budget_bytes: usize,
+    /// Estimated CPU backlog (pending × observed mean job seconds) past
+    /// which new jobs are degraded to FixedPoint + sharded instead of
+    /// shed (`service.cpu_pressure_secs`; `0` disables degrading).
+    pub cpu_pressure_secs: f64,
+    /// Scratch arenas idle longer than this are evicted by the watchdog
+    /// (`service.idle_evict_secs`; `0` disables idle eviction).
+    pub idle_evict_secs: f64,
+    /// Watchdog poll cadence in milliseconds
+    /// (`service.watchdog_poll_ms`).
+    pub watchdog_poll_ms: u64,
+    /// No-deadline in-flight attempts older than this are cancelled by
+    /// the watchdog (`service.stuck_job_secs`; `0` disables).
+    pub stuck_job_secs: f64,
+    /// Grace added on top of per-attempt deadlines before the watchdog
+    /// force-cancels (`service.watchdog_grace_secs`) — the cooperative
+    /// deadline normally unwinds the attempt itself first.
+    pub watchdog_grace_secs: f64,
+}
+
+impl ServiceConfig {
+    pub fn from_config(cfg: &Config) -> Result<ServiceConfig> {
+        Ok(ServiceConfig {
+            http_addr: cfg.get_str("service.http_addr", ""),
+            cache_budget_bytes: cfg.get_usize("service.cache_budget_bytes", 64 << 20)?,
+            max_pending: cfg.get_usize("service.max_pending", 256)?,
+            shed_pending: cfg.get_usize("service.shed_pending", 128)?,
+            memory_budget_bytes: cfg.get_usize("service.memory_budget_bytes", 2 << 30)?,
+            cpu_pressure_secs: cfg.get_f64("service.cpu_pressure_secs", 30.0)?,
+            idle_evict_secs: cfg.get_f64("service.idle_evict_secs", 30.0)?,
+            watchdog_poll_ms: cfg.get_u64("service.watchdog_poll_ms", 50)?,
+            stuck_job_secs: cfg.get_f64("service.stuck_job_secs", 300.0)?,
+            watchdog_grace_secs: cfg.get_f64("service.watchdog_grace_secs", 2.0)?,
+        })
+    }
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig::from_config(&Config::default()).unwrap()
     }
 }
 
@@ -271,6 +345,40 @@ mod tests {
         let cfg = Config::parse("[coordinator]\nlarge_job_order = 5000\n").unwrap();
         let cc = CoordinatorConfig::from_config(&cfg).unwrap();
         assert_eq!(cc.large_job_order, 5000);
+    }
+
+    #[test]
+    fn service_and_jitter_keys_are_read_with_defaults() {
+        let dflt = ServiceConfig::default();
+        assert_eq!(dflt.http_addr, "");
+        assert_eq!(dflt.cache_budget_bytes, 64 << 20);
+        assert_eq!(dflt.max_pending, 256);
+        assert_eq!(dflt.shed_pending, 128);
+        assert_eq!(dflt.cpu_pressure_secs, 30.0);
+        assert_eq!(CoordinatorConfig::default().retry_jitter_seed, 42);
+        assert_eq!(CoordinatorConfig::default().journal_compact_bytes, 1 << 20);
+        let cfg = Config::parse(
+            "[coordinator]\nretry_jitter_seed = 7\njournal_compact_bytes = 4096\n\
+             [service]\nhttp_addr = \"127.0.0.1:9090\"\ncache_budget_bytes = 1024\n\
+             max_pending = 8\nshed_pending = 4\nmemory_budget_bytes = 1000000\n\
+             cpu_pressure_secs = 1.5\nidle_evict_secs = 0\nwatchdog_poll_ms = 10\n\
+             stuck_job_secs = 60\nwatchdog_grace_secs = 0.5\n",
+        )
+        .unwrap();
+        let cc = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(cc.retry_jitter_seed, 7);
+        assert_eq!(cc.journal_compact_bytes, 4096);
+        let sc = ServiceConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.http_addr, "127.0.0.1:9090");
+        assert_eq!(sc.cache_budget_bytes, 1024);
+        assert_eq!(sc.max_pending, 8);
+        assert_eq!(sc.shed_pending, 4);
+        assert_eq!(sc.memory_budget_bytes, 1_000_000);
+        assert_eq!(sc.cpu_pressure_secs, 1.5);
+        assert_eq!(sc.idle_evict_secs, 0.0);
+        assert_eq!(sc.watchdog_poll_ms, 10);
+        assert_eq!(sc.stuck_job_secs, 60.0);
+        assert_eq!(sc.watchdog_grace_secs, 0.5);
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Admission control and load shedding for the always-on service.
+//!
+//! `repro batch` is protected from overload only by its bounded job
+//! queue: the producer blocks. A daemon cannot block its ingest loop —
+//! sockets would time out, the journal would starve, and one oversized
+//! graph would wedge everything behind it. The admission controller
+//! instead decides *before* a job enters the queue, in order:
+//!
+//! 1. **Memory** — the job's estimated working set
+//!    ([`super::scratch::estimate_job_bytes`], tier-rounded against the
+//!    `ScratchPool` accounting) is charged against a budget shared by
+//!    every admitted-but-unfinished job. A job that cannot fit — alone
+//!    or alongside the in-flight set — is **shed** with
+//!    [`crate::error::Error::Overloaded`]: degrading the spec does not
+//!    shrink the arenas, so memory pressure is never degradable.
+//! 2. **Queue depth** — pending jobs at or past `max_pending` shed
+//!    unconditionally; from `shed_pending` up, a linear priority ramp
+//!    sheds lowest-priority work first (the required priority rises from
+//!    0 at `shed_pending` to [`MAX_PRIORITY`] at `max_pending`).
+//! 3. **CPU** — when the estimated backlog (pending × observed mean job
+//!    seconds) exceeds `cpu_pressure_secs`, the job is **admitted
+//!    degraded**: the service forces the cheapest exact spec
+//!    (`FixedPoint` reduction + sharded execution) instead of rejecting,
+//!    because CPU pressure clears on its own — memory pressure does not.
+//!
+//! Shedding is not failure: a shed job was never executed and the client
+//! is told to resubmit later. `Error::Overloaded` is deliberately not
+//! transient (see `Error::is_transient`) so the retry ladder never
+//! re-enters the queue the controller just protected.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::scratch::estimate_job_bytes;
+
+/// Priority ceiling of the shed ramp (priorities are `0..=MAX_PRIORITY`,
+/// higher = keep longer under load).
+pub const MAX_PRIORITY: u8 = 10;
+
+/// Default priority for job specs that don't state one: the middle of
+/// the ramp, so explicit low-priority bulk work sheds before it and
+/// explicit high-priority probes outlive it.
+pub const DEFAULT_PRIORITY: u8 = MAX_PRIORITY / 2;
+
+/// Tunable admission thresholds (the `service.*` config keys).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionPolicy {
+    /// Hard cap on admitted-but-unfinished jobs; at or past it everything
+    /// sheds regardless of priority.
+    pub max_pending: usize,
+    /// Pending count where the priority shed ramp starts.
+    pub shed_pending: usize,
+    /// Byte budget for the estimated working sets of all in-flight jobs.
+    pub memory_budget_bytes: usize,
+    /// Estimated backlog seconds past which new jobs are admitted only
+    /// with the degraded (FixedPoint + sharded) spec. `0` disables the
+    /// CPU check.
+    pub cpu_pressure_secs: f64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy {
+            max_pending: 256,
+            shed_pending: 128,
+            memory_budget_bytes: 2 << 30, // 2 GiB of estimated working set
+            cpu_pressure_secs: 30.0,
+        }
+    }
+}
+
+/// What the controller decided for one offered job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Run as requested. `charged_bytes` was charged to the memory
+    /// budget; pass it back to [`AdmissionController::release`] when the
+    /// job finishes (success *or* failure).
+    Admit { charged_bytes: usize },
+    /// Run, but with the spec forced to FixedPoint + sharded (CPU
+    /// pressure). Same release contract as `Admit`.
+    Degrade { charged_bytes: usize },
+    /// Rejected before execution; nothing was charged. The reason is the
+    /// `Error::Overloaded` payload.
+    Shed { reason: String },
+}
+
+/// Shared admission state: lock-free counters so the ingest thread never
+/// blocks on the workers.
+#[derive(Debug)]
+pub struct AdmissionController {
+    policy: AdmissionPolicy,
+    pending: AtomicUsize,
+    inflight_bytes: AtomicUsize,
+    /// mean-job-cost observation stream (microseconds / count)
+    observed_us: AtomicU64,
+    observed_jobs: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(policy: AdmissionPolicy) -> AdmissionController {
+        AdmissionController {
+            policy,
+            pending: AtomicUsize::new(0),
+            inflight_bytes: AtomicUsize::new(0),
+            observed_us: AtomicU64::new(0),
+            observed_jobs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> &AdmissionPolicy {
+        &self.policy
+    }
+
+    /// Jobs admitted and not yet released.
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    /// Estimated bytes charged by admitted-but-unfinished jobs.
+    pub fn inflight_bytes(&self) -> usize {
+        self.inflight_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Mean observed job seconds (0 until the first completion).
+    pub fn mean_job_secs(&self) -> f64 {
+        let jobs = self.observed_jobs.load(Ordering::Relaxed);
+        if jobs == 0 {
+            return 0.0;
+        }
+        self.observed_us.load(Ordering::Relaxed) as f64 / 1e6 / jobs as f64
+    }
+
+    /// Estimated seconds of queued work: pending × mean job cost.
+    pub fn backlog_secs(&self) -> f64 {
+        self.pending() as f64 * self.mean_job_secs()
+    }
+
+    /// Feed one completed job's wall seconds into the cost model.
+    pub fn observe_job_secs(&self, secs: f64) {
+        self.observed_us
+            .fetch_add((secs.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+        self.observed_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The priority a job must meet to be admitted at `pending` depth:
+    /// 0 below `shed_pending`, rising linearly to [`MAX_PRIORITY`] + 1
+    /// (shed everything) at `max_pending`.
+    fn required_priority(&self, pending: usize) -> u32 {
+        let p = &self.policy;
+        if pending < p.shed_pending {
+            return 0;
+        }
+        if pending >= p.max_pending {
+            return MAX_PRIORITY as u32 + 1;
+        }
+        let span = (p.max_pending - p.shed_pending).max(1);
+        // bites at 1 from shed_pending, tops out at MAX_PRIORITY just
+        // below max_pending — so max-priority work is only ever shed by
+        // the hard cap above
+        (1 + ((pending - p.shed_pending) * MAX_PRIORITY as usize) / span) as u32
+    }
+
+    /// Decide one offered job of `order` vertices / `edges` edges at
+    /// `priority`. On `Admit`/`Degrade` the memory charge is already
+    /// applied — the caller owes a matching [`release`](Self::release).
+    pub fn admit(&self, order: usize, edges: usize, priority: u8) -> AdmissionDecision {
+        let p = &self.policy;
+        let bytes = estimate_job_bytes(order, edges);
+        if bytes > p.memory_budget_bytes {
+            return AdmissionDecision::Shed {
+                reason: format!(
+                    "job working set ~{bytes}B exceeds the service memory budget \
+                     {}B even when run alone",
+                    p.memory_budget_bytes
+                ),
+            };
+        }
+        let pending = self.pending();
+        let inflight = self.inflight_bytes();
+        if inflight + bytes > p.memory_budget_bytes {
+            return AdmissionDecision::Shed {
+                reason: format!(
+                    "memory budget: {inflight}B in flight + ~{bytes}B would exceed {}B",
+                    p.memory_budget_bytes
+                ),
+            };
+        }
+        let required = self.required_priority(pending);
+        if (priority.min(MAX_PRIORITY) as u32) < required {
+            return AdmissionDecision::Shed {
+                reason: format!(
+                    "queue depth {pending}: priority {priority} below the shed \
+                     threshold {required}"
+                ),
+            };
+        }
+        self.pending.fetch_add(1, Ordering::Relaxed);
+        self.inflight_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if p.cpu_pressure_secs > 0.0 && self.backlog_secs() > p.cpu_pressure_secs {
+            AdmissionDecision::Degrade {
+                charged_bytes: bytes,
+            }
+        } else {
+            AdmissionDecision::Admit {
+                charged_bytes: bytes,
+            }
+        }
+    }
+
+    /// Release one admitted job's charge (call exactly once per
+    /// `Admit`/`Degrade`, whatever the job's outcome).
+    pub fn release(&self, charged_bytes: usize) {
+        self.pending.fetch_sub(1, Ordering::Relaxed);
+        self.inflight_bytes.fetch_sub(charged_bytes, Ordering::Relaxed);
+    }
+
+    /// One-line summary for the final service report.
+    pub fn summary(&self) -> String {
+        format!(
+            "admission: pending={} inflight_bytes={} backlog_secs={:.3} mean_job_secs={:.4}",
+            self.pending(),
+            self.inflight_bytes(),
+            self.backlog_secs(),
+            self.mean_job_secs()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_pending: usize, shed_pending: usize, mem: usize, cpu: f64) -> AdmissionPolicy {
+        AdmissionPolicy {
+            max_pending,
+            shed_pending,
+            memory_budget_bytes: mem,
+            cpu_pressure_secs: cpu,
+        }
+    }
+
+    fn charged(d: &AdmissionDecision) -> usize {
+        match d {
+            AdmissionDecision::Admit { charged_bytes }
+            | AdmissionDecision::Degrade { charged_bytes } => *charged_bytes,
+            AdmissionDecision::Shed { .. } => panic!("expected an admit, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn admits_when_idle_and_charges_the_budget() {
+        let c = AdmissionController::new(AdmissionPolicy::default());
+        let d = c.admit(100, 200, DEFAULT_PRIORITY);
+        let bytes = charged(&d);
+        assert_eq!(bytes, estimate_job_bytes(100, 200));
+        assert_eq!(c.pending(), 1);
+        assert_eq!(c.inflight_bytes(), bytes);
+        c.release(bytes);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.inflight_bytes(), 0);
+    }
+
+    #[test]
+    fn oversized_job_is_shed_even_when_idle() {
+        let c = AdmissionController::new(policy(16, 8, 1 << 16, 0.0));
+        match c.admit(5_000_000, 0, MAX_PRIORITY) {
+            AdmissionDecision::Shed { reason } => {
+                assert!(reason.contains("even when run alone"), "{reason}")
+            }
+            other => panic!("oversized job must shed, got {other:?}"),
+        }
+        assert_eq!(c.pending(), 0, "a shed job charges nothing");
+    }
+
+    #[test]
+    fn memory_pressure_sheds_rather_than_degrades() {
+        // budget fits ~2 tier-0 jobs
+        let c = AdmissionController::new(policy(64, 32, estimate_job_bytes(10, 0) * 2, 0.0));
+        let a = c.admit(10, 0, MAX_PRIORITY);
+        let b = c.admit(10, 0, MAX_PRIORITY);
+        charged(&a);
+        charged(&b);
+        match c.admit(10, 0, MAX_PRIORITY) {
+            AdmissionDecision::Shed { reason } => assert!(reason.contains("memory budget")),
+            other => panic!("memory-bound job must shed, not {other:?}"),
+        }
+        // releasing one readmits
+        c.release(charged(&a));
+        charged(&c.admit(10, 0, 0));
+    }
+
+    #[test]
+    fn queue_ramp_sheds_lowest_priority_first() {
+        let c = AdmissionController::new(policy(8, 4, usize::MAX, 0.0));
+        // fill to the ramp start
+        for _ in 0..4 {
+            charged(&c.admit(10, 0, 0));
+        }
+        // at pending=4 the ramp bites: priority 0 sheds, high priority passes
+        assert!(matches!(
+            c.admit(10, 0, 0),
+            AdmissionDecision::Shed { .. }
+        ));
+        charged(&c.admit(10, 0, MAX_PRIORITY));
+        // required priority grows with depth until the hard cap sheds all
+        while c.pending() < 8 {
+            charged(&c.admit(10, 0, MAX_PRIORITY));
+        }
+        assert!(matches!(
+            c.admit(10, 0, MAX_PRIORITY),
+            AdmissionDecision::Shed { .. }
+        ));
+    }
+
+    #[test]
+    fn required_priority_ramp_is_monotone() {
+        let c = AdmissionController::new(policy(100, 50, usize::MAX, 0.0));
+        let mut last = 0;
+        for pending in 0..110 {
+            let req = c.required_priority(pending);
+            assert!(req >= last, "ramp must be monotone");
+            last = req;
+        }
+        assert_eq!(c.required_priority(0), 0);
+        assert_eq!(c.required_priority(49), 0);
+        assert!(c.required_priority(50) >= 1);
+        assert_eq!(c.required_priority(100), MAX_PRIORITY as u32 + 1);
+    }
+
+    #[test]
+    fn cpu_pressure_degrades_instead_of_shedding() {
+        let c = AdmissionController::new(policy(1000, 900, usize::MAX, 1.0));
+        // teach the cost model that jobs are slow: mean 1 s
+        c.observe_job_secs(1.0);
+        charged(&c.admit(10, 0, DEFAULT_PRIORITY)); // backlog now 1 s — at the limit
+        let d = c.admit(10, 0, DEFAULT_PRIORITY); // backlog 2 s > 1 s
+        assert!(
+            matches!(d, AdmissionDecision::Degrade { .. }),
+            "CPU pressure must degrade, got {d:?}"
+        );
+        assert_eq!(c.pending(), 2, "degraded jobs are admitted");
+    }
+
+    #[test]
+    fn backlog_estimate_tracks_observations() {
+        let c = AdmissionController::new(AdmissionPolicy::default());
+        assert_eq!(c.backlog_secs(), 0.0);
+        c.observe_job_secs(0.5);
+        c.observe_job_secs(1.5);
+        assert!((c.mean_job_secs() - 1.0).abs() < 1e-6);
+        charged(&c.admit(10, 0, DEFAULT_PRIORITY));
+        assert!((c.backlog_secs() - 1.0).abs() < 1e-6);
+        assert!(c.summary().contains("pending=1"), "{}", c.summary());
+    }
+}

@@ -1,0 +1,375 @@
+//! Content-addressed result cache: canonical graph hash → persistence
+//! diagrams.
+//!
+//! The service workload (millions of users resubmitting overlapping
+//! ego-nets and snapshots of slowly-mutating networks) repeats inputs
+//! constantly. A job's PDs are a pure function of `(graph, filtration,
+//! reduction, max_k)` — thread counts, kernels, and scheduling are all
+//! proven bit-invariant by the differential suites — so the cache key is
+//! exactly that tuple, hashed canonically:
+//!
+//! * graph: order + the sorted normalized `u < v` edge list (the CSR is
+//!   already simple, sorted, and deduplicated, so iteration order is
+//!   canonical by construction);
+//! * filtration: direction tag + the raw `f64` bit patterns per vertex;
+//! * spec: reduction name + `max_k`.
+//!
+//! Two independent 64-bit FNV-1a streams form a 128-bit key, making an
+//! accidental collision across a service lifetime implausible (~2⁻⁶⁴ at
+//! a billion distinct entries). Entries are LRU-evicted against a byte
+//! budget estimated from diagram payload sizes; hit / miss / eviction /
+//! insertion counters are exported on the `/metrics` endpoint.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::complex::{Direction, Filtration};
+use crate::graph::Graph;
+use crate::homology::Diagram;
+use crate::reduce::{Reduction, ReductionReport};
+
+/// 128-bit content address of one job's input tuple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey(pub u128);
+
+/// One 64-bit FNV-1a stream over `u64` items.
+#[derive(Clone, Copy)]
+struct Fnv(u64);
+
+impl Fnv {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+
+    fn new(offset: u64) -> Fnv {
+        Fnv(offset)
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        for byte in x.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(Fnv::PRIME);
+        }
+    }
+}
+
+/// Canonical content hash of one job input. Deterministic across runs,
+/// processes, and machines (no pointer or HashMap iteration order leaks
+/// in — everything hashed is already canonically ordered).
+pub fn job_key(g: &Graph, f: &Filtration, reduction: Reduction, max_k: usize) -> CacheKey {
+    // two independent streams: different offsets AND a per-item mix on
+    // the second, so the halves never collide in tandem
+    let mut a = Fnv::new(0xCBF2_9CE4_8422_2325);
+    let mut b = Fnv::new(0x6C62_272E_07BB_0142);
+    let mut put = |x: u64| {
+        a.write_u64(x);
+        b.write_u64(x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17));
+    };
+    put(g.n() as u64);
+    put(g.m() as u64);
+    for (u, v) in g.edges() {
+        put(((u as u64) << 32) | v as u64);
+    }
+    put(match f.direction() {
+        Direction::Sublevel => 1,
+        Direction::Superlevel => 2,
+    });
+    for &x in f.values() {
+        put(x.to_bits());
+    }
+    for byte in reduction.name().bytes() {
+        put(byte as u64);
+    }
+    put(max_k as u64);
+    CacheKey(((a.0 as u128) << 64) | b.0 as u128)
+}
+
+/// What the cache stores per key: the diagrams plus the reduction report
+/// of the cold run, so a hit can synthesize a full [`super::JobResult`].
+#[derive(Clone, Debug)]
+pub struct CachedResult {
+    pub diagrams: Vec<Diagram>,
+    pub reduction: ReductionReport,
+}
+
+impl CachedResult {
+    /// Estimated heap footprint, charged against the byte budget. The
+    /// diagram payload dominates; report vectors are charged per element.
+    pub fn byte_size(&self) -> usize {
+        let diagrams: usize = self
+            .diagrams
+            .iter()
+            .map(|d| d.all_pairs().len() * 16 + 48)
+            .sum();
+        diagrams
+            + self.reduction.rounds.len() * 64
+            + self.reduction.shard_sizes.len() * 8
+            + 256 // struct + map-entry overhead
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    result: CachedResult,
+    bytes: usize,
+    stamp: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<u128, Entry>,
+    /// recency index: stamp → key, oldest first
+    recency: BTreeMap<u64, u128>,
+    clock: u64,
+    bytes: usize,
+}
+
+/// Point-in-time cache statistics (exported on `/metrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+}
+
+/// Bounded, thread-safe, content-addressed LRU result cache.
+#[derive(Debug)]
+pub struct ResultCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    insertions: AtomicU64,
+}
+
+impl ResultCache {
+    /// A cache holding at most `budget_bytes` of estimated payload
+    /// (clamped to ≥ 1 so a zero budget degenerates to "cache nothing"
+    /// rather than dividing the service's logic).
+    pub fn new(budget_bytes: usize) -> ResultCache {
+        ResultCache {
+            budget: budget_bytes.max(1),
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+        }
+    }
+
+    /// Lock the interior, recovering from poisoning (the guarded maps
+    /// stay structurally valid through a panic elsewhere — same policy as
+    /// the scratch pool).
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Look a key up, refreshing its recency. Returns a clone — the
+    /// cache stays the owner so eviction never invalidates a caller.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedResult> {
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let Some(entry) = inner.map.get_mut(&key.0) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        let old = entry.stamp;
+        entry.stamp = clock;
+        let result = entry.result.clone();
+        inner.recency.remove(&old);
+        inner.recency.insert(clock, key.0);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(result)
+    }
+
+    /// Insert (or refresh) a result, evicting least-recently-used entries
+    /// until the byte budget holds. A result larger than the whole budget
+    /// is not cached at all.
+    pub fn insert(&self, key: CacheKey, result: CachedResult) {
+        let bytes = result.byte_size();
+        if bytes > self.budget {
+            return;
+        }
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        if let Some(old) = inner.map.remove(&key.0) {
+            inner.recency.remove(&old.stamp);
+            inner.bytes -= old.bytes;
+        }
+        inner.map.insert(
+            key.0,
+            Entry {
+                result,
+                bytes,
+                stamp,
+            },
+        );
+        inner.recency.insert(stamp, key.0);
+        inner.bytes += bytes;
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        while inner.bytes > self.budget {
+            let Some((&oldest, &victim)) = inner.recency.iter().next() else {
+                break;
+            };
+            inner.recency.remove(&oldest);
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.bytes -= e.bytes;
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.lock();
+        CacheStats {
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-line summary for the service's final report.
+    pub fn summary(&self) -> String {
+        let s = self.stats();
+        format!(
+            "result_cache: entries={} bytes={} hits={} misses={} evictions={} insertions={}",
+            s.entries, s.bytes, s.hits, s.misses, s.evictions, s.insertions
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn sample(id_rounds: usize) -> CachedResult {
+        CachedResult {
+            diagrams: vec![Diagram::new(0, vec![(0.0, 1.0); 8])],
+            reduction: ReductionReport {
+                vertices_before: 10,
+                edges_before: 10,
+                vertices_after: 5,
+                edges_after: 5,
+                reduce_secs: 0.0,
+                prunit_secs: 0.0,
+                core_secs: 0.0,
+                compact_secs: 0.0,
+                rounds: vec![],
+                prunit_rounds: id_rounds,
+                which: Reduction::Combined,
+                shard_sizes: vec![],
+            },
+        }
+    }
+
+    #[test]
+    fn key_is_deterministic_and_content_addressed() {
+        let g1 = gen::barabasi_albert(60, 2, 7);
+        let g2 = gen::barabasi_albert(60, 2, 7); // same recipe → same graph
+        let f1 = Filtration::degree_superlevel(&g1);
+        let f2 = Filtration::degree_superlevel(&g2);
+        let k1 = job_key(&g1, &f1, Reduction::Combined, 1);
+        let k2 = job_key(&g2, &f2, Reduction::Combined, 1);
+        assert_eq!(k1, k2, "identical content must share one address");
+        // every component of the tuple perturbs the key
+        assert_ne!(k1, job_key(&g1, &f1, Reduction::FixedPoint, 1));
+        assert_ne!(k1, job_key(&g1, &f1, Reduction::Combined, 2));
+        assert_ne!(
+            k1,
+            job_key(&g1, &Filtration::degree(&g1), Reduction::Combined, 1),
+            "direction flip must change the key"
+        );
+        let other = gen::barabasi_albert(60, 2, 8);
+        assert_ne!(
+            k1,
+            job_key(&other, &Filtration::degree_superlevel(&other), Reduction::Combined, 1)
+        );
+    }
+
+    #[test]
+    fn get_insert_round_trip_and_counters() {
+        let cache = ResultCache::new(1 << 20);
+        let g = gen::cycle(12);
+        let f = Filtration::degree_superlevel(&g);
+        let key = job_key(&g, &f, Reduction::Combined, 1);
+        assert!(cache.get(&key).is_none());
+        cache.insert(key, sample(1));
+        let hit = cache.get(&key).expect("inserted entry must hit");
+        assert_eq!(hit.reduction.prunit_rounds, 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+        assert_eq!(s.entries, 1);
+        assert!(s.bytes > 0);
+        assert!(cache.summary().contains("hits=1"));
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget_and_order() {
+        let unit = sample(0).byte_size();
+        // room for exactly 3 entries
+        let cache = ResultCache::new(unit * 3 + unit / 2);
+        let keys: Vec<CacheKey> = (0..5u64)
+            .map(|i| {
+                let g = gen::cycle(10 + i as usize);
+                let f = Filtration::degree_superlevel(&g);
+                job_key(&g, &f, Reduction::Combined, 1)
+            })
+            .collect();
+        for (i, k) in keys.iter().enumerate() {
+            cache.insert(*k, sample(i));
+        }
+        let s = cache.stats();
+        assert!(s.bytes <= cache.budget(), "budget must hold after inserts");
+        assert_eq!(s.entries, 3);
+        assert_eq!(s.evictions, 2);
+        // the two oldest are gone, the three newest survive
+        assert!(cache.get(&keys[0]).is_none());
+        assert!(cache.get(&keys[1]).is_none());
+        for k in &keys[2..] {
+            assert!(cache.get(k).is_some());
+        }
+    }
+
+    #[test]
+    fn touching_an_entry_saves_it_from_eviction() {
+        let unit = sample(0).byte_size();
+        let cache = ResultCache::new(unit * 2 + unit / 2);
+        let key = |i: usize| {
+            let g = gen::cycle(10 + i);
+            let f = Filtration::degree_superlevel(&g);
+            job_key(&g, &f, Reduction::Combined, 1)
+        };
+        cache.insert(key(0), sample(0));
+        cache.insert(key(1), sample(1));
+        assert!(cache.get(&key(0)).is_some()); // refresh 0 → 1 is now LRU
+        cache.insert(key(2), sample(2));
+        assert!(cache.get(&key(0)).is_some(), "refreshed entry survives");
+        assert!(cache.get(&key(1)).is_none(), "stale entry evicted");
+    }
+
+    #[test]
+    fn oversized_entry_is_not_cached() {
+        let cache = ResultCache::new(8);
+        let g = gen::cycle(6);
+        let f = Filtration::degree_superlevel(&g);
+        let key = job_key(&g, &f, Reduction::Combined, 1);
+        cache.insert(key, sample(0));
+        assert!(cache.get(&key).is_none());
+        assert_eq!(cache.stats().insertions, 0);
+    }
+}

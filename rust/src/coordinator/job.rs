@@ -15,6 +15,12 @@ pub struct JobSpec {
     pub max_k: usize,
     /// Which reduction to apply first.
     pub reduction: Reduction,
+    /// Force component-sharded execution from the first attempt: peak
+    /// complex size is bounded by the largest component instead of the
+    /// whole graph. Diagrams are unchanged (sharding is an execution
+    /// detail); the service's admission controller sets this when it
+    /// degrades a job under CPU pressure.
+    pub sharded: bool,
 }
 
 impl Default for JobSpec {
@@ -22,6 +28,7 @@ impl Default for JobSpec {
         JobSpec {
             max_k: 1,
             reduction: Reduction::Combined,
+            sharded: false,
         }
     }
 }

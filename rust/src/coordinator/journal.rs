@@ -17,7 +17,7 @@
 //! appends to the same file, so the full history of a job (including
 //! earlier failed incarnations) survives.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs::{File, OpenOptions};
 use std::io::{BufRead, BufReader, Write};
 use std::path::{Path, PathBuf};
@@ -93,6 +93,88 @@ impl Journal {
             f.attempts,
             json_escape(&f.error.to_string()),
         ))
+    }
+
+    /// Record a job satisfied from the result cache (no execution). The
+    /// record replays as `completed`, so a resume never recomputes it.
+    pub fn record_cached(&mut self, id: u64) -> Result<()> {
+        self.write_line(&format!(
+            "{{\"event\":\"completed\",\"id\":{id},\"attempts\":0,\"outcome\":\"cached\",\
+             \"reduction\":\"\",\"sharded\":false,\"total_secs\":0.000000}}"
+        ))
+    }
+
+    /// Compact the journal at `path` if it has grown past
+    /// `threshold_bytes`: rewrite it keeping, per job id, only the lines
+    /// that determine replay state — the last `completed` record for
+    /// completed ids, the last `failed` record for ids still failed, and
+    /// one `submitted` record for orphans — then atomically rename over
+    /// the original. Every kept line is verbatim, so nothing the replay
+    /// reads changes; history of superseded attempts (and any torn tail)
+    /// is dropped. Returns whether compaction ran. A missing file is a
+    /// no-op, not an error.
+    pub fn compact_if_larger(path: impl AsRef<Path>, threshold_bytes: u64) -> Result<bool> {
+        let path = path.as_ref();
+        let size = match std::fs::metadata(path) {
+            Ok(m) => m.len(),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+            Err(e) => return Err(Error::Io(format!("journal {}: {e}", path.display()))),
+        };
+        if size <= threshold_bytes {
+            return Ok(false);
+        }
+        let file = File::open(path)
+            .map_err(|e| Error::Io(format!("journal {}: {e}", path.display())))?;
+        let mut submitted: BTreeMap<u64, String> = BTreeMap::new();
+        let mut completed: BTreeMap<u64, String> = BTreeMap::new();
+        let mut failed: BTreeMap<u64, String> = BTreeMap::new();
+        for line in BufReader::new(file).lines() {
+            let line = line.map_err(|e| Error::Io(format!("journal {}: {e}", path.display())))?;
+            let (Some(event), Some(id)) = (
+                json_str_field(&line, "event"),
+                json_u64_field(&line, "id"),
+            ) else {
+                continue; // malformed (torn tail): dropped by compaction
+            };
+            match event {
+                "submitted" => {
+                    submitted.entry(id).or_insert(line);
+                }
+                "completed" => {
+                    completed.insert(id, line);
+                    failed.remove(&id);
+                }
+                "failed" => {
+                    if !completed.contains_key(&id) {
+                        failed.insert(id, line);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let tmp = PathBuf::from(format!("{}.compact-tmp", path.display()));
+        {
+            let mut out = File::create(&tmp)
+                .map_err(|e| Error::Io(format!("journal {}: {e}", tmp.display())))?;
+            let io = |e: std::io::Error| Error::Io(format!("journal {}: {e}", tmp.display()));
+            // submitted lines first (only for ids without a terminal
+            // record — the orphans), then terminal records
+            for (id, line) in &submitted {
+                if !completed.contains_key(id) && !failed.contains_key(id) {
+                    writeln!(out, "{line}").map_err(io)?;
+                }
+            }
+            for line in completed.values() {
+                writeln!(out, "{line}").map_err(io)?;
+            }
+            for line in failed.values() {
+                writeln!(out, "{line}").map_err(io)?;
+            }
+            out.flush().map_err(io)?;
+        }
+        std::fs::rename(&tmp, path)
+            .map_err(|e| Error::Io(format!("journal {}: {e}", path.display())))?;
+        Ok(true)
     }
 }
 
@@ -343,5 +425,93 @@ mod tests {
         assert!(replay.is_done(2));
         assert_eq!(replay.orphaned(), BTreeSet::from([3]));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cached_record_replays_as_completed() {
+        let path = tmp_path("cached");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            let job = Job::degree_superlevel(9, gen::cycle(6), JobSpec::default());
+            j.record_submitted(&job).unwrap();
+            j.record_cached(9).unwrap();
+        }
+        let replay = JournalReplay::load(&path).unwrap();
+        assert!(replay.is_done(9));
+        assert!(replay.orphaned().is_empty());
+        assert_eq!(replay.skipped_lines, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_preserves_replay_state_and_shrinks() {
+        let path = tmp_path("compact");
+        {
+            let mut j = Journal::open(&path).unwrap();
+            // a long history: id 1 fails twice then completes, id 2
+            // completes, id 3 fails and stays failed, id 4 is orphaned
+            for id in [1u64, 2, 3, 4] {
+                let job = Job::degree_superlevel(id, gen::cycle(6), JobSpec::default());
+                j.record_submitted(&job).unwrap();
+            }
+            for _ in 0..2 {
+                j.record_failed(&JobFailure {
+                    id: 1,
+                    attempts: 3,
+                    error: Error::Cancelled,
+                })
+                .unwrap();
+            }
+            j.record_completed(&sample_result(1, JobOutcome::Success))
+                .unwrap();
+            j.record_completed(&sample_result(2, JobOutcome::Success))
+                .unwrap();
+            j.record_failed(&JobFailure {
+                id: 3,
+                attempts: 2,
+                error: Error::Cancelled,
+            })
+            .unwrap();
+        }
+        // plus a torn tail, which compaction must simply drop
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"event\":\"fail").unwrap();
+        }
+        let before_replay = JournalReplay::load(&path).unwrap();
+        let before_size = std::fs::metadata(&path).unwrap().len();
+
+        // under the threshold: untouched
+        assert!(!Journal::compact_if_larger(&path, before_size).unwrap());
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), before_size);
+        // over the threshold: rewritten smaller
+        assert!(Journal::compact_if_larger(&path, 1).unwrap());
+        let after_size = std::fs::metadata(&path).unwrap().len();
+        assert!(after_size < before_size, "{after_size} !< {before_size}");
+
+        let after = JournalReplay::load(&path).unwrap();
+        assert_eq!(after.completed, before_replay.completed);
+        assert_eq!(after.failed, before_replay.failed);
+        assert_eq!(after.orphaned(), BTreeSet::from([4]));
+        assert_eq!(after.skipped_lines, 0, "the torn tail is gone");
+        // exactly one line per surviving id: orphan 4, completed 1+2, failed 3
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4, "{text}");
+        // a compacted journal still appends normally
+        {
+            let mut j = Journal::open(&path).unwrap();
+            j.record_completed(&sample_result(4, JobOutcome::Success))
+                .unwrap();
+        }
+        let final_replay = JournalReplay::load(&path).unwrap();
+        assert!(final_replay.orphaned().is_empty());
+        assert_eq!(final_replay.completed.len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_of_missing_journal_is_a_noop() {
+        assert!(!Journal::compact_if_larger("/nonexistent/journal.jsonl", 1).unwrap());
     }
 }

@@ -33,6 +33,15 @@ pub struct Metrics {
     /// jobs routed past the pool queue to the dedicated high-tier worker
     /// (order at or above the scheduler's `large_job_order` cutoff)
     pub jobs_routed_large: AtomicU64,
+    /// jobs rejected by the service's admission controller with
+    /// `Error::Overloaded` (load shedding; never counted as failed)
+    pub jobs_shed: AtomicU64,
+    /// jobs admitted only after the controller downgraded their spec to
+    /// the cheapest shape (FixedPoint + sharded) under CPU pressure
+    pub jobs_admission_degraded: AtomicU64,
+    /// in-flight attempts cancelled by the service watchdog after
+    /// overstaying their deadline
+    pub watchdog_cancels: AtomicU64,
 }
 
 impl Metrics {
@@ -102,12 +111,28 @@ impl Metrics {
         self.jobs_routed_large.load(Ordering::Relaxed)
     }
 
+    /// Jobs shed by admission control.
+    pub fn jobs_shed(&self) -> u64 {
+        self.jobs_shed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs degraded at admission (CPU-pressure downgrade).
+    pub fn jobs_admission_degraded(&self) -> u64 {
+        self.jobs_admission_degraded.load(Ordering::Relaxed)
+    }
+
+    /// Stuck attempts cancelled by the watchdog.
+    pub fn watchdog_cancels(&self) -> u64 {
+        self.watchdog_cancels.load(Ordering::Relaxed)
+    }
+
     /// Human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
             "jobs={} failed={} reduce={:.3}s ph={:.3}s vertex_reduction={:.1}% \
              lock_recoveries={} worker_panics={} retries={} deadline_misses={} \
-             degraded={} job_panics={} routed_large={}",
+             degraded={} job_panics={} routed_large={} shed={} \
+             admission_degraded={} watchdog_cancels={}",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.reduce_us.load(Ordering::Relaxed) as f64 / 1e6,
@@ -120,6 +145,9 @@ impl Metrics {
             self.jobs_degraded(),
             self.jobs_panicked(),
             self.routed_large(),
+            self.jobs_shed(),
+            self.jobs_admission_degraded(),
+            self.watchdog_cancels(),
         )
     }
 }
@@ -184,6 +212,22 @@ mod tests {
         assert!(s.contains("deadline_misses=2"), "{s}");
         assert!(s.contains("degraded=3"), "{s}");
         assert!(s.contains("job_panics=1"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_service_counters() {
+        let m = Metrics::default();
+        assert!(m.summary().contains("shed=0"), "{}", m.summary());
+        m.jobs_shed.fetch_add(7, Ordering::Relaxed);
+        m.jobs_admission_degraded.fetch_add(2, Ordering::Relaxed);
+        m.watchdog_cancels.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.jobs_shed(), 7);
+        assert_eq!(m.jobs_admission_degraded(), 2);
+        assert_eq!(m.watchdog_cancels(), 1);
+        let s = m.summary();
+        assert!(s.contains("shed=7"), "{s}");
+        assert!(s.contains("admission_degraded=2"), "{s}");
+        assert!(s.contains("watchdog_cancels=1"), "{s}");
     }
 
     #[test]

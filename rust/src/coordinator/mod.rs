@@ -3,7 +3,7 @@
 //! diagrams for *each vertex's* ego network in a 100k+ graph") is exactly
 //! a large batch of small independent PH jobs.
 //!
-//! Five layers, five modules:
+//! The core layers:
 //!
 //! * [`scheduler`] — queueing and result streaming: a bounded
 //!   `sync_channel` job queue provides backpressure against the producer,
@@ -26,8 +26,16 @@
 //! * [`faults`] (tests / `--features faults` only) — deterministic fault
 //!   injection scripts driving the chaos suite.
 //!
+//! On top of the batch core sits the always-on service (`repro serve`):
+//! [`serve`] wires [`admission`] (load shedding + degrade-under-pressure),
+//! [`cache`] (content-addressed result reuse), the in-flight watchdog
+//! ([`worker::InFlightRegistry`]), and a std-only `/healthz` + `/metrics`
+//! endpoint around one long-lived scheduler invocation.
+//!
 //! Metrics are atomic counters suitable for live scraping.
 
+pub mod admission;
+pub mod cache;
 #[cfg(any(test, feature = "faults"))]
 pub mod faults;
 pub mod job;
@@ -35,8 +43,11 @@ pub mod journal;
 pub mod metrics;
 pub mod scheduler;
 pub mod scratch;
+pub mod serve;
 pub mod worker;
 
+pub use admission::{AdmissionController, AdmissionDecision, AdmissionPolicy};
+pub use cache::{job_key, CacheKey, CacheStats, CachedResult, ResultCache};
 #[cfg(any(test, feature = "faults"))]
 pub use faults::FaultPlan;
 pub use job::{Job, JobFailure, JobOutcome, JobResult, JobSpec};
@@ -44,4 +55,5 @@ pub use journal::{Journal, JournalReplay};
 pub use metrics::Metrics;
 pub use scheduler::{BatchOutcome, Coordinator, ResumeReport};
 pub use scratch::{top_tier_min_order, PooledScratch, ScratchPool};
-pub use worker::{degraded_spec, escalate, WorkerScratch};
+pub use serve::{diagram_digest, install_signal_handlers, ServeOptions, ServeReport};
+pub use worker::{degraded_spec, escalate, InFlightRegistry, WorkerScratch};

@@ -19,7 +19,10 @@ use super::job::{Job, JobFailure, JobResult};
 use super::journal::{Journal, JournalReplay};
 use super::metrics::Metrics;
 use super::scratch::{top_tier_min_order, ScratchPool};
-use super::worker::{execute_job, run_job_with_retries, AttemptPolicy, ScratchSource, WorkerScratch};
+use super::worker::{
+    execute_job, run_job_with_retries, AttemptPolicy, InFlightRegistry, ScratchSource,
+    WorkerScratch,
+};
 
 /// Everything a fault-tolerant batch produced: successful results
 /// (sorted by id) plus the identity, attempt count, and final error of
@@ -70,6 +73,9 @@ pub struct Coordinator {
     config: CoordinatorConfig,
     metrics: Arc<Metrics>,
     scratch: Arc<ScratchPool>,
+    /// live attempt registry, installed by the serve watchdog so it can
+    /// cancel attempts that overstay their deadline
+    inflight: Option<Arc<InFlightRegistry>>,
     /// scripted faults injected into every batch (chaos tests only)
     #[cfg(any(test, feature = "faults"))]
     faults: Option<Arc<FaultPlan>>,
@@ -90,6 +96,7 @@ impl Coordinator {
             config,
             metrics,
             scratch,
+            inflight: None,
             #[cfg(any(test, feature = "faults"))]
             faults: None,
         }
@@ -112,6 +119,14 @@ impl Coordinator {
     #[cfg(any(test, feature = "faults"))]
     pub fn set_fault_plan(&mut self, plan: FaultPlan) {
         self.faults = Some(Arc::new(plan));
+    }
+
+    /// Install a live attempt registry: every attempt of every
+    /// subsequent batch registers its cancel token on entry, so a
+    /// supervisor thread (the serve watchdog) can cancel attempts that
+    /// overstay their deadline.
+    pub fn set_inflight_registry(&mut self, registry: Arc<InFlightRegistry>) {
+        self.inflight = Some(registry);
     }
 
     /// Execute one job inline (public for testing and for single-threaded
@@ -150,7 +165,7 @@ impl Coordinator {
     /// Returns the number of jobs that reached a terminal state. An `Err`
     /// means the batch infrastructure itself failed (bad config, journal
     /// I/O, lost workers) — per-job failures go to `on_failure`.
-    fn run_core<I>(
+    pub(crate) fn run_core<I>(
         &self,
         jobs: I,
         on_result: &mut dyn FnMut(JobResult),
@@ -174,6 +189,8 @@ impl Coordinator {
             max_retries: self.config.max_retries,
             backoff_ms: self.config.retry_backoff_ms,
             deadline_secs: self.config.job_deadline_secs,
+            jitter_seed: self.config.retry_jitter_seed,
+            inflight: self.inflight.clone(),
             #[cfg(any(test, feature = "faults"))]
             faults: self.faults.clone(),
         };
@@ -420,6 +437,12 @@ impl Coordinator {
         path: impl AsRef<Path>,
     ) -> Result<(BatchOutcome, ResumeReport)> {
         let replay = JournalReplay::load(&path)?;
+        // an always-on service resumes the same journal indefinitely:
+        // compact superseded history once the file outgrows the
+        // configured threshold (0 disables), before appending to it
+        if self.config.journal_compact_bytes > 0 {
+            Journal::compact_if_larger(&path, self.config.journal_compact_bytes)?;
+        }
         let mut journal = Journal::open(&path)?;
         let before = jobs.len();
         let orphan_ids = replay.orphaned();
@@ -457,7 +480,9 @@ mod tests {
             job_deadline_secs: 0.0,
             max_retries: 2,
             retry_backoff_ms: 0,
+            retry_jitter_seed: 0,
             large_job_order: 0,
+            journal_compact_bytes: 0,
         }
     }
 
@@ -592,6 +617,7 @@ mod tests {
             JobSpec {
                 max_k: 0,
                 reduction: Reduction::Prunit,
+                sharded: false,
             },
         );
         let res = c.run(vec![job]).unwrap();
@@ -794,6 +820,7 @@ mod tests {
             JobSpec {
                 max_k: 1,
                 reduction: Reduction::FixedPoint,
+                sharded: false,
             },
         );
         let res = c.run(vec![job]).unwrap();

@@ -19,6 +19,7 @@
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::worker::WorkerScratch;
@@ -59,15 +60,47 @@ pub fn tier_of(order: usize) -> usize {
     tier
 }
 
+/// Upper order bound of a tier (the top tier reports `usize::MAX`).
+pub fn tier_cap(tier: usize) -> usize {
+    if tier + 1 >= TIER_COUNT {
+        return usize::MAX;
+    }
+    let mut cap = TIER_BASE_ORDER;
+    for _ in 0..tier {
+        cap = cap.saturating_mul(TIER_GROWTH);
+    }
+    cap
+}
+
+/// Estimated peak working-set bytes a job of this shape charges against
+/// the service's memory budget. The planner's tombstone arrays, the
+/// filtration copy, and the complex arenas scale with the *tier cap* the
+/// scratch will grow to (arenas are reused across jobs, so the pool pays
+/// tier-cap bytes even for a job at the bottom of its tier), at roughly
+/// 96 B per vertex; boundary columns and CSR copies add ~48 B per edge.
+/// Deliberately coarse — admission control needs an upper bound that's
+/// stable across jobs of one tier, not an allocator audit.
+pub fn estimate_job_bytes(order: usize, edges: usize) -> usize {
+    let tier_order = match tier_cap(tier_of(order)) {
+        usize::MAX => order, // top tier is unbounded: charge actual order
+        cap => cap,
+    };
+    tier_order.saturating_mul(96).saturating_add(edges.saturating_mul(48))
+}
+
 /// A bounded, size-tiered pool of [`WorkerScratch`] shared by the
 /// scheduler's workers. All operations are lock-per-tier; tiers never
 /// block each other.
 #[derive(Debug)]
 pub struct ScratchPool {
-    tiers: Vec<Mutex<Vec<WorkerScratch>>>,
+    /// Each cached scratch carries its check-in instant, so a quiet
+    /// daemon can evict arenas that have sat idle past a window.
+    tiers: Vec<Mutex<Vec<(WorkerScratch, Instant)>>>,
     max_per_tier: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// arenas dropped by [`ScratchPool::evict_idle`]
+    evictions: AtomicU64,
     /// tier locks found poisoned and recovered (a worker panicked while
     /// holding one; the guarded Vec is valid regardless, so we reuse it)
     poison_recovered: AtomicU64,
@@ -90,6 +123,7 @@ impl ScratchPool {
             max_per_tier: max_per_tier.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
             poison_recovered: AtomicU64::new(0),
             metrics,
         }
@@ -100,7 +134,7 @@ impl ScratchPool {
     /// (scratches are plain arenas, re-targeted on every checkout), so
     /// the pool keeps serving instead of cascading the panic into every
     /// subsequent job.
-    fn lock_tier(&self, tier: usize) -> MutexGuard<'_, Vec<WorkerScratch>> {
+    fn lock_tier(&self, tier: usize) -> MutexGuard<'_, Vec<(WorkerScratch, Instant)>> {
         self.tiers[tier].lock().unwrap_or_else(|e| {
             self.poison_recovered.fetch_add(1, Ordering::Relaxed);
             if let Some(m) = &self.metrics {
@@ -117,7 +151,7 @@ impl ScratchPool {
         let tier = tier_of(order);
         let reused = self.lock_tier(tier).pop();
         let scratch = match reused {
-            Some(s) => {
+            Some((s, _)) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 s
             }
@@ -136,9 +170,28 @@ impl ScratchPool {
     fn check_in(&self, tier: usize, scratch: WorkerScratch) {
         let mut bucket = self.lock_tier(tier);
         if bucket.len() < self.max_per_tier {
-            bucket.push(scratch);
+            bucket.push((scratch, Instant::now()));
         }
         // else: drop the scratch — the pool is bounded per tier
+    }
+
+    /// Drop every cached scratch idle for longer than `window`, returning
+    /// how many were evicted. A long-lived daemon calls this from its
+    /// watchdog so steady-state memory shrinks back down after a traffic
+    /// spike grew the upper tiers; a one-shot batch never needs to.
+    pub fn evict_idle(&self, window: Duration) -> usize {
+        let now = Instant::now();
+        let mut evicted = 0usize;
+        for tier in 0..TIER_COUNT {
+            let mut bucket = self.lock_tier(tier);
+            let before = bucket.len();
+            bucket.retain(|(_, stamp)| now.duration_since(*stamp) <= window);
+            evicted += before - bucket.len();
+        }
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+        evicted
     }
 
     /// Checkouts served from a tier's cache.
@@ -161,13 +214,19 @@ impl ScratchPool {
         self.poison_recovered.load(Ordering::Relaxed)
     }
 
+    /// Arenas dropped by idle eviction so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
     /// One-line reuse summary for batch drivers.
     pub fn summary(&self) -> String {
         format!(
-            "scratch_pool: cached={} hits={} misses={} poison_recovered={}",
+            "scratch_pool: cached={} hits={} misses={} evictions={} poison_recovered={}",
             self.cached(),
             self.hits(),
             self.misses(),
+            self.evictions(),
             self.poison_recoveries()
         )
     }
@@ -175,7 +234,7 @@ impl ScratchPool {
     /// Raw tier lock for poisoning tests: lets a test thread take a tier
     /// guard and panic while holding it.
     #[cfg(test)]
-    pub(crate) fn tier_lock_for_test(&self, tier: usize) -> &Mutex<Vec<WorkerScratch>> {
+    pub(crate) fn tier_lock_for_test(&self, tier: usize) -> &Mutex<Vec<(WorkerScratch, Instant)>> {
         &self.tiers[tier]
     }
 }
@@ -298,6 +357,52 @@ mod tests {
         // is simply whatever the last user set
         assert_eq!(s.reduce.prune_threads(), 4);
         assert!(pool.summary().contains("hits=1"));
+    }
+
+    #[test]
+    fn tier_caps_align_with_tier_of() {
+        assert_eq!(tier_cap(0), TIER_BASE_ORDER);
+        assert_eq!(tier_cap(1), TIER_BASE_ORDER * TIER_GROWTH);
+        assert_eq!(tier_cap(TIER_COUNT - 1), usize::MAX);
+        for tier in 0..TIER_COUNT - 1 {
+            assert_eq!(tier_of(tier_cap(tier)), tier);
+            assert_eq!(tier_of(tier_cap(tier) + 1), tier + 1);
+        }
+    }
+
+    #[test]
+    fn job_byte_estimate_is_tier_stable_and_monotone() {
+        // every order within one tier charges the same vertex bytes
+        assert_eq!(estimate_job_bytes(10, 0), estimate_job_bytes(200, 0));
+        assert_eq!(estimate_job_bytes(10, 0), TIER_BASE_ORDER * 96);
+        // edges add on top, and bigger tiers charge more
+        assert!(estimate_job_bytes(10, 100) > estimate_job_bytes(10, 0));
+        assert!(estimate_job_bytes(5_000, 0) > estimate_job_bytes(200, 0));
+        // the unbounded top tier charges actual order, not usize::MAX
+        let top = estimate_job_bytes(2_000_000, 0);
+        assert_eq!(top, 2_000_000 * 96);
+    }
+
+    #[test]
+    fn idle_eviction_drops_stale_arenas_and_counts() {
+        let pool = ScratchPool::new(4);
+        {
+            let _a = pool.checkout(10);
+            let _b = pool.checkout(2_000_000);
+        }
+        assert_eq!(pool.cached(), 2);
+        // a generous window evicts nothing
+        assert_eq!(pool.evict_idle(Duration::from_secs(3600)), 0);
+        assert_eq!(pool.cached(), 2);
+        // a zero window evicts everything that isn't checked out
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(pool.evict_idle(Duration::ZERO), 2);
+        assert_eq!(pool.cached(), 0);
+        assert_eq!(pool.evictions(), 2);
+        assert!(pool.summary().contains("evictions=2"), "{}", pool.summary());
+        // the pool keeps serving after eviction (fresh allocation)
+        let s = pool.checkout(10);
+        assert_eq!(s.tier(), 0);
     }
 
     #[test]

@@ -1,0 +1,961 @@
+//! Always-on reduction service (`repro serve`): a long-running daemon
+//! wrapped around [`super::scheduler::Coordinator::run_core`].
+//!
+//! Job specs arrive as newline-delimited `key=value` request lines on an
+//! input stream (stdin for the CLI); response lines go to an output sink
+//! (stdout). Around the core scheduler the service adds the pieces a
+//! daemon needs that a batch run does not:
+//!
+//! * **Admission control + load shedding** — every request passes through
+//!   an [`AdmissionController`] *before* it is queued. Over-budget or
+//!   over-depth requests are rejected with a typed
+//!   [`Error::Overloaded`](crate::error::Error::Overloaded) response
+//!   (lowest priority first); CPU-bound backlog degrades requests to the
+//!   cheapest exact shape (FixedPoint + sharded) instead of shedding.
+//! * **Content-addressed result cache** — a bounded [`ResultCache`] keyed
+//!   by the canonical [`job_key`] hash of (graph, filtration, reduction,
+//!   max_k). A resubmitted graph is answered from cache without touching
+//!   the worker pool; only clean (non-degraded) successes are inserted.
+//! * **Watchdog + graceful shutdown** — a supervisor thread sweeps the
+//!   [`InFlightRegistry`] and force-cancels attempts that overstay their
+//!   deadline, and evicts idle scratch tiers. SIGTERM/SIGINT (or the
+//!   in-process shutdown flag) stops intake, drains queued work as shed,
+//!   lets in-flight jobs finish, flushes the journal, and returns with
+//!   final metrics — exit 0.
+//! * **Health/metrics endpoint** — `GET /healthz` and `GET /metrics`
+//!   served by a hand-rolled HTTP/1.1 responder over `std::net`
+//!   (nothing async, no dependencies).
+//!
+//! Threading model: a reader thread parses requests, builds graphs, and
+//! makes cache/admission decisions (so the pending gauge sees the real
+//! backlog, not the bounded scheduler queue); the calling thread runs
+//! `run_core`, whose producer iterator pulls admitted jobs off a channel
+//! and whose result callbacks run on the same thread — journal and
+//! response writes need no locking (`RefCell`, never borrowed twice).
+
+use std::cell::RefCell;
+use std::collections::{BTreeSet, HashMap};
+use std::io::{BufRead, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::complex::Filtration;
+use crate::config::{CoordinatorConfig, ServiceConfig};
+use crate::datasets;
+use crate::error::{Error, Result};
+use crate::homology::Diagram;
+use crate::reduce::Reduction;
+
+use super::admission::{AdmissionController, AdmissionDecision, AdmissionPolicy, DEFAULT_PRIORITY};
+use super::cache::{job_key, CacheKey, CachedResult, ResultCache};
+#[cfg(any(test, feature = "faults"))]
+use super::faults::FaultPlan;
+use super::job::{Job, JobFailure, JobOutcome, JobResult, JobSpec};
+use super::journal::{Journal, JournalReplay};
+use super::metrics::Metrics;
+use super::scheduler::Coordinator;
+use super::scratch::ScratchPool;
+use super::worker::InFlightRegistry;
+
+/// Process-wide shutdown latch set by the Unix signal handler. The serve
+/// loop polls it alongside its per-instance flag; in-process tests use
+/// only their own [`ServeOptions::shutdown`] flag and never touch this.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_signal(_signum: i32) {
+    // storing to a static atomic is async-signal-safe; everything else
+    // (drain, journal flush, metrics) happens on the serve thread
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGINT/SIGTERM handlers that request a graceful drain. Called
+/// by `repro serve` before entering the loop; libc is linked by std, so
+/// the raw `signal(2)` binding needs no new dependency.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+/// Everything `serve` needs beyond the input stream and output sink.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    pub coordinator: CoordinatorConfig,
+    pub service: ServiceConfig,
+    /// Persistent JSONL journal; re-serving with the same path skips
+    /// requests whose ids already completed (reported `already-done`).
+    pub journal_path: Option<PathBuf>,
+    /// In-process shutdown flag for tests (signals set the global latch).
+    pub shutdown: Option<Arc<AtomicBool>>,
+    /// Deterministic fault script threaded into the worker harness.
+    #[cfg(any(test, feature = "faults"))]
+    pub faults: Option<FaultPlan>,
+}
+
+/// Terminal tally of one serve run, returned when the loop drains.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeReport {
+    /// requests handed to the worker pool
+    pub submitted: usize,
+    /// pool jobs that returned diagrams (includes `degraded`)
+    pub completed: usize,
+    /// completions that ran a degraded spec (retry ladder or admission)
+    pub degraded: usize,
+    /// pool jobs that exhausted the retry budget
+    pub failed: usize,
+    /// requests rejected with `Error::Overloaded` (incl. shutdown drain)
+    pub shed: usize,
+    /// requests answered from the result cache
+    pub cache_hits: usize,
+    /// requests skipped because the journal already has them completed
+    pub already_done: usize,
+    /// request lines that failed to parse (service keeps running)
+    pub bad_lines: usize,
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+struct Request {
+    id: u64,
+    dataset: String,
+    instance: usize,
+    seed: u64,
+    max_k: usize,
+    reduction: Reduction,
+    priority: u8,
+}
+
+/// Parse one `key=value`-token request line. `dataset=` is required;
+/// everything else falls back to the coordinator config (seed, k,
+/// reduction) or [`DEFAULT_PRIORITY`]. `next_id` numbers lines that
+/// carry no explicit `id=`.
+fn parse_request(line: &str, defaults: &CoordinatorConfig, next_id: u64) -> Result<Request> {
+    let mut req = Request {
+        id: next_id,
+        dataset: String::new(),
+        instance: 0,
+        seed: defaults.seed,
+        max_k: defaults.max_k,
+        reduction: crate::cli::parse_reduction(&defaults.reduction)?,
+        priority: DEFAULT_PRIORITY,
+    };
+    for tok in line.split_whitespace() {
+        let (key, val) = tok
+            .split_once('=')
+            .ok_or_else(|| Error::Parse(format!("expected key=value, got {tok:?}")))?;
+        let int = |what: &str| -> Result<u64> {
+            val.parse()
+                .map_err(|_| Error::Parse(format!("{what}: expected integer, got {val:?}")))
+        };
+        match key {
+            "id" => req.id = int("id")?,
+            "dataset" => req.dataset = val.to_string(),
+            "instance" => req.instance = int("instance")? as usize,
+            "seed" => req.seed = int("seed")?,
+            "k" => req.max_k = int("k")? as usize,
+            "reduction" => req.reduction = crate::cli::parse_reduction(val)?,
+            "priority" => req.priority = int("priority")?.min(u8::MAX as u64) as u8,
+            other => {
+                return Err(Error::Parse(format!("unknown request key {other:?}")));
+            }
+        }
+    }
+    if req.dataset.is_empty() {
+        return Err(Error::Parse("request needs dataset=NAME".into()));
+    }
+    Ok(req)
+}
+
+/// Order-sensitive FNV-1a digest of a diagram set: two diagram vectors
+/// digest equal iff every pair's `f64` bits match. Response lines carry
+/// it so a client (and the test suite) can check cached answers are
+/// bit-identical to cold computes without shipping the diagrams.
+pub fn diagram_digest(diagrams: &[Diagram]) -> u64 {
+    fn put(h: &mut u64, x: u64) {
+        for byte in x.to_le_bytes() {
+            *h ^= byte as u64;
+            *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for d in diagrams {
+        put(&mut h, d.all_pairs().len() as u64);
+        for &(birth, death) in d.all_pairs() {
+            put(&mut h, birth.to_bits());
+            put(&mut h, death.to_bits());
+        }
+    }
+    h
+}
+
+/// What the reader thread decided about one request.
+enum Event {
+    /// Admitted (possibly degraded): run it on the pool.
+    Run { job: Job, meta: Meta },
+    /// Content hash hit: answer without touching the pool.
+    CacheHit { id: u64, result: CachedResult },
+    /// Rejected by admission control.
+    Shed { id: u64, reason: String },
+    /// The journal already has this id completed (resume).
+    AlreadyDone { id: u64 },
+    /// Unparseable request line; the service keeps serving.
+    BadLine { line_no: usize, msg: String },
+}
+
+/// Book-keeping pinned to an in-flight job until its result comes back.
+struct Meta {
+    /// content address to insert under on clean success (None: no cache)
+    key: Option<CacheKey>,
+    /// bytes charged against the admission memory budget
+    charged: usize,
+    /// spec was downgraded by admission control under CPU pressure
+    admission_degraded: bool,
+}
+
+/// Shared read-only view handed to the HTTP responder thread.
+struct HttpState {
+    start: Instant,
+    metrics: Arc<Metrics>,
+    cache: Arc<ResultCache>,
+    admission: Arc<AdmissionController>,
+    scratch: Arc<ScratchPool>,
+    registry: Arc<InFlightRegistry>,
+}
+
+/// Serve until the input stream ends or shutdown is requested. Response
+/// lines (one per request, plus `serve:` status lines) go to `out`.
+///
+/// This is the library entry the CLI and the integration tests share;
+/// `repro serve` passes locked stdin and `println!`.
+pub fn serve<R, F>(input: R, opts: ServeOptions, mut out: F) -> Result<ServeReport>
+where
+    R: BufRead + Send + 'static,
+    F: FnMut(String),
+{
+    let service = opts.service.clone();
+    let mut coordinator = Coordinator::new(opts.coordinator.clone());
+    let registry = Arc::new(InFlightRegistry::new());
+    coordinator.set_inflight_registry(Arc::clone(&registry));
+    #[cfg(any(test, feature = "faults"))]
+    if let Some(plan) = opts.faults.clone() {
+        coordinator.set_fault_plan(plan);
+    }
+    let metrics = coordinator.metrics();
+    let scratch = coordinator.scratch_pool();
+    let cache_enabled = service.cache_budget_bytes > 0;
+    let cache = Arc::new(ResultCache::new(service.cache_budget_bytes));
+    let admission = Arc::new(AdmissionController::new(AdmissionPolicy {
+        max_pending: service.max_pending,
+        shed_pending: service.shed_pending,
+        memory_budget_bytes: service.memory_budget_bytes,
+        cpu_pressure_secs: service.cpu_pressure_secs,
+    }));
+    let local_stop = opts.shutdown.clone().unwrap_or_default();
+    let stop = {
+        let local = Arc::clone(&local_stop);
+        move || local.load(Ordering::SeqCst) || SHUTDOWN.load(Ordering::SeqCst)
+    };
+
+    // ---- journal: replay (resume), compact, then append -------------
+    let mut done: BTreeSet<u64> = BTreeSet::new();
+    let journal: RefCell<Option<Journal>> = RefCell::new(match &opts.journal_path {
+        Some(path) => {
+            let replay = JournalReplay::load(path)?;
+            if !replay.completed.is_empty() {
+                out(format!(
+                    "serve: journal resume — {} id(s) already completed, {} orphaned",
+                    replay.completed.len(),
+                    replay.orphaned().len()
+                ));
+            }
+            done = replay.completed;
+            if opts.coordinator.journal_compact_bytes > 0 {
+                Journal::compact_if_larger(path, opts.coordinator.journal_compact_bytes)?;
+            }
+            Some(Journal::open(path)?)
+        }
+        None => None,
+    });
+
+    // ---- health/metrics endpoint ------------------------------------
+    let http_state = Arc::new(HttpState {
+        start: Instant::now(),
+        metrics: Arc::clone(&metrics),
+        cache: Arc::clone(&cache),
+        admission: Arc::clone(&admission),
+        scratch: Arc::clone(&scratch),
+        registry: Arc::clone(&registry),
+    });
+    let http = if service.http_addr.is_empty() {
+        None
+    } else {
+        let (addr, handle) =
+            start_http(&service.http_addr, Arc::clone(&http_state), Arc::clone(&local_stop))?;
+        out(format!("serve: http listening on {addr}"));
+        Some(handle)
+    };
+
+    // ---- watchdog: cancel overstayers, evict idle scratch -----------
+    let watchdog = {
+        let registry = Arc::clone(&registry);
+        let metrics = Arc::clone(&metrics);
+        let scratch = Arc::clone(&scratch);
+        let stop = stop.clone();
+        let poll = Duration::from_millis(service.watchdog_poll_ms.max(1));
+        let stuck = service.stuck_job_secs;
+        let grace = service.watchdog_grace_secs;
+        let idle = service.idle_evict_secs;
+        std::thread::spawn(move || {
+            let mut last_evict = Instant::now();
+            while !stop() {
+                std::thread::sleep(poll);
+                let cancelled = registry.cancel_overstayed(stuck, grace);
+                if !cancelled.is_empty() {
+                    metrics
+                        .watchdog_cancels
+                        .fetch_add(cancelled.len() as u64, Ordering::Relaxed);
+                }
+                if idle > 0.0 && last_evict.elapsed().as_secs_f64() >= idle {
+                    scratch.evict_idle(Duration::from_secs_f64(idle));
+                    last_evict = Instant::now();
+                }
+            }
+        })
+    };
+
+    // ---- reader: parse, hash, cache-check, admit --------------------
+    let (tx, rx) = channel::<Event>();
+    {
+        let cache = Arc::clone(&cache);
+        let admission = Arc::clone(&admission);
+        let metrics = Arc::clone(&metrics);
+        let defaults = opts.coordinator.clone();
+        let stop = stop.clone();
+        // detached on purpose: a reader blocked in stdin read() cannot be
+        // joined after SIGTERM; it dies with the process (or at EOF)
+        std::thread::spawn(move || {
+            let mut next_id = 0u64;
+            for (line_no, line) in input.lines().enumerate() {
+                if stop() {
+                    break;
+                }
+                let Ok(line) = line else { break };
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let req = match parse_request(line, &defaults, next_id) {
+                    Ok(req) => req,
+                    Err(e) => {
+                        let ev = Event::BadLine { line_no: line_no + 1, msg: e.to_string() };
+                        if tx.send(ev).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                next_id = req.id + 1;
+                let event = match admit_request(&req, &done, &cache, cache_enabled, &admission) {
+                    Ok(ev) => ev,
+                    Err(e) => Event::BadLine { line_no: line_no + 1, msg: e.to_string() },
+                };
+                match &event {
+                    Event::Shed { .. } => {
+                        metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Event::Run { meta, .. } if meta.admission_degraded => {
+                        metrics.jobs_admission_degraded.fetch_add(1, Ordering::Relaxed);
+                    }
+                    _ => {}
+                }
+                if tx.send(event).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+
+    // ---- the long-lived run_core call -------------------------------
+    // Producer iterator and both result callbacks run on THIS thread
+    // (run_core pulls jobs and drains results on its caller), so plain
+    // RefCells are sound: borrows never overlap.
+    let report = RefCell::new(ServeReport::default());
+    let out = RefCell::new(&mut out);
+    let emit = |line: String| {
+        let mut f = out.borrow_mut();
+        (*f)(line);
+    };
+    let meta_by_id: RefCell<HashMap<u64, Meta>> = RefCell::new(HashMap::new());
+    let journal_err: RefCell<Option<Error>> = RefCell::new(None);
+    let note_journal = |r: Result<()>| {
+        if let Err(e) = r {
+            journal_err.borrow_mut().get_or_insert(e);
+        }
+    };
+
+    // Answer one non-Run event; shared by the live loop and the
+    // shutdown drain (where queued Run events are shed back too).
+    let answer = |ev: Event, draining: bool| match ev {
+        Event::Run { job, meta } => {
+            // only reachable while draining: the job was admitted but
+            // the service is shutting down — release and shed it
+            debug_assert!(draining);
+            admission.release(meta.charged);
+            metrics.jobs_shed.fetch_add(1, Ordering::Relaxed);
+            report.borrow_mut().shed += 1;
+            emit(format!(
+                "shed id={} error={}",
+                job.id,
+                Error::Overloaded("service shutting down".into())
+            ));
+        }
+        Event::CacheHit { id, result } => {
+            note_journal(match journal.borrow_mut().as_mut() {
+                Some(j) => j.record_cached(id),
+                None => Ok(()),
+            });
+            report.borrow_mut().cache_hits += 1;
+            emit(format!(
+                "done id={id} status=cached reduction={} pd={:016x}",
+                result.reduction.which.name(),
+                diagram_digest(&result.diagrams)
+            ));
+        }
+        Event::Shed { id, reason } => {
+            report.borrow_mut().shed += 1;
+            emit(format!("shed id={id} error={}", Error::Overloaded(reason)));
+        }
+        Event::AlreadyDone { id } => {
+            report.borrow_mut().already_done += 1;
+            emit(format!("done id={id} status=already-done"));
+        }
+        Event::BadLine { line_no, msg } => {
+            report.borrow_mut().bad_lines += 1;
+            emit(format!("error line={line_no} msg={msg}"));
+        }
+    };
+
+    let jobs = std::iter::from_fn(|| loop {
+        if journal_err.borrow().is_some() {
+            return None;
+        }
+        if stop() {
+            // stop intake; queued decisions are answered, admitted-but-
+            // unsubmitted jobs are shed (they were never journaled, so
+            // the journal shows no orphans for them)
+            while let Ok(ev) = rx.try_recv() {
+                answer(ev, true);
+            }
+            return None;
+        }
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(Event::Run { job, meta }) => {
+                note_journal(match journal.borrow_mut().as_mut() {
+                    Some(j) => j.record_submitted(&job),
+                    None => Ok(()),
+                });
+                meta_by_id.borrow_mut().insert(job.id, meta);
+                report.borrow_mut().submitted += 1;
+                return Some(job);
+            }
+            Ok(ev) => answer(ev, false),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    });
+
+    let mut on_result = |r: JobResult| {
+        let meta = meta_by_id.borrow_mut().remove(&r.id);
+        let mut admission_degraded = false;
+        if let Some(m) = &meta {
+            admission.release(m.charged);
+            admission.observe_job_secs(r.total_secs);
+            admission_degraded = m.admission_degraded;
+            // cache only clean successes: a retry-degraded result ran a
+            // different spec than the one hashed into the key
+            if let (JobOutcome::Success, Some(key)) = (r.outcome, m.key) {
+                cache.insert(
+                    key,
+                    CachedResult {
+                        diagrams: r.diagrams.clone(),
+                        reduction: r.reduction.clone(),
+                    },
+                );
+            }
+        }
+        note_journal(match journal.borrow_mut().as_mut() {
+            Some(j) => j.record_completed(&r),
+            None => Ok(()),
+        });
+        let degraded = admission_degraded || r.outcome.is_degraded();
+        {
+            let mut rep = report.borrow_mut();
+            rep.completed += 1;
+            if degraded {
+                rep.degraded += 1;
+            }
+        }
+        emit(format!(
+            "done id={} status={} reduction={} attempts={} secs={:.4} pd={:016x}",
+            r.id,
+            if degraded { "degraded" } else { "ok" },
+            r.reduction.which.name(),
+            r.attempts,
+            r.total_secs,
+            diagram_digest(&r.diagrams)
+        ));
+    };
+    let mut on_failure = |f: JobFailure| {
+        if let Some(m) = meta_by_id.borrow_mut().remove(&f.id) {
+            admission.release(m.charged);
+        }
+        note_journal(match journal.borrow_mut().as_mut() {
+            Some(j) => j.record_failed(&f),
+            None => Ok(()),
+        });
+        report.borrow_mut().failed += 1;
+        emit(format!(
+            "failed id={} attempts={} error={}",
+            f.id, f.attempts, f.error
+        ));
+    };
+
+    let run = coordinator.run_core(jobs, &mut on_result, &mut on_failure, None);
+
+    // stop the watchdog and the endpoint, then report
+    local_stop.store(true, Ordering::SeqCst);
+    let _ = watchdog.join();
+    if let Some(h) = http {
+        let _ = h.join();
+    }
+    run?;
+    if let Some(e) = journal_err.into_inner() {
+        return Err(e);
+    }
+    let report = report.into_inner();
+    let mut out = out.into_inner();
+    out(format!(
+        "serve: drained — submitted={} completed={} degraded={} failed={} shed={} \
+         cache_hits={} already_done={} bad_lines={}",
+        report.submitted,
+        report.completed,
+        report.degraded,
+        report.failed,
+        report.shed,
+        report.cache_hits,
+        report.already_done,
+        report.bad_lines
+    ));
+    out(format!("serve: {}", metrics.summary()));
+    out(format!("serve: {}", admission.summary()));
+    out(format!("serve: {}", cache.summary()));
+    out(format!("serve: {}", scratch.summary()));
+    Ok(report)
+}
+
+/// Reader-side decision for one parsed request: journal skip, cache
+/// lookup, then admission. Returns the event to hand the serve loop.
+fn admit_request(
+    req: &Request,
+    done: &BTreeSet<u64>,
+    cache: &ResultCache,
+    cache_enabled: bool,
+    admission: &AdmissionController,
+) -> Result<Event> {
+    if done.contains(&req.id) {
+        return Ok(Event::AlreadyDone { id: req.id });
+    }
+    let recipe = datasets::find(&req.dataset)?;
+    let g = recipe.make(req.seed, req.instance);
+    let f = Filtration::degree_superlevel(&g);
+    let key = cache_enabled.then(|| job_key(&g, &f, req.reduction, req.max_k));
+    if let Some(key) = &key {
+        if let Some(result) = cache.get(key) {
+            return Ok(Event::CacheHit { id: req.id, result });
+        }
+    }
+    match admission.admit(g.n(), g.m(), req.priority) {
+        AdmissionDecision::Shed { reason } => Ok(Event::Shed { id: req.id, reason }),
+        AdmissionDecision::Admit { charged_bytes } => {
+            let spec = JobSpec { max_k: req.max_k, reduction: req.reduction, sharded: false };
+            Ok(Event::Run {
+                job: Job::new(req.id, g, f, spec),
+                meta: Meta { key, charged: charged_bytes, admission_degraded: false },
+            })
+        }
+        AdmissionDecision::Degrade { charged_bytes } => {
+            // cheapest exact shape: FixedPoint reduction, sharded from
+            // the first attempt. The executed spec differs from the
+            // requested one, so the cache key is recomputed for it.
+            let spec = JobSpec {
+                max_k: req.max_k,
+                reduction: Reduction::FixedPoint,
+                sharded: true,
+            };
+            let key = cache_enabled.then(|| job_key(&g, &f, Reduction::FixedPoint, req.max_k));
+            Ok(Event::Run {
+                job: Job::new(req.id, g, f, spec),
+                meta: Meta { key, charged: charged_bytes, admission_degraded: true },
+            })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// HTTP endpoint
+// ---------------------------------------------------------------------
+
+/// Bind `addr` (port 0 picks a free port; the bound address is returned)
+/// and answer `GET /healthz` + `GET /metrics` until `stop` is set.
+fn start_http(
+    addr: &str,
+    state: Arc<HttpState>,
+    stop: Arc<AtomicBool>,
+) -> Result<(SocketAddr, JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::Io(format!("http bind {addr}: {e}")))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| Error::Io(format!("http addr: {e}")))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::Io(format!("http nonblocking: {e}")))?;
+    let handle = std::thread::spawn(move || {
+        while !(stop.load(Ordering::SeqCst) || SHUTDOWN.load(Ordering::SeqCst)) {
+            match listener.accept() {
+                Ok((stream, _)) => handle_conn(stream, &state),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+    });
+    Ok((local, handle))
+}
+
+/// Answer one request. Reads a single buffer (requests are one GET
+/// line + headers, far under 1 KiB), writes one plaintext response,
+/// closes. Any socket error drops the connection; the daemon lives.
+fn handle_conn(mut stream: TcpStream, state: &HttpState) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut buf = [0u8; 1024];
+    let mut n = 0usize;
+    // read until the blank line ending the headers (or the buffer is
+    // full): a request split across packets must not 404 on a half line
+    while n < buf.len() {
+        match stream.read(&mut buf[n..]) {
+            Ok(0) | Err(_) => break,
+            Ok(m) => {
+                n += m;
+                if buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+        }
+    }
+    if n == 0 {
+        return;
+    }
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let path = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/");
+    let (status, body) = match path {
+        "/healthz" => ("200 OK", "ok\n".to_string()),
+        "/metrics" => ("200 OK", render_metrics(state)),
+        _ => ("404 Not Found", "not found\n".to_string()),
+    };
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+/// Render the scrape body: one `name value` line per counter/gauge,
+/// flat and greppable (prometheus exposition style, minus type hints).
+fn render_metrics(s: &HttpState) -> String {
+    use std::fmt::Write as _;
+    let m = &s.metrics;
+    let cs = s.cache.stats();
+    let mut o = String::with_capacity(1024);
+    let _ = writeln!(o, "repro_uptime_seconds {:.3}", s.start.elapsed().as_secs_f64());
+    let _ = writeln!(o, "repro_jobs_submitted {}", m.jobs_submitted.load(Ordering::Relaxed));
+    let _ = writeln!(o, "repro_jobs_completed {}", m.completed());
+    let _ = writeln!(o, "repro_jobs_failed {}", m.failed());
+    let _ = writeln!(o, "repro_jobs_retried {}", m.jobs_retried());
+    let _ = writeln!(o, "repro_jobs_degraded {}", m.jobs_degraded());
+    let _ = writeln!(o, "repro_jobs_shed {}", m.jobs_shed());
+    let _ = writeln!(o, "repro_jobs_admission_degraded {}", m.jobs_admission_degraded());
+    let _ = writeln!(o, "repro_watchdog_cancels {}", m.watchdog_cancels());
+    let _ = writeln!(o, "repro_deadline_misses {}", m.deadline_misses());
+    let _ = writeln!(o, "repro_inflight_attempts {}", s.registry.len());
+    let _ = writeln!(o, "repro_cache_entries {}", cs.entries);
+    let _ = writeln!(o, "repro_cache_bytes {}", cs.bytes);
+    let _ = writeln!(o, "repro_cache_hits {}", cs.hits);
+    let _ = writeln!(o, "repro_cache_misses {}", cs.misses);
+    let _ = writeln!(o, "repro_cache_evictions {}", cs.evictions);
+    let _ = writeln!(o, "repro_cache_insertions {}", cs.insertions);
+    let _ = writeln!(o, "repro_admission_pending {}", s.admission.pending());
+    let _ = writeln!(o, "repro_admission_inflight_bytes {}", s.admission.inflight_bytes());
+    let _ = writeln!(o, "repro_admission_backlog_seconds {:.3}", s.admission.backlog_secs());
+    let _ = writeln!(o, "repro_scratch_evictions {}", s.scratch.evictions());
+    let _ = writeln!(o, "repro_scratch_hits {}", s.scratch.hits());
+    let _ = writeln!(o, "repro_scratch_misses {}", s.scratch.misses());
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn opts() -> ServeOptions {
+        ServeOptions {
+            coordinator: CoordinatorConfig {
+                workers: 2,
+                max_k: 1,
+                reduction: "combined".into(),
+                seed: 42,
+                prune_threads: 1,
+                ..CoordinatorConfig::default()
+            },
+            service: ServiceConfig {
+                http_addr: String::new(),
+                idle_evict_secs: 0.0,
+                stuck_job_secs: 0.0,
+                ..ServiceConfig::default()
+            },
+            ..ServeOptions::default()
+        }
+    }
+
+    fn run_lines(input: &str, opts: ServeOptions) -> (ServeReport, Vec<String>) {
+        let mut lines = Vec::new();
+        let report = serve(Cursor::new(input.to_string()), opts, |l| lines.push(l)).unwrap();
+        (report, lines)
+    }
+
+    #[test]
+    fn request_line_parses_with_defaults_and_overrides() {
+        let cfg = CoordinatorConfig::default();
+        let r = parse_request("dataset=DHFR", &cfg, 7).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.seed, cfg.seed);
+        assert_eq!(r.max_k, cfg.max_k);
+        assert_eq!(r.priority, DEFAULT_PRIORITY);
+        let r = parse_request(
+            "id=3 dataset=DHFR instance=1 seed=9 k=0 reduction=prunit priority=8",
+            &cfg,
+            0,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request {
+                id: 3,
+                dataset: "DHFR".into(),
+                instance: 1,
+                seed: 9,
+                max_k: 0,
+                reduction: Reduction::Prunit,
+                priority: 8,
+            }
+        );
+        assert!(parse_request("k=1", &cfg, 0).is_err()); // no dataset
+        assert!(parse_request("dataset=DHFR k=soon", &cfg, 0).is_err());
+        assert!(parse_request("dataset=DHFR frobnicate=1", &cfg, 0).is_err());
+    }
+
+    #[test]
+    fn digest_is_bit_sensitive_and_deterministic() {
+        let a = Diagram::new(0, vec![(0.0, 1.0), (2.0, f64::INFINITY)]);
+        let b = Diagram::new(0, vec![(0.0, 1.5), (2.0, f64::INFINITY)]);
+        assert_ne!(
+            diagram_digest(std::slice::from_ref(&a)),
+            diagram_digest(std::slice::from_ref(&b))
+        );
+        assert_eq!(
+            diagram_digest(std::slice::from_ref(&a)),
+            diagram_digest(std::slice::from_ref(&a))
+        );
+    }
+
+    #[test]
+    fn serve_answers_a_stream_of_requests() {
+        let input = "id=0 dataset=DHFR instance=0\n\
+                     # a comment and a blank line are skipped\n\
+                     \n\
+                     id=2 dataset=DHFR instance=1\n";
+        let (report, lines) = run_lines(input, opts());
+        assert_eq!(report.submitted, 2);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.failed + report.shed + report.bad_lines, 0);
+        assert!(lines.iter().any(|l| l.contains("id=0 status=ok")));
+        assert!(lines.iter().any(|l| l.contains("id=2 status=ok")));
+        assert!(lines.iter().any(|l| l.starts_with("serve: drained")));
+    }
+
+    /// Feed request lines one at a time, waiting for each response —
+    /// the resubmission is only sent after the cold compute finished,
+    /// so the cache-hit path is exercised deterministically.
+    #[test]
+    fn resubmitted_graph_is_served_from_cache_bit_identically() {
+        struct ChanReader {
+            rx: std::sync::mpsc::Receiver<Vec<u8>>,
+            buf: Vec<u8>,
+            pos: usize,
+        }
+        impl std::io::Read for ChanReader {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.pos >= self.buf.len() {
+                    match self.rx.recv() {
+                        Ok(b) => {
+                            self.buf = b;
+                            self.pos = 0;
+                        }
+                        Err(_) => return Ok(0), // sender dropped: EOF
+                    }
+                }
+                let n = (self.buf.len() - self.pos).min(out.len());
+                out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+                self.pos += n;
+                Ok(n)
+            }
+        }
+        let (in_tx, in_rx) = channel::<Vec<u8>>();
+        let (out_tx, out_rx) = channel::<String>();
+        let handle = std::thread::spawn(move || {
+            let input = ChanReader { rx: in_rx, buf: Vec::new(), pos: 0 };
+            let reader = std::io::BufReader::new(input);
+            serve(reader, opts(), move |l| {
+                let _ = out_tx.send(l);
+            })
+            .unwrap()
+        });
+        let wait_for = |needle: &str| loop {
+            let line = out_rx
+                .recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|_| panic!("timed out waiting for {needle:?}"));
+            if line.contains(needle) {
+                return line;
+            }
+        };
+        in_tx.send(b"id=0 dataset=DHFR\n".to_vec()).unwrap();
+        let cold = wait_for("id=0 status=ok");
+        in_tx.send(b"id=1 dataset=DHFR\n".to_vec()).unwrap();
+        let hit = wait_for("id=1 status=cached");
+        drop(in_tx);
+        let report = handle.join().unwrap();
+        assert_eq!(report.cache_hits, 1);
+        assert_eq!(report.completed, 1);
+        let digest = |line: &str| line.split("pd=").nth(1).unwrap().to_string();
+        assert_eq!(digest(&cold), digest(&hit), "cached PDs must be bit-identical");
+    }
+
+    #[test]
+    fn malformed_lines_get_error_responses_but_service_keeps_going() {
+        let input = "dataset=NO_SUCH_DATASET\n\
+                     what even is this\n\
+                     id=5 dataset=DHFR\n";
+        let (report, lines) = run_lines(input, opts());
+        assert_eq!(report.bad_lines, 2);
+        assert_eq!(report.completed, 1);
+        assert!(lines.iter().any(|l| l.starts_with("error line=1")));
+        assert!(lines.iter().any(|l| l.starts_with("error line=2")));
+        assert!(lines.iter().any(|l| l.contains("id=5 status=ok")));
+    }
+
+    #[test]
+    fn zero_max_pending_sheds_everything_with_overloaded() {
+        let mut o = opts();
+        o.service.max_pending = 0;
+        o.service.shed_pending = 0;
+        let (report, lines) = run_lines("id=0 dataset=DHFR\n", o);
+        assert_eq!(report.shed, 1);
+        assert_eq!(report.submitted, 0);
+        assert!(lines.iter().any(|l| l.starts_with("shed id=0") && l.contains("overloaded:")));
+    }
+
+    #[test]
+    fn journal_resume_skips_completed_ids() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("coral-serve-resume-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut o = opts();
+        o.journal_path = Some(path.clone());
+        let (first, _) = run_lines("id=0 dataset=DHFR\nid=1 dataset=DHFR instance=1\n", o.clone());
+        assert_eq!(first.completed, 2);
+        // resubmit the same ids: both skip, no recompute, no duplicates
+        let (second, lines) = run_lines("id=0 dataset=DHFR\nid=1 dataset=DHFR instance=1\n", o);
+        assert_eq!(second.already_done, 2);
+        assert_eq!(second.submitted, 0);
+        assert!(lines.iter().any(|l| l.contains("status=already-done")));
+        let replay = JournalReplay::load(&path).unwrap();
+        assert_eq!(replay.completed.len(), 2);
+        assert!(replay.orphaned().is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shutdown_flag_drains_and_sheds_queued_work() {
+        // shutdown pre-set: intake stops immediately; nothing is lost,
+        // the loop exits cleanly with a report (no hang)
+        let stopper = Arc::new(AtomicBool::new(true));
+        let mut o = opts();
+        o.shutdown = Some(Arc::clone(&stopper));
+        let (report, lines) = run_lines("id=0 dataset=DHFR\n", o);
+        assert_eq!(report.completed, 0);
+        assert!(lines.iter().any(|l| l.starts_with("serve: drained")));
+    }
+
+    #[test]
+    fn healthz_and_metrics_answer_over_tcp() {
+        let state = Arc::new(HttpState {
+            start: Instant::now(),
+            metrics: Arc::new(Metrics::default()),
+            cache: Arc::new(ResultCache::new(1024)),
+            admission: Arc::new(AdmissionController::new(AdmissionPolicy::default())),
+            scratch: Arc::new(ScratchPool::new(2)),
+            registry: Arc::new(InFlightRegistry::new()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let (addr, handle) = start_http("127.0.0.1:0", state, Arc::clone(&stop)).unwrap();
+        let get = |path: &str| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut body = String::new();
+            s.read_to_string(&mut body).unwrap();
+            body
+        };
+        let health = get("/healthz");
+        assert!(health.starts_with("HTTP/1.1 200 OK"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+        let metrics = get("/metrics");
+        assert!(metrics.contains("repro_jobs_completed 0"), "{metrics}");
+        assert!(metrics.contains("repro_cache_entries 0"), "{metrics}");
+        assert!(get("/nope").starts_with("HTTP/1.1 404"));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+}

@@ -5,19 +5,18 @@
 //! result streaming live in [`super::scheduler`], scratch reuse policy
 //! in [`super::scratch`].
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::Ordering;
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::complex::ComplexWorkspace;
 use crate::error::{Error, Result};
 use crate::homology::persistence_diagrams_cancellable;
 use crate::prune::DominationKernel;
 use crate::reduce::{combined_with_ws, pd_sharded_with, Reduction, ReductionWorkspace};
-use crate::util::{CancelToken, Timer};
-
-#[cfg(any(test, feature = "faults"))]
-use std::sync::Arc;
+use crate::util::{CancelToken, Rng, Timer};
 
 #[cfg(any(test, feature = "faults"))]
 use super::faults::FaultPlan;
@@ -75,7 +74,7 @@ pub fn degraded_spec(base: Reduction, attempt: u32, last: bool) -> (Reduction, b
 /// `scratch.reduce` (none by default). The result reports one attempt
 /// and [`JobOutcome::Success`]; the retry harness overwrites both.
 pub fn execute_job(scratch: &mut WorkerScratch, job: &Job, worker: usize) -> Result<JobResult> {
-    execute_attempt(scratch, job, worker, job.spec.reduction, false)
+    execute_attempt(scratch, job, worker, job.spec.reduction, job.spec.sharded)
 }
 
 /// One attempt of a job with an explicit (possibly degraded) reduction
@@ -151,9 +150,129 @@ pub(crate) struct AttemptPolicy {
     pub backoff_ms: u64,
     /// per-attempt wall-clock deadline (≤ 0 disables)
     pub deadline_secs: f64,
+    /// seed for the backoff jitter (mixed with job id and attempt)
+    pub jitter_seed: u64,
+    /// live attempt registry for the service watchdog (None outside serve)
+    pub inflight: Option<Arc<InFlightRegistry>>,
     /// scripted faults for the chaos suite
     #[cfg(any(test, feature = "faults"))]
     pub faults: Option<Arc<FaultPlan>>,
+}
+
+/// Backoff before re-running a failed attempt (0-based `attempt`): the
+/// deterministic exponential nominal (`backoff_ms << attempt`, capped at
+/// six doublings) with seeded equal-jitter — half the nominal is kept
+/// and the other half drawn uniformly from a [`Rng`] keyed on
+/// `(seed, job_id, attempt)`. Concurrent retries decorrelate (no
+/// thundering herd back into the queue) while staying fully reproducible
+/// for a fixed seed. A zero base disables backoff entirely, which the
+/// chaos suite relies on for determinism.
+pub fn jittered_backoff_ms(backoff_ms: u64, attempt: u32, seed: u64, job_id: u64) -> u64 {
+    if backoff_ms == 0 {
+        return 0;
+    }
+    let nominal = backoff_ms << attempt.min(6);
+    let half = nominal / 2;
+    let mut rng = Rng::new(
+        seed ^ job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((attempt as u64) << 32),
+    );
+    half + rng.next_u64() % (nominal - half + 1)
+}
+
+/// One live attempt as seen by the watchdog.
+#[derive(Debug)]
+struct InFlightAttempt {
+    job_id: u64,
+    started: Instant,
+    /// the attempt's own deadline in seconds (≤ 0 = none installed)
+    deadline_secs: f64,
+    token: CancelToken,
+    /// already cancelled by a sweep — never re-reported
+    cancelled: bool,
+}
+
+/// Live registry of executing attempts, shared between the workers and
+/// the service watchdog: each attempt registers its cancel token and
+/// deadline on entry and deregisters on exit, so a supervisor thread can
+/// cancel attempts that overstay — stuck between cancellation
+/// checkpoints past their deadline, or running with no deadline at all.
+/// When a registry is installed and no deadline is configured, the
+/// attempt harness installs a plain cancellable token instead of the
+/// free non-token, so the watchdog always has a handle it can fire.
+#[derive(Debug, Default)]
+pub struct InFlightRegistry {
+    next_ticket: AtomicU64,
+    entries: Mutex<HashMap<u64, InFlightAttempt>>,
+}
+
+impl InFlightRegistry {
+    pub fn new() -> InFlightRegistry {
+        InFlightRegistry::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<u64, InFlightAttempt>> {
+        // a worker panicking mid-insert leaves the map fully usable
+        self.entries.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register one attempt; returns the ticket to pass to `deregister`.
+    pub fn register(&self, job_id: u64, deadline_secs: f64, token: CancelToken) -> u64 {
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        self.lock().insert(
+            ticket,
+            InFlightAttempt {
+                job_id,
+                started: Instant::now(),
+                deadline_secs,
+                token,
+                cancelled: false,
+            },
+        );
+        ticket
+    }
+
+    /// Drop a finished attempt from the registry.
+    pub fn deregister(&self, ticket: u64) {
+        self.lock().remove(&ticket);
+    }
+
+    /// Attempts currently executing.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cancel every attempt that has overstayed: past its own deadline
+    /// plus `grace_secs`, or — for attempts running without a deadline —
+    /// past `default_limit_secs` (≤ 0 disables that default). Returns
+    /// the job ids newly cancelled by this sweep; attempts cancelled by
+    /// an earlier sweep are not re-reported.
+    pub fn cancel_overstayed(&self, default_limit_secs: f64, grace_secs: f64) -> Vec<u64> {
+        let now = Instant::now();
+        let mut cancelled = Vec::new();
+        for entry in self.lock().values_mut() {
+            if entry.cancelled {
+                continue;
+            }
+            let limit = if entry.deadline_secs > 0.0 {
+                entry.deadline_secs + grace_secs.max(0.0)
+            } else {
+                default_limit_secs
+            };
+            if limit <= 0.0 {
+                continue;
+            }
+            if now.duration_since(entry.started).as_secs_f64() > limit {
+                entry.token.cancel();
+                entry.cancelled = true;
+                cancelled.push(entry.job_id);
+            }
+        }
+        cancelled
+    }
 }
 
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -200,14 +319,29 @@ pub(crate) fn run_job_with_retries(
     loop {
         let last = attempt + 1 >= attempts_max;
         let (which, sharded) = degraded_spec(job.spec.reduction, attempt, last);
+        let sharded = sharded || job.spec.sharded;
+        // Per-attempt token, created out here so the in-flight registry
+        // can hand the watchdog a live handle: with a deadline it
+        // self-expires (and can still be cancelled); with a registry but
+        // no deadline it must be explicitly cancellable, because
+        // `from_secs(0)` is the free non-token nothing can fire.
+        let token = if policy.deadline_secs > 0.0 {
+            CancelToken::from_secs(policy.deadline_secs)
+        } else if policy.inflight.is_some() {
+            CancelToken::cancellable()
+        } else {
+            CancelToken::none()
+        };
+        let ticket = policy
+            .inflight
+            .as_ref()
+            .map(|reg| reg.register(job.id, policy.deadline_secs, token.clone()));
         // configure + guard one attempt; shared by both scratch sources
         // so they can never diverge. Returns (verdict, panicked).
         let one_attempt = |scratch: &mut WorkerScratch| -> (Result<JobResult>, bool) {
             scratch.reduce.set_prune_threads(prune_threads);
             scratch.reduce.set_domination_kernel(kernel);
-            scratch
-                .reduce
-                .set_cancel_token(CancelToken::from_secs(policy.deadline_secs));
+            scratch.reduce.set_cancel_token(token.clone());
             #[cfg(any(test, feature = "faults"))]
             scratch.reduce.set_fault_round_delay(
                 policy
@@ -255,6 +389,9 @@ pub(crate) fn run_job_with_retries(
                 res
             }
         };
+        if let (Some(reg), Some(t)) = (policy.inflight.as_ref(), ticket) {
+            reg.deregister(t);
+        }
         match result {
             Ok(mut r) => {
                 r.attempts = attempt + 1;
@@ -274,9 +411,12 @@ pub(crate) fn run_job_with_retries(
                 if e.is_transient() && !last {
                     metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
                     if policy.backoff_ms > 0 {
-                        std::thread::sleep(Duration::from_millis(
-                            policy.backoff_ms << attempt.min(6),
-                        ));
+                        std::thread::sleep(Duration::from_millis(jittered_backoff_ms(
+                            policy.backoff_ms,
+                            attempt,
+                            policy.jitter_seed,
+                            job.id,
+                        )));
                     }
                     attempt += 1;
                     continue;
@@ -362,7 +502,123 @@ mod tests {
             max_retries,
             backoff_ms: 0,
             deadline_secs,
+            jitter_seed: 0,
+            inflight: None,
             faults: Some(Arc::new(faults)),
+        }
+    }
+
+    #[test]
+    fn jittered_backoff_is_deterministic_and_bounded() {
+        // zero base disables backoff outright (chaos-suite determinism)
+        assert_eq!(jittered_backoff_ms(0, 3, 42, 7), 0);
+        // same (base, attempt, seed, job) → same sleep
+        assert_eq!(
+            jittered_backoff_ms(100, 2, 42, 7),
+            jittered_backoff_ms(100, 2, 42, 7)
+        );
+        // equal-jitter bounds: [nominal/2, nominal], doublings cap at 6
+        for attempt in 0..9u32 {
+            let nominal = 100u64 << attempt.min(6);
+            let v = jittered_backoff_ms(100, attempt, 1, 2);
+            assert!(
+                v >= nominal / 2 && v <= nominal,
+                "attempt={attempt} v={v} nominal={nominal}"
+            );
+        }
+        // different jobs decorrelate: across 16 job ids the draws differ
+        let vs: Vec<u64> = (0..16)
+            .map(|id| jittered_backoff_ms(1000, 3, 42, id))
+            .collect();
+        assert!(vs.iter().any(|&v| v != vs[0]), "{vs:?}");
+    }
+
+    #[test]
+    fn inflight_registry_cancels_overstayers_once() {
+        let reg = InFlightRegistry::new();
+        let t = CancelToken::cancellable();
+        let ticket = reg.register(1, 0.0, t.clone());
+        assert_eq!(reg.len(), 1);
+        // no default limit → no-deadline attempts are never cancelled
+        assert!(reg.cancel_overstayed(0.0, 0.0).is_empty());
+        assert!(!t.is_expired());
+        // a tiny default limit catches it
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(reg.cancel_overstayed(0.001, 0.0), vec![1]);
+        assert!(t.is_expired());
+        // idempotent: an already-cancelled entry is not re-reported
+        assert!(reg.cancel_overstayed(0.001, 0.0).is_empty());
+        reg.deregister(ticket);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn watchdog_cancel_unwinds_a_stuck_attempt() {
+        // no deadline, but a registry installed: the harness hands out a
+        // cancellable token, and an external sweep unwinds the attempt
+        // at its next checkpoint with Error::Cancelled
+        let pool = ScratchPool::new(1);
+        let metrics = Metrics::default();
+        let reg = Arc::new(InFlightRegistry::new());
+        let job = Job::degree_superlevel(
+            4,
+            gen::erdos_renyi(120, 0.1, 9),
+            JobSpec {
+                max_k: 1,
+                reduction: Reduction::FixedPoint,
+                sharded: false,
+            },
+        );
+        // every round sleeps 20ms, so the sweeper always wins the race
+        let plan = FaultPlan::new().delay_rounds(4, Duration::from_millis(20));
+        let mut p = policy(0, 0.0, plan);
+        p.inflight = Some(Arc::clone(&reg));
+        let sweeper = {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    if !reg.cancel_overstayed(0.001, 0.0).is_empty() {
+                        return true;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                false
+            })
+        };
+        let fail = run_job_with_retries(
+            &mut ScratchSource::Pool(&pool),
+            1,
+            DominationKernel::Auto,
+            &p,
+            &metrics,
+            &job,
+            0,
+        )
+        .unwrap_err();
+        assert!(sweeper.join().unwrap(), "sweep never saw the attempt");
+        assert!(matches!(fail.error, Error::Cancelled), "{:?}", fail.error);
+        // the finished attempt deregistered itself
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn spec_sharded_jobs_run_sharded_from_the_first_attempt() {
+        let mut scratch = WorkerScratch::new();
+        let g = gen::barabasi_albert(60, 2, 4);
+        let plain = execute_job(
+            &mut scratch,
+            &Job::degree_superlevel(0, g.clone(), JobSpec::default()),
+            0,
+        )
+        .unwrap();
+        let spec = JobSpec {
+            sharded: true,
+            ..JobSpec::default()
+        };
+        let sharded = execute_job(&mut scratch, &Job::degree_superlevel(0, g, spec), 0).unwrap();
+        assert!(!sharded.reduction.shard_sizes.is_empty(), "must have sharded");
+        for k in 0..plain.diagrams.len() {
+            assert!(plain.diagrams[k].same_as(&sharded.diagrams[k], 0.0));
         }
     }
 
@@ -451,6 +707,7 @@ mod tests {
             JobSpec {
                 max_k: 1,
                 reduction: Reduction::FixedPoint,
+                sharded: false,
             },
         );
         let plan = FaultPlan::new().delay_rounds(2, Duration::from_millis(50));

@@ -44,6 +44,13 @@ pub enum Error {
     /// A deterministic fault-injection plan raised this error on purpose
     /// (test / chaos-suite only).
     Injected(String),
+    /// The service's admission controller shed this job before execution:
+    /// queue, deadline-pressure, or memory budget would be exceeded and
+    /// the job's priority did not clear the load-shedding threshold.
+    /// Permanent from the service's point of view — the *client* may
+    /// resubmit later, but retrying inside the service would re-enter the
+    /// same overloaded queue it was just protected from.
+    Overloaded(String),
 }
 
 impl Error {
@@ -99,6 +106,7 @@ impl fmt::Display for Error {
             Error::Cancelled => write!(f, "job cancelled"),
             Error::JobPanicked(msg) => write!(f, "job panicked: {msg}"),
             Error::Injected(msg) => write!(f, "injected fault: {msg}"),
+            Error::Overloaded(msg) => write!(f, "overloaded: {msg}"),
         }
     }
 }

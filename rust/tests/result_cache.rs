@@ -1,0 +1,113 @@
+//! Content-addressed result cache: a cache hit must be bit-identical to
+//! the cold compute across the whole reduction matrix, keys must be
+//! sensitive to every input component, and the byte budget must be
+//! enforced in LRU order.
+
+use coral_prunit::complex::Filtration;
+use coral_prunit::coordinator::serve::diagram_digest;
+use coral_prunit::coordinator::{job_key, CachedResult, Coordinator, Job, JobSpec, ResultCache};
+use coral_prunit::datasets;
+use coral_prunit::homology::Diagram;
+use coral_prunit::reduce::Reduction;
+
+const REDUCTIONS: [Reduction; 5] = [
+    Reduction::None,
+    Reduction::Coral,
+    Reduction::Prunit,
+    Reduction::Combined,
+    Reduction::FixedPoint,
+];
+
+fn cold(idx: usize, reduction: Reduction) -> (Job, coral_prunit::coordinator::JobResult) {
+    let g = datasets::find("DHFR").unwrap().make(42, idx);
+    let f = Filtration::degree_superlevel(&g);
+    let job = Job::new(idx as u64, g, f, JobSpec { max_k: 1, reduction, sharded: false });
+    let result = Coordinator::execute(&job, 0).unwrap();
+    (job, result)
+}
+
+/// Property: for every reduction in the matrix, inserting a cold result
+/// and reading it back yields diagrams whose every `f64` is bit-equal —
+/// and an independent recompute digests identically (the pipeline is
+/// deterministic, so the cache can never be observed to change answers).
+#[test]
+fn cache_hits_are_bit_identical_to_cold_compute_across_reduction_matrix() {
+    let cache = ResultCache::new(64 << 20);
+    for reduction in REDUCTIONS {
+        for idx in 0..3 {
+            let (job, first) = cold(idx, reduction);
+            let key = job_key(&job.graph, &job.filtration, reduction, job.spec.max_k);
+            cache.insert(
+                key,
+                CachedResult {
+                    diagrams: first.diagrams.clone(),
+                    reduction: first.reduction.clone(),
+                },
+            );
+            let hit = cache.get(&key).expect("inserted key must hit");
+            assert_eq!(hit.diagrams.len(), first.diagrams.len());
+            for (a, b) in hit.diagrams.iter().zip(&first.diagrams) {
+                assert_eq!(a.all_pairs().len(), b.all_pairs().len());
+                for (&(b1, d1), &(b2, d2)) in a.all_pairs().iter().zip(b.all_pairs()) {
+                    assert_eq!(b1.to_bits(), b2.to_bits(), "{reduction:?} birth bits");
+                    assert_eq!(d1.to_bits(), d2.to_bits(), "{reduction:?} death bits");
+                }
+            }
+            // a second cold compute agrees bit-for-bit with what was cached
+            let (_, second) = cold(idx, reduction);
+            assert_eq!(
+                diagram_digest(&second.diagrams),
+                diagram_digest(&hit.diagrams),
+                "{reduction:?} instance {idx}: recompute differs from cached result"
+            );
+        }
+    }
+    assert_eq!(cache.stats().evictions, 0, "64 MiB budget must not evict here");
+}
+
+#[test]
+fn keys_separate_graph_filtration_reduction_and_dimension() {
+    let recipe = datasets::find("DHFR").unwrap();
+    let g0 = recipe.make(42, 0);
+    let g1 = recipe.make(42, 1);
+    let f0 = Filtration::degree_superlevel(&g0);
+    let f1 = Filtration::degree_superlevel(&g1);
+    let base = job_key(&g0, &f0, Reduction::Combined, 1);
+    assert_eq!(base, job_key(&g0, &f0, Reduction::Combined, 1), "deterministic");
+    assert_ne!(base, job_key(&g1, &f1, Reduction::Combined, 1), "graph");
+    assert_ne!(base, job_key(&g0, &f0, Reduction::Prunit, 1), "reduction");
+    assert_ne!(base, job_key(&g0, &f0, Reduction::Combined, 2), "max_k");
+}
+
+/// Fill a small cache past its byte budget and check the LRU contract:
+/// bytes stay under budget, the eviction counter advances, the oldest
+/// entry is gone, and a recently-touched entry survives.
+#[test]
+fn eviction_honours_byte_budget_in_lru_order() {
+    // one real report to clone into synthetic entries
+    let (_, seed) = cold(0, Reduction::None);
+    let entry = |tag: u64| CachedResult {
+        // 64 pairs ≈ 1 KiB per entry after overheads
+        diagrams: vec![Diagram::new(0, (0..64).map(|i| (tag as f64, i as f64)).collect())],
+        reduction: seed.reduction.clone(),
+    };
+    let one_size = entry(0).byte_size();
+    let budget = one_size * 3 + one_size / 2; // fits 3, not 4
+    let cache = ResultCache::new(budget);
+    let keys: Vec<_> = (0..4u64)
+        .map(|i| coral_prunit::coordinator::CacheKey(i as u128 + 1))
+        .collect();
+    for (i, k) in keys.iter().enumerate().take(3) {
+        cache.insert(*k, entry(i as u64));
+    }
+    assert_eq!(cache.stats().entries, 3);
+    // touch key 0 so key 1 becomes the LRU victim
+    assert!(cache.get(&keys[0]).is_some());
+    cache.insert(keys[3], entry(3));
+    let stats = cache.stats();
+    assert!(stats.bytes <= budget, "cache holds {} bytes over the {budget} budget", stats.bytes);
+    assert!(stats.evictions >= 1, "inserting past budget must evict");
+    assert!(cache.get(&keys[1]).is_none(), "LRU entry must be evicted");
+    assert!(cache.get(&keys[0]).is_some(), "recently-used entry must survive");
+    assert!(cache.get(&keys[3]).is_some(), "newest entry must survive");
+}

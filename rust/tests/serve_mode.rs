@@ -1,0 +1,327 @@
+//! Service-mode integration tests: overload accounting (every request
+//! reaches exactly one terminal state while `/healthz` keeps answering),
+//! fault-injected failures landing in the journal, and the SIGTERM
+//! drain contract driven against the real `repro serve` binary.
+
+#![cfg(unix)]
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::process::{Command, Stdio};
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use coral_prunit::config::{CoordinatorConfig, ServiceConfig};
+use coral_prunit::coordinator::serve::serve;
+use coral_prunit::coordinator::{JournalReplay, ServeOptions, ServeReport};
+
+/// Blocking reader fed line-batches over a channel; EOF when the sender
+/// drops. Lets a test hold the service's stdin open and pace requests.
+struct ChanReader {
+    rx: Receiver<Vec<u8>>,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl Read for ChanReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.buf.len() {
+            match self.rx.recv() {
+                Ok(b) => {
+                    self.buf = b;
+                    self.pos = 0;
+                }
+                Err(_) => return Ok(0),
+            }
+        }
+        let n = (self.buf.len() - self.pos).min(out.len());
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn base_options() -> ServeOptions {
+    ServeOptions {
+        coordinator: CoordinatorConfig {
+            workers: 2,
+            max_k: 1,
+            reduction: "combined".into(),
+            seed: 42,
+            prune_threads: 1,
+            ..CoordinatorConfig::default()
+        },
+        service: ServiceConfig {
+            http_addr: String::new(),
+            idle_evict_secs: 0.0,
+            stuck_job_secs: 0.0,
+            ..ServiceConfig::default()
+        },
+        ..ServeOptions::default()
+    }
+}
+
+/// Spawn `serve` on a thread; returns the request sender, the response
+/// receiver, and the join handle yielding the final report.
+#[allow(clippy::type_complexity)]
+fn spawn_serve(
+    opts: ServeOptions,
+) -> (
+    std::sync::mpsc::Sender<Vec<u8>>,
+    Receiver<String>,
+    std::thread::JoinHandle<ServeReport>,
+) {
+    let (in_tx, in_rx) = channel::<Vec<u8>>();
+    let (out_tx, out_rx) = channel::<String>();
+    let handle = std::thread::spawn(move || {
+        let input = ChanReader { rx: in_rx, buf: Vec::new(), pos: 0 };
+        let reader = std::io::BufReader::new(input);
+        serve(reader, opts, move |line| {
+            let _ = out_tx.send(line);
+        })
+        .expect("serve must drain cleanly")
+    });
+    (in_tx, out_rx, handle)
+}
+
+fn wait_for(rx: &Receiver<String>, needle: &str) -> String {
+    loop {
+        let line = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|_| panic!("timed out waiting for {needle:?}"));
+        if line.contains(needle) {
+            return line;
+        }
+    }
+}
+
+fn http_get(addr: &str, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect endpoint");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.read_to_string(&mut body).unwrap();
+    body
+}
+
+/// Overload run: a deliberately tiny admission window sheds most of a
+/// burst, yet every request reaches exactly one terminal state and the
+/// health endpoint keeps answering throughout.
+#[test]
+fn overloaded_burst_accounts_for_every_request_and_healthz_answers() {
+    let mut opts = base_options();
+    opts.coordinator.workers = 1;
+    opts.service.http_addr = "127.0.0.1:0".into();
+    opts.service.max_pending = 2;
+    opts.service.shed_pending = 1;
+    let (in_tx, out_rx, handle) = spawn_serve(opts);
+    let http_line = wait_for(&out_rx, "serve: http listening on ");
+    let addr = http_line.rsplit(' ').next().unwrap().to_string();
+
+    let health = http_get(&addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+
+    const BURST: usize = 24;
+    let mut lines = String::new();
+    for i in 0..BURST {
+        lines.push_str(&format!("id={i} dataset=DHFR instance={}\n", i % 8));
+    }
+    in_tx.send(lines.into_bytes()).unwrap();
+
+    // the endpoint must stay responsive while the burst is in flight
+    let metrics = http_get(&addr, "/metrics");
+    assert!(metrics.contains("repro_jobs_submitted"), "{metrics}");
+    assert!(metrics.contains("repro_cache_hits"), "{metrics}");
+
+    drop(in_tx); // EOF → drain
+    let report = handle.join().unwrap();
+    let terminal = report.completed
+        + report.failed
+        + report.shed
+        + report.cache_hits
+        + report.already_done
+        + report.bad_lines;
+    assert_eq!(terminal, BURST, "every request needs exactly one terminal state");
+    assert!(report.completed >= 1, "at least the first admit must complete");
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.bad_lines, 0);
+}
+
+/// Cache hits, shed responses, and plain successes coexist in one
+/// session; resubmitting a finished graph is answered from cache with a
+/// bit-identical digest.
+#[test]
+fn mixed_session_cache_hit_digest_matches_cold_compute() {
+    let (in_tx, out_rx, handle) = spawn_serve(base_options());
+    in_tx.send(b"id=0 dataset=DHFR instance=3\n".to_vec()).unwrap();
+    let cold = wait_for(&out_rx, "id=0 status=ok");
+    in_tx.send(b"id=1 dataset=DHFR instance=3\n".to_vec()).unwrap();
+    let hit = wait_for(&out_rx, "id=1 status=cached");
+    drop(in_tx);
+    let report = handle.join().unwrap();
+    assert_eq!(report.cache_hits, 1);
+    assert_eq!(report.completed, 1);
+    let digest = |l: &str| l.split("pd=").nth(1).unwrap().to_string();
+    assert_eq!(digest(&cold), digest(&hit), "cache answered different diagrams");
+}
+
+/// Fault-injected chaos: a job scripted to panic on every attempt must
+/// surface as a journaled failure — not a hang, not a lost id — while
+/// the rest of the stream completes.
+#[cfg(feature = "faults")]
+#[test]
+fn scripted_panic_becomes_a_journaled_failure_not_a_loss() {
+    use coral_prunit::coordinator::FaultPlan;
+    let mut journal = std::env::temp_dir();
+    journal.push(format!("coral-serve-chaos-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&journal);
+    let mut opts = base_options();
+    opts.coordinator.retry_backoff_ms = 1;
+    opts.journal_path = Some(journal.clone());
+    opts.faults = Some(FaultPlan::new().panic_always(1));
+    let (in_tx, out_rx, handle) = spawn_serve(opts);
+    for line in [
+        "id=0 dataset=DHFR instance=0\n",
+        "id=1 dataset=DHFR instance=1\n",
+        "id=2 dataset=DHFR instance=2\n",
+    ] {
+        in_tx.send(line.as_bytes().to_vec()).unwrap();
+    }
+    let failure = wait_for(&out_rx, "failed id=1");
+    assert!(failure.contains("attempts="), "{failure}");
+    drop(in_tx);
+    let report = handle.join().unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.failed, 1);
+    let replay = JournalReplay::load(&journal).unwrap();
+    assert!(replay.failed.contains(&1), "failure must reach the journal");
+    assert_eq!(replay.completed.len(), 2);
+    assert!(replay.orphaned().is_empty(), "no id may be left in limbo");
+    let _ = std::fs::remove_file(&journal);
+}
+
+/// Journal location for the SIGTERM test: CI pins it via
+/// `SERVE_JOURNAL_PATH` and uploads it as an artifact.
+fn serve_journal_path() -> std::path::PathBuf {
+    let p = match std::env::var_os("SERVE_JOURNAL_PATH") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let mut p = std::env::temp_dir();
+            p.push(format!("coral-serve-sigterm-{}.jsonl", std::process::id()));
+            p
+        }
+    };
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn completed_counts(path: &std::path::Path) -> BTreeMap<u64, usize> {
+    let text = std::fs::read_to_string(path).unwrap_or_default();
+    let mut counts = BTreeMap::new();
+    for line in text.lines() {
+        if !line.contains("\"event\":\"completed\"") {
+            continue;
+        }
+        if let Some(rest) = line.split("\"id\":").nth(1) {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(id) = digits.parse::<u64>() {
+                *counts.entry(id).or_insert(0) += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// SIGTERM the real `repro serve` binary mid-stream, assert it exits 0
+/// after draining, then resume with the same journal and prove no job
+/// was lost or run twice.
+#[test]
+fn sigterm_drains_exits_zero_and_resume_loses_nothing() {
+    const JOBS: u64 = 8;
+    let journal = serve_journal_path();
+    let serve_cmd = |j: &std::path::Path| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+        cmd.args(["serve", "--workers", "1", "--journal"])
+            .arg(j)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null());
+        cmd
+    };
+    let wait_exit = |child: &mut std::process::Child| {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            if let Some(status) = child.try_wait().expect("poll child") {
+                return status;
+            }
+            assert!(Instant::now() < deadline, "serve did not exit within 120s");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    };
+
+    // Incarnation 1: feed the stream, SIGTERM once progress is visible.
+    let mut child = serve_cmd(&journal).spawn().expect("spawn repro serve");
+    let mut stdin = child.stdin.take().expect("piped stdin");
+    for i in 0..JOBS {
+        writeln!(stdin, "id={i} dataset=DD instance={i}").expect("write request");
+    }
+    stdin.flush().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let done = JournalReplay::load(&journal)
+            .map(|r| r.completed.len())
+            .unwrap_or(0);
+        if done >= 1 {
+            break;
+        }
+        assert!(
+            child.try_wait().expect("poll child").is_none(),
+            "serve exited before SIGTERM with stdin still open"
+        );
+        assert!(Instant::now() < deadline, "no journal progress within 120s");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let term = Command::new("kill")
+        .arg("-TERM")
+        .arg(child.id().to_string())
+        .status()
+        .expect("send SIGTERM");
+    assert!(term.success());
+    let status = wait_exit(&mut child);
+    assert!(status.success(), "SIGTERM drain must exit 0, got {status:?}");
+    drop(stdin);
+
+    let replay = JournalReplay::load(&journal).unwrap();
+    assert!(
+        replay.orphaned().is_empty(),
+        "drain left in-flight ids orphaned: {:?}",
+        replay.orphaned()
+    );
+    for (id, count) in completed_counts(&journal) {
+        assert_eq!(count, 1, "job {id} completed {count} times before resume");
+    }
+
+    // Incarnation 2: same journal, same ids — completed ones are skipped
+    // (`already-done`), shed/unsubmitted ones run now; everything lands.
+    let mut child = serve_cmd(&journal).spawn().expect("resume repro serve");
+    let mut stdin = child.stdin.take().expect("piped stdin");
+    for i in 0..JOBS {
+        writeln!(stdin, "id={i} dataset=DD instance={i}").expect("write request");
+    }
+    drop(stdin); // EOF → drain → exit
+    let status = wait_exit(&mut child);
+    assert!(status.success(), "resume must exit 0, got {status:?}");
+
+    let replay = JournalReplay::load(&journal).unwrap();
+    let expected: Vec<u64> = (0..JOBS).collect();
+    let completed: Vec<u64> = replay.completed.iter().copied().collect();
+    assert_eq!(completed, expected, "lost or extra job ids after resume");
+    assert!(replay.orphaned().is_empty());
+    assert!(replay.failed.is_empty());
+    for (id, count) in completed_counts(&journal) {
+        assert_eq!(count, 1, "job {id} completed {count} times (duplicate run)");
+    }
+    if std::env::var_os("SERVE_JOURNAL_PATH").is_none() {
+        let _ = std::fs::remove_file(&journal);
+    }
+}
