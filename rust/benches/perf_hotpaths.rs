@@ -7,11 +7,26 @@ use coral_prunit::bench::{bench_auto, sink};
 use coral_prunit::complex::{CliqueComplex, Filtration, FlatComplex};
 use coral_prunit::graph::gen;
 use coral_prunit::homology::legacy;
-use coral_prunit::homology::reduction::{diagrams_of_complex, Algorithm};
-use coral_prunit::homology::{pd0, persistence_diagrams};
+use coral_prunit::homology::reduction::{
+    diagrams_of_complex, diagrams_of_complex_with, Algorithm, PhConfig,
+};
+use coral_prunit::homology::{pd0, persistence_diagrams, Diagram};
 use coral_prunit::kcore::coreness;
 use coral_prunit::prune::prunit;
 use coral_prunit::util::Table;
+
+/// Every `f64` bit-equal in every dimension — the chunked rows time an
+/// engine that must be indistinguishable from twist.
+fn assert_diagrams_bit_eq(a: &[Diagram], b: &[Diagram], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: diagram count");
+    for (da, db) in a.iter().zip(b) {
+        assert_eq!(da.all_pairs().len(), db.all_pairs().len(), "{ctx}: pair count");
+        for (x, y) in da.all_pairs().iter().zip(db.all_pairs()) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: birth");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: death");
+        }
+    }
+}
 
 fn main() {
     let mut t = Table::new(
@@ -213,6 +228,86 @@ fn main() {
     t.row(&["homology/standard".into(), format!("{} simplices", complex.len()), m_std.fmt_ms()]);
     let m_tw = bench_auto(|| sink(diagrams_of_complex(&complex, 2, Algorithm::Twist).len()));
     t.row(&["homology/twist".into(), format!("{} simplices", complex.len()), m_tw.fmt_ms()]);
+
+    // 4b. chunked persistence engine vs twist: the small row-4 workload
+    //     plus the dense ER(1200,0.15) hotpath, where the apparent-pair
+    //     prepass and the chunk-parallel local phase have real column
+    //     volume. Diagrams are asserted bit-identical to twist before
+    //     anything is timed; rows land in BENCH_hotpaths.json as stage
+    //     `ph` (pipeline `twist` vs `chunked-t{T}`).
+    {
+        use coral_prunit::util::{CancelToken, TeamSlot};
+        let dense = gen::erdos_renyi(1_200, 0.15, 6);
+        let f_dense = Filtration::degree_superlevel(&dense);
+        let dense_complex = FlatComplex::build(&dense, &f_dense, 2);
+        let cancel = CancelToken::none();
+        for (wl, c, max_k) in [
+            (format!("ER(300,0.1) {} simplices", complex.len()), &complex, 2usize),
+            (
+                format!("ER(1200,0.15) {} simplices", dense_complex.len()),
+                &dense_complex,
+                1,
+            ),
+        ] {
+            let mut team = TeamSlot::default();
+            let twist_cfg = PhConfig { algorithm: Algorithm::Twist, ..PhConfig::default() };
+            let (want, _) =
+                diagrams_of_complex_with(c, max_k, &twist_cfg, &mut team, &cancel).unwrap();
+            let m_tw = bench_auto(|| {
+                sink(
+                    diagrams_of_complex_with(c, max_k, &twist_cfg, &mut team, &cancel)
+                        .unwrap()
+                        .0
+                        .len(),
+                )
+            });
+            t.row(&["reduce/twist".into(), wl.clone(), m_tw.fmt_ms()]);
+            planner_records.push(JsonRecord {
+                bench: "perf_hotpaths".into(),
+                graph: wl.clone(),
+                pipeline: "twist".into(),
+                reduction: "none".into(),
+                stage: "ph".into(),
+                kernel: "auto".into(),
+                wall_secs: m_tw.median_secs,
+                removed_per_round: Vec::new(),
+                vertices_after: c.len(),
+            });
+            for threads in [1usize, 4] {
+                let cfg = PhConfig { algorithm: Algorithm::Chunked, threads, chunk_cols: 0 };
+                let (got, stats) =
+                    diagrams_of_complex_with(c, max_k, &cfg, &mut team, &cancel).unwrap();
+                assert_diagrams_bit_eq(&got, &want, &wl);
+                let m = bench_auto(|| {
+                    sink(
+                        diagrams_of_complex_with(c, max_k, &cfg, &mut team, &cancel)
+                            .unwrap()
+                            .0
+                            .len(),
+                    )
+                });
+                t.row(&[
+                    format!("reduce/chunked-t{threads}"),
+                    format!(
+                        "{wl} ({} apparent / {} reduced)",
+                        stats.apparent_pairs, stats.reduced_pairs
+                    ),
+                    m.fmt_ms(),
+                ]);
+                planner_records.push(JsonRecord {
+                    bench: "perf_hotpaths".into(),
+                    graph: wl.clone(),
+                    pipeline: format!("chunked-t{threads}"),
+                    reduction: "none".into(),
+                    stage: "ph".into(),
+                    kernel: "auto".into(),
+                    wall_secs: m.median_secs,
+                    removed_per_round: Vec::new(),
+                    vertices_after: c.len(),
+                });
+            }
+        }
+    }
 
     // 5. legacy HashMap boundary-matrix build on the row-4 workload — the
     //    pass the flat layout folds into construction

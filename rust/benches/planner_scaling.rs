@@ -28,6 +28,14 @@
 //! one — CI runs a merge-vs-bitset matrix), rows carry pipeline
 //! `in-place-k{K}`, and every pinned run is asserted bit-identical to
 //! the sequential merge-kernel reference before it is timed.
+//!
+//! A **persistence-engine sweep** times the boundary-matrix reduction
+//! itself on the dense ER(1200,0.15) hotpath: `twist` vs the
+//! apparent-pair + chunk-parallel `chunked` engine (`--ph-threads T`
+//! pins one chunked thread count — CI runs a t1-vs-t4 matrix and
+//! uploads one artifact per setting). Diagrams are asserted
+//! bit-identical to twist before anything is timed; rows carry stage
+//! `ph` and pipeline `twist` / `chunked-t{T}`.
 
 use coral_prunit::bench::json::{write_records, JsonRecord};
 use coral_prunit::bench::{bench_auto, sink};
@@ -87,6 +95,16 @@ fn main() {
             DominationKernel::parse(argv.get(i + 1).expect("--domination-kernel: missing value"))
                 .expect("--domination-kernel: auto|merge|bitset")
         });
+    let fixed_ph_threads: Option<usize> = argv.iter().position(|a| a == "--ph-threads").map(|i| {
+        argv.get(i + 1)
+            .expect("--ph-threads: missing value")
+            .parse()
+            .expect("--ph-threads: expected integer")
+    });
+    let ph_sweep: Vec<usize> = match fixed_ph_threads {
+        Some(t) => vec![t],
+        None => vec![1, 4],
+    };
     let requested = fixed_kernel.unwrap_or_default();
     let kernel_sweep: Vec<DominationKernel> = match fixed_kernel {
         Some(k) => vec![k],
@@ -302,6 +320,99 @@ fn main() {
                 wall_secs: median,
                 removed_per_round: removed_per_round.clone(),
                 vertices_after: reference.graph.n(),
+            });
+        }
+    }
+
+    // Persistence-engine sweep: twist vs chunked on the dense
+    // ER(1200,0.15) clique complex (dim ≤ 2 — enough column volume that
+    // the apparent-pair prepass and the parallel local phase are both
+    // exercised; the sparse planner workloads above have near-empty
+    // higher skeletons). The same graph in both profiles: the quick CI
+    // artifact and the full run record the same hotpath row.
+    {
+        use coral_prunit::complex::FlatComplex;
+        use coral_prunit::homology::{diagrams_of_complex_with, Algorithm, Diagram, PhConfig};
+        use coral_prunit::util::{CancelToken, TeamSlot};
+
+        fn assert_bit_eq(a: &[Diagram], b: &[Diagram], ctx: &str) {
+            assert_eq!(a.len(), b.len(), "{ctx}: diagram count");
+            for (da, db) in a.iter().zip(b) {
+                assert_eq!(da.all_pairs().len(), db.all_pairs().len(), "{ctx}: pair count");
+                for (x, y) in da.all_pairs().iter().zip(db.all_pairs()) {
+                    assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: birth");
+                    assert_eq!(x.1.to_bits(), y.1.to_bits(), "{ctx}: death");
+                }
+            }
+        }
+
+        let dense = gen::erdos_renyi(1_200, 0.15, 6);
+        let f_dense = Filtration::degree_superlevel(&dense);
+        let complex = FlatComplex::build(&dense, &f_dense, 2);
+        let graph_label = format!("ER(1200,0.15) [{} simplices]", complex.len());
+        let cancel = CancelToken::none();
+        let mut team = TeamSlot::default();
+        let twist_cfg = PhConfig { algorithm: Algorithm::Twist, ..PhConfig::default() };
+        let (want, _) =
+            diagrams_of_complex_with(&complex, 1, &twist_cfg, &mut team, &cancel).unwrap();
+        let m_tw = bench_auto(|| {
+            sink(
+                diagrams_of_complex_with(&complex, 1, &twist_cfg, &mut team, &cancel)
+                    .unwrap()
+                    .0
+                    .len(),
+            )
+        });
+        t.row(&[
+            graph_label.clone(),
+            "none".into(),
+            "twist".into(),
+            dense.n().to_string(),
+            "-".into(),
+            m_tw.fmt_ms(),
+        ]);
+        records.push(JsonRecord {
+            bench: "planner_scaling".into(),
+            graph: graph_label.clone(),
+            pipeline: "twist".into(),
+            reduction: "none".into(),
+            stage: "ph".into(),
+            kernel: "auto".into(),
+            wall_secs: m_tw.median_secs,
+            removed_per_round: Vec::new(),
+            vertices_after: dense.n(),
+        });
+        for &threads in &ph_sweep {
+            let cfg = PhConfig { algorithm: Algorithm::Chunked, threads, chunk_cols: 0 };
+            let (got, stats) =
+                diagrams_of_complex_with(&complex, 1, &cfg, &mut team, &cancel).unwrap();
+            assert_bit_eq(&got, &want, &format!("chunked-t{threads}"));
+            let m = bench_auto(|| {
+                sink(
+                    diagrams_of_complex_with(&complex, 1, &cfg, &mut team, &cancel)
+                        .unwrap()
+                        .0
+                        .len(),
+                )
+            });
+            t.row(&[
+                graph_label.clone(),
+                format!("{} apparent / {} reduced", stats.apparent_pairs, stats.reduced_pairs),
+                format!("chunked-t{threads}"),
+                dense.n().to_string(),
+                "-".into(),
+                m.fmt_ms(),
+            ]);
+            records.push(JsonRecord {
+                bench: "planner_scaling".into(),
+                graph: graph_label.clone(),
+                pipeline: format!("chunked-t{threads}"),
+                reduction: "none".into(),
+                stage: "ph".into(),
+                kernel: "auto".into(),
+                wall_secs: m.median_secs,
+                removed_per_round: Vec::new(),
+                vertices_after: dense.n(),
             });
         }
     }

@@ -39,7 +39,8 @@ fn main() {
 
     // Stream ego-network jobs straight off the big graph — the bounded
     // queue means we never materialise all 2000 subgraphs at once.
-    let spec = JobSpec { max_k: 0, reduction: Reduction::Prunit, sharded: false };
+    let spec =
+        JobSpec { max_k: 0, reduction: Reduction::Prunit, sharded: false, ..JobSpec::default() };
     let graph = &g;
     let jobs = (0..EGO_COUNT as u64).map(move |i| {
         let center = (i as usize * 7919) % graph.n(); // deterministic spread

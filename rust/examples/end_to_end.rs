@@ -47,7 +47,11 @@ fn main() {
             .cloned()
             .enumerate()
             .map(|(i, g)| {
-                Job::degree_superlevel(i as u64, g, JobSpec { max_k: 1, reduction, sharded: false })
+                Job::degree_superlevel(
+                    i as u64,
+                    g,
+                    JobSpec { max_k: 1, reduction, sharded: false, ..JobSpec::default() },
+                )
             })
             .collect();
         let t = Timer::start();

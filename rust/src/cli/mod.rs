@@ -3,18 +3,19 @@
 
 use std::collections::BTreeMap;
 
-use crate::complex::{CliqueComplex, Filtration};
+use crate::complex::{CliqueComplex, ComplexWorkspace, Filtration};
 use crate::config::{Config, CoordinatorConfig, ServiceConfig};
 use crate::coordinator::{Coordinator, Job, JobSpec, ResumeReport, ServeOptions};
 use crate::datasets;
 use crate::error::{Error, Result};
-use crate::homology::{legacy, persistence_diagrams, Algorithm};
+use crate::homology::{legacy, persistence_diagrams, persistence_diagrams_ph, Algorithm, PhConfig};
 use crate::prune::DominationKernel;
 use crate::reduce::{
     combined_with_ws, pd_sharded_with, pd_with_reduction_ws, Reduction, ReductionWorkspace,
 };
 use crate::runtime::XlaRuntime;
-use crate::util::Table;
+use crate::util::team::TeamSlot;
+use crate::util::{CancelToken, Table};
 
 /// Parsed command line: subcommand + `--key value` flags.
 #[derive(Clone, Debug, Default)]
@@ -120,6 +121,13 @@ COMMANDS:
                                      (0 = adaptive, 1 = inline)
            [--domination-kernel auto|merge|bitset]
            [--shard] [--workers W]   component-sharded parallel PH
+           [--ph-algorithm standard|twist|chunked]
+                                     boundary-matrix reduction engine;
+                                     chunked adds the apparent-pair
+                                     prepass + chunk-parallel reduction
+                                     (diagrams bit-identical everywhere)
+           [--ph-threads T]          threads for the chunked engine
+                                     (default 1; 0 = all cores)
            [--engine flat|legacy]    columnar engine (default) or the
                                      AoS reference engine (cross-check)
   batch    --dataset NAME      run the batch coordinator over all instances
@@ -128,6 +136,10 @@ COMMANDS:
                                      the worker pool owns the cores;
                                      0 = adaptive per-round ramp)
            [--domination-kernel auto|merge|bitset]
+           [--ph-algorithm standard|twist|chunked]
+                                     per-job persistence engine
+           [--ph-threads T]          per-job PH threads (default 1: the
+                                     worker pool owns the cores)
            [--large-job-order N]     route jobs with >= N vertices to the
                                      dedicated high-tier worker (0 =
                                      first order past the top scratch
@@ -146,7 +158,8 @@ COMMANDS:
   serve                        always-on reduction service: newline-
                                delimited `key=value` requests on stdin
                                (`id= dataset= instance= seed= k=
-                               reduction= priority=`), one response line
+                               reduction= priority= ph_algorithm=
+                               ph_threads=`), one response line
                                per request on stdout; SIGTERM/SIGINT
                                drains in-flight work and exits 0
            [--config FILE]           reads [coordinator] + [service] keys
@@ -157,6 +170,7 @@ COMMANDS:
                                      compacts past journal_compact_bytes
            [--workers W] [--k K] [--prune-threads T]
            [--domination-kernel auto|merge|bitset]
+           [--ph-algorithm standard|twist|chunked] [--ph-threads T]
            [--job-deadline-secs S] [--max-retries N]
            [--retry-backoff-ms MS]
            [--max-pending N]         admission: hard queue cap
@@ -295,6 +309,11 @@ fn cmd_pd(args: &Args) -> Result<i32> {
     let workers = args.flag_usize("workers", default_workers)?;
     let prune_threads = args.flag_usize("prune-threads", 1)?;
     let kernel = DominationKernel::parse(args.flag("domination-kernel").unwrap_or("auto"))?;
+    let ph = PhConfig {
+        algorithm: Algorithm::parse(args.flag("ph-algorithm").unwrap_or("twist"))?,
+        threads: args.flag_usize("ph-threads", 1)?,
+        chunk_cols: 0,
+    };
     let g = recipe.make(seed, idx);
     let f = Filtration::degree_superlevel(&g);
     println!(
@@ -305,6 +324,7 @@ fn cmd_pd(args: &Args) -> Result<i32> {
     );
     let mut rws = ReductionWorkspace::with_prune_threads(prune_threads);
     rws.set_domination_kernel(kernel);
+    rws.set_ph(ph);
     let pds = if engine == "legacy" {
         let red = combined_with_ws(&mut rws, &g, &f, k, which)?;
         let c = CliqueComplex::build(&red.graph, &red.filtration, k + 1);
@@ -346,7 +366,17 @@ fn cmd_pd(args: &Args) -> Result<i32> {
         );
         pds
     } else {
-        persistence_diagrams(&g, &f, k)
+        let mut team = TeamSlot::default();
+        let (pds, _) = persistence_diagrams_ph(
+            &mut ComplexWorkspace::new(),
+            &g,
+            &f,
+            k,
+            &ph,
+            &mut team,
+            &CancelToken::none(),
+        )?;
+        pds
     };
     for d in &pds {
         println!("  {d}");
@@ -375,9 +405,18 @@ fn cmd_batch(args: &Args) -> Result<i32> {
     cfg.max_retries = args.flag_usize("max-retries", cfg.max_retries)?;
     cfg.retry_backoff_ms = args.flag_u64("retry-backoff-ms", cfg.retry_backoff_ms)?;
     cfg.large_job_order = args.flag_usize("large-job-order", cfg.large_job_order)?;
+    if let Some(alg) = args.flag("ph-algorithm") {
+        cfg.ph_algorithm = alg.to_string();
+    }
+    cfg.ph_threads = args.flag_usize("ph-threads", cfg.ph_threads)?;
     // validate up front so a bad value fails before any worker spawns
     DominationKernel::parse(&cfg.domination_kernel)?;
     let reduction = parse_reduction(&cfg.reduction.clone())?;
+    let ph = PhConfig {
+        algorithm: Algorithm::parse(&cfg.ph_algorithm)?,
+        threads: cfg.ph_threads,
+        chunk_cols: 0,
+    };
     let coordinator = Coordinator::new(cfg.clone());
     let jobs: Vec<Job> = (0..recipe.instances)
         .map(|i| {
@@ -388,6 +427,7 @@ fn cmd_batch(args: &Args) -> Result<i32> {
                     max_k: cfg.max_k,
                     reduction,
                     sharded: false,
+                    ph,
                 },
             )
         })
@@ -475,6 +515,10 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     cfg.job_deadline_secs = args.flag_f64("job-deadline-secs", cfg.job_deadline_secs)?;
     cfg.max_retries = args.flag_usize("max-retries", cfg.max_retries)?;
     cfg.retry_backoff_ms = args.flag_u64("retry-backoff-ms", cfg.retry_backoff_ms)?;
+    if let Some(alg) = args.flag("ph-algorithm") {
+        cfg.ph_algorithm = alg.to_string();
+    }
+    cfg.ph_threads = args.flag_usize("ph-threads", cfg.ph_threads)?;
     if let Some(addr) = args.flag("http") {
         svc.http_addr = addr.to_string();
     }
@@ -489,6 +533,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     // validate up front so a bad config fails before any thread spawns
     DominationKernel::parse(&cfg.domination_kernel)?;
     parse_reduction(&cfg.reduction)?;
+    Algorithm::parse(&cfg.ph_algorithm)?;
     crate::coordinator::install_signal_handlers();
     let opts = ServeOptions {
         coordinator: cfg,
@@ -679,6 +724,32 @@ mod tests {
         );
         // unknown kernel names are a parse error, not a silent fallback
         assert!(run(&argv("pd --dataset DHFR --domination-kernel simd")).is_err());
+    }
+
+    #[test]
+    fn ph_algorithm_flag_runs_and_validates() {
+        assert_eq!(
+            run(&argv("pd --dataset DHFR --ph-algorithm chunked --ph-threads 2 --k 1")).unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv(
+                "pd --dataset DHFR --reduction combined --ph-algorithm standard --k 1"
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run(&argv(
+                "batch --dataset DHFR --workers 2 --ph-algorithm chunked --ph-threads 2"
+            ))
+            .unwrap(),
+            0
+        );
+        // unknown engine names are a parse error, not a silent fallback
+        assert!(run(&argv("pd --dataset DHFR --ph-algorithm fast")).is_err());
+        assert!(run(&argv("batch --dataset DHFR --ph-algorithm fast")).is_err());
+        assert!(run(&argv("pd --dataset DHFR --ph-threads lots")).is_err());
     }
 
     #[test]

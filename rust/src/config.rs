@@ -183,6 +183,16 @@ pub struct CoordinatorConfig {
     /// compacts the file (drops superseded per-job history) before
     /// appending (`coordinator.journal_compact_bytes`; `0` disables).
     pub journal_compact_bytes: u64,
+    /// Persistence reduction algorithm per job (`--ph-algorithm`):
+    /// `standard`, `twist`, or `chunked`. Diagrams are bit-identical at
+    /// every setting; only wall time changes.
+    pub ph_algorithm: String,
+    /// Threads for the chunked persistence reduction (`--ph-threads`).
+    /// `0` resolves to available parallelism; `1` (the default) keeps
+    /// jobs single-threaded so the worker pool owns the cores. Sharded
+    /// execution splits this budget across shard workers instead of
+    /// oversubscribing.
+    pub ph_threads: usize,
 }
 
 impl CoordinatorConfig {
@@ -204,6 +214,8 @@ impl CoordinatorConfig {
             retry_jitter_seed: cfg.get_u64("coordinator.retry_jitter_seed", 42)?,
             large_job_order: cfg.get_usize("coordinator.large_job_order", 0)?,
             journal_compact_bytes: cfg.get_u64("coordinator.journal_compact_bytes", 1 << 20)?,
+            ph_algorithm: cfg.get_str("coordinator.ph_algorithm", "twist"),
+            ph_threads: cfg.get_usize("coordinator.ph_threads", 1)?,
         })
     }
 }
@@ -387,6 +399,18 @@ mod tests {
         let cc = CoordinatorConfig::from_config(&cfg).unwrap();
         assert_eq!(cc.domination_kernel, "bitset");
         assert_eq!(CoordinatorConfig::default().domination_kernel, "auto");
+    }
+
+    #[test]
+    fn ph_keys_are_read_with_defaults() {
+        let dflt = CoordinatorConfig::default();
+        assert_eq!(dflt.ph_algorithm, "twist");
+        assert_eq!(dflt.ph_threads, 1);
+        let cfg =
+            Config::parse("[coordinator]\nph_algorithm = \"chunked\"\nph_threads = 4\n").unwrap();
+        let cc = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(cc.ph_algorithm, "chunked");
+        assert_eq!(cc.ph_threads, 4);
     }
 
     #[test]

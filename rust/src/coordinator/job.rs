@@ -5,7 +5,7 @@ use std::fmt;
 use crate::complex::Filtration;
 use crate::error::Error;
 use crate::graph::Graph;
-use crate::homology::Diagram;
+use crate::homology::{Diagram, PhConfig};
 use crate::reduce::{Reduction, ReductionReport};
 
 /// What to compute for one graph.
@@ -21,6 +21,10 @@ pub struct JobSpec {
     /// detail); the service's admission controller sets this when it
     /// degrades a job under CPU pressure.
     pub sharded: bool,
+    /// Persistence-engine settings (algorithm, thread budget, chunk
+    /// size). Diagrams are bit-identical at every setting, so the result
+    /// cache deliberately ignores this field.
+    pub ph: PhConfig,
 }
 
 impl Default for JobSpec {
@@ -29,6 +33,7 @@ impl Default for JobSpec {
             max_k: 1,
             reduction: Reduction::Combined,
             sharded: false,
+            ph: PhConfig::default(),
         }
     }
 }

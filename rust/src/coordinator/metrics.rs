@@ -42,6 +42,11 @@ pub struct Metrics {
     /// in-flight attempts cancelled by the service watchdog after
     /// overstaying their deadline
     pub watchdog_cancels: AtomicU64,
+    /// persistence pairs resolved by the apparent-pair prepass (free:
+    /// no column additions were spent on them)
+    pub ph_apparent_pairs: AtomicU64,
+    /// persistence pairs that needed actual column reduction
+    pub ph_reduced_pairs: AtomicU64,
 }
 
 impl Metrics {
@@ -54,6 +59,14 @@ impl Metrics {
         self.vertices_out.fetch_add(v_out as u64, Ordering::Relaxed);
         self.edges_in.fetch_add(e_in as u64, Ordering::Relaxed);
         self.edges_out.fetch_add(e_out as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one job's persistence-pair split into the counters.
+    pub fn record_ph_pairs(&self, apparent: usize, reduced: usize) {
+        self.ph_apparent_pairs
+            .fetch_add(apparent as u64, Ordering::Relaxed);
+        self.ph_reduced_pairs
+            .fetch_add(reduced as u64, Ordering::Relaxed);
     }
 
     pub fn completed(&self) -> u64 {
@@ -228,6 +241,15 @@ mod tests {
         assert!(s.contains("shed=7"), "{s}");
         assert!(s.contains("admission_degraded=2"), "{s}");
         assert!(s.contains("watchdog_cancels=1"), "{s}");
+    }
+
+    #[test]
+    fn ph_pair_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_ph_pairs(10, 3);
+        m.record_ph_pairs(5, 0);
+        assert_eq!(m.ph_apparent_pairs.load(Ordering::Relaxed), 15);
+        assert_eq!(m.ph_reduced_pairs.load(Ordering::Relaxed), 3);
     }
 
     #[test]

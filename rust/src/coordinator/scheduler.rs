@@ -53,14 +53,17 @@ fn note_result(
     result: &std::result::Result<JobResult, JobFailure>,
 ) {
     match result {
-        Ok(r) => metrics.record(
-            r.reduction.reduce_secs,
-            r.ph_secs,
-            v_in,
-            r.reduction.vertices_after,
-            e_in,
-            r.reduction.edges_after,
-        ),
+        Ok(r) => {
+            metrics.record(
+                r.reduction.reduce_secs,
+                r.ph_secs,
+                v_in,
+                r.reduction.vertices_after,
+                e_in,
+                r.reduction.edges_after,
+            );
+            metrics.record_ph_pairs(r.reduction.ph_apparent_pairs, r.reduction.ph_reduced_pairs);
+        }
         Err(_) => {
             metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
         }
@@ -483,6 +486,8 @@ mod tests {
             retry_jitter_seed: 0,
             large_job_order: 0,
             journal_compact_bytes: 0,
+            ph_algorithm: "twist".into(),
+            ph_threads: 1,
         }
     }
 
@@ -618,6 +623,7 @@ mod tests {
                 max_k: 0,
                 reduction: Reduction::Prunit,
                 sharded: false,
+                ..JobSpec::default()
             },
         );
         let res = c.run(vec![job]).unwrap();
@@ -821,6 +827,7 @@ mod tests {
                 max_k: 1,
                 reduction: Reduction::FixedPoint,
                 sharded: false,
+                ..JobSpec::default()
             },
         );
         let res = c.run(vec![job]).unwrap();

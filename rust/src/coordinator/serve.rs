@@ -48,7 +48,7 @@ use crate::complex::Filtration;
 use crate::config::{CoordinatorConfig, ServiceConfig};
 use crate::datasets;
 use crate::error::{Error, Result};
-use crate::homology::Diagram;
+use crate::homology::{Algorithm, Diagram, PhConfig};
 use crate::reduce::Reduction;
 
 use super::admission::{AdmissionController, AdmissionDecision, AdmissionPolicy, DEFAULT_PRIORITY};
@@ -139,6 +139,7 @@ struct Request {
     max_k: usize,
     reduction: Reduction,
     priority: u8,
+    ph: PhConfig,
 }
 
 /// Parse one `key=value`-token request line. `dataset=` is required;
@@ -154,6 +155,11 @@ fn parse_request(line: &str, defaults: &CoordinatorConfig, next_id: u64) -> Resu
         max_k: defaults.max_k,
         reduction: crate::cli::parse_reduction(&defaults.reduction)?,
         priority: DEFAULT_PRIORITY,
+        ph: PhConfig {
+            algorithm: Algorithm::parse(&defaults.ph_algorithm)?,
+            threads: defaults.ph_threads,
+            chunk_cols: 0,
+        },
     };
     for tok in line.split_whitespace() {
         let (key, val) = tok
@@ -171,6 +177,8 @@ fn parse_request(line: &str, defaults: &CoordinatorConfig, next_id: u64) -> Resu
             "k" => req.max_k = int("k")? as usize,
             "reduction" => req.reduction = crate::cli::parse_reduction(val)?,
             "priority" => req.priority = int("priority")?.min(u8::MAX as u64) as u8,
+            "ph_algorithm" => req.ph.algorithm = Algorithm::parse(val)?,
+            "ph_threads" => req.ph.threads = int("ph_threads")? as usize,
             other => {
                 return Err(Error::Parse(format!("unknown request key {other:?}")));
             }
@@ -408,6 +416,31 @@ where
             journal_err.borrow_mut().get_or_insert(e);
         }
     };
+    // Mid-run compaction: once the file outgrows the threshold, close the
+    // append handle (the compactor atomically renames a rewrite over the
+    // path, so appending through the old handle would write to the
+    // unlinked inode), compact, reopen. In-flight jobs are exactly the
+    // orphans compaction preserves, so a crash right after is resumable.
+    let compact_threshold = opts.coordinator.journal_compact_bytes;
+    let maybe_compact = || {
+        let (Some(path), true) = (opts.journal_path.as_ref(), compact_threshold > 0) else {
+            return;
+        };
+        let mut slot = journal.borrow_mut();
+        if slot.is_none() {
+            return;
+        }
+        let over = std::fs::metadata(path).map(|m| m.len() > compact_threshold).unwrap_or(false);
+        if !over {
+            return;
+        }
+        *slot = None;
+        note_journal(
+            Journal::compact_if_larger(path, compact_threshold)
+                .and_then(|_| Journal::open(path))
+                .map(|j| *slot = Some(j)),
+        );
+    };
 
     // Answer one non-Run event; shared by the live loop and the
     // shutdown drain (where queued Run events are shed back too).
@@ -430,6 +463,7 @@ where
                 Some(j) => j.record_cached(id),
                 None => Ok(()),
             });
+            maybe_compact();
             report.borrow_mut().cache_hits += 1;
             emit(format!(
                 "done id={id} status=cached reduction={} pd={:016x}",
@@ -503,6 +537,7 @@ where
             Some(j) => j.record_completed(&r),
             None => Ok(()),
         });
+        maybe_compact();
         let degraded = admission_degraded || r.outcome.is_degraded();
         {
             let mut rep = report.borrow_mut();
@@ -529,6 +564,7 @@ where
             Some(j) => j.record_failed(&f),
             None => Ok(()),
         });
+        maybe_compact();
         report.borrow_mut().failed += 1;
         emit(format!(
             "failed id={} attempts={} error={}",
@@ -593,7 +629,8 @@ fn admit_request(
     match admission.admit(g.n(), g.m(), req.priority) {
         AdmissionDecision::Shed { reason } => Ok(Event::Shed { id: req.id, reason }),
         AdmissionDecision::Admit { charged_bytes } => {
-            let spec = JobSpec { max_k: req.max_k, reduction: req.reduction, sharded: false };
+            let spec =
+                JobSpec { max_k: req.max_k, reduction: req.reduction, sharded: false, ph: req.ph };
             Ok(Event::Run {
                 job: Job::new(req.id, g, f, spec),
                 meta: Meta { key, charged: charged_bytes, admission_degraded: false },
@@ -607,6 +644,7 @@ fn admit_request(
                 max_k: req.max_k,
                 reduction: Reduction::FixedPoint,
                 sharded: true,
+                ph: req.ph,
             };
             let key = cache_enabled.then(|| job_key(&g, &f, Reduction::FixedPoint, req.max_k));
             Ok(Event::Run {
@@ -709,6 +747,26 @@ fn render_metrics(s: &HttpState) -> String {
     let _ = writeln!(o, "repro_jobs_admission_degraded {}", m.jobs_admission_degraded());
     let _ = writeln!(o, "repro_watchdog_cancels {}", m.watchdog_cancels());
     let _ = writeln!(o, "repro_deadline_misses {}", m.deadline_misses());
+    let _ = writeln!(
+        o,
+        "repro_reduce_seconds_total {:.6}",
+        m.reduce_us.load(Ordering::Relaxed) as f64 / 1e6
+    );
+    let _ = writeln!(
+        o,
+        "repro_ph_seconds_total {:.6}",
+        m.ph_us.load(Ordering::Relaxed) as f64 / 1e6
+    );
+    let _ = writeln!(
+        o,
+        "repro_ph_apparent_pairs {}",
+        m.ph_apparent_pairs.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        o,
+        "repro_ph_reduced_pairs {}",
+        m.ph_reduced_pairs.load(Ordering::Relaxed)
+    );
     let _ = writeln!(o, "repro_inflight_attempts {}", s.registry.len());
     let _ = writeln!(o, "repro_cache_entries {}", cs.entries);
     let _ = writeln!(o, "repro_cache_bytes {}", cs.bytes);
@@ -764,8 +822,10 @@ mod tests {
         assert_eq!(r.seed, cfg.seed);
         assert_eq!(r.max_k, cfg.max_k);
         assert_eq!(r.priority, DEFAULT_PRIORITY);
+        assert_eq!(r.ph, PhConfig::default());
         let r = parse_request(
-            "id=3 dataset=DHFR instance=1 seed=9 k=0 reduction=prunit priority=8",
+            "id=3 dataset=DHFR instance=1 seed=9 k=0 reduction=prunit priority=8 \
+             ph_algorithm=chunked ph_threads=4",
             &cfg,
             0,
         )
@@ -780,11 +840,13 @@ mod tests {
                 max_k: 0,
                 reduction: Reduction::Prunit,
                 priority: 8,
+                ph: PhConfig { algorithm: Algorithm::Chunked, threads: 4, chunk_cols: 0 },
             }
         );
         assert!(parse_request("k=1", &cfg, 0).is_err()); // no dataset
         assert!(parse_request("dataset=DHFR k=soon", &cfg, 0).is_err());
         assert!(parse_request("dataset=DHFR frobnicate=1", &cfg, 0).is_err());
+        assert!(parse_request("dataset=DHFR ph_algorithm=nope", &cfg, 0).is_err());
     }
 
     #[test]
@@ -918,6 +980,52 @@ mod tests {
     }
 
     #[test]
+    fn journal_compacts_mid_run_once_past_threshold() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("coral-serve-compact-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut o = opts();
+        o.journal_path = Some(path.clone());
+        // 1-byte threshold: every terminal record trips compaction, so the
+        // rewrite + handle-reopen path runs several times in one serve
+        o.coordinator.journal_compact_bytes = 1;
+        let input = "id=0 dataset=DHFR\nid=1 dataset=DHFR instance=1\nid=2 dataset=DHFR instance=2\n";
+        let (report, _) = run_lines(input, o);
+        assert_eq!(report.completed, 3);
+        // the compacted journal still replays every completion (nothing
+        // recomputes on resume) and holds exactly one record per id
+        let replay = JournalReplay::load(&path).unwrap();
+        assert_eq!(replay.completed.len(), 3);
+        assert!(replay.orphaned().is_empty());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3, "{text}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chunked_requests_answer_identically_to_twist() {
+        let input = "id=0 dataset=DHFR ph_algorithm=twist\n\
+                     id=1 dataset=DHFR ph_algorithm=chunked ph_threads=4\n";
+        // cache off: the second request must recompute with the chunked
+        // engine, not answer from the twist result's content hash
+        let mut o = opts();
+        o.service.cache_budget_bytes = 0;
+        let (report, lines) = run_lines(input, o);
+        assert_eq!(report.completed, 2);
+        let digest = |needle: &str| {
+            lines
+                .iter()
+                .find(|l| l.contains(needle))
+                .unwrap_or_else(|| panic!("missing {needle:?} in {lines:?}"))
+                .split("pd=")
+                .nth(1)
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(digest("id=0 "), digest("id=1 "), "chunked must be bit-identical");
+    }
+
+    #[test]
     fn shutdown_flag_drains_and_sheds_queued_work() {
         // shutdown pre-set: intake stops immediately; nothing is lost,
         // the loop exits cleanly with a report (no hang)
@@ -954,6 +1062,8 @@ mod tests {
         let metrics = get("/metrics");
         assert!(metrics.contains("repro_jobs_completed 0"), "{metrics}");
         assert!(metrics.contains("repro_cache_entries 0"), "{metrics}");
+        assert!(metrics.contains("repro_reduce_seconds_total 0.000000"), "{metrics}");
+        assert!(metrics.contains("repro_ph_apparent_pairs 0"), "{metrics}");
         assert!(get("/nope").starts_with("HTTP/1.1 404"));
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();

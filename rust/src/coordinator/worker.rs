@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 
 use crate::complex::ComplexWorkspace;
 use crate::error::{Error, Result};
-use crate::homology::persistence_diagrams_cancellable;
+use crate::homology::persistence_diagrams_ph;
 use crate::prune::DominationKernel;
 use crate::reduce::{combined_with_ws, pd_sharded_with, Reduction, ReductionWorkspace};
 use crate::util::{CancelToken, Rng, Timer};
@@ -87,6 +87,7 @@ pub(crate) fn execute_attempt(
     sharded: bool,
 ) -> Result<JobResult> {
     let total = Timer::start();
+    scratch.reduce.set_ph(job.spec.ph);
     if sharded {
         // Forced degraded path: per-component complexes bound peak memory
         // and each shard polls the same token, so deadlines still bite.
@@ -99,7 +100,7 @@ pub(crate) fn execute_attempt(
             1,
         )?;
         let total_secs = total.elapsed().as_secs_f64();
-        let ph_secs = (total_secs - report.reduce_secs).max(0.0);
+        let ph_secs = report.ph_secs;
         return Ok(JobResult {
             id: job.id,
             diagrams,
@@ -111,7 +112,7 @@ pub(crate) fn execute_attempt(
             outcome: JobOutcome::Success,
         });
     }
-    let red = combined_with_ws(
+    let mut red = combined_with_ws(
         &mut scratch.reduce,
         &job.graph,
         &job.filtration,
@@ -119,15 +120,21 @@ pub(crate) fn execute_attempt(
         which,
     )?;
     let cancel = scratch.reduce.cancel_token().clone();
+    let ph_cfg = scratch.reduce.ph();
     let ph = Timer::start();
-    let diagrams = persistence_diagrams_cancellable(
+    let (diagrams, stats) = persistence_diagrams_ph(
         &mut scratch.complex,
         &red.graph,
         &red.filtration,
         job.spec.max_k,
+        &ph_cfg,
+        scratch.reduce.ph_team(),
         &cancel,
     )?;
     let ph_secs = ph.elapsed().as_secs_f64();
+    red.report.ph_secs = ph_secs;
+    red.report.ph_apparent_pairs = stats.apparent_pairs;
+    red.report.ph_reduced_pairs = stats.reduced_pairs;
     Ok(JobResult {
         id: job.id,
         diagrams,
@@ -567,6 +574,7 @@ mod tests {
                 max_k: 1,
                 reduction: Reduction::FixedPoint,
                 sharded: false,
+                ..JobSpec::default()
             },
         );
         // every round sleeps 20ms, so the sweeper always wins the race
@@ -708,6 +716,7 @@ mod tests {
                 max_k: 1,
                 reduction: Reduction::FixedPoint,
                 sharded: false,
+                ..JobSpec::default()
             },
         );
         let plan = FaultPlan::new().delay_rounds(2, Duration::from_millis(50));

@@ -16,8 +16,8 @@ pub mod vectorize;
 pub use diagram::Diagram;
 pub use distance::{bottleneck, wasserstein1};
 pub use reduction::{
-    diagrams_of_complex, diagrams_of_complex_cancellable, reduce, reduce_cancellable, Algorithm,
-    ReductionResult,
+    diagrams_of_complex, diagrams_of_complex_cancellable, diagrams_of_complex_with, reduce,
+    reduce_cancellable, reduce_with, Algorithm, PhConfig, PhStats, ReductionResult,
 };
 pub use sharded::{
     merge_shard_diagrams, persistence_diagrams_sharded, persistence_diagrams_sharded_with,
@@ -27,6 +27,7 @@ pub use union_find::pd0;
 use crate::complex::{ComplexWorkspace, Filtration};
 use crate::error::Result;
 use crate::graph::Graph;
+use crate::util::team::TeamSlot;
 use crate::util::CancelToken;
 
 /// Persistence diagrams `PD_0 .. PD_max_k` of `(G, f)` over the clique-
@@ -61,13 +62,42 @@ pub fn persistence_diagrams_cancellable(
     max_k: usize,
     cancel: &CancelToken,
 ) -> Result<Vec<Diagram>> {
+    persistence_diagrams_ph(
+        ws,
+        g,
+        f,
+        max_k,
+        &PhConfig::default(),
+        &mut TeamSlot::default(),
+        cancel,
+    )
+    .map(|(d, _)| d)
+}
+
+/// [`persistence_diagrams_cancellable`] with the full persistence-engine
+/// config: `ph` picks the reduction algorithm and (for
+/// [`Algorithm::Chunked`]) the thread budget, `team` is the caller's
+/// persistent thread team for the chunked local phase. Returns the
+/// apparent-vs-reduced pair split alongside the diagrams. PD₀-only
+/// requests still take the union-find elder-rule path — no boundary
+/// matrix is built.
+#[allow(clippy::too_many_arguments)]
+pub fn persistence_diagrams_ph(
+    ws: &mut ComplexWorkspace,
+    g: &Graph,
+    f: &Filtration,
+    max_k: usize,
+    ph: &PhConfig,
+    team: &mut TeamSlot,
+    cancel: &CancelToken,
+) -> Result<(Vec<Diagram>, PhStats)> {
     cancel.check()?;
     if max_k == 0 {
-        return Ok(vec![pd0(g, f)]);
+        return Ok((vec![pd0(g, f)], PhStats::default()));
     }
     let complex = ws.build_clique(g, f, max_k + 1);
     cancel.check()?;
-    diagrams_of_complex_cancellable(&complex, max_k, Algorithm::Twist, cancel)
+    diagrams_of_complex_with(&complex, max_k, ph, team, cancel)
 }
 
 /// Betti numbers β₀..β_max_k of the clique complex of `G` (constant

@@ -8,14 +8,24 @@
 //! (the legacy engine cloned the whole column set up front — see
 //! [`super::legacy`]). Two strategies over the same layout:
 //!
+//! Three strategies over the same layout:
+//!
 //! * `standard` — textbook left-to-right reduction [59].
 //! * `twist` — Chen–Kerber clearing: process dimensions top-down and clear
 //!   columns of paired (creator) simplices, skipping their reduction
-//!   entirely. The production path; property-tested equal to `standard`.
+//!   entirely. Property-tested equal to `standard`.
+//! * `chunked` — PHAT-style chunk parallelism on top of twist, preceded by
+//!   an apparent-pair prepass (Ripser-style shortcut). Diagrams are
+//!   bit-identical to `twist` at every thread count and chunk size: with
+//!   Z/2 left-to-right column additions the final pivot assignment is
+//!   unique, so any legal completion — and both the prepass and the
+//!   chunked schedule only ever add columns from the left — lands on the
+//!   same pairing. See [`reduce_with`].
 
 use super::diagram::Diagram;
 use crate::complex::flat::FlatComplex;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::util::team::TeamSlot;
 use crate::util::CancelToken;
 
 /// Cancellation-poll granularity: one deadline check per this many
@@ -30,6 +40,79 @@ pub(crate) const CANCEL_CHECK_COLS: usize = 1024;
 pub enum Algorithm {
     Standard,
     Twist,
+    /// Apparent-pair prepass + chunk-parallel twist + sequential global
+    /// sweep. Bit-identical to [`Algorithm::Twist`]; thread count and
+    /// chunk size come from [`PhConfig`].
+    Chunked,
+}
+
+impl Algorithm {
+    /// Parse a `--ph-algorithm` / config / request-line value.
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        match s {
+            "standard" => Ok(Algorithm::Standard),
+            "twist" => Ok(Algorithm::Twist),
+            "chunked" => Ok(Algorithm::Chunked),
+            other => Err(Error::Config(format!(
+                "unknown PH algorithm {other:?} (expected standard|twist|chunked)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Standard => "standard",
+            Algorithm::Twist => "twist",
+            Algorithm::Chunked => "chunked",
+        }
+    }
+}
+
+/// Persistence-engine knobs threaded from CLI/config/serve request lines
+/// down to [`reduce_with`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PhConfig {
+    pub algorithm: Algorithm,
+    /// Worker threads for the chunked local phase; `0` = auto (available
+    /// parallelism), `1` = sequential. Ignored by standard/twist.
+    pub threads: usize,
+    /// Columns per chunk in the local phase; `0` = auto (scaled so each
+    /// thread sees several chunks per dimension).
+    pub chunk_cols: usize,
+}
+
+impl Default for PhConfig {
+    fn default() -> Self {
+        PhConfig {
+            algorithm: Algorithm::Twist,
+            threads: 1,
+            chunk_cols: 0,
+        }
+    }
+}
+
+impl PhConfig {
+    /// Effective thread count (`0` resolves to available parallelism).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// How the pairs of a reduction were found — apparent-pair shortcut vs
+/// full column reduction (standard/twist report everything as reduced).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhStats {
+    /// Pairs emitted by the apparent-pair prepass without any column
+    /// additions.
+    pub apparent_pairs: usize,
+    /// Pairs found by actual column reduction.
+    pub reduced_pairs: usize,
 }
 
 /// Dense Z/2 working column: a reusable bitset for the reduction chain.
@@ -112,6 +195,8 @@ pub struct ReductionResult {
     pub pairs: Vec<(usize, usize)>,
     /// Unpaired positive simplex indices (infinite classes).
     pub essential: Vec<usize>,
+    /// Shortcut-vs-reduction split of `pairs`.
+    pub stats: PhStats,
 }
 
 /// Current view of column `j`: the reduced form if the reduction rewrote
@@ -189,6 +274,24 @@ pub fn reduce_cancellable(
     algorithm: Algorithm,
     cancel: &CancelToken,
 ) -> Result<ReductionResult> {
+    let ph = PhConfig {
+        algorithm,
+        threads: 1,
+        chunk_cols: 0,
+    };
+    reduce_with(c, &ph, &mut TeamSlot::default(), cancel)
+}
+
+/// [`reduce_cancellable`] with the full engine config: the chunked
+/// algorithm runs its local phase on `team` (the caller's persistent
+/// thread team — no pool is spawned here unless `ph` asks for more
+/// workers than the slot already holds).
+pub fn reduce_with(
+    c: &FlatComplex,
+    ph: &PhConfig,
+    team: &mut TeamSlot,
+    cancel: &CancelToken,
+) -> Result<ReductionResult> {
     let n = c.len();
     // Lazily materialised reduced columns: work[j] is meaningful only
     // when touched[j]; untouched columns read from the arena.
@@ -196,11 +299,12 @@ pub fn reduce_cancellable(
     let mut touched = vec![false; n];
     // pivot_of_row[r] = column whose low is r.
     let mut pivot_of_row: Vec<Option<usize>> = vec![None; n];
-    let mut dense = DenseColumn::new(n);
-    let mut since_check = 0usize;
+    let mut apparent = 0usize;
 
-    match algorithm {
+    match ph.algorithm {
         Algorithm::Standard => {
+            let mut dense = DenseColumn::new(n);
+            let mut since_check = 0usize;
             for j in 0..n {
                 since_check += 1;
                 if since_check >= CANCEL_CHECK_COLS {
@@ -211,6 +315,8 @@ pub fn reduce_cancellable(
             }
         }
         Algorithm::Twist => {
+            let mut dense = DenseColumn::new(n);
+            let mut since_check = 0usize;
             let max_dim = c.dim();
             let mut cleared = vec![false; n];
             for d in (1..=max_dim).rev() {
@@ -234,6 +340,17 @@ pub fn reduce_cancellable(
                 }
             }
         }
+        Algorithm::Chunked => {
+            apparent = reduce_chunked(
+                c,
+                ph,
+                team,
+                cancel,
+                &mut work,
+                &mut touched,
+                &mut pivot_of_row,
+            )?;
+        }
     }
 
     let mut pairs = Vec::new();
@@ -251,7 +368,259 @@ pub fn reduce_cancellable(
     let essential = (0..n)
         .filter(|&i| !paired_birth[i] && !is_negative[i])
         .collect();
-    Ok(ReductionResult { pairs, essential })
+    let stats = PhStats {
+        apparent_pairs: apparent,
+        reduced_pairs: pairs.len() - apparent,
+    };
+    Ok(ReductionResult {
+        pairs,
+        essential,
+        stats,
+    })
+}
+
+/// Shared mutable column state handed to team workers by raw pointer.
+/// Chunks partition the columns, each part writes only `work[j]` /
+/// `touched[j]` for its own chunk's `j`, and cross-chunk reads target
+/// only apparent columns (never touched), so slots never alias.
+struct ColsPtr {
+    work: *mut Vec<u32>,
+    touched: *mut bool,
+}
+
+unsafe impl Send for ColsPtr {}
+unsafe impl Sync for ColsPtr {}
+
+/// Current view of column `j` through the raw-pointer window.
+///
+/// # Safety
+/// `j` must be a column of the caller's own chunk or an apparent column
+/// (whose `touched[j]` is never written by anyone).
+unsafe fn col_at<'a>(c: &'a FlatComplex, p: &ColsPtr, j: usize) -> &'a [u32] {
+    unsafe {
+        if *p.touched.add(j) {
+            &(*p.work.add(j))[..]
+        } else {
+            c.boundary_of(j)
+        }
+    }
+}
+
+/// Local (in-chunk) reduction of column `j`: additions may come from
+/// apparent pivots (global, read-only during the local phase) and pivots
+/// claimed earlier within the same chunk — both strictly left of `j`.
+/// A low owned by neither is claimed tentatively into `local_pivot`; the
+/// sequential global sweep settles cross-chunk conflicts.
+#[allow(clippy::too_many_arguments)]
+fn local_reduce(
+    c: &FlatComplex,
+    p: &ColsPtr,
+    pivot_of_row: &[Option<usize>],
+    local_pivot: &mut [u32],
+    claimed: &mut Vec<u32>,
+    j: usize,
+    wj: &mut Vec<u32>,
+    tj: &mut bool,
+    dense: &mut DenseColumn,
+) {
+    debug_assert!(!*tj, "chunk columns start untouched");
+    let cur = c.boundary_of(j);
+    let Some(&start_low) = cur.last() else {
+        return;
+    };
+    let mut low = start_low as usize;
+    // Fast path: unclaimed low — the CSR slice stays the current form.
+    if pivot_of_row[low].is_none() && local_pivot[low] == u32::MAX {
+        local_pivot[low] = j as u32;
+        claimed.push(low as u32);
+        return;
+    }
+    dense.load(cur);
+    loop {
+        let owner = pivot_of_row[low].or_else(|| {
+            let lp = local_pivot[low];
+            (lp != u32::MAX).then_some(lp as usize)
+        });
+        match owner {
+            Some(jp) => {
+                // SAFETY: jp owns a pivot, so it is apparent (untouched,
+                // read from the arena) or a column of this same chunk
+                // (written only by this thread).
+                dense.xor(unsafe { col_at(c, p, jp) });
+                match (low > 0).then(|| dense.low_at_or_below(low - 1)).flatten() {
+                    Some(l) => low = l,
+                    None => {
+                        // zeroed: final in every legal completion —
+                        // drop it from the addition pool for good
+                        wj.clear();
+                        *tj = true;
+                        return;
+                    }
+                }
+            }
+            None => {
+                local_pivot[low] = j as u32;
+                claimed.push(low as u32);
+                dense.drain_into(low, wj);
+                *tj = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Chunked reduction: apparent-pair prepass, then per dimension
+/// (top-down, preserving twist clearing) a chunk-parallel local phase on
+/// the thread team followed by a sequential global sweep. Returns the
+/// number of pairs emitted by the prepass.
+fn reduce_chunked(
+    c: &FlatComplex,
+    ph: &PhConfig,
+    team: &mut TeamSlot,
+    cancel: &CancelToken,
+    work: &mut [Vec<u32>],
+    touched: &mut [bool],
+    pivot_of_row: &mut [Option<usize>],
+) -> Result<usize> {
+    let n = c.len();
+
+    // --- Apparent-pair prepass ------------------------------------------
+    // oldest_cofacet[r] = oldest column whose boundary contains row r;
+    // one CSR pass, first write wins.
+    let mut oldest_cofacet: Vec<u32> = vec![u32::MAX; n];
+    for j in 0..n {
+        for &r in c.boundary_of(j) {
+            if oldest_cofacet[r as usize] == u32::MAX {
+                oldest_cofacet[r as usize] = j as u32;
+            }
+        }
+    }
+    cancel.check()?;
+    // (σ, τ) is apparent when σ is the last entry of ∂τ and τ is the
+    // oldest cofacet of σ. Then no column left of τ even contains row σ
+    // (it would be an older cofacet), so τ reduces with zero additions —
+    // its raw CSR slice is its final form — and pivot_of_row[σ] = τ in
+    // every legal reduction. Emit the pair and clear the creator column
+    // exactly as twist would when it reached τ.
+    let mut cleared = vec![false; n];
+    let mut apparent_death = vec![false; n];
+    let mut apparent = 0usize;
+    for j in 0..n {
+        let Some(&low) = c.boundary_of(j).last() else {
+            continue;
+        };
+        if oldest_cofacet[low as usize] == j as u32 {
+            pivot_of_row[low as usize] = Some(j);
+            cleared[low as usize] = true;
+            apparent_death[j] = true;
+            apparent += 1;
+        }
+    }
+    drop(oldest_cofacet);
+    cancel.check()?;
+
+    // --- Chunk-parallel twist over the surviving columns ----------------
+    let threads = ph.resolved_threads().max(1);
+    let max_dim = c.dim();
+    let mut cols: Vec<u32> = Vec::new();
+    let mut dense = DenseColumn::new(n);
+    let mut since_check = 0usize;
+    for d in (1..=max_dim).rev() {
+        // Column compression: the pool for this dimension is only the
+        // still-live columns — cleared creators and apparent deaths are
+        // never revisited.
+        cols.clear();
+        cols.extend(
+            (0..n)
+                .filter(|&j| c.dim_of(j) == d && !cleared[j] && !apparent_death[j])
+                .map(|j| j as u32),
+        );
+        if cols.is_empty() {
+            continue;
+        }
+        let chunk = if ph.chunk_cols > 0 {
+            ph.chunk_cols
+        } else {
+            // several chunks per thread so strides stay load-balanced
+            (cols.len() / (threads * 8)).max(64)
+        };
+        let nchunks = cols.len().div_ceil(chunk);
+        let parts = threads.min(nchunks);
+        if parts > 1 {
+            let tm = team.get(parts - 1);
+            let wptr = ColsPtr {
+                work: work.as_mut_ptr(),
+                touched: touched.as_mut_ptr(),
+            };
+            let pivot_ro: &[Option<usize>] = pivot_of_row;
+            let cols_ref: &[u32] = &cols;
+            let body = move |part: usize| {
+                let mut dense = DenseColumn::new(n);
+                let mut local_pivot: Vec<u32> = vec![u32::MAX; n];
+                let mut claimed: Vec<u32> = Vec::new();
+                let mut ci = part;
+                while ci < nchunks {
+                    // deadline polling at chunk boundaries; the global
+                    // sweep's checkpoint turns expiry into the error
+                    if cancel.is_expired() {
+                        return;
+                    }
+                    for &r in &claimed {
+                        local_pivot[r as usize] = u32::MAX;
+                    }
+                    claimed.clear();
+                    let lo = ci * chunk;
+                    let hi = (lo + chunk).min(cols_ref.len());
+                    for &j32 in &cols_ref[lo..hi] {
+                        let j = j32 as usize;
+                        // SAFETY: chunks partition `cols`, each part owns
+                        // its chunks' columns exclusively; `run` does not
+                        // return before every part finished.
+                        let (wj, tj) =
+                            unsafe { (&mut *wptr.work.add(j), &mut *wptr.touched.add(j)) };
+                        local_reduce(
+                            c,
+                            &wptr,
+                            pivot_ro,
+                            &mut local_pivot,
+                            &mut claimed,
+                            j,
+                            wj,
+                            tj,
+                            &mut dense,
+                        );
+                    }
+                    ci += parts;
+                }
+            };
+            let worker_panics = tm.run(parts, &body);
+            assert_eq!(
+                worker_panics, 0,
+                "{worker_panics} chunked-reduction team worker part(s) panicked"
+            );
+            cancel.check()?;
+        }
+        // Global sweep, sequential and ascending: most columns now carry
+        // a unique low and claim it on the fast path; the few whose
+        // pivots crossed chunk boundaries keep reducing here. Clearing
+        // is applied exactly as in twist.
+        for &j32 in &cols {
+            let j = j32 as usize;
+            since_check += 1;
+            if since_check >= CANCEL_CHECK_COLS {
+                since_check = 0;
+                cancel.check()?;
+            }
+            process(j, c, work, touched, pivot_of_row, &mut dense);
+            if let Some(&low) = col(c, work, touched, j).last() {
+                let low = low as usize;
+                cleared[low] = true;
+                work[low].clear();
+                touched[low] = true;
+            }
+        }
+    }
+    Ok(apparent)
 }
 
 /// Persistence diagrams PD_0..PD_max_k from a filtered complex.
@@ -271,7 +640,24 @@ pub fn diagrams_of_complex_cancellable(
     algorithm: Algorithm,
     cancel: &CancelToken,
 ) -> Result<Vec<Diagram>> {
-    let red = reduce_cancellable(c, algorithm, cancel)?;
+    let ph = PhConfig {
+        algorithm,
+        threads: 1,
+        chunk_cols: 0,
+    };
+    diagrams_of_complex_with(c, max_k, &ph, &mut TeamSlot::default(), cancel).map(|(d, _)| d)
+}
+
+/// [`diagrams_of_complex_cancellable`] with the full engine config and
+/// the caller's thread team; also returns the shortcut/reduction split.
+pub fn diagrams_of_complex_with(
+    c: &FlatComplex,
+    max_k: usize,
+    ph: &PhConfig,
+    team: &mut TeamSlot,
+    cancel: &CancelToken,
+) -> Result<(Vec<Diagram>, PhStats)> {
+    let red = reduce_with(c, ph, team, cancel)?;
     let mut per_dim: Vec<Vec<(f64, f64)>> = vec![Vec::new(); max_k + 1];
     for &(b, d) in &red.pairs {
         let k = c.dim_of(b);
@@ -285,11 +671,12 @@ pub fn diagrams_of_complex_cancellable(
             per_dim[k].push((c.key_of(i), f64::INFINITY));
         }
     }
-    Ok(per_dim
+    let diagrams = per_dim
         .into_iter()
         .enumerate()
         .map(|(k, pairs)| Diagram::new(k, pairs))
-        .collect())
+        .collect();
+    Ok((diagrams, red.stats))
 }
 
 #[cfg(test)]

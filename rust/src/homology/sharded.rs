@@ -29,8 +29,11 @@ use crate::reduce::planner::ReductionWorkspace;
 use crate::reduce::Reduction;
 use crate::util::CancelToken;
 
+use crate::util::team::TeamSlot;
+
 use super::diagram::Diagram;
-use super::persistence_diagrams_cancellable;
+use super::reduction::{PhConfig, PhStats};
+use super::{pd0, persistence_diagrams_ph};
 
 /// Diagrams `PD_0..PD_max_k` of a single shard. Singleton shards (the
 /// isolated-vertex fringe that PrunIT and coral leave behind in bulk)
@@ -62,6 +65,29 @@ pub fn shard_diagrams_cancellable(
     max_k: usize,
     cancel: &CancelToken,
 ) -> Result<Vec<Diagram>> {
+    shard_diagrams_ph(
+        ws,
+        shard,
+        max_k,
+        &PhConfig::default(),
+        &mut TeamSlot::default(),
+        cancel,
+    )
+    .map(|(d, _)| d)
+}
+
+/// [`shard_diagrams_cancellable`] with the full persistence-engine
+/// config: `ph` picks the algorithm, `team` hosts the chunked local
+/// phase. Returns the apparent-vs-reduced pair split alongside the
+/// diagrams (all-zero on the singleton fast path).
+pub fn shard_diagrams_ph(
+    ws: &mut ComplexWorkspace,
+    shard: &Shard,
+    max_k: usize,
+    ph: &PhConfig,
+    team: &mut TeamSlot,
+    cancel: &CancelToken,
+) -> Result<(Vec<Diagram>, PhStats)> {
     if shard.graph.n() == 1 {
         let mut out = Vec::with_capacity(max_k + 1);
         out.push(Diagram::new(
@@ -71,9 +97,9 @@ pub fn shard_diagrams_cancellable(
         for k in 1..=max_k {
             out.push(Diagram::new(k, Vec::new()));
         }
-        return Ok(out);
+        return Ok((out, PhStats::default()));
     }
-    persistence_diagrams_cancellable(ws, &shard.graph, &shard.filtration, max_k, cancel)
+    persistence_diagrams_ph(ws, &shard.graph, &shard.filtration, max_k, ph, team, cancel)
 }
 
 /// Per-shard diagrams for a whole shard set, computed on up to `workers`
@@ -98,36 +124,67 @@ pub fn all_shard_diagrams_cancellable(
     workers: usize,
     cancel: &CancelToken,
 ) -> Result<Vec<Vec<Diagram>>> {
+    all_shard_diagrams_ph(shards, max_k, workers, &PhConfig::default(), cancel).map(|(d, _)| d)
+}
+
+/// [`all_shard_diagrams_cancellable`] with the full persistence-engine
+/// config. `ph.threads` is the budget for the *whole* shard set: it is
+/// split across the shard workers (`inner = max(1, threads / workers)`)
+/// so chunked inner parallelism never oversubscribes the machine on top
+/// of the outer fan-out. Each worker thread holds its own lazily-spawned
+/// team slot. Returns the summed apparent-vs-reduced pair split.
+pub fn all_shard_diagrams_ph(
+    shards: &[Shard],
+    max_k: usize,
+    workers: usize,
+    ph: &PhConfig,
+    cancel: &CancelToken,
+) -> Result<(Vec<Vec<Diagram>>, PhStats)> {
     let workers = workers.max(1).min(shards.len().max(1));
+    let inner = PhConfig {
+        threads: (ph.resolved_threads() / workers).max(1),
+        ..*ph
+    };
     if workers == 1 {
         let mut ws = ComplexWorkspace::new();
-        return shards
-            .iter()
-            .map(|s| shard_diagrams_cancellable(&mut ws, s, max_k, cancel))
-            .collect();
+        let mut team = TeamSlot::default();
+        let mut out = Vec::with_capacity(shards.len());
+        let mut stats = PhStats::default();
+        for s in shards {
+            let (pds, st) = shard_diagrams_ph(&mut ws, s, max_k, &inner, &mut team, cancel)?;
+            stats.apparent_pairs += st.apparent_pairs;
+            stats.reduced_pairs += st.reduced_pairs;
+            out.push(pds);
+        }
+        return Ok((out, stats));
     }
     let mut order: Vec<usize> = (0..shards.len()).collect();
     order.sort_by_key(|&i| std::cmp::Reverse(shards[i].graph.n()));
     let next = AtomicUsize::new(0);
     let mut out: Vec<Vec<Diagram>> = vec![Vec::new(); shards.len()];
+    let mut stats = PhStats::default();
     let mut first_err = None;
     std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::channel::<(usize, Result<Vec<Diagram>>)>();
+        let (tx, rx) = mpsc::channel::<(usize, Result<(Vec<Diagram>, PhStats)>)>();
         for _ in 0..workers {
             let tx = tx.clone();
             let next = &next;
             let order = &order;
+            let inner = &inner;
             scope.spawn(move || {
-                // one complex workspace per worker thread: every shard on
-                // this thread builds into the same arenas
+                // one complex workspace + team slot per worker thread:
+                // every shard on this thread builds into the same arenas
+                // and fans its chunked local phase out on the same team
                 let mut ws = ComplexWorkspace::new();
+                let mut team = TeamSlot::default();
                 loop {
                     let slot = next.fetch_add(1, Ordering::Relaxed);
                     if slot >= order.len() {
                         break;
                     }
                     let i = order[slot];
-                    let res = shard_diagrams_cancellable(&mut ws, &shards[i], max_k, cancel);
+                    let res =
+                        shard_diagrams_ph(&mut ws, &shards[i], max_k, inner, &mut team, cancel);
                     let errored = res.is_err();
                     if tx.send((i, res)).is_err() || errored {
                         // receiver gone, or this shard failed (deadline /
@@ -140,7 +197,11 @@ pub fn all_shard_diagrams_cancellable(
         drop(tx);
         for (i, pds) in rx {
             match pds {
-                Ok(pds) => out[i] = pds,
+                Ok((pds, st)) => {
+                    stats.apparent_pairs += st.apparent_pairs;
+                    stats.reduced_pairs += st.reduced_pairs;
+                    out[i] = pds;
+                }
                 Err(e) => {
                     if first_err.is_none() {
                         first_err = Some(e);
@@ -151,7 +212,7 @@ pub fn all_shard_diagrams_cancellable(
     });
     match first_err {
         Some(e) => Err(e),
-        None => Ok(out),
+        None => Ok((out, stats)),
     }
 }
 
@@ -205,10 +266,18 @@ pub fn persistence_diagrams_sharded_with(
     max_k: usize,
     workers: usize,
 ) -> crate::error::Result<Vec<Diagram>> {
+    if max_k == 0 {
+        // PD₀-only: the union-find elder rule over the whole graph is the
+        // exact answer — skip the plan, the shard emission, and every
+        // boundary matrix.
+        f.check(g)?;
+        return Ok(vec![pd0(g, f)]);
+    }
     rws.plan(g, f, 0, Reduction::None)?;
     let shards = rws.emit_shards(g, f);
     let cancel = rws.cancel_token().clone();
-    let per = all_shard_diagrams_cancellable(&shards, max_k, workers, &cancel)?;
+    let ph = rws.ph();
+    let (per, _) = all_shard_diagrams_ph(&shards, max_k, workers, &ph, &cancel)?;
     Ok(merge_shard_diagrams(&per, max_k))
 }
 

@@ -16,8 +16,8 @@ use crate::complex::ComplexWorkspace;
 use crate::complex::Filtration;
 use crate::error::Result;
 use crate::graph::Graph;
-use crate::homology::sharded::{all_shard_diagrams_cancellable, merge_shard_diagrams};
-use crate::homology::{persistence_diagrams_cancellable, Diagram};
+use crate::homology::sharded::{all_shard_diagrams_ph, merge_shard_diagrams};
+use crate::homology::{pd0, persistence_diagrams_ph, Diagram};
 use crate::prune::prunit;
 use crate::util::Timer;
 
@@ -99,6 +99,14 @@ pub struct ReductionReport {
     /// by the sharded pipeline ([`pd_sharded`]); empty when the monolithic
     /// path ran.
     pub shard_sizes: Vec<usize>,
+    /// Boundary-matrix reduction (PH stage) wall time; 0 until a PD
+    /// entry point ran on this report.
+    pub ph_secs: f64,
+    /// Persistence pairs emitted by the chunked engine's apparent-pair
+    /// prepass without any column additions (0 for standard/twist).
+    pub ph_apparent_pairs: usize,
+    /// Persistence pairs found by full column reduction.
+    pub ph_reduced_pairs: usize,
 }
 
 impl ReductionReport {
@@ -194,6 +202,9 @@ fn report_from_ws(
         prunit_rounds: ws.frontier_rounds(),
         which,
         shard_sizes: Vec::new(),
+        ph_secs: 0.0,
+        ph_apparent_pairs: 0,
+        ph_reduced_pairs: 0,
     }
 }
 
@@ -334,6 +345,9 @@ pub fn combined_with_materializing(
         prunit_rounds,
         which,
         shard_sizes: Vec::new(),
+        ph_secs: 0.0,
+        ph_apparent_pairs: 0,
+        ph_reduced_pairs: 0,
     };
     Ok(Reduced {
         graph,
@@ -358,7 +372,10 @@ pub fn pd_with_reduction(
 /// [`pd_with_reduction`] reusing a caller-held planner workspace — the
 /// entry point that honours a configured
 /// [`ReductionWorkspace::set_prune_threads`] (the CLI's
-/// `--prune-threads`).
+/// `--prune-threads`) and [`ReductionWorkspace::set_ph`] (the CLI's
+/// `--ph-algorithm` / `--ph-threads`; the chunked local phase runs on
+/// the workspace's own thread team). The PH stage's wall time and
+/// apparent-vs-reduced pair split land in the report.
 pub fn pd_with_reduction_ws(
     ws: &mut ReductionWorkspace,
     g: &Graph,
@@ -366,17 +383,24 @@ pub fn pd_with_reduction_ws(
     k: usize,
     which: Reduction,
 ) -> Result<(Vec<Diagram>, ReductionReport)> {
-    let red = combined_with_ws(ws, g, f, k, which)?;
+    let mut red = combined_with_ws(ws, g, f, k, which)?;
     // the planner's token (a none token unless the coordinator installed
     // a deadline) carries into the cubic PH stage
     let cancel = ws.cancel_token().clone();
-    let diagrams = persistence_diagrams_cancellable(
+    let ph = ws.ph();
+    let timer = Timer::start();
+    let (diagrams, stats) = persistence_diagrams_ph(
         &mut ComplexWorkspace::new(),
         &red.graph,
         &red.filtration,
         k,
+        &ph,
+        ws.ph_team(),
         &cancel,
     )?;
+    red.report.ph_secs = timer.elapsed().as_secs_f64();
+    red.report.ph_apparent_pairs = stats.apparent_pairs;
+    red.report.ph_reduced_pairs = stats.reduced_pairs;
     Ok((diagrams, red.report))
 }
 
@@ -401,7 +425,10 @@ pub fn pd_sharded(
     pd_sharded_with(&mut ReductionWorkspace::new(), g, f, k, which, workers)
 }
 
-/// [`pd_sharded`] reusing a caller-held planner workspace.
+/// [`pd_sharded`] reusing a caller-held planner workspace. PD₀-only
+/// requests (`k == 0`) skip shard emission entirely and run the
+/// union-find elder rule on the compacted residue — no boundary matrix
+/// (or shard CSR set) is ever built for them.
 pub fn pd_sharded_with(
     ws: &mut ReductionWorkspace,
     g: &Graph,
@@ -410,13 +437,25 @@ pub fn pd_sharded_with(
     which: Reduction,
     workers: usize,
 ) -> Result<(Vec<Diagram>, ReductionReport)> {
+    if k == 0 {
+        let red = combined_with_ws(ws, g, f, 0, which)?;
+        let (diagrams, ph_secs) = Timer::time(|| vec![pd0(&red.graph, &red.filtration)]);
+        let mut report = red.report;
+        report.ph_secs = ph_secs;
+        return Ok((diagrams, report));
+    }
     let total = Timer::start();
     ws.plan(g, f, k, which)?;
     let (shards, emit_secs) = Timer::time(|| ws.emit_shards(g, f));
     let mut report = report_from_ws(ws, g, which, total.elapsed().as_secs_f64(), emit_secs);
     report.shard_sizes = shards.iter().map(|s| s.graph.n()).collect();
     let cancel = ws.cancel_token().clone();
-    let per_shard = all_shard_diagrams_cancellable(&shards, k, workers, &cancel)?;
+    let ph = ws.ph();
+    let timer = Timer::start();
+    let (per_shard, stats) = all_shard_diagrams_ph(&shards, k, workers, &ph, &cancel)?;
+    report.ph_secs = timer.elapsed().as_secs_f64();
+    report.ph_apparent_pairs = stats.apparent_pairs;
+    report.ph_reduced_pairs = stats.reduced_pairs;
     let diagrams = merge_shard_diagrams(&per_shard, k);
     Ok((diagrams, report))
 }

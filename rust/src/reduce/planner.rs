@@ -76,6 +76,7 @@ use crate::complex::Filtration;
 use crate::error::Result;
 use crate::graph::decompose::Shard;
 use crate::graph::Graph;
+use crate::homology::PhConfig;
 use crate::prune::kernel::{self, DominationKernel, KernelChoice, KernelState};
 use crate::util::{CancelToken, TeamSlot, Timer};
 
@@ -255,6 +256,11 @@ pub struct ReductionWorkspace {
     /// requested domination-kernel policy; survives `plan`/`reset` like
     /// `prune_threads` — configuration, not per-plan state
     kernel: DominationKernel,
+    /// persistence-engine config (`--ph-algorithm` / `--ph-threads`);
+    /// survives `plan`/`reset` like `prune_threads` — configuration, not
+    /// per-plan state. Downstream PD entry points read it and run the
+    /// chunked local phase on this workspace's `team` slot.
+    ph: PhConfig,
     /// cooperative cancellation / deadline token, polled at PrunIT round
     /// boundaries and between FixedPoint alternations; survives
     /// `plan`/`reset` like `prune_threads` — the coordinator worker sets
@@ -357,6 +363,25 @@ impl ReductionWorkspace {
     /// The configured domination-kernel policy.
     pub fn domination_kernel(&self) -> DominationKernel {
         self.kernel
+    }
+
+    /// Configure the persistence engine (algorithm, thread budget, chunk
+    /// size). Diagrams are bit-identical at every setting; only wall time
+    /// changes.
+    pub fn set_ph(&mut self, ph: PhConfig) {
+        self.ph = ph;
+    }
+
+    /// The configured persistence-engine settings.
+    pub fn ph(&self) -> PhConfig {
+        self.ph
+    }
+
+    /// The workspace's persistent team slot, for downstream PD entry
+    /// points to run the chunked local phase on — the same parked workers
+    /// the PrunIT check phases use, so a job never owns two pools.
+    pub(crate) fn ph_team(&mut self) -> &mut TeamSlot {
+        &mut self.team
     }
 
     /// Install a cooperative cancellation / deadline token. It is polled

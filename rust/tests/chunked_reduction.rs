@@ -1,0 +1,235 @@
+//! Differential suite for the chunked persistence engine: `Chunked` must
+//! produce diagrams bit-identical to `Twist` at every thread count and
+//! chunk size — the apparent-pair prepass and the parallel local phase
+//! are pure wall-time optimisations, never answer changes. Also pins the
+//! PD₀-only fast route (union-find elder rule) to the matrix engines.
+
+use coral_prunit::complex::{ComplexWorkspace, Filtration, FlatComplex};
+use coral_prunit::graph::{disjoint_union, gen, Graph};
+use coral_prunit::homology::{
+    diagrams_of_complex_with, pd0, persistence_diagrams_ph, persistence_diagrams_sharded_with,
+    reduce_with, Algorithm, Diagram, PhConfig,
+};
+use coral_prunit::reduce::ReductionWorkspace;
+use coral_prunit::util::{CancelToken, TeamSlot};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+const CHUNKS: [usize; 4] = [1, 7, 64, 0]; // 0 = auto sizing
+
+/// Seeded corpus spanning the shapes the reduction sees in practice:
+/// sparse/dense random, preferential attachment, and structured graphs
+/// with known homology.
+fn corpus() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("er_sparse", gen::erdos_renyi(60, 0.08, 11)),
+        ("er_dense", gen::erdos_renyi(40, 0.3, 12)),
+        ("ba", gen::barabasi_albert(70, 3, 13)),
+        ("ws", gen::watts_strogatz(50, 4, 0.2, 14)),
+        ("cycle", gen::cycle(9)),
+        ("octahedron", gen::octahedron()),
+        ("grid", gen::grid(4, 4)),
+    ]
+}
+
+fn degenerates() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("empty", Graph::empty(0)),
+        ("single_vertex", Graph::empty(1)),
+        ("isolated_vertices", Graph::empty(5)),
+        (
+            "forest",
+            disjoint_union(&[gen::path(4), gen::star(5), Graph::empty(3), gen::path(2)]),
+        ),
+    ]
+}
+
+fn filtrations(g: &Graph) -> Vec<(&'static str, Filtration)> {
+    vec![
+        ("degree_superlevel", Filtration::degree_superlevel(g)),
+        ("degree_sublevel", Filtration::degree(g)),
+    ]
+}
+
+/// Every `f64` in every dimension bit-equal — stricter than `same_as`.
+fn assert_bit_identical(a: &[Diagram], b: &[Diagram], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: diagram count");
+    for (k, (da, db)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            da.all_pairs().len(),
+            db.all_pairs().len(),
+            "{ctx}: PD{k} pair count"
+        );
+        for (i, (&(b1, d1), &(b2, d2))) in da.all_pairs().iter().zip(db.all_pairs()).enumerate() {
+            assert_eq!(b1.to_bits(), b2.to_bits(), "{ctx}: PD{k} pair {i} birth");
+            assert_eq!(d1.to_bits(), d2.to_bits(), "{ctx}: PD{k} pair {i} death");
+        }
+    }
+}
+
+fn twist(c: &FlatComplex, max_k: usize) -> Vec<Diagram> {
+    let ph = PhConfig {
+        algorithm: Algorithm::Twist,
+        ..PhConfig::default()
+    };
+    diagrams_of_complex_with(c, max_k, &ph, &mut TeamSlot::default(), &CancelToken::none())
+        .expect("twist with a none token cannot fail")
+        .0
+}
+
+fn chunked(
+    c: &FlatComplex,
+    max_k: usize,
+    threads: usize,
+    chunk_cols: usize,
+    team: &mut TeamSlot,
+) -> Vec<Diagram> {
+    let ph = PhConfig {
+        algorithm: Algorithm::Chunked,
+        threads,
+        chunk_cols,
+    };
+    diagrams_of_complex_with(c, max_k, &ph, team, &CancelToken::none())
+        .expect("chunked with a none token cannot fail")
+        .0
+}
+
+/// The tentpole guarantee: the full threads × chunk-size grid reproduces
+/// Twist bit-for-bit on every corpus graph under both filtration
+/// directions.
+#[test]
+fn chunked_is_bit_identical_to_twist_across_threads_and_chunk_sizes() {
+    let max_k = 2;
+    let mut team = TeamSlot::default();
+    for (gname, g) in corpus() {
+        for (fname, f) in filtrations(&g) {
+            let c = FlatComplex::build(&g, &f, max_k + 1);
+            let want = twist(&c, max_k);
+            for threads in THREADS {
+                for chunk_cols in CHUNKS {
+                    let got = chunked(&c, max_k, threads, chunk_cols, &mut team);
+                    assert_bit_identical(
+                        &got,
+                        &want,
+                        &format!("{gname}/{fname} t={threads} chunk={chunk_cols}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate inputs — empty graph, single vertex, pure forests — must
+/// flow through the prepass and the chunk loop without panicking and
+/// still match Twist exactly.
+#[test]
+fn chunked_matches_twist_on_degenerate_inputs() {
+    let max_k = 2;
+    let mut team = TeamSlot::default();
+    for (gname, g) in degenerates() {
+        let f = Filtration::degree_superlevel(&g);
+        let c = FlatComplex::build(&g, &f, max_k + 1);
+        let want = twist(&c, max_k);
+        for threads in [1, 4] {
+            for chunk_cols in [1, 0] {
+                let got = chunked(&c, max_k, threads, chunk_cols, &mut team);
+                assert_bit_identical(
+                    &got,
+                    &want,
+                    &format!("{gname} t={threads} chunk={chunk_cols}"),
+                );
+            }
+        }
+    }
+}
+
+/// All three algorithms are legal reductions of the same matrix, so the
+/// extracted pairs — not just the diagrams — must coincide, and the
+/// chunked stats must account for every pair exactly once.
+#[test]
+fn pair_indices_and_stats_agree_across_algorithms() {
+    let g = gen::erdos_renyi(40, 0.3, 21);
+    let f = Filtration::degree_superlevel(&g);
+    let c = FlatComplex::build(&g, &f, 3);
+    let cancel = CancelToken::none();
+    let run = |algorithm, threads, chunk_cols| {
+        let ph = PhConfig {
+            algorithm,
+            threads,
+            chunk_cols,
+        };
+        reduce_with(&c, &ph, &mut TeamSlot::default(), &cancel).unwrap()
+    };
+    let std_red = run(Algorithm::Standard, 1, 0);
+    let twist_red = run(Algorithm::Twist, 1, 0);
+    assert_eq!(std_red.pairs, twist_red.pairs);
+    assert_eq!(std_red.essential, twist_red.essential);
+    assert_eq!(twist_red.stats.apparent_pairs, 0, "twist takes no shortcut");
+    for threads in THREADS {
+        let chunk_red = run(Algorithm::Chunked, threads, 16);
+        assert_eq!(chunk_red.pairs, twist_red.pairs, "t={threads} pairs");
+        assert_eq!(chunk_red.essential, twist_red.essential, "t={threads} essential");
+        assert_eq!(
+            chunk_red.stats.apparent_pairs + chunk_red.stats.reduced_pairs,
+            chunk_red.pairs.len(),
+            "t={threads}: every pair is either apparent or reduced"
+        );
+        assert!(
+            chunk_red.stats.apparent_pairs > 0,
+            "a dense ER clique complex must expose some apparent pairs"
+        );
+    }
+}
+
+/// Satellite 3 parity: PD₀-only requests take the union-find elder-rule
+/// route (no boundary matrix), and the answer is bit-identical to the
+/// Twist matrix engine's PD₀ in both entry points.
+#[test]
+fn pd0_fast_route_matches_twist_everywhere() {
+    for (gname, g) in corpus().into_iter().chain(degenerates()) {
+        let f = Filtration::degree_superlevel(&g);
+        let c = FlatComplex::build(&g, &f, 1);
+        let want = twist(&c, 0);
+
+        // direct union-find
+        assert_bit_identical(&[pd0(&g, &f)], &want, &format!("{gname} pd0"));
+
+        // persistence_diagrams_ph at max_k = 0 (the serve/worker route)
+        let (got, stats) = persistence_diagrams_ph(
+            &mut ComplexWorkspace::new(),
+            &g,
+            &f,
+            0,
+            &PhConfig::default(),
+            &mut TeamSlot::default(),
+            &CancelToken::none(),
+        )
+        .unwrap();
+        assert_bit_identical(&got, &want, &format!("{gname} ph entry"));
+        assert_eq!(stats.apparent_pairs + stats.reduced_pairs, 0, "no matrix built");
+
+        // planner entry point used by pd_sharded
+        if g.n() > 0 {
+            let got =
+                persistence_diagrams_sharded_with(&mut ReductionWorkspace::new(), &g, &f, 0, 4)
+                    .unwrap();
+            assert_bit_identical(&got, &want, &format!("{gname} sharded entry"));
+        }
+    }
+}
+
+/// A workspace-held team survives many graphs and mixed thread counts —
+/// the slot grows monotonically and never corrupts state between runs.
+#[test]
+fn one_team_slot_serves_the_whole_corpus() {
+    let mut team = TeamSlot::default();
+    let max_k = 2;
+    for (i, (gname, g)) in corpus().into_iter().enumerate() {
+        let f = Filtration::degree_superlevel(&g);
+        let c = FlatComplex::build(&g, &f, max_k + 1);
+        let want = twist(&c, max_k);
+        // alternate thread counts so the slot grows and then re-clamps
+        let threads = [2, 8, 1, 4][i % 4];
+        let got = chunked(&c, max_k, threads, 0, &mut team);
+        assert_bit_identical(&got, &want, &format!("{gname} shared-team t={threads}"));
+    }
+}

@@ -21,7 +21,12 @@ const REDUCTIONS: [Reduction; 5] = [
 fn cold(idx: usize, reduction: Reduction) -> (Job, coral_prunit::coordinator::JobResult) {
     let g = datasets::find("DHFR").unwrap().make(42, idx);
     let f = Filtration::degree_superlevel(&g);
-    let job = Job::new(idx as u64, g, f, JobSpec { max_k: 1, reduction, sharded: false });
+    let job = Job::new(
+        idx as u64,
+        g,
+        f,
+        JobSpec { max_k: 1, reduction, sharded: false, ..JobSpec::default() },
+    );
     let result = Coordinator::execute(&job, 0).unwrap();
     (job, result)
 }
